@@ -1,0 +1,67 @@
+//! Design-space exploration: the ablations DESIGN.md calls out.
+//!
+//! * MOMCAP capacitance sweep (Fig. 7's design decision: why 8 pF)
+//! * MOMCAP window depth vs end-to-end latency (conversion amortization)
+//! * sign-split ablation (Section III.C.1 dual pass)
+//! * power budget sweep (the 60 W throttle's effect)
+//!
+//! Run with: `cargo run --release --example design_space`
+
+use artemis::analog::momcap_staircase;
+use artemis::config::{ArtemisConfig, ModelZoo};
+use artemis::sim::{simulate, SimOptions};
+use artemis::xfmr::build_workload;
+
+fn main() {
+    let model = ModelZoo::bert_base();
+    let workload = build_workload(&model);
+
+    println!("== MOMCAP capacitance: accumulation window vs area ==");
+    println!("{:>6} {:>14} {:>20}", "pF", "linear steps", "fits 338um^2 tile?");
+    for c in [2.0, 4.0, 8.0, 16.0, 24.0, 32.0, 40.0] {
+        let s = momcap_staircase(c, 150);
+        // M4-M7 MOM density ~2 fF/um^2 x 4 layers => ~8 pF in a tile.
+        let fits = c <= 8.0;
+        println!(
+            "{c:>6.0} {:>14} {:>20}",
+            s.max_linear_accumulations,
+            if fits { "yes" } else { "no (bigger tile)" }
+        );
+    }
+
+    println!("\n== MOMCAP window depth vs BERT-base latency ==");
+    println!("{:>8} {:>12} {:>12}", "window", "latency(ms)", "energy(mJ)");
+    for acc in [5u32, 10, 20, 40, 80] {
+        let mut cfg = ArtemisConfig::default();
+        cfg.momcap.max_accumulations = acc;
+        let r = simulate(&cfg, &workload, SimOptions::artemis());
+        println!("{acc:>8} {:>12.3} {:>12.1}", r.latency_ms(), r.total_energy_mj());
+    }
+
+    println!("\n== Sign-split dual pass ablation ==");
+    for split in [true, false] {
+        let mut cfg = ArtemisConfig::default();
+        cfg.sign_split_passes = split;
+        let r = simulate(&cfg, &workload, SimOptions::artemis());
+        println!(
+            "  sign_split={:5}  latency {:.3} ms  energy {:.1} mJ",
+            split,
+            r.latency_ms(),
+            r.total_energy_mj()
+        );
+    }
+
+    println!("\n== Power budget sweep (the 60 W throttle) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "watts", "latency(ms)", "GOPS", "GOPS/W");
+    for budget in [30.0, 60.0, 120.0, 240.0, 480.0] {
+        let mut cfg = ArtemisConfig::default();
+        cfg.power_budget_w = budget;
+        let r = simulate(&cfg, &workload, SimOptions::artemis());
+        println!(
+            "{budget:>8.0} {:>12.3} {:>12.0} {:>12.1}",
+            r.latency_ms(),
+            r.gops(),
+            r.gops_per_w()
+        );
+    }
+}

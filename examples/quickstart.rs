@@ -1,0 +1,41 @@
+//! Quickstart: simulate BERT-base inference on ARTEMIS and compare with
+//! the paper's baseline platforms.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use artemis::baselines::comparison_platforms;
+use artemis::config::{ArtemisConfig, ModelZoo};
+use artemis::sim::{simulate, SimOptions};
+use artemis::xfmr::build_workload;
+
+fn main() {
+    let cfg = ArtemisConfig::default();
+    let model = ModelZoo::bert_base();
+    let workload = build_workload(&model);
+
+    println!("ARTEMIS quickstart — {}", model.name);
+    println!(
+        "  geometry: {} layers, N={}, H={}, d_model={}, d_ff={}",
+        model.layers, model.seq_len, model.heads, model.d_model, model.d_ff
+    );
+    println!("  total MACs: {:.2} G\n", workload.total_macs() as f64 * 1e-9);
+
+    let r = simulate(&cfg, &workload, SimOptions::artemis());
+    println!("ARTEMIS (token dataflow, pipelined):");
+    println!("  latency      {:.3} ms", r.latency_ms());
+    println!("  energy       {:.2} mJ", r.total_energy_mj());
+    println!("  avg power    {:.1} W (budget {} W)", r.avg_power_w(), cfg.power_budget_w);
+    println!("  throughput   {:.0} GOPS", r.gops());
+    println!("  efficiency   {:.1} GOPS/W\n", r.gops_per_w());
+
+    println!("vs baseline platforms:");
+    for p in comparison_platforms() {
+        let speedup = p.latency_ns(&workload) / r.total_ns;
+        let energy = p.energy_pj(&workload) / r.total_energy_pj();
+        println!(
+            "  {:10}  {:8.1}x faster   {:8.1}x lower energy",
+            p.name, speedup, energy
+        );
+    }
+    println!("\n(paper Fig. 9/10 averages: 1230x/1443x CPU, 157x/700x GPU, 3.6x/6.2x HAIMA)");
+}

@@ -1,0 +1,84 @@
+"""L2 profiling: XLA cost analysis of the lowered ARTEMIS models.
+
+Part of the performance pass (EXPERIMENTS.md §Perf, L2): for each
+artifact-shaped computation this reports XLA's flop/byte estimates so
+redundant recomputation or unfused quantize/dequantize chains show up as
+flop inflation vs the analytic MAC count.
+
+Usage: ``cd python && python -m compile.analysis [--outfile ../artifacts/cost_analysis.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def cost_of(fn, args) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    cost = lowered.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def analytic_matmul_flops(m: int, k: int, n: int) -> float:
+    return 2.0 * m * k * n
+
+
+def run(outfile: str | None) -> dict:
+    report: dict = {}
+
+    # Bare matmul variants at a probe shape.
+    m, k, n = 64, 256, 64
+    probe = [spec(m, k), spec(k, n)]
+    for name, fn in [
+        ("matmul_fp32", M.matmul_fp32),
+        ("matmul_q8", M.matmul_q8),
+        ("sc_matmul_fast", M.sc_matmul_fast),
+    ]:
+        c = cost_of(fn, probe)
+        c["analytic_flops"] = analytic_matmul_flops(m, k, n)
+        c["flop_inflation"] = c["flops"] / c["analytic_flops"] if c["analytic_flops"] else 0.0
+        report[name] = c
+
+    # Encoder block variants (tiny-block geometry).
+    bc = M.ModelConfig(vocab=0, d_model=64, n_heads=4, d_ff=128, n_layers=1, seq_len=32)
+    d, f2, n2 = bc.d_model, bc.d_ff, bc.seq_len
+    wspecs = [spec(n2, d), spec(d, d), spec(d, d), spec(d, d), spec(d, d),
+              spec(d, f2), spec(f2, d)]
+    for variant in ("fp32", "q8"):
+        report[f"encoder_{variant}"] = cost_of(M.encoder_block_fn(bc, variant), wspecs)
+
+    if outfile:
+        pathlib.Path(outfile).write_text(json.dumps(report, indent=2))
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outfile", default="../artifacts/cost_analysis.json")
+    args = ap.parse_args()
+    report = run(args.outfile)
+    for name, c in report.items():
+        extra = ""
+        if "flop_inflation" in c:
+            extra = f"  inflation={c['flop_inflation']:.2f}x"
+        print(f"{name:20} flops={c['flops']:.3e}  bytes={c['bytes_accessed']:.3e}{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""AOT compile path: lower the ARTEMIS functional models to HLO text.
+
+Run once at build time (``make artifacts``).  Emits into ``artifacts/``:
+
+* ``tiny_{fp32,q8,q8sc}.hlo.txt``  — the trained tiny classifier (weights
+  baked as constants), f32[B, N] token ids -> (f32[B, C] logits,).
+* ``encoder_{q8,q8sc}.hlo.txt``    — one parameterized encoder block
+  (weights are runtime parameters) at a cross-validation geometry.
+* ``sc_matmul_MxKxN.hlo.txt``      — the bare L1 kernel at several
+  shapes, for bit-exact cross-validation against the rust ``sc`` module.
+* ``manifest.json``                — artifact registry consumed by
+  ``rust/src/runtime/artifacts.rs``.
+* ``train_log.json``               — tiny-model training curve + eval
+  accuracy (recorded in EXPERIMENTS.md).
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import sc_matmul as scmm_k
+
+# Cross-validation shapes for the bare kernel artifacts (M, K, N).
+KERNEL_SHAPES = [(8, 16, 8), (16, 64, 32), (32, 128, 64)]
+
+# Parameterized encoder-block geometry: small enough to lower + execute
+# quickly, large enough to exercise multi-head splits and FFN shapes.
+BLOCK_CFG = M.ModelConfig(
+    vocab=0, d_model=64, n_heads=4, d_ff=128, n_layers=1, seq_len=32
+)
+
+TINY_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is essential: the default elides baked
+    weights as ``{...}``, which the text parser silently zero-fills.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit(fn, example_args, path: pathlib.Path) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    shapes = [list(a.shape) for a in example_args]
+    print(
+        f"  wrote {path.name}: {len(text)} chars, "
+        f"inputs {shapes} ({time.time() - t0:.1f}s)"
+    )
+    return {
+        "path": path.name,
+        "inputs": shapes,
+        "dtype": "f32",
+    }
+
+
+def spec(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def train_or_load(outdir: pathlib.Path):
+    """Train the tiny model, caching params in artifacts/tiny_params.npz."""
+    cache = outdir / "tiny_params.npz"
+    log_path = outdir / "train_log.json"
+    if cache.exists() and log_path.exists():
+        data = np.load(cache, allow_pickle=False)
+        params = {
+            "embed": jnp.asarray(data["embed"]),
+            "pos": jnp.asarray(data["pos"]),
+            "head": jnp.asarray(data["head"]),
+            "layers": [],
+        }
+        n_layers = int(data["n_layers"])
+        for i in range(n_layers):
+            params["layers"].append(
+                {k: jnp.asarray(data[f"l{i}_{k}"]) for k in
+                 ("wq", "wk", "wv", "wo", "w1", "w2")}
+            )
+        print(f"  loaded cached tiny params from {cache.name}")
+        return params
+    print("  training tiny model (fp32, synthetic task)...")
+    params, acc, losses = M.train_tiny(M.TINY, steps=300)
+    print(f"  tiny model eval accuracy (fp32): {acc:.3f}")
+    flat = {
+        "embed": np.asarray(params["embed"]),
+        "pos": np.asarray(params["pos"]),
+        "head": np.asarray(params["head"]),
+        "n_layers": np.asarray(len(params["layers"])),
+    }
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            flat[f"l{i}_{k}"] = np.asarray(v)
+    np.savez(cache, **flat)
+    log_path.write_text(
+        json.dumps({"eval_acc_fp32": acc, "loss_curve_every10": losses})
+    )
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"artifacts": {}, "configs": {}}
+    cfg = M.TINY
+    manifest["configs"]["tiny"] = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff, "n_layers": cfg.n_layers, "seq_len": cfg.seq_len,
+        "n_classes": cfg.n_classes, "batch": TINY_BATCH,
+    }
+    bc = BLOCK_CFG
+    manifest["configs"]["block"] = {
+        "d_model": bc.d_model, "n_heads": bc.n_heads, "d_ff": bc.d_ff,
+        "seq_len": bc.seq_len,
+    }
+
+    params = train_or_load(outdir)
+
+    # --- tiny classifier, three arithmetic variants -----------------------
+    for variant in M.VARIANTS:
+        def fn(tokens, _v=variant):
+            return (M.classifier_logits(tokens, params, cfg, _v),)
+
+        name = f"tiny_{variant}"
+        manifest["artifacts"][name] = emit(
+            fn, [spec(TINY_BATCH, cfg.seq_len)], outdir / f"{name}.hlo.txt"
+        )
+
+    # --- parameterized encoder block (q8 exact + full ARTEMIS arithmetic) -
+    d, f, n = bc.d_model, bc.d_ff, bc.seq_len
+    wspecs = [spec(n, d), spec(d, d), spec(d, d), spec(d, d), spec(d, d),
+              spec(d, f), spec(f, d)]
+    for variant in ("q8", "q8sc"):
+        name = f"encoder_{variant}"
+        manifest["artifacts"][name] = emit(
+            M.encoder_block_fn(bc, variant), wspecs, outdir / f"{name}.hlo.txt"
+        )
+
+    # --- bare L1 kernel at cross-validation shapes -------------------------
+    for (m, k, n2) in KERNEL_SHAPES:
+        def fn(a, b):
+            return (scmm_k.sc_matmul(a, b),)
+
+        name = f"sc_matmul_{m}x{k}x{n2}"
+        manifest["artifacts"][name] = emit(
+            fn, [spec(m, k), spec(k, n2)], outdir / f"{name}.hlo.txt"
+        )
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Pallas kernel: fused single-head SC attention (L1).
+
+Fuses the ARTEMIS MHA inner loop — SC(Q @ K^T), scale, NSC log-sum-exp
+softmax, SC(S @ V) — into one Pallas kernel, one grid cell per query-row
+block.  This mirrors the paper's intra-bank pipeline (Fig. 6): the
+attention-score partials feed the softmax comparator as they are
+produced, and the S x V MatMul consumes the softmax output without a
+round-trip to the DRAM arrays.
+
+On the TPU mapping the (bq x N) score block lives in VMEM for the whole
+cell — the analogue of keeping the scores in the tile latch rows between
+the two MatMuls.  Quantization scales are traced values, so they enter
+the kernel as a tiny (1, 2) operand rather than closure state.
+
+interpret=True: see sc_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _sc_dot_codes(qa, qb, block_k: int):
+    """sum_k trunc(qa[m,k]*qb[k,n]/128) with a slab loop (shared helper)."""
+    k_total = qa.shape[1]
+    bk = block_k if (block_k <= k_total and k_total % block_k == 0) else k_total
+    num_slabs = k_total // bk
+
+    def slab(i, acc):
+        a = jax.lax.dynamic_slice_in_dim(qa, i * bk, bk, 1)
+        b = jax.lax.dynamic_slice_in_dim(qb, i * bk, bk, 0)
+        prod = jnp.trunc(a[:, :, None] * b[None, :, :] * (1.0 / common.STREAM_LEN))
+        return acc + jnp.sum(prod, axis=1)
+
+    acc = jnp.zeros((qa.shape[0], qb.shape[1]), jnp.float32)
+    return jax.lax.fori_loop(0, num_slabs, slab, acc)
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, c_ref, o_ref, *, block_k: int):
+    """One (bq, D) block of queries against the full K/V.
+
+    q_ref: f32[bq, D] codes; k_ref / v_ref: f32[N, D] codes;
+    c_ref: f32[1, 2] = [[score_scale, v_scale]]; o_ref: f32[bq, D].
+    """
+    score_scale = c_ref[0, 0]
+    v_scale = c_ref[0, 1]
+
+    # SC(Q @ K^T): codes in, float scores out (dequant + 1/sqrt(D) folded
+    # into score_scale by the caller).
+    acc = _sc_dot_codes(q_ref[...], k_ref[...].T, block_k)
+    scores = acc * score_scale
+
+    # NSC log-sum-exp softmax over keys (Eq. 5), LUT-quantized.
+    probs = common.nsc_softmax(scores, axis=-1)
+
+    # Probabilities are re-quantized on their way into the next MatMul
+    # (B_to_TCU at the NSC); probs are in [0,1] so the scale is static.
+    qp = jnp.clip(jnp.round(probs * common.QMAX), 0.0, common.QMAX)
+
+    acc2 = _sc_dot_codes(qp, v_ref[...], block_k)
+    o_ref[...] = acc2 * ((1.0 / common.QMAX) * v_scale * common.STREAM_LEN)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def sc_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 64,
+    block_k: int = 64,
+) -> jax.Array:
+    """Fused ARTEMIS single-head attention.
+
+    Args: q, k, v: f32[N, D] float inputs (one head).
+    Returns: f32[N, D] attention output under the ARTEMIS arithmetic model.
+    """
+    n, d = q.shape
+    sq = common.quant_scale(q)
+    sk = common.quant_scale(k)
+    sv = common.quant_scale(v)
+    qq = common.quantize(q, sq)
+    qk = common.quantize(k, sk)
+    qv = common.quantize(v, sv)
+    score_scale = sq * sk * common.STREAM_LEN / jnp.sqrt(jnp.float32(d))
+    consts = jnp.stack([score_scale, sv]).reshape(1, 2)
+
+    bq = min(block_q, n)
+    while n % bq:
+        bq -= 1
+    grid = (n // bq,)
+    kern = functools.partial(_attention_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(qq, qk, qv, consts)

@@ -1,0 +1,149 @@
+"""Shared quantization / ARTEMIS arithmetic-model helpers.
+
+This module is the single source of truth for the *functional* model of
+ARTEMIS' mixed analog-stochastic arithmetic, used by both the Pallas
+kernels (L1) and the JAX model (L2).  The Rust simulator (L3) implements
+the same model bit-exactly over TCU streams in ``rust/src/sc``; the two
+are cross-validated through the ``sc_matmul`` HLO artifact (see
+``rust/tests/cross_layer.rs``).
+
+ARTEMIS arithmetic model
+------------------------
+* Values are quantized to signed 8-bit with a symmetric per-tensor scale:
+  ``q = clamp(round(x / s), -127, 127)`` with ``s = max|x| / 127``.
+* A quantized magnitude ``m = |q| <= 127`` is represented as a 128-bit
+  transition-coded-unary (TCU) stochastic stream (sign carried on the
+  per-row sign bit-line).
+* Deterministic stochastic multiplication: the first operand is passed
+  through the bit-position correlation encoder, which spreads its ``m_a``
+  ones over the 128 positions in a Bresenham (low-discrepancy) pattern;
+  the in-DRAM AND with the plain TCU stream of the second operand
+  (``m_b`` leading ones) then yields a popcount of exactly
+
+      popcount = floor(m_a * m_b / 128)            (telescoping sum)
+
+  so the signed product is ``trunc(q_a * q_b / 128)`` — truncation toward
+  zero.  This is the *only* source of multiplicative error in ARTEMIS.
+* Analog temporal accumulation on the MOMCAP adds popcounts as charge.
+  With the paper's chosen 8 pF capacitor each MOMCAP linearly accumulates
+  20 consecutive 128-bit products (capacity 2560 charge units >= 20 *
+  floor(127*127/128) = 2500), i.e. the accumulation itself is exact in
+  the calibrated region; per-tile windows of 40 products (two MOMCAPs).
+* A_to_B conversion resolves the full charge range (Table V: calibration
+  accuracy 11.38 bits ~ 2666 levels > 2560 units), i.e. functionally
+  exact; analog non-idealities are modelled separately in the Rust
+  ``analog`` module for the Table V error analysis.
+
+Hence the end-to-end functional form of an ARTEMIS matmul is
+
+    out = (sum_k trunc(qa[i,k] * qb[k,j] / 128)) * (s_a * s_b * 128)
+
+which this module implements (plus the LUT-based log-sum-exp softmax used
+by the NSC units).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# 128-bit stochastic streams: the divisor of the deterministic
+# TCU multiply (paper Section III.A.1).
+STREAM_LEN = 128
+# Signed 8-bit quantization: magnitudes in [0, 127].
+QMAX = 127.0
+# MOMCAP accumulation window per tile (2 MOMCAPs x 20 accumulations).
+TILE_WINDOW = 40
+# exp/ln LUTs in the NSC units are addressed by 8-bit codes.
+LUT_SIZE = 256
+# Input range covered by the exp LUT (log-sum-exp softmax operates on
+# non-positive shifted logits; 8-bit codes span [-LUT_EXP_RANGE, 0]).
+LUT_EXP_RANGE = 16.0
+
+
+def quant_scale(x: jax.Array) -> jax.Array:
+    """Symmetric per-tensor scale for signed 8-bit quantization."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / QMAX
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize to signed 8-bit codes, kept in f32 (values are integers).
+
+    f32 carries integer values exactly up to 2^24, far above the 127
+    magnitudes used here; keeping everything f32 avoids integer-dtype
+    corners in the PJRT interchange.
+    """
+    return jnp.clip(jnp.round(x / scale), -QMAX, QMAX)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q * scale
+
+
+def sc_product(qa: jax.Array, qb: jax.Array) -> jax.Array:
+    """Elementwise deterministic stochastic product of 8-bit codes.
+
+    ``trunc(qa*qb/128)`` — truncation toward zero, matching the popcount
+    of the in-DRAM AND of a correlation-encoded stream with a TCU stream.
+    """
+    return jnp.trunc(qa * qb / STREAM_LEN)
+
+
+def exp_lut() -> jax.Array:
+    """The NSC exp LUT: 256 entries over [-LUT_EXP_RANGE, 0]."""
+    codes = jnp.arange(LUT_SIZE, dtype=jnp.float32)
+    xs = -LUT_EXP_RANGE + codes * (LUT_EXP_RANGE / (LUT_SIZE - 1))
+    return jnp.exp(xs)
+
+
+def exp_lut_lookup(x: jax.Array) -> jax.Array:
+    """LUT-quantized exp over non-positive inputs (NSC step 4)."""
+    x = jnp.clip(x, -LUT_EXP_RANGE, 0.0)
+    code = jnp.round((x + LUT_EXP_RANGE) * ((LUT_SIZE - 1) / LUT_EXP_RANGE))
+    return jnp.take(exp_lut(), code.astype(jnp.int32))
+
+
+def ln_lut_lookup(x: jax.Array, max_in: float) -> jax.Array:
+    """LUT-quantized natural log over [1, max_in] (NSC step 2).
+
+    The softmax's log-sum-exp input is a sum of exponentials whose max
+    term is exp(0) = 1, so the sum lies in [1, row_width]; the
+    reprogrammable NSC LUT is loaded with a log-spaced grid over that
+    range (quantizing ln(x) directly), bounding the ln error by
+    ln(max_in)/(2*255) — the resolution that gives Table V's softmax
+    error scale.
+    """
+    ln_max = jnp.log(jnp.float32(max_in))
+    xc = jnp.clip(x, 1.0, max_in)
+    code = jnp.round(jnp.log(xc) * ((LUT_SIZE - 1) / ln_max))
+    return code * (ln_max / (LUT_SIZE - 1))
+
+
+def nsc_softmax(y: jax.Array, axis: int = -1) -> jax.Array:
+    """Log-sum-exp softmax as executed by the NSC units (Eq. 5).
+
+    softmax(y_i) = exp(y_i - y_max - ln(sum_j exp(y_j - y_max)))
+    with exp/ln realized through the 8-bit LUTs.
+    """
+    y_max = jnp.max(y, axis=axis, keepdims=True)          # step 1: comparator
+    z = y - y_max
+    e = exp_lut_lookup(z)                                  # step 2a: exp LUT
+    s = jnp.sum(e, axis=axis, keepdims=True)               # step 2b: NSC adds
+    # sum of <= d terms each <= 1; LUT range sized to the reduction width
+    ln_s = ln_lut_lookup(s, max_in=float(y.shape[axis]))   # step 2c: ln LUT
+    return exp_lut_lookup(z - ln_s)                        # steps 3+4
+
+
+def nsc_gelu(x: jax.Array) -> jax.Array:
+    """GELU via NSC LUT (tanh approximation, 8-bit input grid)."""
+    lo, hi = -8.0, 8.0
+    xq = jnp.clip(x, lo, hi)
+    code = jnp.round((xq - lo) * ((LUT_SIZE - 1) / (hi - lo)))
+    grid = lo + code * ((hi - lo) / (LUT_SIZE - 1))
+    c = jnp.sqrt(2.0 / jnp.pi)
+    return 0.5 * grid * (1.0 + jnp.tanh(c * (grid + 0.044715 * grid**3)))
+
+
+def nsc_relu(x: jax.Array) -> jax.Array:
+    """ReLU — exact even as a LUT (sign test on the 8-bit code)."""
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,133 @@
+"""Pallas kernel: fused FFN (FF1 -> activation -> FF2) under ARTEMIS
+arithmetic (L1).
+
+Fuses the two FFN MatMuls of an encoder layer with the NSC activation in
+between, one grid cell per token-row block — the intra-bank analogue of
+Fig. 6's pipelining: the hidden activations never leave the bank (VMEM
+in the TPU mapping), they are re-quantized by the per-row B_to_TCU path
+and fed straight into the second MatMul's computation rows.
+
+Quantization semantics: the hidden matrix ``h`` is re-quantized
+*per token row* (each DRAM row stores one token's hidden vector and
+carries its own scale via the per-subarray sign/scale bookkeeping), so
+the kernel's blocking does not change the numerics — any row partition
+gives identical results, which is what lets the oracle be straight jnp.
+
+interpret=True: see sc_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _sc_dot_codes(qa, qb, block_k: int):
+    """sum_k trunc(qa[m,k]*qb[k,n]/128) (same slab loop as attention.py)."""
+    k_total = qa.shape[1]
+    bk = block_k if (block_k <= k_total and k_total % block_k == 0) else k_total
+    num_slabs = k_total // bk
+
+    def slab(i, acc):
+        a = jax.lax.dynamic_slice_in_dim(qa, i * bk, bk, 1)
+        b = jax.lax.dynamic_slice_in_dim(qb, i * bk, bk, 0)
+        prod = jnp.trunc(a[:, :, None] * b[None, :, :] * (1.0 / common.STREAM_LEN))
+        return acc + jnp.sum(prod, axis=1)
+
+    acc = jnp.zeros((qa.shape[0], qb.shape[1]), jnp.float32)
+    return jax.lax.fori_loop(0, num_slabs, slab, acc)
+
+
+def _row_quantize(x):
+    """Per-row symmetric 8-bit quantization: (codes, scales[m,1])."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-12) / common.QMAX
+    q = jnp.clip(jnp.round(x / s), -common.QMAX, common.QMAX)
+    return q, s
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, c_ref, o_ref, *, relu: bool, block_k: int):
+    """One (bm, D) block of tokens through FF1 -> act -> FF2.
+
+    x_ref: f32[bm, D] input codes; w1_ref: f32[D, F] codes;
+    w2_ref: f32[F, D] codes; c_ref: f32[1, 3] = [[sx*sw1*128, sw2, unused]];
+    o_ref: f32[bm, D] float outputs.
+    """
+    h_scale_in = c_ref[0, 0]
+    sw2 = c_ref[0, 1]
+
+    # FF1: codes in, float hidden out.
+    acc1 = _sc_dot_codes(x_ref[...], w1_ref[...], block_k)
+    h = acc1 * h_scale_in
+
+    # NSC activation.
+    if relu:
+        h = jnp.maximum(h, 0.0)
+    else:
+        h = common.nsc_gelu(h)
+
+    # Per-row B_to_TCU re-quantization of the hidden activations.
+    qh, sh = _row_quantize(h)
+
+    # FF2: codes in, float block out (row scales broadcast).
+    acc2 = _sc_dot_codes(qh, w2_ref[...], block_k)
+    o_ref[...] = acc2 * (sh * sw2 * common.STREAM_LEN)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_m", "block_k"))
+def sc_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    relu: bool = True,
+    block_m: int = 32,
+    block_k: int = 64,
+) -> jax.Array:
+    """Fused ARTEMIS FFN: f32[N, D] x f32[D, F] x f32[F, D] -> f32[N, D]."""
+    n, d = x.shape
+    _, f = w1.shape
+    sx = common.quant_scale(x)
+    sw1 = common.quant_scale(w1)
+    sw2 = common.quant_scale(w2)
+    qx = common.quantize(x, sx)
+    qw1 = common.quantize(w1, sw1)
+    qw2 = common.quantize(w2, sw2)
+    consts = jnp.stack(
+        [sx * sw1 * common.STREAM_LEN, sw2, jnp.float32(0.0)]
+    ).reshape(1, 3)
+
+    bm = min(block_m, n)
+    while n % bm:
+        bm -= 1
+    kern = functools.partial(_ffn_kernel, relu=relu, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(qx, qw1, qw2, consts)
+
+
+def sc_ffn_ref(x: jax.Array, w1: jax.Array, w2: jax.Array, relu: bool = True) -> jax.Array:
+    """Pure-jnp oracle with identical quantization semantics."""
+    from . import ref as ref_mod
+
+    sx, sw1, sw2 = (common.quant_scale(t) for t in (x, w1, w2))
+    qx, qw1, qw2 = (common.quantize(t, s) for t, s in ((x, sx), (w1, sw1), (w2, sw2)))
+    h = ref_mod.sc_matmul_codes_ref(qx, qw1) * (sx * sw1 * common.STREAM_LEN)
+    h = jnp.maximum(h, 0.0) if relu else common.nsc_gelu(h)
+    sh = jnp.maximum(jnp.max(jnp.abs(h), axis=1, keepdims=True), 1e-12) / common.QMAX
+    qh = jnp.clip(jnp.round(h / sh), -common.QMAX, common.QMAX)
+    return ref_mod.sc_matmul_codes_ref(qh, qw2) * (sh * sw2 * common.STREAM_LEN)

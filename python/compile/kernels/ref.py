@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the ARTEMIS kernels — the correctness ground truth.
+
+Everything here is written for clarity, not speed: straight-line jnp with
+explicit loops over the reduction dimension.  The Pallas kernels in
+``sc_matmul.py`` / ``attention.py`` must match these oracles *exactly*
+(they implement the same integer arithmetic), which pytest enforces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def sc_matmul_codes_ref(qa: jax.Array, qb: jax.Array) -> jax.Array:
+    """Reference SC matmul over quantized codes.
+
+    ``out[i,j] = sum_k trunc(qa[i,k] * qb[k,j] / 128)`` computed one
+    reduction step at a time — the obviously-correct formulation.
+
+    Args:
+      qa: f32[M, K] integer-valued codes in [-127, 127].
+      qb: f32[K, N] integer-valued codes in [-127, 127].
+    Returns:
+      f32[M, N] integer-valued accumulated popcounts (signed).
+    """
+    m, k = qa.shape
+    _, n = qb.shape
+
+    def body(i, acc):
+        prod = common.sc_product(qa[:, i, None], qb[None, i, :])
+        return acc + prod
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((m, n), jnp.float32))
+
+
+def sc_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference float->float ARTEMIS matmul (quantize, SC, dequantize)."""
+    sa = common.quant_scale(a)
+    sb = common.quant_scale(b)
+    qa = common.quantize(a, sa)
+    qb = common.quantize(b, sb)
+    acc = sc_matmul_codes_ref(qa, qb)
+    return acc * (sa * sb * common.STREAM_LEN)
+
+
+def matmul_fp32_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain FP32 matmul — the paper's FP32 baseline."""
+    return a @ b
+
+
+def sc_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference single-head scaled dot-product attention, ARTEMIS style.
+
+    attention(Q, K, V) = nsc_softmax(SC(Q @ K^T) / sqrt(D)) . V with both
+    matmuls using the SC arithmetic and the softmax using the NSC
+    log-sum-exp LUT pipeline (Eq. 5).
+
+    Args: q: f32[N, D], k: f32[N, D], v: f32[N, D].
+    """
+    d = q.shape[-1]
+    scores = sc_matmul_ref(q, k.T) / jnp.sqrt(jnp.float32(d))
+    probs = common.nsc_softmax(scores, axis=-1)
+    # B_to_TCU re-quantization of the softmax output: probabilities are in
+    # [0, 1] so the hardware uses the static scale 1/127 (matches kernel).
+    sp = 1.0 / common.QMAX
+    qp = jnp.clip(jnp.round(probs * common.QMAX), 0.0, common.QMAX)
+    sv = common.quant_scale(v)
+    qv = common.quantize(v, sv)
+    acc = sc_matmul_codes_ref(qp, qv)
+    return acc * (sp * sv * common.STREAM_LEN)
+
+
+def attention_fp32_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """FP32 attention baseline."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v

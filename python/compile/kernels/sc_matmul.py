@@ -1,0 +1,118 @@
+"""Pallas kernel for the ARTEMIS SC-MAC matmul (L1 hot-spot).
+
+Hardware adaptation (DRAM tiles -> TPU, see DESIGN.md §Hardware-Adaptation):
+
+* A DRAM *tile* multiplies one 128-bit TCU stream pair per bit-line group
+  and analog-accumulates 40 products before an A_to_B conversion.  On TPU
+  the analogous unit of scheduling is a VMEM block: the grid maps an
+  (bm x bn) output block into VMEM (the scratchpad playing the role of
+  the tile's S/A latch row), and the innermost K loop plays the role of
+  the MOMCAP accumulation window — partial sums live in the output block
+  (VMEM-resident, like charge on the MOMCAP) and are only written back
+  when the block completes (the A_to_B conversion moment).
+* The 128-element stream length of the paper aligns with the TPU lane
+  width; block shapes are kept to multiples of 8x128 where the problem
+  permits so a real-TPU lowering would be MXU/VPU friendly.  The trunc()
+  per product forces VPU elementwise work (products then reduce) rather
+  than a single MXU matmul; the matmul+correction decomposition that
+  *does* use the MXU is implemented at L2 (model.py) and is verified to
+  agree exactly with this kernel.
+
+The kernel is compiled with ``interpret=True`` — on this CPU-PJRT setup a
+real Mosaic lowering cannot execute; structure (not interpret wallclock)
+is what's optimized here.  Correctness is enforced against
+``ref.sc_matmul_codes_ref`` by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _sc_matmul_kernel(qa_ref, qb_ref, out_ref, *, block_k: int):
+    """Compute one (bm, bn) output block.
+
+    qa_ref: f32[bm, K] codes; qb_ref: f32[K, bn] codes; out_ref: f32[bm, bn].
+    The K dimension is walked in ``block_k`` slabs; each slab contributes
+    sum_k trunc(qa*qb/128) to the VMEM-resident accumulator.
+    """
+    k_total = qa_ref.shape[1]
+    num_slabs = k_total // block_k
+
+    def slab(i, acc):
+        a = jax.lax.dynamic_slice_in_dim(qa_ref[...], i * block_k, block_k, 1)
+        b = jax.lax.dynamic_slice_in_dim(qb_ref[...], i * block_k, block_k, 0)
+        # (bm, block_k, bn) product cube, trunc'd per product — the
+        # in-DRAM AND popcounts — then reduced over the slab (the MOMCAP
+        # temporal accumulation; exact, so slab order is irrelevant).
+        prod = jnp.trunc(a[:, :, None] * b[None, :, :] * (1.0 / common.STREAM_LEN))
+        return acc + jnp.sum(prod, axis=1)
+
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    acc = jax.lax.fori_loop(0, num_slabs, slab, acc)
+    rem = k_total - num_slabs * block_k
+    if rem:  # static remainder slab
+        a = qa_ref[:, num_slabs * block_k :]
+        b = qb_ref[num_slabs * block_k :, :]
+        prod = jnp.trunc(a[:, :, None] * b[None, :, :] * (1.0 / common.STREAM_LEN))
+        acc = acc + jnp.sum(prod, axis=1)
+    out_ref[...] = acc
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= block (grid must tile evenly)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def sc_matmul_codes(
+    qa: jax.Array,
+    qb: jax.Array,
+    *,
+    block_m: int = 64,
+    block_n: int = 128,
+    block_k: int = 64,
+) -> jax.Array:
+    """SC matmul over 8-bit codes via Pallas.
+
+    Args:
+      qa: f32[M, K] integer-valued codes in [-127, 127].
+      qb: f32[K, N] integer-valued codes in [-127, 127].
+    Returns:
+      f32[M, N] signed accumulated popcounts: sum_k trunc(qa*qb/128).
+    """
+    m, k = qa.shape
+    k2, n = qb.shape
+    assert k == k2, f"reduction mismatch {k} vs {k2}"
+    bm, bn = _pick(block_m, m), _pick(block_n, n)
+    bk = _pick(block_k, k)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_sc_matmul_kernel, block_k=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qa, qb)
+
+
+def sc_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Float->float ARTEMIS matmul: quantize, SC matmul kernel, dequantize."""
+    sa = common.quant_scale(a)
+    sb = common.quant_scale(b)
+    qa = common.quantize(a, sa)
+    qb = common.quantize(b, sb)
+    return sc_matmul_codes(qa, qb) * (sa * sb * common.STREAM_LEN)

@@ -1,0 +1,301 @@
+"""L2: ARTEMIS transformer model in JAX (build-time only).
+
+Defines the quantized transformer encoder executed by the ARTEMIS
+functional model, in three arithmetic variants:
+
+* ``fp32``  — plain float32 (the paper's FP32 baseline column).
+* ``q8``    — 8-bit symmetric quantization of every MatMul, exact
+  integer accumulation (the paper's Q(8-bit) column).
+* ``q8sc``  — q8 plus the deterministic-stochastic multiply error
+  (trunc(qa*qb/128)) and the NSC LUT softmax/GELU — the full ARTEMIS
+  arithmetic model (the paper's Q(8-bit)+SC column).  MatMuls go through
+  the L1 Pallas kernels so the lowered HLO contains the kernel body.
+
+The q8 variant uses the *matmul + correction* decomposition of the SC
+product sum (see below) with the correction dropped; q8sc keeps it.  The
+decomposition is the MXU-friendly form referenced in DESIGN.md:
+
+    sum_k trunc(a_k b_k / 128) = ( sum_k a_k b_k  -  sum_k r_k ) / 128
+    r_k = a_k b_k - 128 * trunc(a_k b_k / 128)   (signed remainder)
+
+so the main term is a single dense matmul and only the remainder needs
+an elementwise pass.  ``sc_matmul_fast`` implements it and is verified
+to agree exactly with the Pallas kernel (tests/test_model.py).
+
+Everything here runs ONCE at build time inside ``aot.py``; the rust
+runtime only ever sees the lowered HLO text.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import common
+from .kernels import sc_matmul as scmm_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of an encoder-only transformer (Table II shape language)."""
+
+    vocab: int = 32
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    n_layers: int = 2
+    seq_len: int = 16
+    n_classes: int = 2
+    activation: str = "relu"  # "relu" (FFN) or "gelu" (ViT-style)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+TINY = ModelConfig()
+# One BERT-base-geometry encoder block (Table II row 2) for perf-shape
+# artifacts; weights are runtime parameters, not baked constants.
+BERT_BASE_BLOCK = ModelConfig(
+    vocab=0, d_model=768, n_heads=12, d_ff=3072, n_layers=1, seq_len=128
+)
+
+
+# --------------------------------------------------------------------------
+# MatMul variants
+# --------------------------------------------------------------------------
+
+
+def matmul_fp32(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a @ b
+
+
+def matmul_q8(a: jax.Array, b: jax.Array) -> jax.Array:
+    """8-bit quantized matmul with exact accumulation (no SC error)."""
+    sa, sb = common.quant_scale(a), common.quant_scale(b)
+    qa, qb = common.quantize(a, sa), common.quantize(b, sb)
+    return (qa @ qb) * (sa * sb)
+
+
+def sc_matmul_fast(a: jax.Array, b: jax.Array) -> jax.Array:
+    """ARTEMIS matmul via the matmul+correction decomposition (L2 form).
+
+    Exactly equal to kernels.sc_matmul.sc_matmul, but the main term is a
+    dense matmul (MXU-friendly) and the remainder correction is a scanned
+    elementwise pass over K chunks (bounded memory).
+    """
+    sa, sb = common.quant_scale(a), common.quant_scale(b)
+    qa, qb = common.quantize(a, sa), common.quantize(b, sb)
+    main = qa @ qb  # exact: |products| <= 127^2, sums << 2^24
+
+    k = qa.shape[1]
+    chunk = 64
+    while k % chunk:
+        chunk -= 1
+    n_chunks = k // chunk
+
+    def body(carry, i):
+        qa_c = jax.lax.dynamic_slice_in_dim(qa, i * chunk, chunk, 1)
+        qb_c = jax.lax.dynamic_slice_in_dim(qb, i * chunk, chunk, 0)
+        prod = qa_c[:, :, None] * qb_c[None, :, :]
+        rem = prod - common.STREAM_LEN * jnp.trunc(prod / common.STREAM_LEN)
+        return carry + jnp.sum(rem, axis=1), None
+
+    remsum, _ = jax.lax.scan(
+        body, jnp.zeros(main.shape, jnp.float32), jnp.arange(n_chunks)
+    )
+    acc = (main - remsum) / common.STREAM_LEN
+    return acc * (sa * sb * common.STREAM_LEN)
+
+
+def matmul_q8sc_kernel(a: jax.Array, b: jax.Array) -> jax.Array:
+    """ARTEMIS matmul through the L1 Pallas kernel (lowered into HLO)."""
+    return scmm_k.sc_matmul(a, b)
+
+
+MATMULS = {
+    "fp32": matmul_fp32,
+    "q8": matmul_q8,
+    "q8sc": matmul_q8sc_kernel,
+    "q8sc_fast": sc_matmul_fast,
+}
+
+VARIANTS = ("fp32", "q8", "q8sc")
+
+
+# --------------------------------------------------------------------------
+# Transformer blocks
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialize full classifier-model parameters (embeddings included)."""
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_model))
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.5,
+        "pos": jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)) * 0.1,
+        "layers": [init_block_params(cfg, keys[2 + i]) for i in range(cfg.n_layers)],
+    }
+    hk = jax.random.fold_in(key, 999)
+    params["head"] = jax.random.normal(hk, (cfg.d_model, cfg.n_classes)) * scale
+    return params
+
+
+def init_block_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """One encoder block's weights (the runtime-parameter artifact shape)."""
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(jnp.float32(cfg.d_model))
+    sf = 1.0 / jnp.sqrt(jnp.float32(cfg.d_ff))
+    return {
+        "wq": jax.random.normal(ks[0], (cfg.d_model, cfg.d_model)) * s,
+        "wk": jax.random.normal(ks[1], (cfg.d_model, cfg.d_model)) * s,
+        "wv": jax.random.normal(ks[2], (cfg.d_model, cfg.d_model)) * s,
+        "wo": jax.random.normal(ks[3], (cfg.d_model, cfg.d_model)) * s,
+        "w1": jax.random.normal(ks[4], (cfg.d_model, cfg.d_ff)) * s,
+        "w2": jax.random.normal(ks[5], (cfg.d_ff, cfg.d_model)) * sf,
+    }
+
+
+def layer_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def _softmax(variant: str, scores: jax.Array) -> jax.Array:
+    if variant == "fp32":
+        return jax.nn.softmax(scores, axis=-1)
+    return common.nsc_softmax(scores, axis=-1)
+
+
+def _activation(variant: str, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x) if variant == "fp32" else common.nsc_gelu(x)
+    return jnp.maximum(x, 0.0)
+
+
+def mha(
+    x: jax.Array, p: dict[str, Any], cfg: ModelConfig, variant: str
+) -> jax.Array:
+    """Multi-head attention over one sequence, f32[N, D] -> f32[N, D]."""
+    mm = MATMULS[variant]
+    q = mm(x, p["wq"])
+    k = mm(x, p["wk"])
+    v = mm(x, p["wv"])
+    outs = []
+    dh = cfg.d_head
+    for h in range(cfg.n_heads):
+        qs, ks, vs = (t[:, h * dh : (h + 1) * dh] for t in (q, k, v))
+        if variant == "q8sc":
+            # fused Pallas attention kernel (includes the NSC softmax)
+            outs.append(attn_k.sc_attention(qs, ks, vs))
+        else:
+            scores = mm(qs, ks.T) / jnp.sqrt(jnp.float32(dh))
+            probs = _softmax(variant, scores)
+            outs.append(mm(probs, vs))
+    return mm(jnp.concatenate(outs, axis=-1), p["wo"])
+
+
+def encoder_block(
+    x: jax.Array, p: dict[str, Any], cfg: ModelConfig, variant: str
+) -> jax.Array:
+    """Pre-LN encoder block: x + MHA(LN(x)); x + FFN(LN(x))."""
+    mm = MATMULS[variant]
+    x = x + mha(layer_norm(x), p, cfg, variant)
+    h = mm(layer_norm(x), p["w1"])
+    h = _activation(variant, cfg, h)
+    return x + mm(h, p["w2"])
+
+
+def classifier_logits(
+    tokens: jax.Array, params: dict[str, Any], cfg: ModelConfig, variant: str
+) -> jax.Array:
+    """Full tiny-model forward: f32[B, N] token ids -> f32[B, n_classes].
+
+    Token ids arrive as f32 (integer-valued) to keep the PJRT interface
+    single-dtype; they are rounded and clipped defensively.
+    """
+    ids = jnp.clip(jnp.round(tokens), 0, cfg.vocab - 1).astype(jnp.int32)
+
+    def one(seq_ids):
+        x = params["embed"][seq_ids] + params["pos"]
+        for p in params["layers"]:
+            x = encoder_block(x, p, cfg, variant)
+        pooled = jnp.mean(layer_norm(x), axis=0)
+        return pooled @ params["head"]
+
+    # q8sc goes through pallas_call, which vmap handles via its batching
+    # rule in interpret mode; keep an explicit python loop instead to be
+    # robust across jax versions (batch is small at build/eval time).
+    if variant == "q8sc":
+        return jnp.stack([one(ids[b]) for b in range(ids.shape[0])])
+    return jax.vmap(one)(ids)
+
+
+def encoder_block_fn(cfg: ModelConfig, variant: str):
+    """Returns f(x, wq, wk, wv, wo, w1, w2) -> (y,) for AOT lowering."""
+
+    def fn(x, wq, wk, wv, wo, w1, w2):
+        p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo, "w1": w1, "w2": w2}
+        return (encoder_block(x, p, cfg, variant),)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Build-time training of the tiny model (synthetic task)
+# --------------------------------------------------------------------------
+
+
+def synth_batch(key: jax.Array, cfg: ModelConfig, batch: int):
+    """Synthetic classification task: does token ``1`` appear more often
+    than token ``2`` in the sequence?  Requires aggregation over the whole
+    sequence, so a trained model is meaningfully better than chance."""
+    ids = jax.random.randint(key, (batch, cfg.seq_len), 0, cfg.vocab)
+    ones = jnp.sum(ids == 1, axis=1)
+    twos = jnp.sum(ids == 2, axis=1)
+    labels = (ones > twos).astype(jnp.int32)
+    return ids.astype(jnp.float32), labels
+
+
+def train_tiny(
+    cfg: ModelConfig,
+    steps: int = 300,
+    batch: int = 64,
+    lr: float = 3e-3,
+    seed: int = 0,
+) -> tuple[dict[str, Any], float, list[float]]:
+    """Train the tiny classifier in fp32.
+
+    Returns (params, eval accuracy, loss curve sampled every 10 steps).
+    """
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+
+    def loss_fn(p, toks, labels):
+        logits = classifier_logits(toks, p, cfg, "fp32")
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+    @jax.jit
+    def step(p, k):
+        toks, labels = synth_batch(k, cfg, batch)
+        loss, g = jax.value_and_grad(loss_fn)(p, toks, labels)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), loss
+
+    losses: list[float] = []
+    for i in range(steps):
+        params, loss = step(params, jax.random.fold_in(key, i))
+        if i % 10 == 0:
+            losses.append(float(loss))
+
+    toks, labels = synth_batch(jax.random.PRNGKey(seed + 1), cfg, 512)
+    preds = jnp.argmax(classifier_logits(toks, params, cfg, "fp32"), axis=-1)
+    acc = float(jnp.mean(preds == labels))
+    return params, acc, losses

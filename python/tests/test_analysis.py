@@ -1,0 +1,35 @@
+"""Tests for the L2 cost-analysis profiling tool."""
+
+import jax
+
+from compile import analysis
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_cost_analysis_reports_all_probes():
+    report = analysis.run(outfile=None)
+    for key in ("matmul_fp32", "matmul_q8", "sc_matmul_fast",
+                "encoder_fp32", "encoder_q8"):
+        assert key in report
+        assert report[key]["flops"] > 0
+
+
+def test_fp32_matmul_matches_analytic_flops():
+    report = analysis.run(outfile=None)
+    c = report["matmul_fp32"]
+    assert 0.9 < c["flop_inflation"] < 1.2, c
+
+
+def test_sc_variant_costs_more_than_q8():
+    """The SC remainder correction adds real work over plain q8 — the
+    profile must show it (this is the L2 perf trade we document)."""
+    report = analysis.run(outfile=None)
+    assert report["sc_matmul_fast"]["flops"] > report["matmul_q8"]["flops"]
+
+
+def test_q8_inflation_is_bounded():
+    """Quantize/dequantize should stay cheap relative to the matmul."""
+    report = analysis.run(outfile=None)
+    assert report["matmul_q8"]["flop_inflation"] < 3.0, report["matmul_q8"]

@@ -1,0 +1,69 @@
+"""AOT compile-path tests: HLO-text emission and manifest structure."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_to_hlo_text_prints_large_constants():
+    """The bug this guards: default printing elides big constants as
+    `{...}`, which the rust-side text parser silently zero-fills."""
+    big = jnp.arange(4096, dtype=jnp.float32).reshape(64, 64)
+
+    def fn(x):
+        return (x + big,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    constant_lines = [l for l in text.splitlines() if "constant(" in l and "f32[64,64]" in l]
+    assert constant_lines, "expected a large f32[64,64] constant"
+    assert not any("{...}" in l for l in constant_lines), "constant was elided"
+
+
+def test_emit_writes_file_and_manifest_entry(tmp_path: pathlib.Path):
+    def fn(x):
+        return (x * 2.0,)
+
+    entry = aot.emit(fn, [aot.spec(2, 3)], tmp_path / "double.hlo.txt")
+    assert (tmp_path / "double.hlo.txt").exists()
+    assert entry["path"] == "double.hlo.txt"
+    assert entry["inputs"] == [[2, 3]]
+    assert entry["dtype"] == "f32"
+
+
+def test_kernel_shapes_cover_multiple_scales():
+    ms = [m for (m, _, _) in aot.KERNEL_SHAPES]
+    assert len(aot.KERNEL_SHAPES) >= 3
+    assert len(set(ms)) == len(ms), "shapes should differ"
+
+
+def test_existing_manifest_is_valid_json():
+    manifest = pathlib.Path("../artifacts/manifest.json")
+    if not manifest.exists():
+        pytest.skip("run `make artifacts` first")
+    data = json.loads(manifest.read_text())
+    assert "artifacts" in data and "configs" in data
+    for name, a in data["artifacts"].items():
+        assert (pathlib.Path("../artifacts") / a["path"]).exists(), name
+        assert all(isinstance(d, int) for shape in a["inputs"] for d in shape)
+    tiny = data["configs"]["tiny"]
+    assert tiny["seq_len"] > 0 and tiny["batch"] > 0

@@ -1,0 +1,62 @@
+"""Fused FFN kernel vs oracle."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ffn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestScFfn:
+    @pytest.mark.parametrize("n,d,f", [(8, 16, 32), (16, 32, 64), (32, 64, 128)])
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_matches_oracle_exactly(self, n, d, f, relu):
+        x, w1, w2 = rand(1, (n, d)), rand(2, (d, f)), rand(3, (f, d))
+        got = ffn.sc_ffn(x, w1, w2, relu=relu)
+        want = ffn.sc_ffn_ref(x, w1, w2, relu=relu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=1e-4)
+
+    def test_blocking_does_not_change_numerics(self):
+        """Per-row requantization makes results block-invariant."""
+        x, w1, w2 = rand(4, (16, 32)), rand(5, (32, 64)), rand(6, (64, 32))
+        a = ffn.sc_ffn(x, w1, w2, block_m=4)
+        b = ffn.sc_ffn(x, w1, w2, block_m=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_close_to_fp32_ffn(self):
+        x, w1, w2 = rand(7, (16, 32)), rand(8, (32, 64), 0.3), rand(9, (64, 32), 0.3)
+        got = ffn.sc_ffn(x, w1, w2)
+        want = jnp.maximum(x @ w1, 0.0) @ w2
+        rel = float(jnp.max(jnp.abs(got - want)) / (jnp.max(jnp.abs(want)) + 1e-9))
+        assert rel < 0.1, f"fused FFN drifted {rel} from fp32"
+
+    def test_relu_zeros_propagate(self):
+        """Strongly negative hidden rows contribute nothing after ReLU."""
+        x = -jnp.ones((4, 8))
+        w1 = jnp.ones((8, 16))  # h = -8 everywhere -> ReLU -> 0
+        w2 = rand(10, (16, 8))
+        got = ffn.sc_ffn(x, w1, w2, relu=True)
+        np.testing.assert_allclose(np.asarray(got), np.zeros((4, 8)), atol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.sampled_from([4, 8, 12]), d=st.sampled_from([8, 16]),
+           f=st.sampled_from([16, 32]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, d, f, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (n, d)) * 0.5
+        w1 = jax.random.normal(ks[1], (d, f)) * 0.5
+        w2 = jax.random.normal(ks[2], (f, d)) * 0.5
+        got = ffn.sc_ffn(x, w1, w2)
+        want = ffn.sc_ffn_ref(x, w1, w2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=1e-4)

@@ -1,0 +1,222 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles.
+
+The SC arithmetic is deterministic integer math, so the kernels must match
+the oracles *exactly* (atol=0), not just approximately.  hypothesis sweeps
+shapes and value ranges.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import attention as attn_k
+from compile.kernels import common, ref
+from compile.kernels import sc_matmul as scmm_k
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+
+class TestQuantization:
+    def test_codes_are_integers_in_range(self):
+        x = rand(0, (32, 32), 3.0)
+        s = common.quant_scale(x)
+        q = common.quantize(x, s)
+        assert float(jnp.max(jnp.abs(q))) <= 127.0
+        np.testing.assert_array_equal(np.asarray(q), np.round(np.asarray(q)))
+
+    def test_scale_maps_max_to_127(self):
+        x = jnp.array([[0.5, -2.0], [1.0, 0.1]])
+        s = common.quant_scale(x)
+        q = common.quantize(x, s)
+        assert float(jnp.max(jnp.abs(q))) == 127.0
+
+    def test_roundtrip_error_bounded_by_half_step(self):
+        x = rand(1, (64,), 2.0)
+        s = common.quant_scale(x)
+        err = jnp.abs(common.dequantize(common.quantize(x, s), s) - x)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+
+    def test_zero_tensor_does_not_divide_by_zero(self):
+        x = jnp.zeros((4, 4))
+        s = common.quant_scale(x)
+        assert np.isfinite(float(s)) and float(s) > 0
+
+    def test_sc_product_truncates_toward_zero(self):
+        # trunc(-5*3/128) = trunc(-0.117) = 0, not -1 (floor would give -1)
+        assert float(common.sc_product(jnp.float32(-5), jnp.float32(3))) == 0.0
+        assert float(common.sc_product(jnp.float32(100), jnp.float32(100))) == 78.0
+        assert float(common.sc_product(jnp.float32(-100), jnp.float32(100))) == -78.0
+
+
+# ---------------------------------------------------------------------------
+# sc_matmul kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestScMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n", [(4, 4, 4), (8, 16, 8), (16, 64, 32), (32, 128, 64),
+                  (5, 7, 3), (1, 1, 1), (64, 96, 48)]
+    )
+    def test_codes_match_oracle_exactly(self, m, k, n):
+        kq = jax.random.PRNGKey(m * 1000 + k * 10 + n)
+        ka, kb = jax.random.split(kq)
+        qa = jnp.round(jax.random.uniform(ka, (m, k), minval=-127, maxval=127))
+        qb = jnp.round(jax.random.uniform(kb, (k, n), minval=-127, maxval=127))
+        got = scmm_k.sc_matmul_codes(qa, qb)
+        want = ref.sc_matmul_codes_ref(qa, qb)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (16, 32, 16)])
+    def test_float_path_matches_oracle_exactly(self, m, k, n):
+        a, b = rand(m, (m, k)), rand(n + 100, (k, n))
+        got = scmm_k.sc_matmul(a, b)
+        want = ref.sc_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+    def test_close_to_fp32_for_smooth_inputs(self):
+        a, b = rand(3, (16, 64), 0.5), rand(4, (64, 16), 0.5)
+        got = scmm_k.sc_matmul(a, b)
+        want = ref.matmul_fp32_ref(a, b)
+        # SC + q8 error is small but nonzero
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert 0 < err < 0.5
+
+    def test_extreme_codes(self):
+        qa = jnp.full((4, 8), 127.0)
+        qb = jnp.full((8, 4), -127.0)
+        got = scmm_k.sc_matmul_codes(qa, qb)
+        # trunc(127*-127/128) = -126 per product, 8 products
+        np.testing.assert_array_equal(np.asarray(got), np.full((4, 4), -126.0 * 8))
+
+    def test_zero_inputs_give_zero(self):
+        got = scmm_k.sc_matmul_codes(jnp.zeros((4, 8)), jnp.zeros((8, 4)))
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 4)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 24),
+        k=st.integers(1, 48),
+        n=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_codes_sweep(self, m, k, n, seed):
+        kq = jax.random.PRNGKey(seed)
+        ka, kb = jax.random.split(kq)
+        qa = jnp.round(jax.random.uniform(ka, (m, k), minval=-127, maxval=127))
+        qb = jnp.round(jax.random.uniform(kb, (k, n), minval=-127, maxval=127))
+        got = scmm_k.sc_matmul_codes(qa, qb)
+        want = ref.sc_matmul_codes_ref(qa, qb)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        scale=st.floats(0.01, 100.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_scale_invariance_shape(self, scale, seed):
+        """Dequantized output error stays bounded relative to input scale."""
+        kq = jax.random.PRNGKey(seed)
+        ka, kb = jax.random.split(kq)
+        a = jax.random.normal(ka, (8, 32)) * scale
+        b = jax.random.normal(kb, (32, 8)) * scale
+        got = scmm_k.sc_matmul(a, b)
+        want = ref.sc_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestScAttention:
+    @pytest.mark.parametrize("n,d", [(8, 8), (16, 16), (32, 16), (16, 64)])
+    def test_matches_oracle_exactly(self, n, d):
+        q = rand(n, (n, d), 0.7)
+        k = rand(n + 1, (n, d), 0.7)
+        v = rand(n + 2, (n, d), 0.7)
+        got = attn_k.sc_attention(q, k, v)
+        want = ref.sc_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+    def test_close_to_fp32_attention(self):
+        n, d = 16, 32
+        q, k, v = rand(1, (n, d), 0.3), rand(2, (n, d), 0.3), rand(3, (n, d), 0.3)
+        got = attn_k.sc_attention(q, k, v)
+        want = ref.attention_fp32_ref(q, k, v)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 0.15, f"SC attention drifted too far from fp32: {err}"
+
+    def test_rows_attend_to_identical_values(self):
+        """If all V rows are equal the output approximates that row
+        (softmax rows sum to ~1 regardless of scores).  SC truncation on
+        S x V biases magnitudes toward zero by up to ~n/128 relative, so
+        the tolerance is relative to the value scale."""
+        n, d = 8, 16
+        q, k = rand(4, (n, d)), rand(5, (n, d))
+        v = jnp.tile(rand(6, (1, d)), (n, 1))
+        out = attn_k.sc_attention(q, k, v)
+        want = jnp.tile(v[:1], (n, 1))
+        atol = 0.1 * float(jnp.max(jnp.abs(v)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=atol)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([4, 8, 12, 16]), d=st.sampled_from([8, 16, 32]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_attention_sweep(self, n, d, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (n, d)) * 0.5 for kk in ks)
+        got = attn_k.sc_attention(q, k, v)
+        want = ref.sc_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# NSC softmax properties
+# ---------------------------------------------------------------------------
+
+
+class TestNscSoftmax:
+    def test_close_to_exact_softmax(self):
+        y = rand(7, (8, 16), 2.0)
+        got = common.nsc_softmax(y)
+        want = jax.nn.softmax(y, axis=-1)
+        # 256-entry exp LUT over [-16, 0] => ~0.0625 input grid => up to
+        # ~3% relative error on each exponential
+        assert float(jnp.max(jnp.abs(got - want))) < 0.04
+
+    def test_rows_sum_near_one(self):
+        y = rand(8, (4, 32), 3.0)
+        s = jnp.sum(common.nsc_softmax(y), axis=-1)
+        np.testing.assert_allclose(np.asarray(s), np.ones(4), atol=0.06)
+
+    def test_invariant_to_shift(self):
+        """log-sum-exp form is exactly shift-invariant (y_max subtraction)."""
+        y = rand(9, (4, 8))
+        a = common.nsc_softmax(y)
+        b = common.nsc_softmax(y + 100.0)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_monotone_in_logits(self):
+        y = jnp.array([[0.0, 1.0, 2.0, 3.0]])
+        p = np.asarray(common.nsc_softmax(y))[0]
+        assert (np.diff(p) >= -1e-6).all()
+
+    def test_extreme_negative_saturates_to_zero(self):
+        y = jnp.array([[0.0, -100.0]])
+        p = np.asarray(common.nsc_softmax(y))[0]
+        assert p[1] < 1e-6

@@ -1,0 +1,108 @@
+"""L2 model tests: variant agreement, shapes, training smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(vocab=16, d_model=32, n_heads=2, d_ff=64, n_layers=1,
+                    seq_len=8, n_classes=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestMatmulVariants:
+    def test_fast_decomposition_equals_kernel_exactly(self):
+        """sc_matmul_fast (matmul+correction) == Pallas kernel, bit-exact."""
+        a, b = rand(0, (16, 64)), rand(1, (64, 24))
+        fast = M.sc_matmul_fast(a, b)
+        kern = M.matmul_q8sc_kernel(a, b)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(kern),
+                                   rtol=0, atol=0)
+
+    def test_fast_decomposition_equals_oracle(self):
+        a, b = rand(2, (8, 32)), rand(3, (32, 8))
+        fast = M.sc_matmul_fast(a, b)
+        want = ref.sc_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(want),
+                                   rtol=0, atol=0)
+
+    def test_q8_more_accurate_than_q8sc(self):
+        """SC truncation only adds error on top of quantization."""
+        a, b = rand(4, (16, 64), 0.8), rand(5, (64, 16), 0.8)
+        exact = np.asarray(a @ b)
+        e_q8 = np.abs(np.asarray(M.matmul_q8(a, b)) - exact).mean()
+        e_sc = np.abs(np.asarray(M.sc_matmul_fast(a, b)) - exact).mean()
+        assert e_q8 <= e_sc
+
+    def test_variant_registry_complete(self):
+        for v in M.VARIANTS:
+            assert v in M.MATMULS
+
+
+class TestEncoderBlock:
+    @pytest.mark.parametrize("variant", ["fp32", "q8", "q8sc"])
+    def test_output_shape(self, params, variant):
+        x = rand(6, (CFG.seq_len, CFG.d_model))
+        y = M.encoder_block(x, params["layers"][0], CFG, variant)
+        assert y.shape == (CFG.seq_len, CFG.d_model)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_variants_agree_roughly(self, params):
+        x = rand(7, (CFG.seq_len, CFG.d_model), 0.5)
+        y32 = M.encoder_block(x, params["layers"][0], CFG, "fp32")
+        ysc = M.encoder_block(x, params["layers"][0], CFG, "q8sc")
+        rel = float(jnp.max(jnp.abs(y32 - ysc)) / (jnp.max(jnp.abs(y32)) + 1e-9))
+        assert rel < 0.25, f"q8sc drifted {rel:.3f} from fp32"
+
+    def test_residual_path_preserved(self, params):
+        """Zero weights => block is the identity (residual only)."""
+        zp = {k: jnp.zeros_like(v) for k, v in params["layers"][0].items()}
+        x = rand(8, (CFG.seq_len, CFG.d_model))
+        y = M.encoder_block(x, zp, CFG, "q8")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+
+class TestClassifier:
+    @pytest.mark.parametrize("variant", ["fp32", "q8"])
+    def test_logits_shape(self, params, variant):
+        toks, _ = M.synth_batch(jax.random.PRNGKey(1), CFG, 4)
+        logits = M.classifier_logits(toks, params, CFG, variant)
+        assert logits.shape == (4, CFG.n_classes)
+
+    def test_q8sc_logits_shape(self, params):
+        toks, _ = M.synth_batch(jax.random.PRNGKey(1), CFG, 2)
+        logits = M.classifier_logits(toks, params, CFG, "q8sc")
+        assert logits.shape == (2, CFG.n_classes)
+
+    def test_out_of_range_token_ids_are_clipped(self, params):
+        toks = jnp.full((2, CFG.seq_len), 999.0)
+        logits = M.classifier_logits(toks, params, CFG, "fp32")
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestSynthTask:
+    def test_labels_are_binary_and_balancedish(self):
+        toks, labels = M.synth_batch(jax.random.PRNGKey(2), M.TINY, 512)
+        assert set(np.unique(np.asarray(labels))) <= {0, 1}
+        frac = float(jnp.mean(labels))
+        assert 0.1 < frac < 0.9
+
+    def test_training_improves_over_chance(self):
+        cfg = M.ModelConfig(vocab=8, d_model=16, n_heads=2, d_ff=32,
+                            n_layers=1, seq_len=8)
+        _, acc, losses = M.train_tiny(cfg, steps=60, batch=32)
+        assert acc > 0.55, f"training did not beat chance: {acc}"
+        assert losses[-1] < losses[0]

@@ -1,0 +1,79 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! the SC multiply, the encoders, the MOMCAP step, the tile MAC engine,
+//! the simulator inner loop, and the full 5-model sweep.
+
+use artemis::analog::MomCap;
+use artemis::config::{ArtemisConfig, ModelZoo, MomcapParams};
+use artemis::dram::TileMacEngine;
+use artemis::sc::{correlation_encode, sc_multiply, tcu_encode, SignedCode};
+use artemis::sim::{simulate, SimOptions};
+use artemis::util::bench::{bench, keep};
+use artemis::util::XorShift64;
+use artemis::xfmr::build_workload;
+
+fn main() {
+    println!("== hot_paths ==");
+
+    bench("sc_multiply_1k_pairs", || {
+        let mut acc = 0u32;
+        for a in 0..32u32 {
+            for b in 0..32u32 {
+                acc = acc.wrapping_add(sc_multiply(keep(a * 4), keep(b * 4)));
+            }
+        }
+        keep(acc);
+    });
+
+    bench("tcu_encode_full_range", || {
+        for m in 0..=128u32 {
+            keep(tcu_encode(m));
+        }
+    });
+
+    bench("correlation_encode_full_range", || {
+        for m in 0..=128u32 {
+            keep(correlation_encode(m));
+        }
+    });
+
+    bench("momcap_window_20_accumulations", || {
+        let mut cap = MomCap::new(8.0);
+        for _ in 0..20 {
+            keep(cap.accumulate(100));
+        }
+        keep(cap.voltage());
+    });
+
+    bench("tile_mac_engine_dot_128", || {
+        let mut rng = XorShift64::new(3);
+        let a: Vec<SignedCode> = (0..128).map(|_| SignedCode::from_i32(rng.code())).collect();
+        let b: Vec<SignedCode> = (0..128).map(|_| SignedCode::from_i32(rng.code())).collect();
+        let mut eng = TileMacEngine::new(&MomcapParams::default());
+        keep(eng.dot(&a, &b).value);
+    });
+
+    let cfg = ArtemisConfig::default();
+    let bert = build_workload(&ModelZoo::bert_base());
+    bench("simulate_bert_token_pp", || {
+        keep(simulate(&cfg, &bert, SimOptions::artemis()).total_ns);
+    });
+
+    let opt = build_workload(&ModelZoo::opt_350());
+    bench("simulate_opt350_token_pp", || {
+        keep(simulate(&cfg, &opt, SimOptions::artemis()).total_ns);
+    });
+
+    bench("simulate_all_models_all_policies", || {
+        use artemis::dataflow::{Dataflow, Pipelining};
+        for m in ModelZoo::all() {
+            let w = build_workload(&m);
+            for df in [Dataflow::Layer, Dataflow::Token] {
+                for pp in [Pipelining::Off, Pipelining::On] {
+                    keep(simulate(&cfg, &w, SimOptions { dataflow: df, pipelining: pp }).total_ns);
+                }
+            }
+        }
+    });
+
+    println!("== done ==");
+}

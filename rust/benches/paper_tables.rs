@@ -1,0 +1,69 @@
+//! Benchmark harness: one benchmark per paper table/figure.
+//!
+//! Each bench regenerates the experiment end-to-end (the same drivers
+//! the CLI uses) and times it; run `cargo bench` to produce the numbers
+//! recorded in EXPERIMENTS.md.  The offline build has no criterion, so
+//! this uses the in-repo harness (`artemis::util::bench`).
+
+use artemis::config::ArtemisConfig;
+use artemis::report;
+use artemis::util::bench::{bench, keep};
+
+fn main() {
+    let cfg = ArtemisConfig::default();
+    println!("== paper_tables: regenerate every table/figure ==");
+
+    bench("fig2_drisa_breakdown", || {
+        keep(report::fig2(&cfg).render());
+    });
+    bench("tab3_circuit_overheads", || {
+        keep(report::tab3(&cfg).render());
+    });
+    bench("tab5_calibration_full", || {
+        keep(report::tab5(&cfg).render());
+    });
+    bench("fig7_momcap_staircases", || {
+        keep(report::fig7().render());
+    });
+    bench("fig8_dataflow_sensitivity", || {
+        keep(report::fig8(&cfg).render());
+    });
+    bench("fig9_speedup_sweep", || {
+        keep(report::fig9(&cfg).render());
+    });
+    bench("fig10_energy_sweep", || {
+        keep(report::fig10(&cfg).render());
+    });
+    bench("fig11_efficiency_sweep", || {
+        keep(report::fig11(&cfg).render());
+    });
+    bench("fig12_scalability_sweep", || {
+        keep(report::fig12().render());
+    });
+    bench("micro_headlines", || {
+        keep(report::micro(&cfg).render());
+    });
+
+    // Table IV needs the artifacts + PJRT; bench it when available.
+    match artemis::runtime::ArtifactRegistry::open_default() {
+        Ok(mut reg) => {
+            // fp32-only scoring loop (q8sc XLA compiles take minutes and
+            // are exercised by the end_to_end example instead).
+            let model = reg.load("tiny_fp32").expect("artifact");
+            let tiny = reg.tiny_config().unwrap().clone();
+            let mut rng = artemis::util::XorShift64::new(4);
+            let (tokens, _) = artemis::coordinator::synth_eval_batch(
+                &mut rng,
+                tiny.batch,
+                tiny.seq_len,
+                tiny.vocab,
+            );
+            bench("tab4_pjrt_batch_inference", || {
+                keep(model.run_f32(&[tokens.clone()]).expect("runs"));
+            });
+        }
+        Err(e) => println!("tab4 bench skipped (run `make artifacts`): {e}"),
+    }
+
+    println!("== done ==");
+}

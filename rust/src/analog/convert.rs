@@ -1,0 +1,148 @@
+//! Analog -> binary conversion (Section III.B): A_to_U comparator ladder
+//! (S/As repurposed as voltage comparators, levels set by the voltage
+//! divider) followed by the U_to_B priority encoder.  ARTEMIS refines
+//! AGNI's circuits to 31 ns total.
+
+use super::momcap::MomCap;
+use crate::util::XorShift64;
+
+/// Converter configuration.
+#[derive(Debug, Clone)]
+pub struct AtoBConfig {
+    /// Comparator levels resolved per coarse pass (128 bit-lines).
+    pub coarse_levels: u32,
+    /// Fine interpolation sub-levels per coarse level (second divider
+    /// setting) — gives the ~11.4-bit total resolution of Table V.
+    pub fine_levels: u32,
+    /// Comparator input-referred offset noise, as a fraction of one fine
+    /// level spacing (0 disables noise for functional runs).
+    pub offset_noise: f64,
+}
+
+impl Default for AtoBConfig {
+    fn default() -> Self {
+        Self { coarse_levels: 128, fine_levels: 20, offset_noise: 0.25 }
+    }
+}
+
+impl AtoBConfig {
+    pub fn total_levels(&self) -> u32 {
+        self.coarse_levels * self.fine_levels
+    }
+}
+
+/// A_to_U: quantize a voltage to a ladder code in [0, total_levels],
+/// optionally with comparator offset noise.
+pub fn a_to_u_code(
+    voltage: f64,
+    full_scale_v: f64,
+    cfg: &AtoBConfig,
+    rng: Option<&mut XorShift64>,
+) -> u32 {
+    let levels = cfg.total_levels() as f64;
+    let mut x = (voltage / full_scale_v) * levels;
+    if let Some(r) = rng {
+        x += r.normal() * cfg.offset_noise;
+    }
+    (x.round().max(0.0) as u32).min(cfg.total_levels())
+}
+
+/// Full A_to_B read of a MOMCAP: returns the charge-unit count the NSC
+/// latches as the binary partial sum.  The ladder full scale spans the
+/// capacitor's rated linear window.
+pub fn a_to_b(cap: &MomCap, cfg: &AtoBConfig, rng: Option<&mut XorShift64>) -> u32 {
+    let window = cap.max_accumulations() as f64;
+    let full_scale_v = window * cap.full_step_v();
+    let full_scale_units = window * 128.0;
+    let code = a_to_u_code(cap.voltage(), full_scale_v, cfg, rng);
+    // Map ladder code back to charge units.
+    ((code as f64 / cfg.total_levels() as f64) * full_scale_units).round() as u32
+}
+
+/// Error report for the A_to_B block (Table V row 3).
+#[derive(Debug, Clone)]
+pub struct AtoBReport {
+    pub mae: f64,
+    pub max_error: f64,
+    pub calibration_bits: f64,
+}
+
+/// Monte-Carlo conversion error over random in-window accumulations,
+/// normalized to the full-scale unit count.
+pub fn calibrate_a_to_b(cfg: &AtoBConfig, trials: u32) -> AtoBReport {
+    let mut rng = XorShift64::new(0xAB0B);
+    let mut noise_rng = XorShift64::new(0xFEED);
+    let mut sum = 0.0;
+    let mut max: f64 = 0.0;
+    let proto = MomCap::new(8.0);
+    let window = proto.max_accumulations();
+    let full_scale = window as f64 * 128.0;
+    for _ in 0..trials {
+        let mut cap = MomCap::new(8.0);
+        let steps = 1 + rng.below(window as u64) as u32;
+        for _ in 0..steps {
+            cap.accumulate(rng.below(129) as u32);
+        }
+        let got = a_to_b(&cap, cfg, Some(&mut noise_rng)) as f64;
+        // Error attributable to conversion alone: compare against the
+        // *actual* stored charge, not the ideal sum (accumulation error
+        // is Table V row 2's business).
+        let err = (got - cap.readout_units()).abs() / full_scale;
+        sum += err;
+        max = max.max(err);
+    }
+    let resolution_bits = (cfg.total_levels() as f64).log2();
+    AtoBReport {
+        mae: sum / trials as f64,
+        max_error: max,
+        calibration_bits: resolution_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_conversion_is_near_exact_in_window() {
+        let cfg = AtoBConfig { offset_noise: 0.0, ..Default::default() };
+        let mut cap = MomCap::new(8.0);
+        for _ in 0..10 {
+            cap.accumulate(128);
+        }
+        let got = a_to_b(&cap, &cfg, None);
+        assert_eq!(got, 1280, "10 full accumulations = 1280 units, got {got}");
+    }
+
+    #[test]
+    fn conversion_resolution_is_11_4_bits() {
+        let cfg = AtoBConfig::default();
+        let bits = (cfg.total_levels() as f64).log2();
+        assert!((bits - 11.32).abs() < 0.1, "bits {bits}");
+    }
+
+    #[test]
+    fn code_clamps_at_rails() {
+        let cfg = AtoBConfig::default();
+        assert_eq!(a_to_u_code(-0.5, 1.0, &cfg, None), 0);
+        assert_eq!(a_to_u_code(2.0, 1.0, &cfg, None), cfg.total_levels());
+    }
+
+    #[test]
+    fn noise_perturbs_codes_only_slightly() {
+        let cfg = AtoBConfig::default();
+        let mut rng = XorShift64::new(1);
+        let clean = a_to_u_code(0.4, 0.8, &cfg, None) as i64;
+        for _ in 0..100 {
+            let noisy = a_to_u_code(0.4, 0.8, &cfg, Some(&mut rng)) as i64;
+            assert!((noisy - clean).abs() <= 2, "noise moved code by {}", noisy - clean);
+        }
+    }
+
+    #[test]
+    fn calibration_error_is_tiny() {
+        let r = calibrate_a_to_b(&AtoBConfig::default(), 300);
+        assert!(r.mae < 0.002, "mae {}", r.mae);
+        assert!(r.calibration_bits > 11.0);
+    }
+}

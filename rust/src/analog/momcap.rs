@@ -1,0 +1,274 @@
+//! The metal-on-metal capacitor (MOMCAP) temporal accumulator.
+//!
+//! Physical model (calibrated to the paper's Fig. 7 observations):
+//!
+//! * The S_to_A circuit (two transistors per bit-line, Fig. 3(d)) injects
+//!   a fixed charge quantum per '1' bit-line per 1 ns step — the
+//!   transistor operates as a current source while the capacitor voltage
+//!   leaves it headroom, which is what produces the "linearity and
+//!   symmetry ... of charge accumulation" the paper reports.
+//! * Once the capacitor voltage approaches the knee (headroom exhausted),
+//!   the injected charge collapses over a short transition window —
+//!   saturation.
+//!
+//! Constants are chosen so the paper's chosen 8 pF capacitor supports
+//! exactly 20 full 128-bit accumulations before the knee, and the 4–40 pF
+//! sweep of Fig. 7 scales linearly (max_accums ≈ 2.5 · C/pF).
+
+use crate::config::MomcapParams;
+
+/// Charge injected by one full 128-bit-line accumulation step, pC.
+/// 0.32 pC / 128 lines = 2.5 fC per bit-line per 1 ns step.
+pub const FULL_STEP_CHARGE_PC: f64 = 0.32;
+
+/// Knee voltage: linear charging holds below this (V).
+pub const V_KNEE: f64 = 0.8;
+
+/// Transition window over which injection collapses past the knee (V).
+pub const V_TRANSITION: f64 = 0.1;
+
+/// One MOMCAP analog accumulator.
+#[derive(Debug, Clone)]
+pub struct MomCap {
+    capacitance_pf: f64,
+    /// Present capacitor voltage, V.
+    voltage: f64,
+    /// Ideal (error-free linear) accumulated charge, in bit-line units.
+    ideal_units: u64,
+    /// Number of accumulation steps performed since the last reset.
+    steps: u32,
+}
+
+impl MomCap {
+    pub fn new(capacitance_pf: f64) -> Self {
+        assert!(capacitance_pf > 0.0);
+        Self { capacitance_pf, voltage: 0.0, ideal_units: 0, steps: 0 }
+    }
+
+    pub fn from_params(p: &MomcapParams) -> Self {
+        Self::new(p.capacitance_pf)
+    }
+
+    /// Ideal voltage increment of a full 128-line step, V.
+    pub fn full_step_v(&self) -> f64 {
+        FULL_STEP_CHARGE_PC / self.capacitance_pf
+    }
+
+    /// Voltage per single bit-line charge unit, V.
+    pub fn unit_v(&self) -> f64 {
+        self.full_step_v() / 128.0
+    }
+
+    /// Maximum full-128 accumulations in the linear region — the Fig. 7
+    /// "number of linearly increasing voltage steps until saturation".
+    pub fn max_accumulations(&self) -> u32 {
+        (V_KNEE / self.full_step_v()).floor() as u32
+    }
+
+    /// Accumulate one stochastic product: `popcount` bit-lines (0..=128)
+    /// dump charge for one step.  Returns the realized voltage increment.
+    pub fn accumulate(&mut self, popcount: u32) -> f64 {
+        assert!(popcount <= 128, "popcount {popcount} exceeds bit-lines");
+        let ideal_dv = self.unit_v() * popcount as f64;
+        // Current-source region: full injection while the step *ends*
+        // within the knee; past it the headroom collapses linearly over
+        // the transition window.
+        let headroom = if self.voltage + ideal_dv <= V_KNEE + 1e-9 {
+            1.0
+        } else {
+            // Transition: injection scales with the headroom left at the
+            // step's *end* voltage, collapsing to zero as the capacitor
+            // approaches V_KNEE + V_TRANSITION.
+            ((V_KNEE + V_TRANSITION - (self.voltage + ideal_dv)) / V_TRANSITION)
+                .clamp(0.0, 1.0)
+        };
+        let dv = ideal_dv * headroom;
+        self.voltage += dv;
+        self.ideal_units += popcount as u64;
+        self.steps += 1;
+        dv
+    }
+
+    /// Present voltage (what the A_to_U ladder sees).
+    pub fn voltage(&self) -> f64 {
+        self.voltage
+    }
+
+    /// Charge units if accumulation had been perfectly linear.
+    pub fn ideal_units(&self) -> u64 {
+        self.ideal_units
+    }
+
+    /// Charge units inferred from the actual voltage (what a perfect
+    /// converter would read back).
+    pub fn readout_units(&self) -> f64 {
+        self.voltage / self.unit_v()
+    }
+
+    pub fn steps(&self) -> u32 {
+        self.steps
+    }
+
+    /// True once further accumulation would be meaningfully nonlinear.
+    pub fn saturated(&self) -> bool {
+        self.voltage >= V_KNEE
+    }
+
+    /// Discharge (the conversion consumes the charge).
+    pub fn reset(&mut self) {
+        self.voltage = 0.0;
+        self.ideal_units = 0;
+        self.steps = 0;
+    }
+
+    /// Accumulate with charge-injection / clock-feedthrough noise: each
+    /// K1 toggle injects a small random charge error on top of the
+    /// deterministic transfer.  `sigma_units` is the per-step standard
+    /// deviation in bit-line charge units (Table V's analog-ACC error
+    /// analysis uses 4 units ~ 3% of a full step; the deterministic
+    /// functional path uses [`accumulate`], which is noise-free).
+    pub fn accumulate_noisy(
+        &mut self,
+        popcount: u32,
+        sigma_units: f64,
+        rng: &mut crate::util::XorShift64,
+    ) -> f64 {
+        let dv = self.accumulate(popcount);
+        let noise_v = rng.normal() * sigma_units * self.unit_v();
+        self.voltage = (self.voltage + noise_v).max(0.0);
+        dv + noise_v
+    }
+}
+
+/// Per-step charge-injection noise used by the Table V calibration,
+/// in bit-line units (~3% of a full 128-line step).
+pub const ACC_NOISE_SIGMA_UNITS: f64 = 4.0;
+
+/// Error report for the analog accumulation block (Table V row 2).
+#[derive(Debug, Clone)]
+pub struct AccumReport {
+    pub mae: f64,
+    pub max_error: f64,
+    pub calibration_bits: f64,
+}
+
+/// Monte-Carlo the accumulator over random popcount sequences inside the
+/// rated window and report normalized error vs the ideal linear sum.
+pub fn calibrate_accumulator(params: &MomcapParams, trials: u32) -> AccumReport {
+    let mut rng = crate::util::XorShift64::new(0xA11A);
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let proto = MomCap::new(params.capacitance_pf);
+    let window = proto.max_accumulations().min(params.max_accumulations);
+    let full_scale = (window as f64) * 128.0;
+    for _ in 0..trials {
+        let mut cap = MomCap::new(params.capacitance_pf);
+        for _ in 0..window {
+            cap.accumulate_noisy(rng.below(129) as u32, ACC_NOISE_SIGMA_UNITS, &mut rng);
+        }
+        let err = (cap.readout_units() - cap.ideal_units() as f64).abs() / full_scale;
+        sum += err;
+        max = max.max(err);
+    }
+
+    // Calibration: largest number of full steps n such that readout is
+    // still exact (linear region), expressed as bits of the unit count.
+    let mut cap = MomCap::new(params.capacitance_pf);
+    let mut exact_units = 0u64;
+    loop {
+        cap.accumulate(128);
+        let err = (cap.readout_units() - cap.ideal_units() as f64).abs();
+        if err > 0.5 {
+            break;
+        }
+        exact_units = cap.ideal_units();
+        if cap.steps() > 10_000 {
+            break;
+        }
+    }
+    AccumReport {
+        mae: sum / trials as f64,
+        max_error: max,
+        calibration_bits: (exact_units.max(1) as f64).log2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_pf_supports_twenty_accumulations() {
+        // The paper's chosen design point (Section IV.B).
+        let cap = MomCap::new(8.0);
+        assert_eq!(cap.max_accumulations(), 20);
+    }
+
+    #[test]
+    fn capacitance_scales_window() {
+        assert_eq!(MomCap::new(4.0).max_accumulations(), 10);
+        assert_eq!(MomCap::new(40.0).max_accumulations(), 100);
+        assert!(MomCap::new(16.0).max_accumulations() > MomCap::new(8.0).max_accumulations());
+    }
+
+    #[test]
+    fn linear_region_is_exact() {
+        let mut cap = MomCap::new(8.0);
+        for _ in 0..20 {
+            cap.accumulate(128);
+        }
+        let err = (cap.readout_units() - cap.ideal_units() as f64).abs();
+        assert!(err < 1e-9, "linear region drifted: {err}");
+    }
+
+    #[test]
+    fn saturation_compresses_steps() {
+        let mut cap = MomCap::new(4.0);
+        let mut last_dv = f64::MAX;
+        let mut saturating = false;
+        for _ in 0..30 {
+            let dv = cap.accumulate(128);
+            if dv < last_dv - 1e-12 {
+                saturating = true;
+            }
+            last_dv = dv;
+        }
+        assert!(saturating, "steps never compressed");
+        assert!(cap.saturated());
+        // Voltage never exceeds knee + transition.
+        assert!(cap.voltage() <= V_KNEE + V_TRANSITION + 1e-9);
+    }
+
+    #[test]
+    fn partial_popcounts_accumulate_proportionally() {
+        let mut cap = MomCap::new(8.0);
+        cap.accumulate(64);
+        let half = cap.voltage();
+        cap.reset();
+        cap.accumulate(128);
+        assert!((cap.voltage() - 2.0 * half).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut cap = MomCap::new(8.0);
+        cap.accumulate(100);
+        cap.reset();
+        assert_eq!(cap.voltage(), 0.0);
+        assert_eq!(cap.ideal_units(), 0);
+        assert_eq!(cap.steps(), 0);
+    }
+
+    #[test]
+    fn calibration_mae_is_tiny_inside_window() {
+        let r = calibrate_accumulator(&crate::config::MomcapParams::default(), 200);
+        assert!(r.mae < 0.01, "mae {}", r.mae);
+        assert!(r.calibration_bits > 6.0, "bits {}", r.calibration_bits);
+    }
+
+    #[test]
+    #[should_panic]
+    fn popcount_over_128_panics() {
+        MomCap::new(8.0).accumulate(129);
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig. 7 regeneration: MOMCAP voltage staircases across capacitances.
+
+use super::momcap::MomCap;
+
+/// One point of a staircase: voltage after `step` full accumulations.
+#[derive(Debug, Clone, Copy)]
+pub struct StaircasePoint {
+    pub step: u32,
+    pub voltage: f64,
+    pub dv: f64,
+}
+
+/// One capacitance's staircase plus its derived linear window.
+#[derive(Debug, Clone)]
+pub struct StaircaseSweep {
+    pub capacitance_pf: f64,
+    pub points: Vec<StaircasePoint>,
+    /// Linearly increasing steps before saturation — the Fig. 7 takeaway.
+    pub max_linear_accumulations: u32,
+}
+
+/// Simulate the charge staircase for one capacitance: full 128-bit
+/// accumulations until well past saturation (Fig. 7's x-axis is time;
+/// each 1 ns step accrues one 128-bit number).
+pub fn momcap_staircase(capacitance_pf: f64, steps: u32) -> StaircaseSweep {
+    let mut cap = MomCap::new(capacitance_pf);
+    let ideal_dv = cap.full_step_v();
+    let mut points = Vec::with_capacity(steps as usize);
+    let mut max_linear = 0u32;
+    for step in 1..=steps {
+        let dv = cap.accumulate(128);
+        // A step counts as linear while its height is within 1% of ideal.
+        if (dv - ideal_dv).abs() <= 0.01 * ideal_dv && max_linear == step - 1 {
+            max_linear = step;
+        }
+        points.push(StaircasePoint { step, voltage: cap.voltage(), dv });
+    }
+    StaircaseSweep { capacitance_pf, points, max_linear_accumulations: max_linear }
+}
+
+/// The paper's Fig. 7 capacitance set (4–40 pF).
+pub fn fig7_capacitances() -> Vec<f64> {
+    vec![4.0, 8.0, 16.0, 24.0, 32.0, 40.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staircase_monotone_nondecreasing() {
+        let s = momcap_staircase(8.0, 40);
+        for w in s.points.windows(2) {
+            assert!(w[1].voltage >= w[0].voltage - 1e-12);
+        }
+    }
+
+    #[test]
+    fn eight_pf_linear_window_is_twenty() {
+        let s = momcap_staircase(8.0, 60);
+        assert_eq!(s.max_linear_accumulations, 20);
+    }
+
+    #[test]
+    fn larger_caps_hold_more_steps() {
+        let sweeps: Vec<_> = fig7_capacitances()
+            .into_iter()
+            .map(|c| momcap_staircase(c, 150))
+            .collect();
+        for w in sweeps.windows(2) {
+            assert!(
+                w[1].max_linear_accumulations > w[0].max_linear_accumulations,
+                "{} pF -> {} steps vs {} pF -> {} steps",
+                w[0].capacitance_pf,
+                w[0].max_linear_accumulations,
+                w[1].capacitance_pf,
+                w[1].max_linear_accumulations
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_flattens_tail() {
+        let s = momcap_staircase(4.0, 100);
+        let tail_dv = s.points.last().unwrap().dv;
+        let head_dv = s.points[0].dv;
+        assert!(tail_dv < 0.05 * head_dv, "tail {tail_dv} head {head_dv}");
+    }
+}

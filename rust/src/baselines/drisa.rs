@@ -1,0 +1,126 @@
+//! DRISA [6] digital in-DRAM PIM model — the donor of the Fig. 2
+//! motivation analysis (">90% of the time ... performing the MatMul
+//! operations") and the 1600 ns-per-MUL comparison point.
+//!
+//! DRISA decomposes arithmetic into functionally-complete bulk bitwise
+//! MOCs: a single 8-bit multiply takes ~1600 ns and an addition ~100 ns
+//! of serial in-array cycles; one such operation runs per subarray at a
+//! time, across all banks in parallel.
+
+use crate::config::ArtemisConfig;
+use crate::xfmr::{Op, Workload};
+
+/// DRISA per-operation latencies (ns), from [6] as cited in the paper.
+pub const DRISA_MUL_NS: f64 = 1600.0;
+pub const DRISA_ADD_NS: f64 = 100.0;
+/// Non-MatMul ops run on embedded NMC logic at this per-element cost.
+pub const DRISA_NMC_ELEM_NS: f64 = 2.0;
+
+/// Component-wise execution time on DRISA (Fig. 2 axes).
+#[derive(Debug, Clone)]
+pub struct DrisaBreakdown {
+    pub model: String,
+    pub matmul_ns: f64,
+    pub softmax_ns: f64,
+    pub other_ns: f64,
+    pub movement_ns: f64,
+}
+
+impl DrisaBreakdown {
+    pub fn total_ns(&self) -> f64 {
+        self.matmul_ns + self.softmax_ns + self.other_ns + self.movement_ns
+    }
+
+    pub fn matmul_fraction(&self) -> f64 {
+        self.matmul_ns / self.total_ns()
+    }
+}
+
+/// Execute a workload on the DRISA model (layer dataflow, as in [6]).
+pub fn drisa_breakdown(cfg: &ArtemisConfig, w: &Workload) -> DrisaBreakdown {
+    // One in-flight MUL per subarray; all banks' subarrays in parallel.
+    let parallel =
+        (cfg.hbm.banks_total() * cfg.hbm.active_subarrays_per_bank()) as f64;
+    let mut matmul_ns = 0.0;
+    let mut softmax_ns = 0.0;
+    let mut other_ns = 0.0;
+    for layer in &w.layers {
+        for op in &layer.ops {
+            match *op {
+                Op::Matmul { m, k, n, .. } => {
+                    let macs = (m * k * n) as f64;
+                    matmul_ns += macs * (DRISA_MUL_NS + DRISA_ADD_NS) / parallel;
+                }
+                Op::Softmax { rows, width } => {
+                    softmax_ns += (rows * width) as f64 * DRISA_NMC_ELEM_NS * 8.0
+                        / parallel;
+                }
+                Op::Activation { elems, .. }
+                | Op::Residual { elems }
+                | Op::Norm { elems } => {
+                    other_ns += elems as f64 * DRISA_NMC_ELEM_NS / parallel;
+                }
+            }
+        }
+    }
+    // Layer dataflow movement over the shared bus (same model as `sim`'s
+    // layer path: 2x activations per layer boundary).
+    let per_layer_bits = 2 * w.interlayer_bits();
+    let beats = per_layer_bits.div_ceil(cfg.hbm.link_bits) as f64;
+    let movement_ns = w.layers.len() as f64 * beats * cfg.hbm.timing.link_beat_ns;
+
+    DrisaBreakdown {
+        model: w.model.name.clone(),
+        matmul_ns,
+        softmax_ns,
+        other_ns,
+        movement_ns,
+    }
+}
+
+/// Fig. 2's headline: fraction of compute time in MatMuls.
+pub fn drisa_matmul_fraction(cfg: &ArtemisConfig, w: &Workload) -> f64 {
+    drisa_breakdown(cfg, w).matmul_fraction()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+    use crate::xfmr::build_workload;
+
+    #[test]
+    fn matmul_dominates_over_90_percent() {
+        // The paper's Fig. 2 observation.
+        let cfg = ArtemisConfig::default();
+        for m in ModelZoo::all() {
+            let w = build_workload(&m);
+            let f = drisa_matmul_fraction(&cfg, &w);
+            assert!(f > 0.90, "{}: matmul fraction {f}", m.name);
+        }
+    }
+
+    #[test]
+    fn drisa_much_slower_than_artemis() {
+        let cfg = ArtemisConfig::default();
+        let w = build_workload(&ModelZoo::bert_base());
+        let d = drisa_breakdown(&cfg, &w);
+        let a = crate::sim::simulate(&cfg, &w, crate::sim::SimOptions::artemis());
+        assert!(
+            d.total_ns() > 10.0 * a.total_ns,
+            "DRISA {} vs ARTEMIS {}",
+            d.total_ns(),
+            a.total_ns
+        );
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let cfg = ArtemisConfig::default();
+        let d = drisa_breakdown(&cfg, &build_workload(&ModelZoo::vit_base()));
+        assert!(d.matmul_ns > 0.0);
+        assert!(d.softmax_ns > 0.0);
+        assert!(d.other_ns > 0.0);
+        assert!(d.movement_ns > 0.0);
+    }
+}

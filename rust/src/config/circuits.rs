@@ -1,0 +1,141 @@
+//! Per-subarray circuit overheads (paper Table III) and MOMCAP device
+//! parameters (Section III.A.2 / Fig. 7).
+
+/// Length of the stochastic bit-streams: signed 8-bit values are
+/// represented as 128-bit TCU streams plus one sign bit (Section III.A.1).
+pub const SC_STREAM_LEN: u32 = 128;
+
+/// One synthesized NSC/tile circuit: latency, power, area (Table III).
+#[derive(Debug, Clone, Copy)]
+pub struct Circuit {
+    pub latency_ps: f64,
+    pub power_mw: f64,
+    pub area_um2: f64,
+}
+
+impl Circuit {
+    /// Energy of one operation at the stated latency/power, pJ.
+    pub fn energy_pj(&self) -> f64 {
+        // mW * ps = 1e-3 W * 1e-12 s = 1e-15 J = 1e-3 pJ
+        self.power_mw * self.latency_ps * 1e-3
+    }
+}
+
+/// Table III — ARTEMIS per-subarray hardware overhead.
+#[derive(Debug, Clone)]
+pub struct CircuitOverheads {
+    pub s_to_b: Circuit,
+    pub comparator: Circuit,
+    pub adder_subtractor: Circuit,
+    pub luts: Circuit,
+    pub b_to_tcu: Circuit,
+    pub latches: Circuit,
+}
+
+impl Default for CircuitOverheads {
+    fn default() -> Self {
+        Self {
+            s_to_b: Circuit { latency_ps: 20_000.0, power_mw: 0.053, area_um2: 970.0 },
+            comparator: Circuit { latency_ps: 623.7, power_mw: 0.055, area_um2: 0.0088 },
+            adder_subtractor: Circuit { latency_ps: 719.95, power_mw: 0.0028, area_um2: 0.0055 },
+            luts: Circuit { latency_ps: 222.5, power_mw: 4.21, area_um2: 4.79 },
+            b_to_tcu: Circuit { latency_ps: 530.2, power_mw: 0.021, area_um2: 0.063 },
+            latches: Circuit { latency_ps: 77.7, power_mw: 0.028, area_um2: 0.13 },
+        }
+    }
+}
+
+impl CircuitOverheads {
+    /// Total added area per subarray, µm² (Table III column sum).
+    pub fn total_area_um2(&self) -> f64 {
+        self.s_to_b.area_um2
+            + self.comparator.area_um2
+            + self.adder_subtractor.area_um2
+            + self.luts.area_um2
+            + self.b_to_tcu.area_um2
+            + self.latches.area_um2
+    }
+
+    pub fn rows(&self) -> Vec<(&'static str, Circuit)> {
+        vec![
+            ("S_to_B Circuits", self.s_to_b),
+            ("Comparator", self.comparator),
+            ("Adder/Subtractors", self.adder_subtractor),
+            ("LUTs", self.luts),
+            ("B_to_TCU Blocks", self.b_to_tcu),
+            ("Latches", self.latches),
+        ]
+    }
+}
+
+/// MOMCAP device parameters (Section III.A.2, Fig. 7 analysis).
+#[derive(Debug, Clone)]
+pub struct MomcapParams {
+    /// Chosen capacitance, pF (8 pF aligns with the 338 µm² tile area).
+    pub capacitance_pf: f64,
+    /// Supply voltage the S_to_A circuit charges toward, V.
+    pub vdd: f64,
+    /// Charging time per accumulation step, ns (Fig. 7: 1 ns).
+    pub step_ns: f64,
+    /// Consecutive 128-bit accumulations supported before saturation at
+    /// the chosen capacitance (paper: 20 at 8 pF).
+    pub max_accumulations: u32,
+    /// MOMCAPs usable per operational tile: its own + the idle
+    /// open-bit-line neighbour's (Fig. 4) => 40-MAC window.
+    pub caps_per_op_tile: u32,
+    /// DRAM tile footprint the MOMCAP must fit, µm².
+    pub tile_area_um2: f64,
+}
+
+impl Default for MomcapParams {
+    fn default() -> Self {
+        Self {
+            capacitance_pf: 8.0,
+            vdd: 1.1,
+            step_ns: 1.0,
+            max_accumulations: 20,
+            caps_per_op_tile: 2,
+            tile_area_um2: 338.0,
+        }
+    }
+}
+
+impl MomcapParams {
+    /// MAC window per operational tile before A_to_B conversion
+    /// (Section III.A.2: "up to 40 MAC operations").
+    pub fn tile_window(&self) -> u32 {
+        self.max_accumulations * self.caps_per_op_tile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_energy_is_positive() {
+        let c = CircuitOverheads::default();
+        for (name, circ) in c.rows() {
+            assert!(circ.energy_pj() > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn s_to_b_dominates_area() {
+        // Table III: the S_to_B circuits are the big area item (970 µm²).
+        let c = CircuitOverheads::default();
+        assert!(c.s_to_b.area_um2 / c.total_area_um2() > 0.99);
+    }
+
+    #[test]
+    fn momcap_window_is_40() {
+        assert_eq!(MomcapParams::default().tile_window(), 40);
+    }
+
+    #[test]
+    fn energy_units() {
+        // 1 mW for 1000 ps = 1 pJ
+        let c = Circuit { latency_ps: 1000.0, power_mw: 1.0, area_um2: 0.0 };
+        assert!((c.energy_pj() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,191 @@
+//! HBM geometry, timing and energy parameters (paper Table I).
+
+/// HBM module geometry — paper Table I, "Configuration" rows.
+#[derive(Debug, Clone)]
+pub struct HbmConfig {
+    pub stacks: u64,
+    pub channels_per_stack: u64,
+    pub banks_per_channel: u64,
+    pub subarrays_per_bank: u64,
+    pub tiles_per_subarray: u64,
+    pub rows_per_tile: u64,
+    pub bits_per_row: u64,
+    /// Inter-bank link width in bits (Section III.D.3: 256-bit link).
+    pub link_bits: u64,
+    /// Per-stack peak bandwidth, GB/s (Section IV.C: 256 GB/s).
+    pub link_bandwidth_gbps: f64,
+    pub timing: TimingParams,
+    pub energy: EnergyParams,
+}
+
+impl Default for HbmConfig {
+    fn default() -> Self {
+        Self {
+            stacks: 1,
+            channels_per_stack: 8,
+            banks_per_channel: 4,
+            subarrays_per_bank: 128,
+            tiles_per_subarray: 32,
+            rows_per_tile: 256,
+            bits_per_row: 256,
+            link_bits: 256,
+            link_bandwidth_gbps: 256.0,
+            timing: TimingParams::default(),
+            energy: EnergyParams::default(),
+        }
+    }
+}
+
+impl HbmConfig {
+    /// Total banks across the module.
+    pub fn banks_total(&self) -> u64 {
+        self.stacks * self.channels_per_stack * self.banks_per_channel
+    }
+
+    /// Subarrays concurrently operable per bank: the open-bit-line
+    /// organization activates only half the subarrays at a time
+    /// (Section III.A.1).
+    pub fn active_subarrays_per_bank(&self) -> u64 {
+        self.subarrays_per_bank / 2
+    }
+
+    /// Row width of one subarray in bits (all tiles side by side).
+    pub fn subarray_row_bits(&self) -> u64 {
+        self.tiles_per_subarray * self.bits_per_row
+    }
+
+    /// MACs retired per subarray per MAC step: each of the 32 tiles
+    /// performs 2 concurrent multiplies (Section III.A.1 — half the
+    /// bit-lines to the bottom S/A set, half to the top).
+    pub fn macs_per_subarray_step(&self) -> u64 {
+        self.tiles_per_subarray * 2
+    }
+
+    /// Storage capacity in bytes (sanity checks only).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.banks_total()
+            * self.subarrays_per_bank
+            * self.tiles_per_subarray
+            * self.rows_per_tile
+            * self.bits_per_row
+            / 8
+    }
+
+    /// Inter-bank transfer time for `bits` over the shared 256-bit link
+    /// at one beat per MOC-subcycle (conservative ring model, ns).
+    pub fn link_transfer_ns(&self, bits: u64) -> f64 {
+        let beats = bits.div_ceil(self.link_bits);
+        beats as f64 * self.timing.link_beat_ns
+    }
+}
+
+/// Timing parameters. One memory-operation cycle (MOC) is an
+/// activate-activate-precharge (AAP) sequence; the paper's SPICE analysis
+/// puts it at 17 ns (Section IV preamble).
+#[derive(Debug, Clone)]
+pub struct TimingParams {
+    /// One MOC (AAP primitive), ns.
+    pub moc_ns: f64,
+    /// A stochastic multiply = 2 MOCs (copy both operands into the
+    /// computational rows; AND forms combinationally via the ROC diodes).
+    pub mocs_per_multiply: u64,
+    /// MOMCAP charge-transfer step after each multiply, ns (Fig. 7: 1 ns
+    /// charging per step).
+    pub momcap_step_ns: f64,
+    /// Per-subarray MAC step: 64 MACs in 48 ns (Section II.E headline):
+    /// 2 MOCs (34 ns) + S_to_A transfer + margin.
+    pub mac_step_ns: f64,
+    /// Full A_to_B conversion (A_to_U + U_to_B), ns (Section III.B: 31 ns
+    /// vs AGNI's 56 ns).
+    pub a_to_b_ns: f64,
+    /// One beat on the inter-bank 256-bit link, ns.
+    pub link_beat_ns: f64,
+    /// DRAM row write (restore phase dominated), ns.
+    pub write_row_ns: f64,
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        Self {
+            moc_ns: 17.0,
+            mocs_per_multiply: 2,
+            momcap_step_ns: 1.0,
+            mac_step_ns: 48.0,
+            a_to_b_ns: 31.0,
+            link_beat_ns: 1.0,
+            write_row_ns: 17.0,
+        }
+    }
+}
+
+impl TimingParams {
+    /// Latency of one stochastic multiply (the paper's 34 ns headline).
+    pub fn multiply_ns(&self) -> f64 {
+        self.moc_ns * self.mocs_per_multiply as f64
+    }
+}
+
+/// Energy parameters — paper Table I "Energy" rows (22 nm DRAM, HBM [12]).
+#[derive(Debug, Clone)]
+pub struct EnergyParams {
+    /// ACTIVATE of one DRAM row in one bank, pJ.
+    pub e_act_pj: f64,
+    /// Row buffer -> global sense amps, pJ/bit.
+    pub e_pre_gsa_pj_per_bit: f64,
+    /// GSA -> DRAM I/O, pJ/bit.
+    pub e_post_gsa_pj_per_bit: f64,
+    /// DRAM I/O channel (to host), pJ/bit.
+    pub e_io_pj_per_bit: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            e_act_pj: 909.0,
+            e_pre_gsa_pj_per_bit: 1.51,
+            e_post_gsa_pj_per_bit: 1.17,
+            e_io_pj_per_bit: 0.80,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_matches_table1_geometry() {
+        // Paper inconsistency (noted in DESIGN.md): Section III says "8GB
+        // HBM module" but the Table I geometry (32 banks x 128 subarrays
+        // x 32 tiles x 256 rows x 256 bits) works out to exactly 1 GiB.
+        // We implement Table I as written.
+        let c = HbmConfig::default();
+        assert_eq!(c.capacity_bytes(), 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn multiply_is_34ns() {
+        let t = TimingParams::default();
+        assert_eq!(t.multiply_ns(), 34.0);
+    }
+
+    #[test]
+    fn open_bitline_halves_subarrays() {
+        let c = HbmConfig::default();
+        assert_eq!(c.active_subarrays_per_bank(), 64);
+    }
+
+    #[test]
+    fn subarray_step_is_64_macs() {
+        let c = HbmConfig::default();
+        assert_eq!(c.macs_per_subarray_step(), 64);
+    }
+
+    #[test]
+    fn link_transfer_rounds_up() {
+        let c = HbmConfig::default();
+        assert_eq!(c.link_transfer_ns(1), c.timing.link_beat_ns);
+        assert_eq!(c.link_transfer_ns(256), c.timing.link_beat_ns);
+        assert_eq!(c.link_transfer_ns(257), 2.0 * c.timing.link_beat_ns);
+    }
+}

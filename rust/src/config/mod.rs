@@ -1,0 +1,153 @@
+//! Architecture, circuit and workload configuration (paper Tables I–III).
+//!
+//! Every constant the simulator consumes lives here, with the table/figure
+//! it comes from cited next to it.  Experiments can override the defaults
+//! through small JSON files (parsed by `util::json` — the offline build
+//! has no serde).
+
+mod circuits;
+mod hbm;
+mod models;
+
+pub use circuits::{CircuitOverheads, MomcapParams, SC_STREAM_LEN};
+pub use hbm::{EnergyParams, HbmConfig, TimingParams};
+pub use models::{Arch, ModelZoo, TransformerModel};
+
+/// Top-level ARTEMIS configuration: architecture + circuits + policy.
+#[derive(Debug, Clone)]
+pub struct ArtemisConfig {
+    pub hbm: HbmConfig,
+    pub circuits: CircuitOverheads,
+    pub momcap: MomcapParams,
+    /// Power budget in watts (paper: 60 W, aligned with HBM budgets).
+    pub power_budget_w: f64,
+    /// Static module power (refresh, periphery, I/O idle), W.  Drawn for
+    /// the whole run; the activation throttle budgets around it.
+    pub static_power_w: f64,
+    /// Model the positive/negative sign-split dual pass (Section III.C.1).
+    pub sign_split_passes: bool,
+}
+
+impl Default for ArtemisConfig {
+    fn default() -> Self {
+        Self {
+            hbm: HbmConfig::default(),
+            circuits: CircuitOverheads::default(),
+            momcap: MomcapParams::default(),
+            power_budget_w: 60.0,
+            static_power_w: 12.0,
+            sign_split_passes: true,
+        }
+    }
+}
+
+impl ArtemisConfig {
+    /// Config with `n` HBM stacks (Fig. 12 scalability sweeps).  The
+    /// power budget scales with the stack count — the paper notes that
+    /// "power consumption can increase with more HBM stacks" while
+    /// energy efficiency still improves.
+    pub fn with_stacks(n: u64) -> Self {
+        let mut c = Self::default();
+        c.hbm.stacks = n;
+        c.power_budget_w *= n as f64;
+        c.static_power_w *= n as f64;
+        c
+    }
+
+    /// Load overrides from a JSON file: any subset of the keys emitted by
+    /// [`ArtemisConfig::to_json`] may be present; missing keys keep their
+    /// defaults.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let j = crate::util::json::Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut c = Self::default();
+        if let Some(h) = j.get("hbm") {
+            let g = |k: &str, d: u64| h.get(k).and_then(|v| v.as_u64()).unwrap_or(d);
+            c.hbm.stacks = g("stacks", c.hbm.stacks);
+            c.hbm.channels_per_stack = g("channels_per_stack", c.hbm.channels_per_stack);
+            c.hbm.banks_per_channel = g("banks_per_channel", c.hbm.banks_per_channel);
+            c.hbm.subarrays_per_bank = g("subarrays_per_bank", c.hbm.subarrays_per_bank);
+            c.hbm.tiles_per_subarray = g("tiles_per_subarray", c.hbm.tiles_per_subarray);
+            c.hbm.rows_per_tile = g("rows_per_tile", c.hbm.rows_per_tile);
+            c.hbm.bits_per_row = g("bits_per_row", c.hbm.bits_per_row);
+            c.hbm.link_bits = g("link_bits", c.hbm.link_bits);
+        }
+        if let Some(m) = j.get("momcap") {
+            if let Some(v) = m.get("capacitance_pf").and_then(|v| v.as_f64()) {
+                c.momcap.capacitance_pf = v;
+            }
+            if let Some(v) = m.get("max_accumulations").and_then(|v| v.as_u64()) {
+                c.momcap.max_accumulations = v as u32;
+            }
+        }
+        if let Some(v) = j.get("power_budget_w").and_then(|v| v.as_f64()) {
+            c.power_budget_w = v;
+        }
+        if let Some(v) = j.get("sign_split_passes").and_then(|v| v.as_bool()) {
+            c.sign_split_passes = v;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "hbm",
+                Json::obj(vec![
+                    ("stacks", Json::Num(self.hbm.stacks as f64)),
+                    ("channels_per_stack", Json::Num(self.hbm.channels_per_stack as f64)),
+                    ("banks_per_channel", Json::Num(self.hbm.banks_per_channel as f64)),
+                    ("subarrays_per_bank", Json::Num(self.hbm.subarrays_per_bank as f64)),
+                    ("tiles_per_subarray", Json::Num(self.hbm.tiles_per_subarray as f64)),
+                    ("rows_per_tile", Json::Num(self.hbm.rows_per_tile as f64)),
+                    ("bits_per_row", Json::Num(self.hbm.bits_per_row as f64)),
+                    ("link_bits", Json::Num(self.hbm.link_bits as f64)),
+                ]),
+            ),
+            (
+                "momcap",
+                Json::obj(vec![
+                    ("capacitance_pf", Json::Num(self.momcap.capacitance_pf)),
+                    ("max_accumulations", Json::Num(self.momcap.max_accumulations as f64)),
+                ]),
+            ),
+            ("power_budget_w", Json::Num(self.power_budget_w)),
+            ("sign_split_passes", Json::Bool(self.sign_split_passes)),
+        ])
+        .pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_table1() {
+        let c = ArtemisConfig::default();
+        assert_eq!(c.hbm.stacks, 1);
+        assert_eq!(c.hbm.channels_per_stack, 8);
+        assert_eq!(c.hbm.banks_per_channel, 4);
+        assert_eq!(c.hbm.subarrays_per_bank, 128);
+        assert_eq!(c.hbm.tiles_per_subarray, 32);
+        assert_eq!(c.hbm.rows_per_tile, 256);
+        assert_eq!(c.hbm.bits_per_row, 256);
+        assert_eq!(c.power_budget_w, 60.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ArtemisConfig::default();
+        let j = c.to_json();
+        let c2 = ArtemisConfig::from_json(&j).unwrap();
+        assert_eq!(c2.hbm.banks_total(), c.hbm.banks_total());
+        assert_eq!(c2.power_budget_w, c.power_budget_w);
+    }
+
+    #[test]
+    fn with_stacks_scales_banks() {
+        let c = ArtemisConfig::with_stacks(4);
+        assert_eq!(c.hbm.banks_total(), 4 * 8 * 4);
+    }
+}

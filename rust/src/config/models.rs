@@ -1,0 +1,183 @@
+//! Transformer workload zoo (paper Table II).
+
+/// Transformer architecture family — determines the op graph shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Original encoder-decoder transformer [1].
+    EncoderDecoder,
+    /// BERT/ALBERT-style encoder-only stack + classifier.
+    EncoderOnly,
+    /// Vision transformer: encoder-only over patch embeddings + MLP head.
+    Vit,
+    /// OPT-style decoder-only (causal attention).
+    DecoderOnly,
+}
+
+/// One Table II row.
+#[derive(Debug, Clone)]
+pub struct TransformerModel {
+    pub name: String,
+    pub arch: Arch,
+    /// Total parameter count (reported, used for reporting only).
+    pub params_m: f64,
+    /// Encoder (and decoder, for EncoderDecoder) layer count L.
+    pub layers: u32,
+    /// Sequence length (token count) N.
+    pub seq_len: u32,
+    pub heads: u32,
+    pub d_model: u32,
+    pub d_ff: u32,
+    /// FFN activation: ReLU for the classic FFN, GELU for BERT/ViT.
+    pub gelu: bool,
+}
+
+impl TransformerModel {
+    pub fn d_head(&self) -> u32 {
+        self.d_model / self.heads
+    }
+
+    /// With a different sequence length (Fig. 12 scalability sweeps).
+    pub fn with_seq_len(&self, n: u32) -> Self {
+        let mut m = self.clone();
+        m.seq_len = n;
+        m.name = format!("{}@N{}", self.name, n);
+        m
+    }
+}
+
+/// The five Table II workloads.
+#[derive(Debug, Clone)]
+pub struct ModelZoo;
+
+impl ModelZoo {
+    pub fn transformer_base() -> TransformerModel {
+        TransformerModel {
+            name: "Transformer-base".into(),
+            arch: Arch::EncoderDecoder,
+            params_m: 52.0,
+            layers: 2,
+            seq_len: 128,
+            heads: 8,
+            d_model: 512,
+            d_ff: 2048,
+            gelu: false,
+        }
+    }
+
+    pub fn bert_base() -> TransformerModel {
+        TransformerModel {
+            name: "BERT-base".into(),
+            arch: Arch::EncoderOnly,
+            params_m: 108.0,
+            layers: 12,
+            seq_len: 128,
+            heads: 12,
+            d_model: 768,
+            d_ff: 3072,
+            gelu: true,
+        }
+    }
+
+    pub fn albert_base() -> TransformerModel {
+        TransformerModel {
+            name: "ALBERT-base".into(),
+            arch: Arch::EncoderOnly,
+            params_m: 12.0,
+            layers: 12,
+            seq_len: 128,
+            heads: 12,
+            d_model: 768,
+            d_ff: 3072,
+            gelu: true,
+        }
+    }
+
+    pub fn vit_base() -> TransformerModel {
+        TransformerModel {
+            name: "ViT-base".into(),
+            arch: Arch::Vit,
+            params_m: 86.0,
+            layers: 12,
+            seq_len: 256,
+            heads: 12,
+            d_model: 768,
+            d_ff: 3072,
+            gelu: true,
+        }
+    }
+
+    pub fn opt_350() -> TransformerModel {
+        TransformerModel {
+            name: "OPT-350".into(),
+            arch: Arch::DecoderOnly,
+            params_m: 350.0,
+            layers: 12,
+            seq_len: 2048,
+            heads: 12,
+            d_model: 768,
+            d_ff: 3072,
+            gelu: false,
+        }
+    }
+
+    /// All five Table II workloads, paper order.
+    pub fn all() -> Vec<TransformerModel> {
+        vec![
+            Self::transformer_base(),
+            Self::bert_base(),
+            Self::albert_base(),
+            Self::vit_base(),
+            Self::opt_350(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<TransformerModel> {
+        Self::all()
+            .into_iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_five_models() {
+        assert_eq!(ModelZoo::all().len(), 5);
+    }
+
+    #[test]
+    fn d_head_divides() {
+        for m in ModelZoo::all() {
+            assert_eq!(m.d_model % m.heads, 0, "{}", m.name);
+            assert_eq!(m.d_head() * m.heads, m.d_model);
+        }
+    }
+
+    #[test]
+    fn table2_values() {
+        let b = ModelZoo::bert_base();
+        assert_eq!(b.layers, 12);
+        assert_eq!(b.seq_len, 128);
+        assert_eq!(b.heads, 12);
+        assert_eq!(b.d_model, 768);
+        assert_eq!(b.d_ff, 3072);
+        let o = ModelZoo::opt_350();
+        assert_eq!(o.seq_len, 2048);
+        assert_eq!(o.arch, Arch::DecoderOnly);
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive() {
+        assert!(ModelZoo::by_name("bert-base").is_some());
+        assert!(ModelZoo::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn with_seq_len_changes_only_n() {
+        let m = ModelZoo::bert_base().with_seq_len(512);
+        assert_eq!(m.seq_len, 512);
+        assert_eq!(m.d_model, 768);
+    }
+}

@@ -1,0 +1,136 @@
+//! Table IV experiment: inference accuracy per arithmetic variant.
+//!
+//! The paper evaluates FP32 vs Q(8-bit) vs Q(8-bit)+SC on public
+//! benchmarks; offline we use the synthetic classification task the tiny
+//! model was trained on (python `model.synth_batch`): label = (count of
+//! token 1 > count of token 2).  The observable that transfers is the
+//! accuracy *delta* between arithmetic variants — produced by running
+//! the same trained weights through the three AOT artifacts.
+
+use crate::runtime::ArtifactRegistry;
+use crate::util::XorShift64;
+use anyhow::Result;
+
+/// Accuracy of one arithmetic variant (one Table IV column entry).
+#[derive(Debug, Clone)]
+pub struct VariantAccuracy {
+    pub variant: String,
+    pub accuracy: f64,
+    pub samples: u64,
+    /// Mean |logit - fp32 logit| — a finer-grained fidelity observable
+    /// than argmax accuracy (0 for the fp32 row by construction).
+    pub logit_mae_vs_fp32: f64,
+}
+
+/// Generate one evaluation batch: uniform tokens + ground-truth labels.
+/// Matches the python task definition exactly.
+pub fn synth_eval_batch(
+    rng: &mut XorShift64,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+) -> (Vec<f32>, Vec<usize>) {
+    let mut tokens = Vec::with_capacity(batch * seq_len);
+    let mut labels = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let mut ones = 0;
+        let mut twos = 0;
+        for _ in 0..seq_len {
+            let t = rng.below(vocab as u64) as u32;
+            if t == 1 {
+                ones += 1;
+            }
+            if t == 2 {
+                twos += 1;
+            }
+            tokens.push(t as f32);
+        }
+        labels.push(usize::from(ones > twos));
+    }
+    (tokens, labels)
+}
+
+/// Run the Table IV evaluation over `n_batches` of the artifact batch
+/// size, for each variant present in the registry.
+pub fn evaluate_variants(
+    registry: &mut ArtifactRegistry,
+    n_batches: usize,
+    seed: u64,
+) -> Result<Vec<VariantAccuracy>> {
+    let tiny = registry
+        .tiny_config()
+        .ok_or_else(|| anyhow::anyhow!("manifest missing tiny config"))?
+        .clone();
+    let mut out: Vec<VariantAccuracy> = Vec::new();
+    let mut fp32_logits: Vec<f32> = Vec::new();
+    for variant in ["fp32", "q8", "q8sc"] {
+        let model = registry.load(&format!("tiny_{variant}"))?;
+        // Same seed per variant => identical evaluation sets.
+        let mut rng = XorShift64::new(seed);
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        let mut logits_all: Vec<f32> = Vec::new();
+        for _ in 0..n_batches {
+            let (tokens, labels) =
+                synth_eval_batch(&mut rng, tiny.batch, tiny.seq_len, tiny.vocab);
+            let flat = model.run_f32(&[tokens])?;
+            for (i, &label) in labels.iter().enumerate() {
+                let logits = &flat[i * tiny.n_classes..(i + 1) * tiny.n_classes];
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                correct += u64::from(pred == label);
+                total += 1;
+            }
+            logits_all.extend_from_slice(&flat);
+        }
+        let logit_mae = if variant == "fp32" {
+            fp32_logits = logits_all.clone();
+            0.0
+        } else {
+            logits_all
+                .iter()
+                .zip(&fp32_logits)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / logits_all.len().max(1) as f64
+        };
+        out.push(VariantAccuracy {
+            variant: variant.to_string(),
+            accuracy: correct as f64 / total as f64,
+            samples: total,
+            logit_mae_vs_fp32: logit_mae,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_batch_shapes_and_labels() {
+        let mut rng = XorShift64::new(1);
+        let (tokens, labels) = synth_eval_batch(&mut rng, 4, 16, 32);
+        assert_eq!(tokens.len(), 64);
+        assert_eq!(labels.len(), 4);
+        assert!(tokens.iter().all(|&t| (0.0..32.0).contains(&t)));
+        assert!(labels.iter().all(|&l| l <= 1));
+    }
+
+    #[test]
+    fn labels_match_counting_rule() {
+        let mut rng = XorShift64::new(2);
+        let (tokens, labels) = synth_eval_batch(&mut rng, 32, 16, 32);
+        for (i, &label) in labels.iter().enumerate() {
+            let seq = &tokens[i * 16..(i + 1) * 16];
+            let ones = seq.iter().filter(|&&t| t == 1.0).count();
+            let twos = seq.iter().filter(|&&t| t == 2.0).count();
+            assert_eq!(label, usize::from(ones > twos));
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Dynamic batcher: groups requests into artifact-sized batches.
+//!
+//! The AOT artifacts are compiled for a fixed batch dimension, so the
+//! batcher pads short tails with zero sequences (their outputs are
+//! dropped).  Mirrors the fixed-shape batching real PIM serving would do
+//! — the accelerator's mapping is compiled per shape.
+
+use super::requests::InferenceRequest;
+
+/// A full (possibly padded) batch ready for execution.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    /// Number of padding rows appended (0 for full batches).
+    pub padding: usize,
+}
+
+impl Batch {
+    /// Flatten to the artifact's f32[B, N] input.
+    pub fn to_input(&self, batch_size: usize, seq_len: usize) -> Vec<f32> {
+        let mut flat = Vec::with_capacity(batch_size * seq_len);
+        for r in &self.requests {
+            assert_eq!(r.tokens.len(), seq_len, "request {} wrong seq len", r.id);
+            flat.extend_from_slice(&r.tokens);
+        }
+        flat.resize(batch_size * seq_len, 0.0);
+        flat
+    }
+}
+
+/// Accumulates requests into fixed-size batches.
+#[derive(Debug)]
+pub struct Batcher {
+    batch_size: usize,
+    pending: Vec<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Self { batch_size, pending: Vec::new() }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a full batch when one completes.
+    pub fn push(&mut self, req: InferenceRequest) -> Option<Batch> {
+        self.pending.push(req);
+        if self.pending.len() == self.batch_size {
+            Some(Batch { requests: std::mem::take(&mut self.pending), padding: 0 })
+        } else {
+            None
+        }
+    }
+
+    /// Flush stragglers as a padded batch (None if empty).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let requests = std::mem::take(&mut self.pending);
+        let padding = self.batch_size - requests.len();
+        Some(Batch { requests, padding })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize) -> InferenceRequest {
+        InferenceRequest { id, tokens: vec![id as f32; n], enqueued_ns: 0 }
+    }
+
+    #[test]
+    fn full_batches_emitted_on_boundary() {
+        let mut b = Batcher::new(4);
+        assert!(b.push(req(0, 8)).is_none());
+        assert!(b.push(req(1, 8)).is_none());
+        assert!(b.push(req(2, 8)).is_none());
+        let batch = b.push(req(3, 8)).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_pads_tail() {
+        let mut b = Batcher::new(4);
+        b.push(req(0, 8));
+        b.push(req(1, 8));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.padding, 2);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn to_input_pads_with_zeros() {
+        let mut b = Batcher::new(3);
+        b.push(req(7, 4));
+        let batch = b.flush().unwrap();
+        let flat = batch.to_input(3, 4);
+        assert_eq!(flat.len(), 12);
+        assert_eq!(&flat[0..4], &[7.0; 4]);
+        assert_eq!(&flat[4..], &[0.0; 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_seq_len_panics() {
+        let mut b = Batcher::new(2);
+        b.push(req(0, 5));
+        b.flush().unwrap().to_input(2, 4);
+    }
+}

@@ -1,0 +1,19 @@
+//! The serving coordinator: request queue, dynamic batcher, token-shard
+//! placement, and the functional+timing co-simulation loop.
+//!
+//! Functional outputs come from the AOT artifacts via PJRT (`runtime`);
+//! accelerator latency/energy come from the simulator (`sim`).  Requests
+//! are produced on any thread and flow over a channel; execution happens
+//! on the coordinator thread because PJRT executables are not `Send`.
+
+mod accuracy;
+mod batcher;
+mod requests;
+mod router;
+mod server;
+
+pub use accuracy::{evaluate_variants, synth_eval_batch, VariantAccuracy};
+pub use batcher::{Batch, Batcher};
+pub use requests::{InferenceRequest, InferenceResponse, SimCost};
+pub use router::{Percentiles, RoutedRequest, Router, VariantOutcome};
+pub use server::{Coordinator, ServeStats};

@@ -1,0 +1,56 @@
+//! Request/response types of the serving path.
+
+/// One inference request: a token sequence for the tiny classifier.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Token ids as f32 (the artifact interface dtype), length = seq_len.
+    pub tokens: Vec<f32>,
+    /// Enqueue timestamp (ns since coordinator start) for queueing stats.
+    pub enqueued_ns: u64,
+}
+
+/// Simulated accelerator cost attributed to a request's batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimCost {
+    /// Simulated ARTEMIS latency for the batch, ns.
+    pub batch_latency_ns: f64,
+    /// Simulated energy for the batch, pJ.
+    pub batch_energy_pj: f64,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Wall-clock PJRT execution time of the batch, ns.
+    pub wall_exec_ns: u64,
+    /// Wall-clock queueing delay, ns.
+    pub wall_queue_ns: u64,
+    pub sim: SimCost,
+}
+
+impl InferenceResponse {
+    pub fn argmax(logits: &[f32]) -> usize {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(InferenceResponse::argmax(&[0.1, 0.9]), 1);
+        assert_eq!(InferenceResponse::argmax(&[3.0, -1.0, 2.0]), 0);
+        assert_eq!(InferenceResponse::argmax(&[]), 0);
+    }
+}

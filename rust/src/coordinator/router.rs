@@ -1,0 +1,146 @@
+//! Multi-variant request router.
+//!
+//! Serving deployments keep several arithmetic variants of the same
+//! model loaded (full-precision for accuracy-sensitive traffic, Q8+SC
+//! for throughput) and route per request.  The router owns one
+//! [`Coordinator`] per variant, dispatches tagged requests, and tracks
+//! per-variant latency percentiles.
+
+use super::requests::{InferenceRequest, InferenceResponse};
+use super::server::{Coordinator, ServeStats};
+use crate::config::ArtemisConfig;
+use crate::runtime::ArtifactRegistry;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// A request tagged with its target variant.
+#[derive(Debug, Clone)]
+pub struct RoutedRequest {
+    pub variant: String,
+    pub request: InferenceRequest,
+}
+
+/// Latency percentile summary, ns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl Percentiles {
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        samples.sort_unstable();
+        let pick = |q: f64| {
+            let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+            samples[idx]
+        };
+        Self {
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            max: *samples.last().unwrap(),
+        }
+    }
+}
+
+/// Per-variant routing outcome.
+#[derive(Debug, Clone)]
+pub struct VariantOutcome {
+    pub variant: String,
+    pub stats: ServeStats,
+    pub exec_percentiles: Percentiles,
+}
+
+/// The router.
+pub struct Router {
+    coordinators: HashMap<String, Coordinator>,
+}
+
+impl Router {
+    /// Load coordinators for the given variants.
+    pub fn new(
+        registry: &mut ArtifactRegistry,
+        cfg: &ArtemisConfig,
+        variants: &[&str],
+    ) -> Result<Self> {
+        let mut coordinators = HashMap::new();
+        for v in variants {
+            coordinators.insert(v.to_string(), Coordinator::new(registry, cfg, v)?);
+        }
+        Ok(Self { coordinators })
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.coordinators.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.coordinators
+            .values()
+            .next()
+            .map(|c| c.seq_len())
+            .unwrap_or(0)
+    }
+
+    /// Dispatch a mixed stream of tagged requests.  Requests are grouped
+    /// per variant (each variant's batcher fills independently) and all
+    /// responses are returned with per-variant outcomes.
+    pub fn route_all(
+        &mut self,
+        requests: Vec<RoutedRequest>,
+    ) -> Result<(Vec<InferenceResponse>, Vec<VariantOutcome>)> {
+        let mut buckets: HashMap<String, Vec<InferenceRequest>> = HashMap::new();
+        for r in requests {
+            if !self.coordinators.contains_key(&r.variant) {
+                return Err(anyhow!("no coordinator for variant '{}'", r.variant));
+            }
+            buckets.entry(r.variant).or_default().push(r.request);
+        }
+        let mut all_responses = Vec::new();
+        let mut outcomes = Vec::new();
+        let mut names: Vec<_> = buckets.keys().cloned().collect();
+        names.sort();
+        for name in names {
+            let reqs = buckets.remove(&name).unwrap();
+            let coord = self.coordinators.get_mut(&name).unwrap();
+            let (responses, stats) = coord.serve_all(reqs)?;
+            let exec_percentiles = Percentiles::from_samples(
+                responses.iter().map(|r| r.wall_exec_ns).collect(),
+            );
+            outcomes.push(VariantOutcome { variant: name, stats, exec_percentiles });
+            all_responses.extend(responses);
+        }
+        Ok((all_responses, outcomes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordering() {
+        let p = Percentiles::from_samples(vec![5, 1, 9, 3, 7, 2, 8, 4, 6, 10]);
+        assert!(p.p50 <= p.p95);
+        assert!(p.p95 <= p.p99);
+        assert!(p.p99 <= p.max);
+        assert_eq!(p.max, 10);
+        assert_eq!(p.p50, 6); // index round(9*0.5)=5 (sorted 1..10 -> 6)
+    }
+
+    #[test]
+    fn percentiles_empty_and_single() {
+        let e = Percentiles::from_samples(vec![]);
+        assert_eq!(e.max, 0);
+        let s = Percentiles::from_samples(vec![42]);
+        assert_eq!(s.p50, 42);
+        assert_eq!(s.max, 42);
+    }
+}

@@ -1,0 +1,175 @@
+//! The coordinator proper: receives requests over a channel, batches,
+//! executes via PJRT, accounts simulated accelerator cost, responds.
+
+use super::batcher::{Batch, Batcher};
+use super::requests::{InferenceRequest, InferenceResponse, SimCost};
+use crate::config::{Arch, ArtemisConfig, TransformerModel};
+use crate::dataflow::token_shards;
+use crate::runtime::{ArtifactRegistry, CompiledModel, TinyModelConfig};
+use crate::sim::{simulate, SimOptions};
+use crate::xfmr::build_workload;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub wall_total_ns: u64,
+    pub wall_exec_ns: u64,
+    /// Simulated ARTEMIS time for all batches, ns.
+    pub sim_total_ns: f64,
+    /// Simulated ARTEMIS energy, pJ.
+    pub sim_total_pj: f64,
+    /// Tokens placed per bank by the token-sharding policy (first 8
+    /// banks shown in reports).
+    pub tokens_per_bank: Vec<u64>,
+}
+
+impl ServeStats {
+    pub fn wall_throughput_rps(&self) -> f64 {
+        self.requests as f64 / (self.wall_total_ns.max(1) as f64 * 1e-9)
+    }
+
+    /// Simulated accelerator throughput (requests/s at ARTEMIS speed).
+    pub fn sim_throughput_rps(&self) -> f64 {
+        self.requests as f64 / (self.sim_total_ns.max(1.0) * 1e-9)
+    }
+}
+
+/// The serving coordinator for one compiled model variant.
+pub struct Coordinator {
+    model: Arc<CompiledModel>,
+    tiny: TinyModelConfig,
+    cfg: ArtemisConfig,
+    batcher: Batcher,
+    /// Simulated cost of one batch (same workload every batch).
+    batch_sim: SimCost,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Build for `variant` in {"fp32", "q8", "q8sc"}.
+    pub fn new(registry: &mut ArtifactRegistry, cfg: &ArtemisConfig, variant: &str) -> Result<Self> {
+        let tiny = registry
+            .tiny_config()
+            .ok_or_else(|| anyhow!("manifest missing tiny config"))?
+            .clone();
+        let model = registry.load(&format!("tiny_{variant}"))?;
+
+        // Simulated accelerator cost of one batch: the tiny model's
+        // geometry as a Table II-style workload, one inference per row.
+        let tm = TransformerModel {
+            name: "tiny".into(),
+            arch: Arch::EncoderOnly,
+            params_m: 0.1,
+            layers: tiny.n_layers as u32,
+            seq_len: tiny.seq_len as u32,
+            heads: tiny.n_heads as u32,
+            d_model: tiny.d_model as u32,
+            d_ff: tiny.d_ff as u32,
+            gelu: false,
+        };
+        let w = build_workload(&tm);
+        let r = simulate(cfg, &w, SimOptions::artemis());
+        let batch_sim = SimCost {
+            batch_latency_ns: r.total_ns * tiny.batch as f64,
+            batch_energy_pj: r.total_energy_pj() * tiny.batch as f64,
+        };
+
+        Ok(Self {
+            batcher: Batcher::new(tiny.batch),
+            model,
+            tiny,
+            cfg: cfg.clone(),
+            batch_sim,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.tiny.seq_len
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.tiny.n_classes
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.started.elapsed().as_nanos() as u64
+    }
+
+    /// Execute one batch, producing responses for its real rows.
+    fn run_batch(&self, batch: Batch, stats: &mut ServeStats) -> Result<Vec<InferenceResponse>> {
+        let input = batch.to_input(self.tiny.batch, self.tiny.seq_len);
+        let t0 = Instant::now();
+        let flat = self.model.run_f32(&[input])?;
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+
+        stats.batches += 1;
+        stats.padded_rows += batch.padding as u64;
+        stats.wall_exec_ns += exec_ns;
+        stats.sim_total_ns += self.batch_sim.batch_latency_ns;
+        stats.sim_total_pj += self.batch_sim.batch_energy_pj;
+
+        // Token placement accounting (sharding policy metrics).
+        let banks = self.cfg.hbm.banks_total();
+        for shard in token_shards(self.tiny.seq_len as u64, banks) {
+            let idx = shard.bank as usize;
+            if stats.tokens_per_bank.len() <= idx {
+                stats.tokens_per_bank.resize(idx + 1, 0);
+            }
+            stats.tokens_per_bank[idx] += shard.len() * batch.requests.len() as u64;
+        }
+
+        let nc = self.tiny.n_classes;
+        let now = self.now_ns();
+        let mut responses = Vec::with_capacity(batch.requests.len());
+        for (i, req) in batch.requests.iter().enumerate() {
+            let logits = flat[i * nc..(i + 1) * nc].to_vec();
+            responses.push(InferenceResponse {
+                id: req.id,
+                predicted: InferenceResponse::argmax(&logits),
+                logits,
+                wall_exec_ns: exec_ns,
+                wall_queue_ns: now.saturating_sub(req.enqueued_ns),
+                sim: self.batch_sim,
+            });
+            stats.requests += 1;
+        }
+        Ok(responses)
+    }
+
+    /// Drain a channel of requests until it closes, batching and
+    /// executing as batches fill; flushes the tail.  Producers run on
+    /// other threads; execution stays here (PJRT handles are not Send).
+    pub fn serve(&mut self, rx: Receiver<InferenceRequest>) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+        let mut stats = ServeStats::default();
+        let mut responses = Vec::new();
+        let t0 = Instant::now();
+        for req in rx.iter() {
+            if let Some(batch) = self.batcher.push(req) {
+                responses.extend(self.run_batch(batch, &mut stats)?);
+            }
+        }
+        if let Some(batch) = self.batcher.flush() {
+            responses.extend(self.run_batch(batch, &mut stats)?);
+        }
+        stats.wall_total_ns = t0.elapsed().as_nanos() as u64;
+        Ok((responses, stats))
+    }
+
+    /// Synchronous convenience: serve a vector of requests.
+    pub fn serve_all(&mut self, requests: Vec<InferenceRequest>) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for r in requests {
+            tx.send(r).expect("channel open");
+        }
+        drop(tx);
+        self.serve(rx)
+    }
+}

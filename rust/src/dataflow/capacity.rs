@@ -1,0 +1,179 @@
+//! Storage capacity / mapping model (Section IV.E).
+//!
+//! The paper notes that OPT's 2048-token sequences exceed what the
+//! baseline configuration can hold, forcing "multiple mappings and the
+//! associated latency overhead", and that larger hardware "circumvents
+//! the additional energy expenditure associated with repeatedly writing
+//! and mapping the models' parameters".  This module quantifies that:
+//! per-bank storage demand (weights shard + resident activations +
+//! reserved computational rows) vs the bank's capacity, and the number
+//! of mapping rounds when it doesn't fit.
+//!
+//! Storage layout assumptions (documented in DESIGN.md):
+//! * weights are stored 8-bit binary, column-sharded across banks
+//!   (streams are generated on the fly by the per-NSC B_to_TCU blocks,
+//!   so no 16x stream expansion is ever stored),
+//! * each bank keeps its tokens' Q/K/V plus the gathered K and V of all
+//!   other banks while a layer's attention is in flight,
+//! * the first two rows of every tile are reserved computational rows,
+//!   and one row per tile is the latch/staging row.
+
+use crate::config::{ArtemisConfig, TransformerModel};
+
+/// Capacity analysis for one model on one configuration.
+#[derive(Debug, Clone)]
+pub struct CapacityReport {
+    /// Usable bytes per bank after reserved rows.
+    pub bank_capacity_bytes: u64,
+    /// Weight shard resident in each bank.
+    pub weights_bytes_per_bank: u64,
+    /// Peak resident activations per bank (own Q/K/V + gathered K, V).
+    pub activations_bytes_per_bank: u64,
+    /// Total demand per bank.
+    pub demand_bytes_per_bank: u64,
+    /// Whether a single mapping suffices.
+    pub fits: bool,
+    /// Mapping rounds needed (1 = resident; >1 = weights must be
+    /// re-loaded in chunks per inference).
+    pub mapping_rounds: u64,
+    /// Extra latency per inference for re-mapping, ns (weight chunks
+    /// re-written through the I/O path and DRAM restore).
+    pub remap_latency_ns: f64,
+    /// Extra energy per inference for re-mapping, pJ.
+    pub remap_energy_pj: f64,
+}
+
+/// Analyze a model's storage demand under token sharding.
+pub fn capacity_report(cfg: &ArtemisConfig, model: &TransformerModel) -> CapacityReport {
+    let hbm = &cfg.hbm;
+    let banks = hbm.banks_total();
+    let rows_per_tile = hbm.rows_per_tile;
+    // 2 computational rows + 1 latch/staging row reserved per tile.
+    let usable_rows = rows_per_tile.saturating_sub(3);
+    let bank_capacity_bytes = hbm.subarrays_per_bank
+        * hbm.tiles_per_subarray
+        * usable_rows
+        * hbm.bits_per_row
+        / 8;
+
+    let weights_total = (model.params_m * 1e6) as u64; // 8-bit storage
+    let weights_bytes_per_bank = weights_total.div_ceil(banks);
+
+    let n = model.seq_len as u64;
+    let d = model.d_model as u64;
+    let n_b = n.div_ceil(banks.min(n.max(1)));
+    // Own Q/K/V (3 x N_b x D) + gathered K and V (2 x N x D) + FFN
+    // intermediate (N_b x d_ff), all 8-bit.
+    let activations_bytes_per_bank = 3 * n_b * d + 2 * n * d + n_b * model.d_ff as u64;
+
+    let demand = weights_bytes_per_bank + activations_bytes_per_bank;
+    let fits = demand <= bank_capacity_bytes;
+
+    // When weights + activations exceed capacity, the weight shard is
+    // processed in chunks: each extra round reloads the bank's weight
+    // shard through the I/O path and writes it into rows.
+    let mapping_rounds = if fits {
+        1
+    } else {
+        let avail_for_weights = bank_capacity_bytes.saturating_sub(activations_bytes_per_bank);
+        if avail_for_weights == 0 {
+            u64::MAX // activations alone overflow: not mappable
+        } else {
+            weights_bytes_per_bank.div_ceil(avail_for_weights)
+        }
+    };
+
+    let (remap_latency_ns, remap_energy_pj) = if mapping_rounds > 1 && mapping_rounds != u64::MAX {
+        let reload_bytes = weights_bytes_per_bank * (mapping_rounds - 1);
+        let bits = reload_bytes * 8;
+        // I/O transfer serialized over the module interface + row writes.
+        let io_ns = bits as f64 / hbm.link_bits as f64 * hbm.timing.link_beat_ns;
+        let rows = bits.div_ceil(hbm.subarray_row_bits());
+        let write_ns = rows as f64 * hbm.timing.write_row_ns
+            / hbm.active_subarrays_per_bank() as f64;
+        let energy = bits as f64 * hbm.energy.e_io_pj_per_bit
+            + rows as f64 * hbm.energy.e_act_pj;
+        (io_ns + write_ns, energy)
+    } else {
+        (0.0, 0.0)
+    };
+
+    CapacityReport {
+        bank_capacity_bytes,
+        weights_bytes_per_bank,
+        activations_bytes_per_bank,
+        demand_bytes_per_bank: demand,
+        fits,
+        mapping_rounds,
+        remap_latency_ns,
+        remap_energy_pj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    #[test]
+    fn all_table2_models_fit_default_config() {
+        let cfg = ArtemisConfig::default();
+        for m in ModelZoo::all() {
+            let r = capacity_report(&cfg, &m);
+            assert!(r.fits, "{} demand {} vs {}", m.name, r.demand_bytes_per_bank,
+                r.bank_capacity_bytes);
+            assert_eq!(r.mapping_rounds, 1);
+            assert_eq!(r.remap_latency_ns, 0.0);
+        }
+    }
+
+    #[test]
+    fn bank_capacity_near_32mb() {
+        let cfg = ArtemisConfig::default();
+        let r = capacity_report(&cfg, &ModelZoo::bert_base());
+        // 1 GiB / 32 banks minus reserved rows ~ 31.6 MB
+        assert!((30_000_000..34_000_000).contains(&r.bank_capacity_bytes),
+            "{}", r.bank_capacity_bytes);
+    }
+
+    #[test]
+    fn shrunken_config_forces_remapping() {
+        let mut cfg = ArtemisConfig::default();
+        cfg.hbm.subarrays_per_bank = 8; // tiny banks: ~2 MB
+        // BERT: ~3.4 MB weight shard/bank, ~0.2 MB activations —
+        // activations fit, weights need chunked mapping rounds.
+        let m = ModelZoo::bert_base();
+        let r = capacity_report(&cfg, &m);
+        assert!(!r.fits);
+        assert!(r.mapping_rounds > 1 && r.mapping_rounds != u64::MAX);
+        assert!(r.remap_latency_ns > 0.0);
+        assert!(r.remap_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn activation_overflow_is_unmappable() {
+        let mut cfg = ArtemisConfig::default();
+        cfg.hbm.subarrays_per_bank = 8;
+        // OPT's resident K/V at N=2048 alone exceed the 2 MB bank.
+        let r = capacity_report(&cfg, &ModelZoo::opt_350());
+        assert!(!r.fits);
+        assert_eq!(r.mapping_rounds, u64::MAX);
+    }
+
+    #[test]
+    fn more_banks_reduce_demand() {
+        let m = ModelZoo::opt_350();
+        let r1 = capacity_report(&ArtemisConfig::with_stacks(1), &m);
+        let r4 = capacity_report(&ArtemisConfig::with_stacks(4), &m);
+        assert!(r4.weights_bytes_per_bank < r1.weights_bytes_per_bank);
+        assert!(r4.demand_bytes_per_bank < r1.demand_bytes_per_bank);
+    }
+
+    #[test]
+    fn long_sequences_inflate_activations() {
+        let cfg = ArtemisConfig::default();
+        let short = capacity_report(&cfg, &ModelZoo::bert_base());
+        let long = capacity_report(&cfg, &ModelZoo::bert_base().with_seq_len(8192));
+        assert!(long.activations_bytes_per_bank > 10 * short.activations_bytes_per_bank);
+    }
+}

@@ -1,0 +1,44 @@
+//! Dataflow and scheduling (Section III.D): token-based sharding, the
+//! ring+broadcast inter-bank network, and the intra-bank latch pipeline.
+
+mod capacity;
+mod network;
+mod sharding;
+
+pub use capacity::{capacity_report, CapacityReport};
+pub use network::{allgather_cost, broadcast_cost, RingNetwork, TransferCost};
+pub use sharding::{layer_assignment, token_shards, Shard};
+
+/// Which dataflow scheme maps the model onto the banks (Fig. 8 axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Conventional layer-based mapping [6], [34]-[36].
+    Layer,
+    /// ARTEMIS/TransPIM token sharding [9].
+    Token,
+}
+
+/// Whether execution pipelining (Fig. 6) is enabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipelining {
+    Off,
+    On,
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dataflow::Layer => write!(f, "layer"),
+            Dataflow::Token => write!(f, "token"),
+        }
+    }
+}
+
+impl std::fmt::Display for Pipelining {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Pipelining::Off => write!(f, "NP"),
+            Pipelining::On => write!(f, "PP"),
+        }
+    }
+}

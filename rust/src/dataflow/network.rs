@@ -1,0 +1,162 @@
+//! The inter-bank ring + broadcast network (Section III.D.1, adapted
+//! from TransPIM [9]) and its latency/energy cost model.
+//!
+//! Topology: the banks form a ring; each bank forwards its neighbour's
+//! shard while injecting its own (all banks transfer concurrently), so an
+//! all-gather of per-bank shards completes in `K-1` ring steps.  The
+//! conventional alternative — a single shared bus where only one bank
+//! drives at a time — serializes everything; the layer-based dataflow is
+//! stuck with it for its bulk layer-to-layer transfers.
+
+use crate::config::HbmConfig;
+
+/// Cost of one collective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferCost {
+    pub latency_ns: f64,
+    /// Total bits crossing bank boundaries (for post-GSA energy).
+    pub bits_moved: u64,
+}
+
+impl TransferCost {
+    pub const ZERO: Self = Self { latency_ns: 0.0, bits_moved: 0 };
+
+    pub fn add(&self, other: &Self) -> Self {
+        Self {
+            latency_ns: self.latency_ns + other.latency_ns,
+            bits_moved: self.bits_moved + other.bits_moved,
+        }
+    }
+}
+
+/// The ring network bound to an HBM configuration.
+#[derive(Debug, Clone)]
+pub struct RingNetwork {
+    banks: u64,
+    link_bits: u64,
+    beat_ns: f64,
+}
+
+impl RingNetwork {
+    pub fn new(hbm: &HbmConfig) -> Self {
+        Self {
+            banks: hbm.banks_total(),
+            link_bits: hbm.link_bits,
+            beat_ns: hbm.timing.link_beat_ns,
+        }
+    }
+
+    pub fn banks(&self) -> u64 {
+        self.banks
+    }
+
+    /// Beats to push `bits` across one link.
+    fn beats(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.link_bits)
+    }
+
+    /// Ring all-gather: every bank ends up with every bank's shard of
+    /// `shard_bits`.  K-1 concurrent ring steps; each step every bank
+    /// moves one shard, so `K*(K-1)` shard-hops of energy.
+    pub fn allgather(&self, shard_bits: u64) -> TransferCost {
+        if self.banks <= 1 || shard_bits == 0 {
+            return TransferCost::ZERO;
+        }
+        let steps = self.banks - 1;
+        TransferCost {
+            latency_ns: steps as f64 * self.beats(shard_bits) as f64 * self.beat_ns,
+            bits_moved: self.banks * steps * shard_bits,
+        }
+    }
+
+    /// One-to-all broadcast of `bits` (ring-forwarded): K-1 sequential
+    /// hop-forwardings but pipelined per beat, so latency is one transfer
+    /// plus (K-2) beat skews; energy is K-1 hops.
+    pub fn broadcast(&self, bits: u64) -> TransferCost {
+        if self.banks <= 1 || bits == 0 {
+            return TransferCost::ZERO;
+        }
+        let hops = self.banks - 1;
+        TransferCost {
+            latency_ns: (self.beats(bits) as f64 + (hops - 1) as f64) * self.beat_ns,
+            bits_moved: hops * bits,
+        }
+    }
+
+    /// Shared-bus sequential transfer (the layer-dataflow path): `bits`
+    /// cross the single bus one bank at a time.
+    pub fn shared_bus(&self, bits: u64) -> TransferCost {
+        TransferCost {
+            latency_ns: self.beats(bits) as f64 * self.beat_ns,
+            bits_moved: bits,
+        }
+    }
+}
+
+/// Convenience: all-gather cost for per-bank shards of `shard_bits`.
+pub fn allgather_cost(hbm: &HbmConfig, shard_bits: u64) -> TransferCost {
+    RingNetwork::new(hbm).allgather(shard_bits)
+}
+
+/// Convenience: broadcast cost.
+pub fn broadcast_cost(hbm: &HbmConfig, bits: u64) -> TransferCost {
+    RingNetwork::new(hbm).broadcast(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hbm() -> HbmConfig {
+        HbmConfig::default()
+    }
+
+    #[test]
+    fn allgather_scales_with_banks_minus_one() {
+        let net = RingNetwork::new(&hbm());
+        let c = net.allgather(256 * 10);
+        assert_eq!(c.latency_ns, 31.0 * 10.0 * 1.0); // 31 steps x 10 beats
+        assert_eq!(c.bits_moved, 32 * 31 * 2560);
+    }
+
+    #[test]
+    fn single_bank_is_free() {
+        let mut h = hbm();
+        h.stacks = 1;
+        h.channels_per_stack = 1;
+        h.banks_per_channel = 1;
+        let net = RingNetwork::new(&h);
+        assert_eq!(net.allgather(1000), TransferCost::ZERO);
+        assert_eq!(net.broadcast(1000), TransferCost::ZERO);
+    }
+
+    #[test]
+    fn broadcast_cheaper_than_allgather() {
+        let net = RingNetwork::new(&hbm());
+        let bits = 4096;
+        assert!(net.broadcast(bits).latency_ns < net.allgather(bits).latency_ns);
+    }
+
+    #[test]
+    fn shared_bus_serializes() {
+        let net = RingNetwork::new(&hbm());
+        let c = net.shared_bus(256 * 100);
+        assert_eq!(c.latency_ns, 100.0);
+        assert_eq!(c.bits_moved, 25600);
+    }
+
+    #[test]
+    fn zero_bits_free() {
+        let net = RingNetwork::new(&hbm());
+        assert_eq!(net.allgather(0), TransferCost::ZERO);
+    }
+
+    #[test]
+    fn cost_add() {
+        let a = TransferCost { latency_ns: 1.0, bits_moved: 2 };
+        let b = TransferCost { latency_ns: 3.0, bits_moved: 4 };
+        let c = a.add(&b);
+        assert_eq!(c.latency_ns, 4.0);
+        assert_eq!(c.bits_moved, 6);
+    }
+}

@@ -1,0 +1,131 @@
+//! Token sharding (Section III.D.1): the input's N tokens are divided
+//! across the K banks before the first encoder layer; each bank then owns
+//! its tokens' computations and intermediate data for the whole inference.
+
+/// A contiguous token range assigned to one bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub bank: u64,
+    pub start: u64,
+    /// One past the last token (empty shards allowed when N < K).
+    pub end: u64,
+}
+
+impl Shard {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Shard `n_tokens` across `banks`.  Every token lands in exactly one
+/// shard; shard sizes differ by at most 1 (balanced ceil/floor split).
+pub fn token_shards(n_tokens: u64, banks: u64) -> Vec<Shard> {
+    assert!(banks > 0, "no banks");
+    let base = n_tokens / banks;
+    let extra = n_tokens % banks;
+    let mut shards = Vec::with_capacity(banks as usize);
+    let mut start = 0;
+    for bank in 0..banks {
+        let len = base + u64::from(bank < extra);
+        shards.push(Shard { bank, start, end: start + len });
+        start += len;
+    }
+    shards
+}
+
+/// Layer-based assignment: layer `l` of `layers` maps to a bank group;
+/// returns for each layer the set of banks computing it.  Groups are
+/// contiguous and balanced (the conventional PIM mapping ARTEMIS
+/// compares against).
+pub fn layer_assignment(layers: u64, banks: u64) -> Vec<Vec<u64>> {
+    assert!(banks > 0 && layers > 0);
+    if layers >= banks {
+        // Multiple layers share a bank round-robin.
+        (0..layers).map(|l| vec![l % banks]).collect()
+    } else {
+        // Each layer gets a contiguous group of banks.
+        let base = banks / layers;
+        let extra = banks % layers;
+        let mut out = Vec::with_capacity(layers as usize);
+        let mut next = 0;
+        for l in 0..layers {
+            let len = base + u64::from(l < extra);
+            out.push((next..next + len).collect());
+            next += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_every_token_once() {
+        for (n, k) in [(128u64, 32u64), (2048, 32), (100, 7), (5, 8), (0, 4)] {
+            let shards = token_shards(n, k);
+            assert_eq!(shards.len(), k as usize);
+            let total: u64 = shards.iter().map(Shard::len).sum();
+            assert_eq!(total, n, "n={n} k={k}");
+            // contiguity + disjointness
+            let mut expect = 0;
+            for s in &shards {
+                assert_eq!(s.start, expect);
+                expect = s.end;
+            }
+        }
+    }
+
+    #[test]
+    fn shards_balanced_within_one() {
+        let shards = token_shards(100, 7);
+        let min = shards.iter().map(Shard::len).min().unwrap();
+        let max = shards.iter().map(Shard::len).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn paper_case_128_tokens_32_banks() {
+        // Section III.D.1: N_b = N / K.
+        let shards = token_shards(128, 32);
+        assert!(shards.iter().all(|s| s.len() == 4));
+    }
+
+    #[test]
+    fn fewer_tokens_than_banks_leaves_empties() {
+        let shards = token_shards(5, 8);
+        assert_eq!(shards.iter().filter(|s| !s.is_empty()).count(), 5);
+    }
+
+    #[test]
+    fn layer_assignment_covers_all_layers() {
+        for (l, b) in [(12u64, 32u64), (24, 32), (2, 32), (40, 32)] {
+            let a = layer_assignment(l, b);
+            assert_eq!(a.len(), l as usize);
+            for banks in &a {
+                assert!(!banks.is_empty());
+                for &bk in banks {
+                    assert!(bk < b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_groups_partition_banks_when_layers_divide() {
+        let a = layer_assignment(4, 32);
+        let mut seen = vec![false; 32];
+        for group in &a {
+            for &b in group {
+                assert!(!seen[b as usize], "bank {b} in two groups");
+                seen[b as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

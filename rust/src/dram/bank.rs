@@ -1,0 +1,139 @@
+//! Bank-level orchestration: the Fig. 5(a) per-subarray vector
+//! multiplication flow, bit-exactly.
+//!
+//! A bank activates half its subarrays (open bit-line), shards a vector
+//! multiplication's reduction dimension across them tile-window by
+//! tile-window, reduces tile partials at each subarray's NSC, and folds
+//! the per-subarray partials through the NSC chain (sub-rounds 1-3).
+
+use super::subarray::Subarray;
+use crate::config::{HbmConfig, MomcapParams};
+use crate::nsc::nsc_reduce_chain;
+use crate::sc::SignedCode;
+
+/// A functional bank: `active_subarrays` independent vector-MAC units.
+pub struct Bank {
+    subarrays: Vec<Subarray>,
+    tile_window: usize,
+}
+
+impl Bank {
+    /// Build with the configured number of *active* subarrays (the idle
+    /// open-bit-line partners only lend their MOMCAPs and are modeled
+    /// inside `TileMacEngine`).
+    pub fn new(hbm: &HbmConfig, momcap: &MomcapParams, active_subarrays: usize) -> Self {
+        let subarrays = (0..active_subarrays)
+            .map(|_| Subarray::new(hbm, momcap))
+            .collect();
+        Self { subarrays, tile_window: momcap.tile_window() as usize }
+    }
+
+    pub fn active_subarrays(&self) -> usize {
+        self.subarrays.len()
+    }
+
+    /// One full dot product, sharded across subarrays in alternating
+    /// tile-window chunks (the Fig. 5(a) example: windows 0-19 on
+    /// subarray 1's MOMCAP, 20-39 on subarray 2's, ...), then reduced
+    /// through the NSC chain.
+    pub fn dot(&mut self, a: &[SignedCode], b: &[SignedCode]) -> i64 {
+        assert_eq!(a.len(), b.len());
+        let n_sub = self.subarrays.len().max(1);
+        // Round-robin chunks across subarrays.
+        let mut per_sub: Vec<(Vec<SignedCode>, Vec<SignedCode>)> =
+            vec![(Vec::new(), Vec::new()); n_sub];
+        for (ci, (ca, cb)) in a
+            .chunks(self.tile_window)
+            .zip(b.chunks(self.tile_window))
+            .enumerate()
+        {
+            let slot = &mut per_sub[ci % n_sub];
+            slot.0.extend_from_slice(ca);
+            slot.1.extend_from_slice(cb);
+        }
+        // Sub-rounds 1+2: per-subarray compute + local NSC reduction.
+        let mut partials_per_subarray = Vec::with_capacity(n_sub);
+        for (si, (ca, cb)) in per_sub.iter().enumerate() {
+            if ca.is_empty() {
+                partials_per_subarray.push(Vec::new());
+                continue;
+            }
+            let (parts, _) = self.subarrays[si].dot(ca, cb);
+            partials_per_subarray.push(parts.iter().map(|p| p.value).collect());
+        }
+        // Sub-round 3: chain reduction across NSCs.
+        nsc_reduce_chain(&partials_per_subarray).value
+    }
+
+    /// Matrix-vector product `M[rows x k] . v[k]` — one dot per row.
+    pub fn matvec(&mut self, m: &[Vec<SignedCode>], v: &[SignedCode]) -> Vec<i64> {
+        m.iter().map(|row| self.dot(row, v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn reference_dot(a: &[SignedCode], b: &[SignedCode]) -> i64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let p = (x.magnitude as i64 * y.magnitude as i64) / 128;
+                if x.negative != y.negative {
+                    -p
+                } else {
+                    p
+                }
+            })
+            .sum()
+    }
+
+    fn random_codes(n: usize, seed: u64) -> Vec<SignedCode> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| SignedCode::from_i32(rng.code())).collect()
+    }
+
+    fn bank(subarrays: usize) -> Bank {
+        Bank::new(&HbmConfig::default(), &MomcapParams::default(), subarrays)
+    }
+
+    #[test]
+    fn fig5a_example_two_subarrays_dim_80() {
+        // The paper's worked example: an 80-wide vector multiplication
+        // over 2 subarrays, 40-MAC windows.
+        let mut b = bank(2);
+        let x = random_codes(80, 1);
+        let w = random_codes(80, 2);
+        assert_eq!(b.dot(&x, &w), reference_dot(&x, &w));
+    }
+
+    #[test]
+    fn dot_matches_reference_across_geometries() {
+        for (n_sub, len) in [(1usize, 40usize), (2, 80), (4, 333), (8, 1000)] {
+            let mut b = bank(n_sub);
+            let x = random_codes(len, len as u64);
+            let w = random_codes(len, len as u64 + 5);
+            assert_eq!(b.dot(&x, &w), reference_dot(&x, &w), "sub={n_sub} len={len}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_rowwise_reference() {
+        let mut b = bank(4);
+        let k = 96;
+        let rows: Vec<Vec<SignedCode>> = (0..5).map(|r| random_codes(k, r + 50)).collect();
+        let v = random_codes(k, 99);
+        let got = b.matvec(&rows, &v);
+        for (row, g) in rows.iter().zip(&got) {
+            assert_eq!(*g, reference_dot(row, &v));
+        }
+    }
+
+    #[test]
+    fn empty_dot_is_zero() {
+        let mut b = bank(2);
+        assert_eq!(b.dot(&[], &[]), 0);
+    }
+}

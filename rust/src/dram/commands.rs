@@ -1,0 +1,129 @@
+//! DRAM command primitives and MOC/energy accounting.
+
+use crate::config::{EnergyParams, TimingParams};
+
+/// The command vocabulary of the ARTEMIS-modified DRAM (Section II.D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramCommand {
+    /// ACTIVATE one row (charge sharing + S/A sense + restore).
+    Activate,
+    /// PRECHARGE the bit-lines to Vdd/2.
+    Precharge,
+    /// Activate-activate-precharge: the RowClone copy primitive — one MOC.
+    Aap,
+    /// Write a row through the S/As.
+    WriteRow,
+    /// Toggle K1: dump S/A state onto the MOMCAP (S_to_A), 1 ns step.
+    MomcapCharge,
+    /// Full analog-to-binary conversion (A_to_U + U_to_B), 31 ns.
+    AToB,
+}
+
+/// Tallies commands and converts them to latency / energy using the
+/// configured parameters.  This is the accounting bridge between the
+/// functional substrate and the performance simulator.
+#[derive(Debug, Clone, Default)]
+pub struct CommandCounter {
+    pub activates: u64,
+    pub precharges: u64,
+    pub aaps: u64,
+    pub row_writes: u64,
+    pub momcap_charges: u64,
+    pub a_to_bs: u64,
+}
+
+impl CommandCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, cmd: DramCommand) {
+        match cmd {
+            DramCommand::Activate => self.activates += 1,
+            DramCommand::Precharge => self.precharges += 1,
+            DramCommand::Aap => self.aaps += 1,
+            DramCommand::WriteRow => self.row_writes += 1,
+            DramCommand::MomcapCharge => self.momcap_charges += 1,
+            DramCommand::AToB => self.a_to_bs += 1,
+        }
+    }
+
+    /// Serial latency if every command executed back-to-back, ns.
+    /// (The simulator applies parallelism on top of this.)
+    pub fn serial_latency_ns(&self, t: &TimingParams) -> f64 {
+        // An AAP is one MOC; a bare activate is ~half a MOC in practice,
+        // modeled at 0.5 * moc for accounting symmetry.
+        self.aaps as f64 * t.moc_ns
+            + self.activates as f64 * 0.5 * t.moc_ns
+            + self.precharges as f64 * 0.25 * t.moc_ns
+            + self.row_writes as f64 * t.write_row_ns
+            + self.momcap_charges as f64 * t.momcap_step_ns
+            + self.a_to_bs as f64 * t.a_to_b_ns
+    }
+
+    /// Activation energy total, pJ.  Each AAP performs two activations;
+    /// MOMCAP charging and A_to_B energy are circuit-level (Table III)
+    /// and accounted by the energy module, not here.
+    pub fn activation_energy_pj(&self, e: &EnergyParams) -> f64 {
+        (self.activates + 2 * self.aaps + self.row_writes) as f64 * e.e_act_pj
+    }
+
+    pub fn total_mocs(&self) -> u64 {
+        self.aaps
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        self.activates += other.activates;
+        self.precharges += other.precharges;
+        self.aaps += other.aaps;
+        self.row_writes += other.row_writes;
+        self.momcap_charges += other.momcap_charges;
+        self.a_to_bs += other.a_to_bs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_tallies() {
+        let mut c = CommandCounter::new();
+        c.record(DramCommand::Aap);
+        c.record(DramCommand::Aap);
+        c.record(DramCommand::AToB);
+        assert_eq!(c.aaps, 2);
+        assert_eq!(c.a_to_bs, 1);
+        assert_eq!(c.total_mocs(), 2);
+    }
+
+    #[test]
+    fn multiply_is_two_mocs_34ns() {
+        // A stochastic multiply = 2 AAPs (copy operands into comp rows).
+        let mut c = CommandCounter::new();
+        c.record(DramCommand::Aap);
+        c.record(DramCommand::Aap);
+        let t = TimingParams::default();
+        assert_eq!(c.serial_latency_ns(&t), 34.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CommandCounter::new();
+        a.record(DramCommand::Activate);
+        let mut b = CommandCounter::new();
+        b.record(DramCommand::Activate);
+        b.record(DramCommand::MomcapCharge);
+        a.merge(&b);
+        assert_eq!(a.activates, 2);
+        assert_eq!(a.momcap_charges, 1);
+    }
+
+    #[test]
+    fn energy_counts_two_acts_per_aap() {
+        let mut c = CommandCounter::new();
+        c.record(DramCommand::Aap);
+        let e = EnergyParams::default();
+        assert!((c.activation_energy_pj(&e) - 2.0 * 909.0).abs() < 1e-9);
+    }
+}

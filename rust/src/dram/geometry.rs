@@ -1,0 +1,72 @@
+//! Hierarchical addressing: stack / channel / bank / subarray / tile.
+
+/// Flat bank address within the module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BankAddr {
+    pub stack: u32,
+    pub channel: u32,
+    pub bank: u32,
+}
+
+impl BankAddr {
+    /// Flatten to a linear index given the module geometry.
+    pub fn linear(&self, channels_per_stack: u32, banks_per_channel: u32) -> u64 {
+        (self.stack as u64 * channels_per_stack as u64 + self.channel as u64)
+            * banks_per_channel as u64
+            + self.bank as u64
+    }
+
+    /// Inverse of [`linear`].
+    pub fn from_linear(idx: u64, channels_per_stack: u32, banks_per_channel: u32) -> Self {
+        let bank = (idx % banks_per_channel as u64) as u32;
+        let chan_flat = idx / banks_per_channel as u64;
+        let channel = (chan_flat % channels_per_stack as u64) as u32;
+        let stack = (chan_flat / channels_per_stack as u64) as u32;
+        Self { stack, channel, bank }
+    }
+}
+
+/// Subarray within a bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SubarrayAddr {
+    pub bank: BankAddr,
+    pub subarray: u32,
+}
+
+impl SubarrayAddr {
+    /// Open-bit-line partner: subarrays pair (2i, 2i+1); while one is
+    /// operational the other is idle and lends its MOMCAPs (Fig. 4).
+    pub fn partner(&self) -> Self {
+        Self { bank: self.bank, subarray: self.subarray ^ 1 }
+    }
+}
+
+/// Tile within a subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileAddr {
+    pub subarray: SubarrayAddr,
+    pub tile: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_roundtrip() {
+        for idx in 0..(2 * 8 * 4) {
+            let a = BankAddr::from_linear(idx, 8, 4);
+            assert_eq!(a.linear(8, 4), idx);
+        }
+    }
+
+    #[test]
+    fn partner_is_involution() {
+        let s = SubarrayAddr {
+            bank: BankAddr { stack: 0, channel: 1, bank: 2 },
+            subarray: 6,
+        };
+        assert_eq!(s.partner().subarray, 7);
+        assert_eq!(s.partner().partner(), s);
+    }
+}

@@ -1,0 +1,227 @@
+//! The tile-level MAC engine: the full ARTEMIS inner loop, bit-exactly.
+//!
+//! Stitches together the pieces the hardware uses for one dot-product
+//! window (Fig. 5(a)):
+//!
+//! 1. operands land in tile rows as encoded streams (B_to_TCU at the NSC:
+//!    first operand correlation-encoded, second TCU),
+//! 2. per element: 2-MOC in-array multiply, AND popcount dumped onto the
+//!    MOMCAP via the S_to_A circuit (1 ns K1 toggle),
+//! 3. the sign-split rule: positives accumulate first, then negatives,
+//!    each on its own pass (Section III.C.1), because every tile row
+//!    shares one sign bit,
+//! 4. A_to_B conversion when the 20-accumulation MOMCAP window fills,
+//!    alternating between the tile's own MOMCAP and the idle
+//!    open-bit-line partner's (40-MAC tile window),
+//! 5. partial sums latched for the NSC reduction.
+//!
+//! The result must equal `sum_k trunc(|a_k|*|b_k|/128) * sign_k` — the
+//! same arithmetic the python kernels implement — which the cross-layer
+//! tests enforce end to end.
+
+use super::commands::{CommandCounter, DramCommand};
+use super::tile::Tile;
+use crate::analog::{a_to_b, AtoBConfig, MomCap};
+use crate::config::MomcapParams;
+use crate::sc::{correlation_encode, tcu_encode, SignedCode};
+
+/// Result of one windowed dot product on a tile lane.
+#[derive(Debug, Clone)]
+pub struct TileMacResult {
+    /// The signed partial sum (positive pass minus negative pass).
+    pub value: i64,
+    /// Commands issued (for latency/energy accounting).
+    pub commands: CommandCounter,
+    /// A_to_B conversions performed.
+    pub conversions: u32,
+}
+
+/// Bit-exact tile MAC engine over one lane.
+pub struct TileMacEngine {
+    tile: Tile,
+    caps: [MomCap; 2],
+    momcap_window: u32,
+    atob: AtoBConfig,
+}
+
+impl TileMacEngine {
+    pub fn new(params: &MomcapParams) -> Self {
+        Self {
+            tile: Tile::new(),
+            caps: [
+                MomCap::new(params.capacitance_pf),
+                MomCap::new(params.capacitance_pf),
+            ],
+            momcap_window: params.max_accumulations,
+            atob: AtoBConfig { offset_noise: 0.0, ..Default::default() },
+        }
+    }
+
+    /// Compute `sum_k sc(a_k * b_k)` for signed 8-bit codes, following
+    /// the hardware schedule exactly.
+    pub fn dot(&mut self, a: &[SignedCode], b: &[SignedCode]) -> TileMacResult {
+        assert_eq!(a.len(), b.len());
+        let mut cmds = CommandCounter::new();
+        let mut conversions = 0u32;
+
+        // Sign-split passes: (+,+) and (-,-) products are positive;
+        // (+,-) and (-,+) are negative.  Hardware runs a positive pass
+        // then a negative pass, subtracting at the NSC.
+        let mut pass = |want_negative: bool,
+                        cmds: &mut CommandCounter,
+                        conversions: &mut u32|
+         -> i64 {
+            let mut sum = 0i64;
+            let mut in_window = 0u32;
+            let mut cap_idx = 0usize;
+            for (&ca, &cb) in a.iter().zip(b) {
+                if (ca.negative != cb.negative) != want_negative {
+                    continue;
+                }
+                if ca.magnitude == 0 || cb.magnitude == 0 {
+                    continue; // zero rows are skipped by the scheduler
+                }
+                // B_to_TCU writes into operand rows (restore phase).
+                self.tile.write_lane(10, 0, correlation_encode(ca.magnitude), ca.negative, cmds);
+                self.tile.write_lane(11, 0, tcu_encode(cb.magnitude), cb.negative, cmds);
+                // 2-MOC in-array multiply.
+                let and = self.tile.sc_multiply_lane(10, 11, 0, cmds);
+                // K1 toggle: dump popcount as charge.
+                cmds.record(DramCommand::MomcapCharge);
+                self.caps[cap_idx].accumulate(and.popcount());
+                in_window += 1;
+                // MOMCAP window full: switch to the partner's cap, or
+                // convert both when the 2-cap tile window is exhausted.
+                if in_window == self.momcap_window {
+                    if cap_idx == 0 {
+                        cap_idx = 1;
+                        in_window = 0;
+                    } else {
+                        sum += self.drain(cmds, conversions);
+                        cap_idx = 0;
+                        in_window = 0;
+                    }
+                }
+            }
+            sum += self.drain(cmds, conversions);
+            sum
+        };
+
+        let pos = pass(false, &mut cmds, &mut conversions);
+        let neg = pass(true, &mut cmds, &mut conversions);
+        TileMacResult { value: pos - neg, commands: cmds, conversions }
+    }
+
+    /// Convert and reset both MOMCAPs, returning the drained units.
+    fn drain(&mut self, cmds: &mut CommandCounter, conversions: &mut u32) -> i64 {
+        let mut total = 0i64;
+        for cap in &mut self.caps {
+            if cap.steps() > 0 {
+                cmds.record(DramCommand::AToB);
+                *conversions += 1;
+                total += a_to_b(cap, &self.atob, None) as i64;
+                cap.reset();
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    /// The arithmetic the python kernels implement.
+    fn reference_dot(a: &[SignedCode], b: &[SignedCode]) -> i64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let m = (x.magnitude as i64 * y.magnitude as i64) / 128;
+                if x.negative != y.negative {
+                    -m
+                } else {
+                    m
+                }
+            })
+            .sum()
+    }
+
+    fn random_codes(n: usize, seed: u64) -> Vec<SignedCode> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| SignedCode::from_i32(rng.code())).collect()
+    }
+
+    #[test]
+    fn dot_matches_reference_small() {
+        let params = MomcapParams::default();
+        for seed in 0..5 {
+            let a = random_codes(16, seed);
+            let b = random_codes(16, seed + 100);
+            let mut eng = TileMacEngine::new(&params);
+            let got = eng.dot(&a, &b);
+            assert_eq!(got.value, reference_dot(&a, &b), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_across_window_boundaries() {
+        // Lengths that straddle the 20/40 MOMCAP windows.
+        let params = MomcapParams::default();
+        for n in [1usize, 19, 20, 21, 39, 40, 41, 80, 100, 200] {
+            let a = random_codes(n, n as u64);
+            let b = random_codes(n, n as u64 + 7);
+            let mut eng = TileMacEngine::new(&params);
+            let got = eng.dot(&a, &b);
+            assert_eq!(got.value, reference_dot(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn conversions_respect_window() {
+        let params = MomcapParams::default();
+        // 80 all-positive products = two full 40-MAC tile windows = 4
+        // MOMCAP conversions (2 caps x 2 windows).
+        let a: Vec<_> = (0..80).map(|_| SignedCode::from_i32(100)).collect();
+        let b = a.clone();
+        let mut eng = TileMacEngine::new(&params);
+        let got = eng.dot(&a, &b);
+        assert_eq!(got.conversions, 4);
+        assert_eq!(got.value, 80 * (100 * 100 / 128));
+    }
+
+    #[test]
+    fn mocs_are_two_per_nonzero_product() {
+        let params = MomcapParams::default();
+        let a = random_codes(32, 3);
+        let b = random_codes(32, 4);
+        let nonzero = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.magnitude != 0 && y.magnitude != 0)
+            .count() as u64;
+        let mut eng = TileMacEngine::new(&params);
+        let got = eng.dot(&a, &b);
+        assert_eq!(got.commands.aaps, 2 * nonzero);
+        assert_eq!(got.commands.momcap_charges, nonzero);
+    }
+
+    #[test]
+    fn all_negative_products() {
+        let params = MomcapParams::default();
+        let a: Vec<_> = (0..10).map(|_| SignedCode::from_i32(-90)).collect();
+        let b: Vec<_> = (0..10).map(|_| SignedCode::from_i32(90)).collect();
+        let mut eng = TileMacEngine::new(&params);
+        let got = eng.dot(&a, &b);
+        assert_eq!(got.value, -10 * (90 * 90 / 128));
+    }
+
+    #[test]
+    fn empty_dot_is_zero() {
+        let params = MomcapParams::default();
+        let mut eng = TileMacEngine::new(&params);
+        let got = eng.dot(&[], &[]);
+        assert_eq!(got.value, 0);
+        assert_eq!(got.conversions, 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Bit-level DRAM hierarchy model (Section II.C / III, Fig. 3).
+//!
+//! This is the *functional* DRAM substrate: tiles with real rows of bits,
+//! ROC-style computational rows (diode AND), AAP/RowClone primitives with
+//! MOC accounting, open-bit-line subarray pairing, and the tile-level MAC
+//! engine that stitches the SC streams and the MOMCAP together exactly
+//! the way the hardware does.  The performance simulator (`sim`) uses the
+//! *costs* derived here; the functional correctness tests use the *values*.
+
+mod bank;
+mod commands;
+mod geometry;
+mod mac_engine;
+mod subarray;
+mod tile;
+
+pub use bank::Bank;
+pub use commands::{CommandCounter, DramCommand};
+pub use geometry::{BankAddr, SubarrayAddr, TileAddr};
+pub use mac_engine::{TileMacEngine, TileMacResult};
+pub use subarray::Subarray;
+pub use tile::{Tile, COMP_ROW_0, COMP_ROW_1, ROW_BITS, TILE_ROWS};

@@ -1,0 +1,105 @@
+//! Subarray model: 32 tiles sharing a row decoder and an NSC unit, with
+//! open-bit-line pairing at the bank level (Section III.A.1).
+
+use super::mac_engine::{TileMacEngine, TileMacResult};
+use crate::config::{HbmConfig, MomcapParams};
+use crate::sc::SignedCode;
+
+/// One subarray: a vector-MAC unit of `tiles_per_subarray` tiles, each
+/// contributing two lanes.  The functional model exposes the per-subarray
+/// dot-product sharding used by Fig. 5(a): an input vector is chopped
+/// into per-tile windows and reduced by the NSC chain.
+pub struct Subarray {
+    engines: Vec<TileMacEngine>,
+    tile_window: usize,
+}
+
+impl Subarray {
+    pub fn new(hbm: &HbmConfig, momcap: &MomcapParams) -> Self {
+        let engines = (0..hbm.tiles_per_subarray)
+            .map(|_| TileMacEngine::new(momcap))
+            .collect();
+        Self { engines, tile_window: momcap.tile_window() as usize }
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Evaluate a full dot product by sharding the reduction dimension
+    /// across tiles in `tile_window`-sized chunks, exactly as the
+    /// dataflow example in Fig. 5(a) assigns sub-vectors to tiles.
+    ///
+    /// Returns the per-tile partial results (for the NSC reduction model)
+    /// and the final reduced value.
+    pub fn dot(&mut self, a: &[SignedCode], b: &[SignedCode]) -> (Vec<TileMacResult>, i64) {
+        assert_eq!(a.len(), b.len());
+        let mut partials = Vec::new();
+        let mut chunk_idx = 0usize;
+        for (ca, cb) in a.chunks(self.tile_window).zip(b.chunks(self.tile_window)) {
+            let n_engines = self.engines.len();
+            let engine = &mut self.engines[chunk_idx % n_engines];
+            partials.push(engine.dot(ca, cb));
+            chunk_idx += 1;
+        }
+        let total = partials.iter().map(|p| p.value).sum();
+        (partials, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn reference_dot(a: &[SignedCode], b: &[SignedCode]) -> i64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let m = (x.magnitude as i64 * y.magnitude as i64) / 128;
+                if x.negative != y.negative {
+                    -m
+                } else {
+                    m
+                }
+            })
+            .sum()
+    }
+
+    fn random_codes(n: usize, seed: u64) -> Vec<SignedCode> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| SignedCode::from_i32(rng.code())).collect()
+    }
+
+    #[test]
+    fn sharded_dot_matches_reference() {
+        let hbm = HbmConfig::default();
+        let momcap = MomcapParams::default();
+        let mut sa = Subarray::new(&hbm, &momcap);
+        // 80-wide vector => 2 tile windows, like the Fig. 5(a) example.
+        let a = random_codes(80, 1);
+        let b = random_codes(80, 2);
+        let (partials, total) = sa.dot(&a, &b);
+        assert_eq!(partials.len(), 2);
+        assert_eq!(total, reference_dot(&a, &b));
+    }
+
+    #[test]
+    fn long_reduction_uses_many_tiles() {
+        let hbm = HbmConfig::default();
+        let momcap = MomcapParams::default();
+        let mut sa = Subarray::new(&hbm, &momcap);
+        let n = 40 * 32 + 13; // wraps past all 32 tiles
+        let a = random_codes(n, 3);
+        let b = random_codes(n, 4);
+        let (partials, total) = sa.dot(&a, &b);
+        assert_eq!(partials.len(), n.div_ceil(40));
+        assert_eq!(total, reference_dot(&a, &b));
+    }
+
+    #[test]
+    fn subarray_has_32_tiles() {
+        let sa = Subarray::new(&HbmConfig::default(), &MomcapParams::default());
+        assert_eq!(sa.tiles(), 32);
+    }
+}

@@ -1,0 +1,188 @@
+//! One DRAM tile: 256 rows x 256 bit-lines, the first two rows reserved
+//! as ROC-style computational rows with inter-cell diodes (Fig. 3(d)).
+//!
+//! The tile is split into two 128-bit halves (open bit-line: half the
+//! columns sense at the bottom S/A set, half at the top), so one tile
+//! holds two independent 128-bit stream lanes — "each tile can process
+//! up to two multiply operations at a time".
+
+use super::commands::{CommandCounter, DramCommand};
+use crate::sc::BitStream;
+
+/// Row indices of the two reserved computational rows.
+pub const COMP_ROW_0: usize = 0;
+pub const COMP_ROW_1: usize = 1;
+
+/// Bits per tile row (Table I).
+pub const ROW_BITS: usize = 256;
+
+/// Rows per tile (Table I).
+pub const TILE_ROWS: usize = 256;
+
+/// One 256-bit tile row stored as two 128-bit lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TileRow {
+    pub lanes: [BitStream; 2],
+}
+
+/// A bit-level DRAM tile.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    rows: Vec<TileRow>,
+    /// Per-row sign bits (the added sign bit-line column, one per lane).
+    sign_bits: Vec<[bool; 2]>,
+    /// The row of latches used for pipelined intra-bank movement.
+    pub latch: TileRow,
+}
+
+impl Tile {
+    pub fn new() -> Self {
+        Self {
+            rows: vec![TileRow::default(); TILE_ROWS],
+            sign_bits: vec![[false; 2]; TILE_ROWS],
+            latch: TileRow::default(),
+        }
+    }
+
+    /// Write a stream into `(row, lane)` through the S/As (restore phase).
+    pub fn write_lane(
+        &mut self,
+        row: usize,
+        lane: usize,
+        data: BitStream,
+        negative: bool,
+        cmds: &mut CommandCounter,
+    ) {
+        assert!(row < TILE_ROWS && lane < 2);
+        self.rows[row].lanes[lane] = data;
+        self.sign_bits[row][lane] = negative;
+        cmds.record(DramCommand::WriteRow);
+    }
+
+    /// Read a lane (activate + sense; restore is implicit).
+    pub fn read_lane(
+        &mut self,
+        row: usize,
+        lane: usize,
+        cmds: &mut CommandCounter,
+    ) -> (BitStream, bool) {
+        assert!(row < TILE_ROWS && lane < 2);
+        cmds.record(DramCommand::Activate);
+        cmds.record(DramCommand::Precharge);
+        (self.rows[row].lanes[lane], self.sign_bits[row][lane])
+    }
+
+    /// RowClone (AAP): copy `src` row into `dst` row — one MOC.
+    pub fn rowclone(&mut self, src: usize, dst: usize, cmds: &mut CommandCounter) {
+        assert!(src < TILE_ROWS && dst < TILE_ROWS);
+        self.rows[dst] = self.rows[src];
+        self.sign_bits[dst] = self.sign_bits[src];
+        cmds.record(DramCommand::Aap);
+    }
+
+    /// The in-array stochastic multiply on one lane (Section III.A.1):
+    /// two AAPs copy the operand streams into the computational rows; the
+    /// diodes between the row pair compute the AND, left in comp row 0.
+    ///
+    /// Returns the AND stream (whose popcount is the product).
+    pub fn sc_multiply_lane(
+        &mut self,
+        op_a_row: usize,
+        op_b_row: usize,
+        lane: usize,
+        cmds: &mut CommandCounter,
+    ) -> BitStream {
+        // MOC 1: operand A -> computational row 0.
+        self.rowclone(op_a_row, COMP_ROW_0, cmds);
+        // MOC 2: operand B -> computational row 1.
+        self.rowclone(op_b_row, COMP_ROW_1, cmds);
+        // Diode AND settles combinationally into comp row 0.
+        let a = self.rows[COMP_ROW_0].lanes[lane];
+        let b = self.rows[COMP_ROW_1].lanes[lane];
+        let result = a.and(&b);
+        self.rows[COMP_ROW_0].lanes[lane] = result;
+        result
+    }
+
+    /// Lane sign of a stored row.
+    pub fn sign(&self, row: usize, lane: usize) -> bool {
+        self.sign_bits[row][lane]
+    }
+
+    /// Direct (test-only) inspection of a stored lane.
+    pub fn peek(&self, row: usize, lane: usize) -> BitStream {
+        self.rows[row].lanes[lane]
+    }
+}
+
+impl Default for Tile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::{correlation_encode, tcu_encode};
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut t = Tile::new();
+        let mut c = CommandCounter::new();
+        let s = tcu_encode(77);
+        t.write_lane(10, 0, s, true, &mut c);
+        let (got, neg) = t.read_lane(10, 0, &mut c);
+        assert_eq!(got, s);
+        assert!(neg);
+        assert_eq!(c.row_writes, 1);
+        assert_eq!(c.activates, 1);
+    }
+
+    #[test]
+    fn rowclone_copies_and_costs_one_moc() {
+        let mut t = Tile::new();
+        let mut c = CommandCounter::new();
+        t.write_lane(5, 1, tcu_encode(9), false, &mut c);
+        t.rowclone(5, 30, &mut c);
+        assert_eq!(t.peek(30, 1), tcu_encode(9));
+        assert_eq!(c.aaps, 1);
+    }
+
+    #[test]
+    fn in_array_multiply_matches_sc_module() {
+        // The tile-level multiply must equal the abstract SC multiply for
+        // every operand pair we try.
+        let mut t = Tile::new();
+        let mut c = CommandCounter::new();
+        for (a, b) in [(0u32, 0u32), (1, 127), (64, 64), (100, 100), (128, 77)] {
+            t.write_lane(10, 0, correlation_encode(a), false, &mut c);
+            t.write_lane(11, 0, tcu_encode(b), false, &mut c);
+            let and = t.sc_multiply_lane(10, 11, 0, &mut c);
+            assert_eq!(and.popcount(), crate::sc::sc_multiply(a, b), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn multiply_costs_exactly_two_mocs() {
+        let mut t = Tile::new();
+        let mut c = CommandCounter::new();
+        t.write_lane(10, 0, correlation_encode(50), false, &mut c);
+        t.write_lane(11, 0, tcu_encode(60), false, &mut c);
+        let before = c.aaps;
+        t.sc_multiply_lane(10, 11, 0, &mut c);
+        assert_eq!(c.aaps - before, 2);
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let mut t = Tile::new();
+        let mut c = CommandCounter::new();
+        t.write_lane(20, 0, tcu_encode(11), false, &mut c);
+        t.write_lane(20, 1, tcu_encode(99), true, &mut c);
+        assert_eq!(t.peek(20, 0), tcu_encode(11));
+        assert_eq!(t.peek(20, 1), tcu_encode(99));
+        assert!(!t.sign(20, 0));
+        assert!(t.sign(20, 1));
+    }
+}

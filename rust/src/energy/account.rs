@@ -1,0 +1,166 @@
+//! The energy ledger every simulation run fills in.
+
+use crate::config::ArtemisConfig;
+use crate::dram::CommandCounter;
+
+/// Itemized energy breakdown, pJ.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    /// DRAM row activations (MAC passes + copies).
+    pub activation_pj: f64,
+    /// Intra-bank datapath (row buffer -> GSA).
+    pub pre_gsa_pj: f64,
+    /// GSA -> DRAM I/O (inter-bank movement on the shared bus).
+    pub post_gsa_pj: f64,
+    /// Off-module I/O (inputs in, results out).
+    pub io_pj: f64,
+    /// NSC circuit energy (adders, LUTs, comparators, B_to_TCU, latches).
+    pub nsc_pj: f64,
+    /// S_to_B / A_to_B conversion circuit energy.
+    pub conversion_pj: f64,
+    /// MOMCAP charge/discharge energy.
+    pub momcap_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.activation_pj
+            + self.pre_gsa_pj
+            + self.post_gsa_pj
+            + self.io_pj
+            + self.nsc_pj
+            + self.conversion_pj
+            + self.momcap_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+
+    pub fn add(&mut self, other: &Self) {
+        self.activation_pj += other.activation_pj;
+        self.pre_gsa_pj += other.pre_gsa_pj;
+        self.post_gsa_pj += other.post_gsa_pj;
+        self.io_pj += other.io_pj;
+        self.nsc_pj += other.nsc_pj;
+        self.conversion_pj += other.conversion_pj;
+        self.momcap_pj += other.momcap_pj;
+    }
+}
+
+/// Running energy account bound to a configuration.
+#[derive(Debug, Clone)]
+pub struct EnergyAccount {
+    cfg: ArtemisConfig,
+    pub breakdown: EnergyBreakdown,
+}
+
+impl EnergyAccount {
+    pub fn new(cfg: &ArtemisConfig) -> Self {
+        Self { cfg: cfg.clone(), breakdown: EnergyBreakdown::default() }
+    }
+
+    /// Charge a batch of DRAM commands.
+    pub fn charge_commands(&mut self, cmds: &CommandCounter) {
+        let e = &self.cfg.hbm.energy;
+        self.breakdown.activation_pj += cmds.activation_energy_pj(e);
+        // Each MOMCAP charge step moves one row of bit-line charge:
+        // CV^2-scale, tiny; modeled via the latch circuit power class.
+        self.breakdown.momcap_pj +=
+            cmds.momcap_charges as f64 * 0.05; // ~0.05 pJ per K1 toggle
+        self.breakdown.conversion_pj += cmds.a_to_bs as f64
+            * self.cfg.circuits.s_to_b.energy_pj();
+    }
+
+    /// Charge intra-bank data movement of `bits` (row buffer -> GSA).
+    pub fn charge_pre_gsa(&mut self, bits: u64) {
+        self.breakdown.pre_gsa_pj +=
+            bits as f64 * self.cfg.hbm.energy.e_pre_gsa_pj_per_bit;
+    }
+
+    /// Charge inter-bank movement of `bits` (GSA -> I/O path).
+    pub fn charge_post_gsa(&mut self, bits: u64) {
+        self.breakdown.post_gsa_pj +=
+            bits as f64 * self.cfg.hbm.energy.e_post_gsa_pj_per_bit;
+    }
+
+    /// Charge off-module I/O of `bits`.
+    pub fn charge_io(&mut self, bits: u64) {
+        self.breakdown.io_pj += bits as f64 * self.cfg.hbm.energy.e_io_pj_per_bit;
+    }
+
+    /// Charge `n` NSC operations of one circuit class.
+    pub fn charge_nsc_ops(&mut self, circuit_energy_pj: f64, n: u64) {
+        self.breakdown.nsc_pj += circuit_energy_pj * n as f64;
+    }
+
+    /// Average power over a run of `total_ns`, W.
+    pub fn average_power_w(&self, total_ns: f64) -> f64 {
+        if total_ns <= 0.0 {
+            return 0.0;
+        }
+        self.breakdown.total_pj() * 1e-12 / (total_ns * 1e-9)
+    }
+
+    /// True if the run respected the module budget.
+    pub fn within_budget(&self, total_ns: f64) -> bool {
+        self.average_power_w(total_ns) <= self.cfg.power_budget_w * 1.001
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramCommand;
+
+    #[test]
+    fn totals_add_up() {
+        let mut b = EnergyBreakdown::default();
+        b.activation_pj = 1.0;
+        b.io_pj = 2.0;
+        b.nsc_pj = 3.0;
+        assert_eq!(b.total_pj(), 6.0);
+    }
+
+    #[test]
+    fn commands_charge_activation() {
+        let cfg = ArtemisConfig::default();
+        let mut acc = EnergyAccount::new(&cfg);
+        let mut cmds = CommandCounter::new();
+        cmds.record(DramCommand::Aap);
+        acc.charge_commands(&cmds);
+        assert!((acc.breakdown.activation_pj - 2.0 * 909.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn datapath_charges_per_bit() {
+        let cfg = ArtemisConfig::default();
+        let mut acc = EnergyAccount::new(&cfg);
+        acc.charge_pre_gsa(1000);
+        acc.charge_post_gsa(1000);
+        acc.charge_io(1000);
+        assert!((acc.breakdown.pre_gsa_pj - 1510.0).abs() < 1e-9);
+        assert!((acc.breakdown.post_gsa_pj - 1170.0).abs() < 1e-9);
+        assert!((acc.breakdown.io_pj - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_power() {
+        let cfg = ArtemisConfig::default();
+        let mut acc = EnergyAccount::new(&cfg);
+        acc.charge_io(1_000_000); // 0.8 uJ
+        // over 1 ms -> 0.8 mW
+        let p = acc.average_power_w(1e6);
+        assert!((p - 8e-4).abs() < 1e-9, "p={p}");
+        assert!(acc.within_budget(1e6));
+    }
+
+    #[test]
+    fn breakdown_merge() {
+        let mut a = EnergyBreakdown { activation_pj: 1.0, ..Default::default() };
+        let b = EnergyBreakdown { activation_pj: 2.0, io_pj: 5.0, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.activation_pj, 3.0);
+        assert_eq!(a.io_pj, 5.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Energy and power accounting (Table I energy rows + Table III circuit
+//! energies) with the 60 W module power budget (Section IV preamble).
+
+mod account;
+
+pub use account::{EnergyAccount, EnergyBreakdown};
+
+use crate::config::ArtemisConfig;
+
+/// Derived power-budget throttle.
+///
+/// Activating every subarray of every bank concurrently would blow far
+/// past the 60 W HBM budget, so (like real DRAM's tFAW) the scheduler
+/// bounds concurrent activation.  We derive the sustainable MAC-step
+/// concurrency from the budget: the fraction of nominal peak concurrency
+/// the module can sustain thermally.  See DESIGN.md §Modeling-decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerThrottle {
+    /// Peak concurrent MAC-step power if everything fired at once, W.
+    pub peak_w: f64,
+    /// Fraction of peak concurrency that fits the budget (<= 1).
+    pub duty: f64,
+}
+
+/// Energy drawn by one 64-MAC subarray step: 2 AAPs (4 activations) plus
+/// the MOMCAP charge transfer (circuit-level, small).
+pub fn subarray_step_energy_pj(cfg: &ArtemisConfig) -> f64 {
+    let e = &cfg.hbm.energy;
+    // 2 MOCs x 2 activations each.
+    4.0 * e.e_act_pj
+}
+
+/// Compute the power throttle for a configuration.  The dynamic budget
+/// is what remains of the module budget after static power.
+pub fn power_throttle(cfg: &ArtemisConfig) -> PowerThrottle {
+    let step_e_pj = subarray_step_energy_pj(cfg);
+    let step_ns = cfg.hbm.timing.mac_step_ns;
+    let concurrent_subarrays =
+        (cfg.hbm.banks_total() * cfg.hbm.active_subarrays_per_bank()) as f64;
+    let peak_w = concurrent_subarrays * step_e_pj * 1e-12 / (step_ns * 1e-9);
+    let dynamic_budget = (cfg.power_budget_w - cfg.static_power_w).max(1.0);
+    let duty = (dynamic_budget / peak_w).min(1.0);
+    PowerThrottle { peak_w, duty }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throttle_binds_at_default_config() {
+        // With Table I energies the unthrottled peak is way above 60 W —
+        // the budget must bind.
+        let t = power_throttle(&ArtemisConfig::default());
+        assert!(t.peak_w > 60.0);
+        assert!(t.duty < 1.0);
+        assert!(t.duty > 0.0);
+    }
+
+    #[test]
+    fn bigger_budget_raises_duty() {
+        let mut cfg = ArtemisConfig::default();
+        let d1 = power_throttle(&cfg).duty;
+        cfg.power_budget_w *= 2.0;
+        let d2 = power_throttle(&cfg).duty;
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn step_energy_is_4_activations() {
+        let cfg = ArtemisConfig::default();
+        assert!((subarray_step_energy_pj(&cfg) - 4.0 * 909.0).abs() < 1e-9);
+    }
+}

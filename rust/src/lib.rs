@@ -1,0 +1,45 @@
+//! # ARTEMIS — mixed analog-stochastic in-DRAM accelerator, full reproduction
+//!
+//! This crate is the Layer-3 system of the reproduction: a
+//! cycle-approximate simulator of the ARTEMIS architecture (Afifi,
+//! Thakkar, Pasricha, 2024) plus a serving-style coordinator that executes
+//! the *functional* transformer models through AOT-compiled XLA artifacts
+//! (PJRT CPU client) while the simulator accounts latency and energy.
+//!
+//! Module map (see `DESIGN.md` for the full inventory):
+//!
+//! * [`config`]    — Table I/II/III parameters, architecture + model zoo.
+//! * [`sc`]        — bit-exact stochastic-computing substrate (TCU streams,
+//!   deterministic multiply, LFSR baseline, calibration analysis).
+//! * [`analog`]    — MOMCAP charge model, S_to_A / A_to_U / U_to_B
+//!   conversion circuits (Fig. 7, Table V).
+//! * [`dram`]      — bit-level DRAM hierarchy: tiles, subarrays, banks,
+//!   MOC/AAP primitives, ROC diode AND rows, open-bit-line pairing.
+//! * [`nsc`]       — near-subarray compute units: adder/subtractor,
+//!   comparator, LUTs, log-sum-exp softmax, B_to_TCU.
+//! * [`timing`]    — MOC accounting and the pipeline roll-up model.
+//! * [`energy`]    — activation/datapath/IO energy + power-budget model.
+//! * [`dataflow`]  — token/layer sharding, ring+broadcast network,
+//!   intra-bank latch pipeline.
+//! * [`xfmr`]      — transformer workload graphs (Table II models).
+//! * [`sim`]       — the performance/energy simulator engine.
+//! * [`baselines`] — DRISA/TransPIM/HAIMA/ReBERT/CPU/GPU/TPU/FPGA models.
+//! * [`runtime`]   — PJRT artifact loading & execution (`xla` crate).
+//! * [`coordinator`] — request router, batcher, co-simulation driver.
+//! * [`report`]    — table/figure emitters for the paper's evaluation.
+
+pub mod analog;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dram;
+pub mod energy;
+pub mod nsc;
+pub mod report;
+pub mod runtime;
+pub mod sc;
+pub mod sim;
+pub mod timing;
+pub mod util;
+pub mod xfmr;

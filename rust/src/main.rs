@@ -1,0 +1,237 @@
+//! ARTEMIS CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate every paper table/figure, run ad-hoc
+//! simulations, and drive the serving demo.  Arg parsing is hand-rolled
+//! (the offline build has no clap); `artemis help` lists everything.
+
+use anyhow::Result;
+use artemis::config::ArtemisConfig;
+use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
+use artemis::dataflow::{Dataflow, Pipelining};
+use artemis::report;
+use artemis::runtime::ArtifactRegistry;
+use artemis::sim::SimOptions;
+use artemis::util::XorShift64;
+
+const HELP: &str = "\
+artemis — mixed analog-stochastic in-DRAM accelerator (paper reproduction)
+
+USAGE: artemis <command> [options]
+
+Experiment commands (regenerate paper tables/figures):
+  fig2      component-wise time on traditional PIM (DRISA)
+  fig7      MOMCAP charge staircases across capacitances
+  fig8      dataflow/pipelining sensitivity (speedup + energy)
+  fig9      speedup vs CPU/GPU/TPU/FPGA/TransPIM/ReBERT/HAIMA
+  fig10     energy comparison (normalized to CPU)
+  fig11     power efficiency (GOPS/W)
+  fig12     scalability: sequence length x HBM stacks
+  tab3      per-subarray hardware overheads
+  tab4      accuracy FP32 vs Q8 vs Q8+SC (needs artifacts/)
+  tab5      per-component calibration accuracy (measured)
+  micro     headline micro numbers (34ns multiply, 64 MACs/48ns, ...)
+  all       run every experiment above, print everything
+
+Extension studies (beyond the paper's evaluation):
+  decode    autoregressive generation: prefill + per-token decode
+  noise     analog charge-noise sensitivity sweep
+  ablation  deterministic (TCU) vs conventional LFSR stochastic multiply
+  capacity  per-bank storage demand vs capacity, mapping rounds
+  csv       write every table/figure as CSV into --outdir (default results/)
+
+Other commands:
+  simulate --model <name> [--dataflow token|layer] [--no-pipeline]
+           [--stacks N] [--config file.json]
+           detailed simulation report for one model
+  serve    [--requests N] [--variant fp32|q8|q8sc]
+           batched serving demo through the PJRT artifacts
+  config   print the default configuration as JSON
+  help     this text
+
+Models: Transformer-base, BERT-base, ALBERT-base, ViT-base, OPT-350
+";
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn build_config(args: &[String]) -> Result<ArtemisConfig> {
+    let mut cfg = if let Some(path) = flag_value(args, "--config") {
+        ArtemisConfig::from_json(&std::fs::read_to_string(path)?)?
+    } else {
+        ArtemisConfig::default()
+    };
+    if let Some(stacks) = flag_value(args, "--stacks") {
+        let n: u64 = stacks.parse()?;
+        cfg = ArtemisConfig::with_stacks(n);
+    }
+    Ok(cfg)
+}
+
+fn run_serve(args: &[String]) -> Result<()> {
+    let n: usize = flag_value(args, "--requests")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let variant = flag_value(args, "--variant").unwrap_or_else(|| "q8sc".into());
+    let cfg = build_config(args)?;
+    let mut registry = ArtifactRegistry::open_default()?;
+    let mut coord = Coordinator::new(&mut registry, &cfg, &variant)?;
+
+    let seq = coord.seq_len();
+    let mut rng = XorShift64::new(7);
+    let requests: Vec<InferenceRequest> = (0..n as u64)
+        .map(|id| InferenceRequest {
+            id,
+            tokens: (0..seq).map(|_| rng.below(32) as f32).collect(),
+            enqueued_ns: coord.now_ns(),
+        })
+        .collect();
+
+    let (responses, stats) = coord.serve_all(requests)?;
+    println!(
+        "served {} requests in {} batches ({} padded rows)",
+        stats.requests, stats.batches, stats.padded_rows
+    );
+    println!(
+        "wall: total {:.2} ms, exec {:.2} ms, throughput {:.0} req/s",
+        stats.wall_total_ns as f64 * 1e-6,
+        stats.wall_exec_ns as f64 * 1e-6,
+        stats.wall_throughput_rps()
+    );
+    println!(
+        "simulated ARTEMIS: {:.3} ms total, {:.3} mJ, {:.0} req/s",
+        stats.sim_total_ns * 1e-6,
+        stats.sim_total_pj * 1e-9,
+        stats.sim_throughput_rps()
+    );
+    let mean_queue = responses.iter().map(|r| r.wall_queue_ns).sum::<u64>() as f64
+        / responses.len().max(1) as f64;
+    println!("mean wall queue delay: {:.2} ms", mean_queue * 1e-6);
+    Ok(())
+}
+
+fn run_tab4() -> Result<()> {
+    let mut registry = ArtifactRegistry::open_default()?;
+    let results = evaluate_variants(&mut registry, 64, 0x7AB4)?;
+    let mut t = report::TableBuilder::new(
+        "Table IV — accuracy by arithmetic variant (synthetic proxy task; the \
+         observable is the FP32->Q8->Q8+SC delta)",
+        &["variant", "accuracy", "samples", "delta vs fp32", "logit MAE vs fp32"],
+    );
+    let fp32 = results
+        .iter()
+        .find(|r| r.variant == "fp32")
+        .map(|r| r.accuracy)
+        .unwrap_or(0.0);
+    for r in &results {
+        t.row(vec![
+            r.variant.clone(),
+            format!("{:.4}", r.accuracy),
+            r.samples.to_string(),
+            format!("{:+.4}", r.accuracy - fp32),
+            format!("{:.4}", r.logit_mae_vs_fp32),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let cfg = build_config(&args)?;
+
+    match cmd {
+        "fig2" => report::fig2(&cfg).print(),
+        "fig7" => report::fig7().print(),
+        "fig8" => report::fig8(&cfg).print(),
+        "fig9" => report::fig9(&cfg).print(),
+        "fig10" => report::fig10(&cfg).print(),
+        "fig11" => report::fig11(&cfg).print(),
+        "fig12" => report::fig12().print(),
+        "tab3" => report::tab3(&cfg).print(),
+        "tab4" => run_tab4()?,
+        "tab5" => report::tab5(&cfg).print(),
+        "micro" => report::micro(&cfg).print(),
+        "decode" => report::decode_study(&cfg).print(),
+        "noise" => report::noise_study().print(),
+        "ablation" => report::ablation_deterministic_vs_lfsr().print(),
+        "capacity" => report::capacity_study().print(),
+        "csv" => {
+            let outdir = flag_value(&args, "--outdir").unwrap_or_else(|| "results".into());
+            std::fs::create_dir_all(&outdir)?;
+            let tables: Vec<(&str, report::TableBuilder)> = vec![
+                ("fig2", report::fig2(&cfg)),
+                ("tab3", report::tab3(&cfg)),
+                ("tab5", report::tab5(&cfg)),
+                ("fig7", report::fig7()),
+                ("fig8", report::fig8(&cfg)),
+                ("fig9", report::fig9(&cfg)),
+                ("fig10", report::fig10(&cfg)),
+                ("fig11", report::fig11(&cfg)),
+                ("fig12", report::fig12()),
+                ("micro", report::micro(&cfg)),
+                ("decode", report::decode_study(&cfg)),
+                ("noise", report::noise_study()),
+                ("ablation", report::ablation_deterministic_vs_lfsr()),
+                ("capacity", report::capacity_study()),
+            ];
+            for (name, t) in tables {
+                let path = format!("{outdir}/{name}.csv");
+                std::fs::write(&path, t.to_csv())?;
+                println!("wrote {path}");
+            }
+        }
+        "all" => {
+            report::micro(&cfg).print();
+            report::fig2(&cfg).print();
+            report::tab3(&cfg).print();
+            report::tab5(&cfg).print();
+            report::fig7().print();
+            report::fig8(&cfg).print();
+            report::fig9(&cfg).print();
+            report::fig10(&cfg).print();
+            report::fig11(&cfg).print();
+            report::fig12().print();
+            report::decode_study(&cfg).print();
+            report::noise_study().print();
+            report::ablation_deterministic_vs_lfsr().print();
+            report::capacity_study().print();
+            if let Err(e) = run_tab4() {
+                eprintln!("tab4 skipped (artifacts missing?): {e}");
+            }
+        }
+        "simulate" => {
+            let model = flag_value(&args, "--model").unwrap_or_else(|| "BERT-base".into());
+            let dataflow = match flag_value(&args, "--dataflow").as_deref() {
+                Some("layer") => Dataflow::Layer,
+                _ => Dataflow::Token,
+            };
+            let pipelining = if has_flag(&args, "--no-pipeline") {
+                Pipelining::Off
+            } else {
+                Pipelining::On
+            };
+            match report::model_report(&cfg, &model, SimOptions { dataflow, pipelining }) {
+                Some(t) => t.print(),
+                None => {
+                    eprintln!("unknown model '{model}' — see `artemis help`");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "serve" => run_serve(&args)?,
+        "config" => println!("{}", cfg.to_json()),
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            std::process::exit(1);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! NSC arithmetic primitives: the 2-input adder/subtractor (widened into
+//! an accumulator register, as the reduction chain requires) and the
+//! 8-bit comparator with its local y_max register (Fig. 3(c)).
+
+/// The NSC partial-sum accumulator.  The datapath adder is 2-input 8-bit
+/// (Table III), operating on A_to_B outputs; successive additions spill
+/// into a wider local register (the same trick the paper's reduction
+/// chain needs to sum thousands of 8-bit partials without overflow —
+/// modeled as a 32-bit register, documented in DESIGN.md).
+#[derive(Debug, Clone, Default)]
+pub struct WideAccumulator {
+    value: i64,
+    adds: u64,
+}
+
+impl WideAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one partial (add or, for the negative pass, subtract).
+    pub fn add(&mut self, v: i64) {
+        self.value += v;
+        self.adds += 1;
+    }
+
+    pub fn sub(&mut self, v: i64) {
+        self.value -= v;
+        self.adds += 1;
+    }
+
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    /// Number of adder operations performed (for timing/energy roll-up).
+    pub fn ops(&self) -> u64 {
+        self.adds
+    }
+
+    pub fn reset(&mut self) {
+        self.value = 0;
+        self.adds = 0;
+    }
+}
+
+/// The pipelined y_max comparator (softmax step 1): values stream in as
+/// the QK^T MatMul produces them; the register keeps the running max.
+#[derive(Debug, Clone)]
+pub struct Comparator {
+    y_max: Option<f64>,
+    compares: u64,
+}
+
+impl Comparator {
+    pub fn new() -> Self {
+        Self { y_max: None, compares: 0 }
+    }
+
+    pub fn observe(&mut self, y: f64) {
+        self.compares += 1;
+        self.y_max = Some(match self.y_max {
+            Some(m) => m.max(y),
+            None => y,
+        });
+    }
+
+    pub fn y_max(&self) -> Option<f64> {
+        self.y_max
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.compares
+    }
+
+    pub fn reset(&mut self) {
+        self.y_max = None;
+        self.compares = 0;
+    }
+}
+
+impl Default for Comparator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_adds_and_subs() {
+        let mut acc = WideAccumulator::new();
+        acc.add(100);
+        acc.add(28);
+        acc.sub(58);
+        assert_eq!(acc.value(), 70);
+        assert_eq!(acc.ops(), 3);
+    }
+
+    #[test]
+    fn accumulator_handles_many_partials_without_overflow() {
+        let mut acc = WideAccumulator::new();
+        for _ in 0..1_000_000 {
+            acc.add(2560); // max A_to_B output
+        }
+        assert_eq!(acc.value(), 2_560_000_000);
+    }
+
+    #[test]
+    fn comparator_tracks_running_max() {
+        let mut c = Comparator::new();
+        assert_eq!(c.y_max(), None);
+        for y in [1.0, -3.0, 7.5, 2.0] {
+            c.observe(y);
+        }
+        assert_eq!(c.y_max(), Some(7.5));
+        assert_eq!(c.ops(), 4);
+    }
+
+    #[test]
+    fn comparator_reset() {
+        let mut c = Comparator::new();
+        c.observe(4.0);
+        c.reset();
+        assert_eq!(c.y_max(), None);
+        assert_eq!(c.ops(), 0);
+    }
+}

@@ -1,0 +1,76 @@
+//! The NSC B_to_TCU conversion block (Section III.C.3, Fig. 3(c)):
+//! a B_to_TCU decoder plus a bit-position correlation encoder.  Depending
+//! on operand order, the block outputs the decoder result (2nd operand)
+//! or the correlation-encoded result (1st operand).
+
+use crate::sc::{correlation_encode, tcu_encode, BitStream, SignedCode};
+
+/// Which multiply operand the conversion is preparing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandOrder {
+    /// First operand: decoder + bit-position correlation encoder.
+    First,
+    /// Second operand: decoder only (plain TCU).
+    Second,
+}
+
+/// The B_to_TCU block with an op counter for timing/energy roll-up.
+#[derive(Debug, Clone, Default)]
+pub struct BToTcu {
+    conversions: u64,
+}
+
+impl BToTcu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Convert a signed 8-bit code to its stream for the given operand
+    /// position.  The sign travels on the sign bit-line, not the stream.
+    pub fn convert(&mut self, code: SignedCode, order: OperandOrder) -> (BitStream, bool) {
+        self.conversions += 1;
+        let stream = match order {
+            OperandOrder::First => correlation_encode(code.magnitude),
+            OperandOrder::Second => tcu_encode(code.magnitude),
+        };
+        (stream, code.negative)
+    }
+
+    pub fn conversions(&self) -> u64 {
+        self.conversions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::sc_multiply;
+
+    #[test]
+    fn operand_pair_multiplies_deterministically() {
+        let mut b2t = BToTcu::new();
+        for (a, b) in [(13i32, 115i32), (-90, 45), (127, -127)] {
+            let (sa, _) = b2t.convert(SignedCode::from_i32(a), OperandOrder::First);
+            let (sb, _) = b2t.convert(SignedCode::from_i32(b), OperandOrder::Second);
+            let pop = sa.and(&sb).popcount();
+            assert_eq!(pop, sc_multiply(a.unsigned_abs(), b.unsigned_abs()));
+        }
+    }
+
+    #[test]
+    fn second_operand_is_plain_tcu() {
+        let mut b2t = BToTcu::new();
+        let (s, neg) = b2t.convert(SignedCode::from_i32(-42), OperandOrder::Second);
+        assert!(s.is_tcu());
+        assert!(neg);
+        assert_eq!(s.popcount(), 42);
+    }
+
+    #[test]
+    fn counts_conversions() {
+        let mut b2t = BToTcu::new();
+        b2t.convert(SignedCode::from_i32(1), OperandOrder::First);
+        b2t.convert(SignedCode::from_i32(2), OperandOrder::Second);
+        assert_eq!(b2t.conversions(), 2);
+    }
+}

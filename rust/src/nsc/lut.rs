@@ -1,0 +1,161 @@
+//! Reprogrammable 256-entry NSC LUTs (Section III.C.2).
+//!
+//! Grids mirror `python/compile/kernels/common.py` exactly:
+//! * exp: 256 codes over [-16, 0]
+//! * ln: 256 codes over (0, max_in]
+//! * GELU: 256 codes over [-8, 8] (tanh approximation)
+//! * ReLU: exact (sign test)
+
+/// exp LUT input range (must match python `LUT_EXP_RANGE`).
+pub const EXP_RANGE: f64 = 16.0;
+
+/// LUT entries (must match python `LUT_SIZE`).
+pub const LUT_SIZE: usize = 256;
+
+/// What a LUT is programmed to compute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LutKind {
+    /// exp(x) over [-EXP_RANGE, 0].
+    Exp,
+    /// ln(x) over (0, max_in].
+    Ln { max_in: f64 },
+    /// GELU (tanh approx) over [-8, 8].
+    Gelu,
+    /// ReLU (exact).
+    Relu,
+}
+
+/// A 256-entry reprogrammable LUT.
+#[derive(Debug, Clone)]
+pub struct Lut {
+    kind: LutKind,
+    table: Vec<f64>,
+    lookups: u64,
+}
+
+impl Lut {
+    pub fn new(kind: LutKind) -> Self {
+        let table = match kind {
+            LutKind::Exp => (0..LUT_SIZE)
+                .map(|c| {
+                    let x = -EXP_RANGE + c as f64 * (EXP_RANGE / (LUT_SIZE - 1) as f64);
+                    x.exp()
+                })
+                .collect(),
+            LutKind::Ln { max_in } => {
+                // Log-spaced grid over [1, max_in]: the LUT quantizes
+                // ln(x) directly (matches python common.ln_lut_lookup).
+                let ln_max = max_in.ln();
+                (0..LUT_SIZE)
+                    .map(|c| c as f64 * ln_max / (LUT_SIZE - 1) as f64)
+                    .collect()
+            }
+            LutKind::Gelu => (0..LUT_SIZE)
+                .map(|c| {
+                    let x = -8.0 + c as f64 * (16.0 / (LUT_SIZE - 1) as f64);
+                    let t = (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh();
+                    0.5 * x * (1.0 + t)
+                })
+                .collect(),
+            LutKind::Relu => Vec::new(), // exact path, no table
+        };
+        Self { kind, table, lookups: 0 }
+    }
+
+    /// Evaluate through the LUT quantization (matches python exactly).
+    pub fn eval(&mut self, x: f64) -> f64 {
+        self.lookups += 1;
+        match self.kind {
+            LutKind::Exp => {
+                let xc = x.clamp(-EXP_RANGE, 0.0);
+                let code = ((xc + EXP_RANGE) * ((LUT_SIZE - 1) as f64 / EXP_RANGE)).round();
+                self.table[code as usize]
+            }
+            LutKind::Ln { max_in } => {
+                let ln_max = max_in.ln();
+                let xc = x.clamp(1.0, max_in);
+                let code = (xc.ln() * ((LUT_SIZE - 1) as f64 / ln_max)).round();
+                self.table[code as usize]
+            }
+            LutKind::Gelu => {
+                let xc = x.clamp(-8.0, 8.0);
+                let code = ((xc + 8.0) * ((LUT_SIZE - 1) as f64 / 16.0)).round();
+                self.table[code as usize]
+            }
+            LutKind::Relu => x.max(0.0),
+        }
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    pub fn kind(&self) -> LutKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_lut_close_to_exp() {
+        let mut lut = Lut::new(LutKind::Exp);
+        for i in 0..100 {
+            let x = -16.0 * i as f64 / 99.0;
+            let got = lut.eval(x);
+            let want = x.exp();
+            assert!((got - want).abs() < 0.035, "x={x} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn exp_lut_endpoints_exact() {
+        let mut lut = Lut::new(LutKind::Exp);
+        assert!((lut.eval(0.0) - 1.0).abs() < 1e-12);
+        assert!((lut.eval(-16.0) - (-16.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_lut_clamps() {
+        let mut lut = Lut::new(LutKind::Exp);
+        assert_eq!(lut.eval(5.0), lut.eval(0.0));
+        assert_eq!(lut.eval(-100.0), lut.eval(-16.0));
+    }
+
+    #[test]
+    fn ln_lut_tracks_ln() {
+        let mut lut = Lut::new(LutKind::Ln { max_in: 64.0 });
+        for x in [1.0f64, 1.3, 2.0, 10.0, 32.0, 64.0] {
+            let got = lut.eval(x);
+            // log-spaced grid: error <= ln(64)/(2*255) ~ 0.0082
+            assert!((got - x.ln()).abs() < 0.009, "x={x} got={got}");
+        }
+    }
+
+    #[test]
+    fn gelu_lut_matches_tanh_form() {
+        let mut lut = Lut::new(LutKind::Gelu);
+        for x in [-3.0f64, -1.0, 0.0, 0.5, 2.0] {
+            let t = (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh();
+            let want = 0.5 * x * (1.0 + t);
+            assert!((lut.eval(x) - want).abs() < 0.05, "x={x}");
+        }
+    }
+
+    #[test]
+    fn relu_is_exact() {
+        let mut lut = Lut::new(LutKind::Relu);
+        assert_eq!(lut.eval(-2.5), 0.0);
+        assert_eq!(lut.eval(3.25), 3.25);
+    }
+
+    #[test]
+    fn lookup_counter() {
+        let mut lut = Lut::new(LutKind::Relu);
+        lut.eval(1.0);
+        lut.eval(2.0);
+        assert_eq!(lut.lookups(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! Near-subarray compute (NSC) units (Section III.C, Fig. 3(c)).
+//!
+//! One NSC per subarray: a 2-input 8-bit adder/subtractor for partial-sum
+//! reduction, an 8-bit comparator with a y_max register, reprogrammable
+//! LUTs for exp/ln/GELU/ReLU, the log-sum-exp softmax pipeline, and the
+//! B_to_TCU conversion block.
+//!
+//! The LUT numerics here mirror `python/compile/kernels/common.py`
+//! exactly (same grids, same clipping) so the rust functional path and
+//! the AOT artifacts produce the same transformer outputs.
+
+mod alu;
+mod btcu;
+mod lut;
+mod reduce;
+mod softmax;
+
+pub use alu::{Comparator, WideAccumulator};
+pub use btcu::{BToTcu, OperandOrder};
+pub use lut::{Lut, LutKind};
+pub use reduce::{nsc_reduce_chain, ReduceTrace};
+pub use softmax::{calibrate_softmax, nsc_softmax, SoftmaxReport, SoftmaxUnit};

@@ -1,0 +1,74 @@
+//! The NSC partial-sum reduction chain (Section III.C.1, Fig. 5(a)):
+//! each subarray's NSC accumulates its tiles' partials (sub-round 2),
+//! then each NSC folds in the output of the NSC after it (sub-round 3).
+
+use super::alu::WideAccumulator;
+
+/// Trace of a chain reduction: per-sub-round adder ops and the final sum.
+#[derive(Debug, Clone)]
+pub struct ReduceTrace {
+    pub value: i64,
+    /// Adder operations in the local (per-subarray) sub-round.
+    pub local_adds: u64,
+    /// Chain hops (NSC i+1 -> NSC i forwarding steps).
+    pub chain_hops: u64,
+}
+
+/// Reduce per-subarray partial lists down to one value through the NSC
+/// chain.  `partials_per_subarray[s]` holds the tile partials that
+/// subarray `s`'s NSC must sum locally before the chain pass.
+pub fn nsc_reduce_chain(partials_per_subarray: &[Vec<i64>]) -> ReduceTrace {
+    let mut local_adds = 0u64;
+    let mut locals: Vec<i64> = Vec::with_capacity(partials_per_subarray.len());
+    for partials in partials_per_subarray {
+        let mut acc = WideAccumulator::new();
+        for &p in partials {
+            acc.add(p);
+        }
+        local_adds += acc.ops();
+        locals.push(acc.value());
+    }
+    // Chain: NSC k forwards into NSC k-1 (Fig. 5(a) sub-round 3),
+    // sequentially from the tail.
+    let mut chain_hops = 0u64;
+    let mut acc = 0i64;
+    for &v in locals.iter().rev() {
+        acc += v;
+        chain_hops += 1;
+    }
+    chain_hops = chain_hops.saturating_sub(1); // first NSC doesn't hop
+    ReduceTrace { value: acc, local_adds, chain_hops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_to_total_sum() {
+        let t = nsc_reduce_chain(&[vec![1, 2, 3], vec![10, 20], vec![-5]]);
+        assert_eq!(t.value, 31);
+        assert_eq!(t.local_adds, 6);
+        assert_eq!(t.chain_hops, 2);
+    }
+
+    #[test]
+    fn single_subarray_no_hops() {
+        let t = nsc_reduce_chain(&[vec![7, 8]]);
+        assert_eq!(t.value, 15);
+        assert_eq!(t.chain_hops, 0);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = nsc_reduce_chain(&[]);
+        assert_eq!(t.value, 0);
+        assert_eq!(t.chain_hops, 0);
+    }
+
+    #[test]
+    fn negatives_subtract_correctly() {
+        let t = nsc_reduce_chain(&[vec![100], vec![-30], vec![-70]]);
+        assert_eq!(t.value, 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! The NSC log-sum-exp softmax pipeline (Section III.C.2, Eq. 5).
+//!
+//! softmax(y_i) = exp(y_i - y_max - ln(sum_j exp(y_j - y_max)))
+//!
+//! Four hardware steps: (1) pipelined y_max comparator, (2) exp LUT +
+//! adds + ln LUT, (3) subtraction, (4) final exp LUT.  Numerics mirror
+//! `common.nsc_softmax` in python exactly.
+
+use super::alu::Comparator;
+use super::lut::{Lut, LutKind};
+
+/// Stateful softmax unit (one per NSC), tracking op counts.
+pub struct SoftmaxUnit {
+    comparator: Comparator,
+    exp_lut: Lut,
+    adds: u64,
+}
+
+impl SoftmaxUnit {
+    pub fn new() -> Self {
+        Self {
+            comparator: Comparator::new(),
+            exp_lut: Lut::new(LutKind::Exp),
+            adds: 0,
+        }
+    }
+
+    /// Full softmax over one row of scores.
+    pub fn softmax_row(&mut self, y: &[f64]) -> Vec<f64> {
+        assert!(!y.is_empty());
+        // Step 1: streaming comparator.
+        self.comparator.reset();
+        for &v in y {
+            self.comparator.observe(v);
+        }
+        let y_max = self.comparator.y_max().unwrap();
+
+        // Step 2: exp LUT on shifted values, NSC adds, ln LUT.
+        let mut sum = 0.0;
+        let exps: Vec<f64> = y
+            .iter()
+            .map(|&v| {
+                let e = self.exp_lut.eval(v - y_max);
+                sum += e;
+                self.adds += 1;
+                e
+            })
+            .collect();
+        drop(exps);
+        let mut ln_lut = Lut::new(LutKind::Ln { max_in: y.len() as f64 });
+        let ln_s = ln_lut.eval(sum);
+
+        // Steps 3+4: subtract, final exp LUT.
+        y.iter()
+            .map(|&v| self.exp_lut.eval(v - y_max - ln_s))
+            .collect()
+    }
+
+    pub fn adder_ops(&self) -> u64 {
+        self.adds
+    }
+}
+
+impl Default for SoftmaxUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Stateless convenience wrapper.
+pub fn nsc_softmax(y: &[f64]) -> Vec<f64> {
+    SoftmaxUnit::new().softmax_row(y)
+}
+
+/// Error report for the softmax block (Table V row 4).
+#[derive(Debug, Clone)]
+pub struct SoftmaxReport {
+    pub mae: f64,
+    pub max_error: f64,
+    pub calibration_bits: f64,
+}
+
+/// Monte-Carlo the LUT softmax against the exact softmax over random
+/// logit rows (normalized to full scale 1.0 — probabilities).
+pub fn calibrate_softmax(trials: u32, width: usize) -> SoftmaxReport {
+    let mut rng = crate::util::XorShift64::new(0x50F7);
+    let mut sum = 0.0;
+    let mut max: f64 = 0.0;
+    let mut n = 0u64;
+    for _ in 0..trials {
+        let y: Vec<f64> = (0..width).map(|_| rng.normal() * 2.0).collect();
+        let got = nsc_softmax(&y);
+        // exact
+        let m = y.iter().cloned().fold(f64::MIN, f64::max);
+        let es: Vec<f64> = y.iter().map(|v| (v - m).exp()).collect();
+        let s: f64 = es.iter().sum();
+        for (g, e) in got.iter().zip(es.iter().map(|e| e / s)) {
+            let err = (g - e).abs();
+            sum += err;
+            max = max.max(err);
+            n += 1;
+        }
+    }
+    // Calibration: the exp LUT grid step bounds the exactness region;
+    // report the effective output bit resolution where MAE sits.
+    let mae = sum / n as f64;
+    SoftmaxReport {
+        mae,
+        max_error: max,
+        calibration_bits: -(mae.max(1e-12)).log2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_near_one() {
+        let p = nsc_softmax(&[1.0, 2.0, 3.0, -1.0]);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 0.05, "sum {s}");
+    }
+
+    #[test]
+    fn softmax_close_to_exact() {
+        let y = [0.3, -1.2, 2.5, 0.0, 1.1];
+        let got = nsc_softmax(&y);
+        let m = 2.5;
+        let es: Vec<f64> = y.iter().map(|v| (v - m).exp()).collect();
+        let s: f64 = es.iter().sum();
+        for (g, e) in got.iter().zip(es.iter().map(|e| e / s)) {
+            assert!((g - e).abs() < 0.03, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = nsc_softmax(&[0.0, 1.0, 2.0]);
+        let b = nsc_softmax(&[100.0, 101.0, 102.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn softmax_monotone() {
+        let p = nsc_softmax(&[0.0, 1.0, 2.0, 3.0]);
+        for w in p.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn extreme_negative_saturates() {
+        let p = nsc_softmax(&[0.0, -100.0]);
+        assert!(p[1] < 1e-6);
+    }
+
+    #[test]
+    fn calibration_matches_table5_scale() {
+        let r = calibrate_softmax(200, 16);
+        // Paper Table V: softmax MAE 0.0020, max 0.0078.  Our LUT model
+        // lands in the same decade.
+        assert!(r.mae < 0.01, "mae {}", r.mae);
+        assert!(r.max_error < 0.08, "max {}", r.max_error);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_row_panics() {
+        nsc_softmax(&[]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Extension experiments beyond the paper's evaluation section:
+//! autoregressive generation, analog-noise sensitivity, the
+//! deterministic-vs-LFSR ablation, and the capacity/mapping analysis.
+//! These are the "optional / future-work" studies DESIGN.md calls out.
+
+use super::table::TableBuilder;
+use crate::analog::{a_to_b, AtoBConfig, MomCap, ACC_NOISE_SIGMA_UNITS};
+use crate::config::{ArtemisConfig, ModelZoo};
+use crate::dataflow::capacity_report;
+use crate::sc::{sc_multiply, sc_multiply_random};
+use crate::sim::{simulate, SimOptions};
+use crate::util::XorShift64;
+use crate::xfmr::generation_workloads;
+
+fn f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Autoregressive generation study (extends the paper's encoder-centric
+/// evaluation to the decoder regime it describes in Section II.A).
+pub fn decode_study(cfg: &ArtemisConfig) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Generation study — prefill + per-token decode on ARTEMIS",
+        &["model", "prompt", "gen", "prefill(ms)", "decode(ms)", "tok/s", "J/token"],
+    );
+    for (model, prompt, gen) in [
+        (ModelZoo::transformer_base(), 64u64, 64u64),
+        (ModelZoo::opt_350(), 256, 64),
+        (ModelZoo::opt_350(), 1024, 64),
+    ] {
+        let (prefill, steps) = generation_workloads(&model, prompt, gen);
+        let pre = simulate(cfg, &prefill, SimOptions::artemis());
+        let mut decode_ns = 0.0;
+        let mut decode_pj = 0.0;
+        for s in &steps {
+            let r = simulate(cfg, s, SimOptions::artemis());
+            decode_ns += r.total_ns;
+            decode_pj += r.total_energy_pj();
+        }
+        t.row(vec![
+            model.name.clone(),
+            prompt.to_string(),
+            gen.to_string(),
+            f(pre.total_ns * 1e-6, 2),
+            f(decode_ns * 1e-6, 2),
+            f(gen as f64 / (decode_ns * 1e-9), 0),
+            f(decode_pj * 1e-12 / gen as f64, 4),
+        ]);
+    }
+    t
+}
+
+/// Analog-noise sensitivity: dot-product error vs per-step charge noise
+/// (extends Table V row 2 into a design-margin curve).
+pub fn noise_study() -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Analog noise sensitivity — 64-MAC dot products, noisy MOMCAP accumulation \
+         (sigma in bit-line charge units/step; Table V operating point sigma=4)",
+        &["sigma(units)", "dot MAE", "dot max err", "normalized MAE"],
+    );
+    for sigma in [0.0, 1.0, 2.0, ACC_NOISE_SIGMA_UNITS, 8.0, 16.0, 32.0] {
+        let mut rng = XorShift64::new(0x401);
+        let atob = AtoBConfig { offset_noise: 0.0, ..Default::default() };
+        let trials = 300;
+        let k = 64usize;
+        let mut sum = 0.0;
+        let mut max: f64 = 0.0;
+        for _ in 0..trials {
+            // All-positive magnitudes: isolates accumulation noise.
+            let a: Vec<u32> = (0..k).map(|_| rng.below(128) as u32).collect();
+            let b: Vec<u32> = (0..k).map(|_| rng.below(128) as u32).collect();
+            let exact: i64 = a.iter().zip(&b).map(|(&x, &y)| sc_multiply(x, y) as i64).sum();
+            // Hardware path: 20-step windows on a MOMCAP with noise.
+            let mut cap = MomCap::new(8.0);
+            let mut got = 0i64;
+            for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+                cap.accumulate_noisy(sc_multiply(x, y), sigma, &mut rng);
+                if (i + 1) % 20 == 0 {
+                    got += a_to_b(&cap, &atob, None) as i64;
+                    cap.reset();
+                }
+            }
+            if cap.steps() > 0 {
+                got += a_to_b(&cap, &atob, None) as i64;
+            }
+            let err = (got - exact).abs() as f64;
+            sum += err;
+            max = max.max(err);
+        }
+        let full_scale = (k as f64) * 126.0;
+        t.row(vec![
+            f(sigma, 0),
+            f(sum / trials as f64, 2),
+            f(max, 1),
+            f(sum / trials as f64 / full_scale, 5),
+        ]);
+    }
+    t
+}
+
+/// Deterministic vs LFSR-random SC multiplication at the dot-product
+/// level over *signed* operands (the real workload): the quantitative
+/// case for the correlation encoder.  The deterministic trunc error is
+/// signed by the product sign and bounded by 1 unit per product, so it
+/// random-walks at ~0.5/sqrt step; LFSR stream noise is ~an order of
+/// magnitude larger per product.
+pub fn ablation_deterministic_vs_lfsr() -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Ablation — deterministic (TCU+correlation) vs conventional LFSR SC, \
+         signed dot-product MAE vs reduction length (normalized to full scale)",
+        &["k", "deterministic MAE", "LFSR MAE", "LFSR/det"],
+    );
+    for k in [16usize, 64, 256, 1024] {
+        let mut rng = XorShift64::new(0xAB1);
+        let trials = 200;
+        let mut det_sum = 0.0;
+        let mut rnd_sum = 0.0;
+        for trial in 0..trials {
+            let a: Vec<i64> = (0..k).map(|_| rng.code() as i64).collect();
+            let b: Vec<i64> = (0..k).map(|_| rng.code() as i64).collect();
+            let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64 / 128.0).sum();
+            let signed = |p: u32, x: i64, y: i64| if (x < 0) != (y < 0) { -(p as i64) } else { p as i64 };
+            let det: i64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| signed(sc_multiply(x.unsigned_abs() as u32, y.unsigned_abs() as u32), x, y))
+                .sum();
+            let rnd: i64 = a
+                .iter()
+                .zip(&b)
+                .enumerate()
+                .map(|(i, (&x, &y))| {
+                    let p = sc_multiply_random(
+                        x.unsigned_abs() as u32,
+                        y.unsigned_abs() as u32,
+                        (trial * 1031 + i as u32 + 1) as u16,
+                    );
+                    signed(p, x, y)
+                })
+                .sum();
+            det_sum += (det as f64 - exact).abs();
+            rnd_sum += (rnd as f64 - exact).abs();
+        }
+        let full_scale = k as f64 * 126.0;
+        let det_mae = det_sum / trials as f64 / full_scale;
+        let rnd_mae = rnd_sum / trials as f64 / full_scale;
+        t.row(vec![
+            k.to_string(),
+            f(det_mae, 5),
+            f(rnd_mae, 5),
+            f(rnd_mae / det_mae.max(1e-12), 1),
+        ]);
+    }
+    t
+}
+
+/// Capacity / mapping analysis across models, sequence lengths, stacks.
+pub fn capacity_study() -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Capacity & mapping (Section IV.E mechanism): per-bank demand vs capacity",
+        &["model", "stacks", "weights/bank(MB)", "acts/bank(MB)", "fits", "rounds",
+          "remap(ms)"],
+    );
+    let cases = [
+        (ModelZoo::bert_base(), 1u64),
+        (ModelZoo::opt_350(), 1),
+        (ModelZoo::opt_350().with_seq_len(8192), 1),
+        (ModelZoo::opt_350().with_seq_len(32768), 1),
+        (ModelZoo::opt_350().with_seq_len(32768), 8),
+    ];
+    for (model, stacks) in cases {
+        let cfg = ArtemisConfig::with_stacks(stacks);
+        let r = capacity_report(&cfg, &model);
+        let rounds = if r.mapping_rounds == u64::MAX {
+            "not mappable".to_string()
+        } else {
+            r.mapping_rounds.to_string()
+        };
+        t.row(vec![
+            model.name.clone(),
+            stacks.to_string(),
+            f(r.weights_bytes_per_bank as f64 * 1e-6, 2),
+            f(r.activations_bytes_per_bank as f64 * 1e-6, 2),
+            r.fits.to_string(),
+            rounds,
+            f(r.remap_latency_ns * 1e-6, 3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_study_renders() {
+        let t = decode_study(&ArtemisConfig::default());
+        assert!(!t.is_empty());
+        assert!(!t.render().contains("NaN"));
+    }
+
+    #[test]
+    fn noise_study_error_grows_with_sigma() {
+        let t = noise_study();
+        let csv = t.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        let mae = |row: &str| -> f64 {
+            row.split(',').nth(3).unwrap().parse().unwrap()
+        };
+        let first = mae(rows[0]);
+        let last = mae(rows[rows.len() - 1]);
+        assert!(last > first * 3.0, "noise curve flat: {first} -> {last}");
+    }
+
+    #[test]
+    fn ablation_lfsr_always_worse() {
+        let t = ablation_deterministic_vs_lfsr();
+        for row in t.to_csv().lines().skip(1) {
+            let ratio: f64 = row.split(',').nth(3).unwrap().parse().unwrap();
+            assert!(ratio > 2.0, "LFSR should be much worse: {row}");
+        }
+    }
+
+    #[test]
+    fn capacity_study_has_a_non_fitting_case() {
+        let t = capacity_study();
+        let csv = t.to_csv();
+        assert!(csv.contains("false"), "expected an overflow case:\n{csv}");
+        assert!(csv.contains("true"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Reporting: experiment drivers for every paper table/figure plus
+//! aligned-text and CSV emitters.  The CLI (`main.rs`) and the bench
+//! harness (`rust/benches/paper_tables.rs`) both run through here so the
+//! numbers in EXPERIMENTS.md are regenerable from either entry point.
+
+mod experiments;
+mod extensions;
+mod table;
+
+pub use experiments::*;
+pub use extensions::*;
+pub use table::TableBuilder;

@@ -1,0 +1,137 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and lazily loads + compiles executables.
+
+use super::client::{CompiledModel, XlaRuntime};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Geometry of the tiny end-to-end model (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct TinyModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+}
+
+/// The registry: manifest + compile cache.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    infos: HashMap<String, ArtifactInfo>,
+    tiny: Option<TinyModelConfig>,
+    runtime: XlaRuntime,
+    cache: HashMap<String, std::sync::Arc<CompiledModel>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry at `dir` (normally `artifacts/`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mut infos = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, a) in arts {
+            let rel = a
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing path"))?;
+            let mut input_shapes = Vec::new();
+            for dims in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+            {
+                let shape: Option<Vec<usize>> = dims
+                    .as_arr()
+                    .map(|ds| ds.iter().filter_map(|d| d.as_u64().map(|v| v as usize)).collect());
+                input_shapes.push(shape.ok_or_else(|| anyhow!("bad shape in {name}"))?);
+            }
+            infos.insert(
+                name.clone(),
+                ArtifactInfo { name: name.clone(), path: dir.join(rel), input_shapes },
+            );
+        }
+
+        let tiny = j.get("configs").and_then(|c| c.get("tiny")).map(|t| {
+            let g = |k: &str| t.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+            TinyModelConfig {
+                vocab: g("vocab"),
+                d_model: g("d_model"),
+                n_heads: g("n_heads"),
+                d_ff: g("d_ff"),
+                n_layers: g("n_layers"),
+                seq_len: g("seq_len"),
+                n_classes: g("n_classes"),
+                batch: g("batch"),
+            }
+        });
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            infos,
+            tiny,
+            runtime: XlaRuntime::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Path::new("artifacts"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.infos.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.infos.get(name)
+    }
+
+    pub fn tiny_config(&self) -> Option<&TinyModelConfig> {
+        self.tiny.as_ref()
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<CompiledModel>> {
+        if let Some(m) = self.cache.get(name) {
+            return Ok(m.clone());
+        }
+        let info = self
+            .infos
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let model = std::sync::Arc::new(
+            self.runtime.load_hlo_text(&info.path, info.input_shapes.clone())?,
+        );
+        self.cache.insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+}

@@ -1,0 +1,75 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// The process-wide PJRT client plus compile cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path, input_shapes: Vec<Vec<usize>>) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModel { exe, input_shapes, name: path.display().to_string() })
+    }
+}
+
+/// One compiled executable plus its expected input shapes.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub name: String,
+}
+
+impl CompiledModel {
+    /// Execute with f32 inputs (row-major), returning the first tuple
+    /// element as a flat f32 vector.  All our artifacts are lowered with
+    /// `return_tuple=True` and a single output.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.input_shapes) {
+            let elems: usize = shape.iter().product();
+            anyhow::ensure!(
+                elems == data.len(),
+                "{}: shape {:?} needs {} elems, got {}",
+                self.name,
+                shape,
+                elems,
+                data.len()
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust hot path.  Python never runs here — `make artifacts`
+//! produced the `.hlo.txt` files once at build time.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactInfo, ArtifactRegistry, TinyModelConfig};
+pub use client::{CompiledModel, XlaRuntime};

@@ -1,0 +1,129 @@
+//! Multiplier error / calibration analysis (paper Table V methodology).
+//!
+//! The paper reports, per approximate block, the MAE and max error
+//! (normalized to the block's full-scale output) and a "calibration
+//! accuracy": the operand bit-width below which results are exact.
+
+use super::multiply::{exact_product_scaled, sc_multiply, sc_multiply_random};
+use super::stream::STREAM_LEN;
+
+/// Error statistics for one approximate block (Table V row).
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub block: String,
+    /// Mean absolute error, normalized to the block's full-scale output.
+    pub mae: f64,
+    /// Max absolute error, same normalization.
+    pub max_error: f64,
+    /// Largest operand bit-width for which every result is exact.
+    pub calibration_bits: f64,
+}
+
+/// Raw (unnormalized) error stats of the deterministic multiplier over
+/// the full operand space.
+pub fn multiplier_error_stats() -> (f64, f64) {
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let n = ((STREAM_LEN + 1) * (STREAM_LEN + 1)) as f64;
+    for a in 0..=STREAM_LEN {
+        for b in 0..=STREAM_LEN {
+            let err = exact_product_scaled(a, b) - sc_multiply(a, b) as f64;
+            sum += err.abs();
+            max = max.max(err.abs());
+        }
+    }
+    (sum / n, max)
+}
+
+/// Table V row 1: deterministic stochastic multiplier calibration.
+///
+/// Normalization: errors are divided by the full-scale output of the
+/// block (127*127/128 units), matching the paper's "normalized to the
+/// maximum voltage supported by each operation".
+pub fn calibrate_multiplier() -> CalibrationReport {
+    let (mae_raw, max_raw) = multiplier_error_stats();
+    let full_scale = exact_product_scaled(127, 127);
+
+    // Calibration accuracy: the largest operand magnitude T such that
+    // every pair at or below T multiplies accurately to within half an
+    // output LSB (the result "remains entirely accurate" on the 8-bit
+    // output grid), expressed in bits.  The paper reports 4.68 bits with
+    // an unstated error criterion; ours is documented here and lands in
+    // the same few-bits regime.
+    let mut t = 1u32;
+    'outer: while t <= STREAM_LEN {
+        for a in 0..=t {
+            for b in 0..=t {
+                let exact = (a as u64 * b as u64) as f64 / STREAM_LEN as f64;
+                if (sc_multiply(a, b) as f64 - exact).abs() > 0.5 + 1e-9 {
+                    break 'outer;
+                }
+            }
+        }
+        t += 1;
+    }
+    let calibration_bits = ((t - 1) as f64).log2();
+
+    CalibrationReport {
+        block: "Stochastic MUL".into(),
+        mae: mae_raw / full_scale,
+        max_error: max_raw / full_scale,
+        calibration_bits,
+    }
+}
+
+/// Same analysis for the conventional LFSR-random multiplier, for the
+/// deterministic-vs-random comparison (Section II.B motivation).
+pub fn calibrate_random_multiplier(seeds: u16) -> CalibrationReport {
+    let full_scale = exact_product_scaled(127, 127);
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut n = 0u64;
+    for a in (0..=STREAM_LEN).step_by(4) {
+        for b in (0..=STREAM_LEN).step_by(4) {
+            for seed in 1..=seeds {
+                let err =
+                    (sc_multiply_random(a, b, seed) as f64 - exact_product_scaled(a, b)).abs();
+                sum += err;
+                max = max.max(err);
+                n += 1;
+            }
+        }
+    }
+    CalibrationReport {
+        block: "Stochastic MUL (LFSR baseline)".into(),
+        mae: sum / n as f64 / full_scale,
+        max_error: max / full_scale,
+        calibration_bits: 0.0, // random streams are never guaranteed exact
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_mae_is_small() {
+        let r = calibrate_multiplier();
+        // floor error < 1 unit on a 126-unit full scale
+        assert!(r.mae < 0.01, "mae {}", r.mae);
+        assert!(r.max_error < 0.01, "max {}", r.max_error);
+        assert!(r.mae > 0.0);
+    }
+
+    #[test]
+    fn calibration_bits_in_sane_range() {
+        let r = calibrate_multiplier();
+        // half-LSB criterion holds for magnitudes up to T=8 -> 3.0 bits
+        // (paper reports 4.68 with an unstated criterion — same regime)
+        assert!((2.5..5.0).contains(&r.calibration_bits),
+            "bits {}", r.calibration_bits);
+    }
+
+    #[test]
+    fn random_is_worse_than_deterministic() {
+        let det = calibrate_multiplier();
+        let rnd = calibrate_random_multiplier(8);
+        assert!(rnd.mae > det.mae * 2.0, "rnd {} det {}", rnd.mae, det.mae);
+    }
+}

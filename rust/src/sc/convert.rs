@@ -1,0 +1,81 @@
+//! Stochastic/unary -> binary conversion models (Section II.B.3, III.B).
+
+use super::stream::{BitStream, STREAM_LEN};
+
+/// Conversion failure: the U_to_B priority encoder requires a contiguous
+/// (TCU) stream; feeding it an arbitrary stream is a hardware misuse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConversionError {
+    pub popcount: u32,
+    pub boundary: u32,
+}
+
+impl std::fmt::Display for ConversionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-TCU stream: popcount {} != boundary {}",
+            self.popcount, self.boundary
+        )
+    }
+}
+
+impl std::error::Error for ConversionError {}
+
+/// Popcount-based S_to_B: counts ones anywhere in the stream.  The
+/// conventional (high-overhead) conversion path — ARTEMIS avoids it on
+/// the hot path in favour of the analog A_to_B (Section III.B), but the
+/// per-tile B_to_S circuits still use it for inter-bank transfers.
+pub fn s_to_b_popcount(s: &BitStream) -> u32 {
+    s.popcount()
+}
+
+/// Priority-encoder U_to_B: returns the index one past the highest set
+/// bit — for a valid TCU stream this equals the magnitude in O(1)
+/// hardware depth (the NSC's U_to_B unit, Section III.B).
+///
+/// Errors if the stream is not transition-coded (ones not contiguous
+/// from bit 0), because the hardware would silently produce the boundary
+/// rather than the popcount.
+pub fn u_to_b_priority(s: &BitStream) -> Result<u32, ConversionError> {
+    let boundary = (0..STREAM_LEN)
+        .rev()
+        .find(|&i| s.get(i))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let popcount = s.popcount();
+    if boundary != popcount {
+        return Err(ConversionError { popcount, boundary });
+    }
+    Ok(boundary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::encoder::tcu_encode;
+
+    #[test]
+    fn priority_decodes_all_tcu_values() {
+        for m in 0..=STREAM_LEN {
+            assert_eq!(u_to_b_priority(&tcu_encode(m)).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn priority_rejects_non_tcu() {
+        let mut s = tcu_encode(10);
+        s.set(100, true);
+        let err = u_to_b_priority(&s).unwrap_err();
+        assert_eq!(err.popcount, 11);
+        assert_eq!(err.boundary, 101);
+    }
+
+    #[test]
+    fn popcount_handles_any_stream() {
+        let mut s = BitStream::ZERO;
+        s.set(3, true);
+        s.set(90, true);
+        assert_eq!(s_to_b_popcount(&s), 2);
+    }
+}

@@ -1,0 +1,144 @@
+//! B_to_TCU decoder and the bit-position correlation encoder
+//! (Section III.A.1 / III.C.3).
+//!
+//! The deterministic multiplication method needs the *first* operand run
+//! through the correlation encoder so that, for every prefix length `b`,
+//! the number of ones falling inside the prefix is `floor(a*b/128)` —
+//! i.e. "the conditional probability of the 1st operand given the 2nd
+//! matches the marginal probability of the 1st" [18].  The second operand
+//! uses the plain B_to_TCU unary code (ones grouped at the leading end).
+
+use super::stream::{BitStream, STREAM_LEN};
+use std::sync::OnceLock;
+
+/// B_to_TCU decoder: magnitude `m` (0..=128) -> TCU stream with the `m`
+/// leading bits set.
+pub fn tcu_encode(m: u32) -> BitStream {
+    assert!(m <= STREAM_LEN, "magnitude {m} exceeds stream length");
+    let mut s = BitStream::ZERO;
+    match m {
+        0 => {}
+        1..=63 => s.words[0] = (1u64 << m) - 1,
+        64 => s.words[0] = u64::MAX,
+        65..=127 => {
+            s.words[0] = u64::MAX;
+            s.words[1] = (1u64 << (m - 64)) - 1;
+        }
+        _ => s.words = [u64::MAX, u64::MAX],
+    }
+    s
+}
+
+/// Bit-position correlation encoder: spread `m` ones over the 128
+/// positions in the Bresenham (low-discrepancy) pattern:
+///
+///   bit i is set  <=>  floor((i+1)*m/128) - floor(i*m/128) == 1
+///
+/// The telescoping sum over any prefix of length `b` gives exactly
+/// `floor(m*b/128)` ones, which is what makes the AND multiply
+/// deterministic.
+///
+/// Hardware builds this as a fixed decode ROM; we mirror that with a
+/// one-time 129-entry table (perf pass: the bit loop dominated
+/// `sc_multiply` at ~110 ns/op; the table drops it ~20x — see
+/// EXPERIMENTS.md §Perf).
+pub fn correlation_encode(m: u32) -> BitStream {
+    assert!(m <= STREAM_LEN, "magnitude {m} exceeds stream length");
+    static TABLE: OnceLock<[BitStream; 129]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [BitStream::ZERO; 129];
+        for (m, slot) in t.iter_mut().enumerate() {
+            *slot = correlation_encode_uncached(m as u32);
+        }
+        t
+    })[m as usize]
+}
+
+/// The raw Bresenham construction (the ROM contents).
+pub fn correlation_encode_uncached(m: u32) -> BitStream {
+    assert!(m <= STREAM_LEN, "magnitude {m} exceeds stream length");
+    let mut s = BitStream::ZERO;
+    let m = m as u64;
+    let l = STREAM_LEN as u64;
+    let mut prev = 0u64;
+    for i in 0..STREAM_LEN as u64 {
+        let cur = (i + 1) * m / l;
+        if cur != prev {
+            s.set(i as u32, true);
+        }
+        prev = cur;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcu_popcount_equals_magnitude() {
+        for m in 0..=STREAM_LEN {
+            assert_eq!(tcu_encode(m).popcount(), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn tcu_ones_are_leading() {
+        let s = tcu_encode(40);
+        for i in 0..40 {
+            assert!(s.get(i));
+        }
+        for i in 40..STREAM_LEN {
+            assert!(!s.get(i));
+        }
+    }
+
+    #[test]
+    fn tcu_word_boundaries() {
+        for m in [63, 64, 65, 127, 128] {
+            assert_eq!(tcu_encode(m).popcount(), m);
+        }
+    }
+
+    #[test]
+    fn correlation_popcount_equals_magnitude() {
+        for m in 0..=STREAM_LEN {
+            assert_eq!(correlation_encode(m).popcount(), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn cached_table_matches_raw_construction() {
+        for m in 0..=STREAM_LEN {
+            assert_eq!(correlation_encode(m), correlation_encode_uncached(m));
+        }
+    }
+
+    #[test]
+    fn correlation_prefix_property() {
+        // The defining property: any prefix of length b holds exactly
+        // floor(m*b/128) ones.
+        for m in 0..=STREAM_LEN {
+            let s = correlation_encode(m);
+            let mut count = 0u32;
+            for b in 1..=STREAM_LEN {
+                if s.get(b - 1) {
+                    count += 1;
+                }
+                assert_eq!(count as u64, (m as u64 * b as u64) / 128, "m={m} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_magnitude_is_all_ones() {
+        assert_eq!(correlation_encode(128).popcount(), 128);
+        assert_eq!(tcu_encode(128).popcount(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn magnitude_over_128_panics() {
+        tcu_encode(129);
+    }
+}

@@ -1,0 +1,88 @@
+//! 16-bit LFSR pseudo-random stream generation — the conventional SC
+//! number generator ARTEMIS's deterministic method replaces
+//! (Section II.B: "LFSRs ... susceptible to random fluctuations").
+
+use super::stream::{BitStream, STREAM_LEN};
+
+/// Fibonacci LFSR with taps 16,15,13,4 (maximal length 2^16-1).
+#[derive(Debug, Clone)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    pub fn new(seed: u16) -> Self {
+        let mut l = Self { state: if seed == 0 { 0xACE1 } else { seed } };
+        // Warm up: low-entropy seeds (1, 2, 3, ...) otherwise leave the
+        // first dozens of samples heavily correlated with the seed value.
+        for _ in 0..32 {
+            l.next();
+        }
+        l
+    }
+
+    /// Advance one step, returning the new 16-bit state.
+    #[inline]
+    pub fn next(&mut self) -> u16 {
+        let s = self.state;
+        let bit = ((s >> 0) ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
+        self.state = (s >> 1) | (bit << 15);
+        self.state
+    }
+}
+
+/// Generate a 128-bit stochastic stream for magnitude `m` (0..=128):
+/// bit i is 1 iff the next LFSR sample (mod 128) is below `m`.
+/// Expected popcount is `m`, but individual streams fluctuate — exactly
+/// the inaccuracy source the paper cites for LFSR-based SC.
+pub fn lfsr_stream(m: u32, seed: u16) -> BitStream {
+    assert!(m <= STREAM_LEN);
+    let mut lfsr = Lfsr16::new(seed);
+    let mut s = BitStream::ZERO;
+    for i in 0..STREAM_LEN {
+        let sample = (lfsr.next() as u32) % STREAM_LEN;
+        if sample < m {
+            s.set(i, true);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfsr_is_deterministic_per_seed() {
+        assert_eq!(lfsr_stream(64, 5).words, lfsr_stream(64, 5).words);
+        assert_ne!(lfsr_stream(64, 5).words, lfsr_stream(64, 6).words);
+    }
+
+    #[test]
+    fn lfsr_has_long_period() {
+        let mut l = Lfsr16::new(1);
+        let first = l.next();
+        let mut period = 1u32;
+        while l.next() != first {
+            period += 1;
+            assert!(period < 70_000, "period too long / stuck");
+        }
+        assert!(period > 60_000, "period {period} too short for taps");
+    }
+
+    #[test]
+    fn extremes_are_exact() {
+        assert_eq!(lfsr_stream(0, 3).popcount(), 0);
+        assert_eq!(lfsr_stream(128, 3).popcount(), 128);
+    }
+
+    #[test]
+    fn popcount_tracks_magnitude_on_average() {
+        let m = 32;
+        let mean: f64 = (1..100u16)
+            .map(|s| lfsr_stream(m, s).popcount() as f64)
+            .sum::<f64>()
+            / 99.0;
+        assert!((mean - m as f64).abs() < 4.0, "mean popcount {mean} vs {m}");
+    }
+}

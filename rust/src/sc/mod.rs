@@ -1,0 +1,26 @@
+//! Bit-exact stochastic-computing (SC) substrate (Section III.A.1).
+//!
+//! ARTEMIS represents signed 8-bit values as 128-bit transition-coded-unary
+//! (TCU) streams plus a sign bit, and multiplies deterministically by
+//! AND-ing a *bit-position-correlation-encoded* stream with a plain TCU
+//! stream inside the DRAM tile (ROC-style diode rows).  This module
+//! implements those streams and operations at the bit level — every
+//! higher-level model (the JAX kernels, the simulator's functional
+//! checks) is validated against it.
+
+mod calibration;
+mod convert;
+mod encoder;
+mod lfsr;
+mod multiply;
+mod stream;
+
+pub use calibration::{
+    calibrate_multiplier, calibrate_random_multiplier, multiplier_error_stats,
+    CalibrationReport,
+};
+pub use convert::{s_to_b_popcount, u_to_b_priority, ConversionError};
+pub use encoder::{correlation_encode, tcu_encode};
+pub use lfsr::{lfsr_stream, Lfsr16};
+pub use multiply::{sc_multiply, sc_multiply_random, sc_multiply_signed, SignedCode};
+pub use stream::{BitStream, STREAM_LEN};

@@ -1,0 +1,154 @@
+//! Deterministic (and baseline random) stochastic multiplication.
+
+use super::encoder::{correlation_encode, tcu_encode};
+use super::lfsr::lfsr_stream;
+use super::stream::STREAM_LEN;
+
+/// A signed 8-bit code: magnitude in [0, 127] plus a sign bit, exactly as
+/// ARTEMIS stores it (per-row values + per-subarray sign bit-line column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignedCode {
+    pub magnitude: u32,
+    pub negative: bool,
+}
+
+impl SignedCode {
+    pub fn from_i32(v: i32) -> Self {
+        assert!(v.unsigned_abs() <= 127, "code {v} out of 8-bit range");
+        Self { magnitude: v.unsigned_abs(), negative: v < 0 }
+    }
+
+    pub fn to_i32(self) -> i32 {
+        let m = self.magnitude as i32;
+        if self.negative {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// Deterministic stochastic multiply of two magnitudes (0..=128):
+/// correlation-encode the first operand, TCU-encode the second, AND them
+/// in the computational rows, popcount the result.
+///
+/// Returns exactly `floor(a * b / 128)` — proven by the prefix property
+/// of the correlation encoder and asserted in tests over the full
+/// operand space.
+pub fn sc_multiply(a: u32, b: u32) -> u32 {
+    let ea = correlation_encode(a);
+    let eb = tcu_encode(b);
+    ea.and(&eb).popcount()
+}
+
+/// Signed deterministic multiply over 8-bit codes: magnitudes multiply in
+/// the array, signs XOR (ARTEMIS physically separates positive/negative
+/// passes — Section III.C.1 — which computes the same value).
+///
+/// Equals `trunc(a * b / 128)` (truncation toward zero), matching the
+/// python functional model (`kernels/common.py::sc_product`).
+pub fn sc_multiply_signed(a: SignedCode, b: SignedCode) -> i32 {
+    let m = sc_multiply(a.magnitude, b.magnitude) as i32;
+    if a.negative != b.negative {
+        -m
+    } else {
+        m
+    }
+}
+
+/// Baseline *random* stochastic multiply (LFSR-generated streams), the
+/// conventional SC approach ARTEMIS improves on (Section II.B).  Subject
+/// to correlation noise; used to quantify the advantage of the
+/// deterministic method in the Table V analysis.
+pub fn sc_multiply_random(a: u32, b: u32, seed: u16) -> u32 {
+    let sa = lfsr_stream(a, seed);
+    let sb = lfsr_stream(b, seed.wrapping_mul(31).wrapping_add(7));
+    sa.and(&sb).popcount()
+}
+
+/// Exact real product of two magnitudes in stream-value terms:
+/// `(a/128)*(b/128)*128 = a*b/128` (not floored) — the target the SC
+/// multiply approximates.
+pub fn exact_product_scaled(a: u32, b: u32) -> f64 {
+    (a as f64) * (b as f64) / STREAM_LEN as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_multiply_is_exact_floor_full_space() {
+        // The core theorem of the deterministic multiplier, exhaustively:
+        // popcount(corr(a) & tcu(b)) == floor(a*b/128) for ALL a, b.
+        for a in 0..=STREAM_LEN {
+            for b in 0..=STREAM_LEN {
+                let got = sc_multiply(a, b);
+                let want = (a as u64 * b as u64 / 128) as u32;
+                assert_eq!(got, want, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_multiply_truncates_toward_zero() {
+        let n5 = SignedCode::from_i32(-5);
+        let p3 = SignedCode::from_i32(3);
+        // trunc(-15/128) = 0
+        assert_eq!(sc_multiply_signed(n5, p3), 0);
+        let n100 = SignedCode::from_i32(-100);
+        let p100 = SignedCode::from_i32(100);
+        // trunc(-10000/128) = -78
+        assert_eq!(sc_multiply_signed(n100, p100), -78);
+        assert_eq!(sc_multiply_signed(n100, SignedCode::from_i32(-100)), 78);
+    }
+
+    #[test]
+    fn signed_code_roundtrip() {
+        for v in -127..=127 {
+            assert_eq!(SignedCode::from_i32(v).to_i32(), v);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn code_out_of_range_panics() {
+        SignedCode::from_i32(128);
+    }
+
+    #[test]
+    fn random_multiply_is_noisy_but_unbiased_ish() {
+        // The LFSR baseline should land near a*b/128 on average but with
+        // visible variance — the weakness the deterministic scheme fixes.
+        let (a, b) = (90, 70);
+        let exact = exact_product_scaled(a, b);
+        let mut errs = Vec::new();
+        for seed in 1..200u16 {
+            let got = sc_multiply_random(a, b, seed) as f64;
+            errs.push((got - exact).abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        let det_err = (sc_multiply(a, b) as f64 - exact).abs();
+        assert!(mean_err > det_err, "random should be worse: {mean_err} vs {det_err}");
+        assert!(mean_err < 20.0, "random should still be in the ballpark: {mean_err}");
+    }
+
+    #[test]
+    fn multiply_commutes_in_value() {
+        // The circuit is asymmetric (different encodings per operand) but
+        // the floored product is symmetric.
+        for (a, b) in [(3, 5), (127, 1), (64, 64), (100, 27)] {
+            assert_eq!(sc_multiply(a, b), sc_multiply(b, a));
+        }
+    }
+
+    #[test]
+    fn multiply_error_bounded_by_one_unit() {
+        for a in 0..=128 {
+            for b in 0..=128 {
+                let err = exact_product_scaled(a, b) - sc_multiply(a, b) as f64;
+                assert!((0.0..1.0).contains(&err), "a={a} b={b} err={err}");
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! 128-bit stochastic bit-streams stored as two machine words.
+
+/// Stream length: ARTEMIS uses 128-bit streams for 8-bit magnitudes
+/// (Section III.A.1), matching the 128 bit-lines each tile drives per
+/// S/A set.
+pub const STREAM_LEN: u32 = 128;
+
+/// A 128-bit stochastic stream.  Bit `i` of the stream is bit `i % 64`
+/// of word `i / 64`.  Bit index 0 is the "leading" end where TCU ones
+/// are grouped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BitStream {
+    pub words: [u64; 2],
+}
+
+impl BitStream {
+    pub const ZERO: Self = Self { words: [0, 0] };
+
+    #[inline]
+    pub fn get(&self, i: u32) -> bool {
+        debug_assert!(i < STREAM_LEN);
+        (self.words[(i / 64) as usize] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: u32, v: bool) {
+        debug_assert!(i < STREAM_LEN);
+        let w = &mut self.words[(i / 64) as usize];
+        if v {
+            *w |= 1u64 << (i % 64);
+        } else {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Number of ones — the value carried by the stream (hardware: the
+    /// repurposed S/As dump this as charge; digitally, a popcount unit).
+    #[inline]
+    pub fn popcount(&self) -> u32 {
+        self.words[0].count_ones() + self.words[1].count_ones()
+    }
+
+    /// Bitwise AND — the in-DRAM operation the ROC diode rows compute
+    /// between the two computational rows (Fig. 3(d)).
+    #[inline]
+    pub fn and(&self, other: &Self) -> Self {
+        Self { words: [self.words[0] & other.words[0], self.words[1] & other.words[1]] }
+    }
+
+    /// Bitwise OR (ROC also supports OR; used by tests).
+    #[inline]
+    pub fn or(&self, other: &Self) -> Self {
+        Self { words: [self.words[0] | other.words[0], self.words[1] | other.words[1]] }
+    }
+
+    /// True if all ones are contiguous from bit 0 (a valid TCU stream).
+    pub fn is_tcu(&self) -> bool {
+        let p = self.popcount();
+        // A TCU stream of magnitude p has exactly bits [0, p) set.
+        *self == super::encoder::tcu_encode(p.min(STREAM_LEN))
+    }
+
+    /// Iterate bits as bools, index 0 first.
+    pub fn bits(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..STREAM_LEN).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = BitStream::ZERO;
+        for i in [0u32, 1, 63, 64, 65, 127] {
+            s.set(i, true);
+            assert!(s.get(i));
+            s.set(i, false);
+            assert!(!s.get(i));
+        }
+    }
+
+    #[test]
+    fn popcount_counts() {
+        let mut s = BitStream::ZERO;
+        s.set(0, true);
+        s.set(64, true);
+        s.set(127, true);
+        assert_eq!(s.popcount(), 3);
+    }
+
+    #[test]
+    fn and_or_basic() {
+        let mut a = BitStream::ZERO;
+        let mut b = BitStream::ZERO;
+        a.set(5, true);
+        a.set(70, true);
+        b.set(70, true);
+        b.set(100, true);
+        assert_eq!(a.and(&b).popcount(), 1);
+        assert_eq!(a.or(&b).popcount(), 3);
+        assert!(a.and(&b).get(70));
+    }
+
+    #[test]
+    fn tcu_detection() {
+        let t = super::super::encoder::tcu_encode(17);
+        assert!(t.is_tcu());
+        let mut not_t = t;
+        not_t.set(50, true);
+        assert!(!not_t.is_tcu());
+        assert!(BitStream::ZERO.is_tcu());
+    }
+}

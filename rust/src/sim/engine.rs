@@ -1,0 +1,451 @@
+//! The core simulation loop: per-layer phase costing + pipeline roll-up.
+
+use crate::config::ArtemisConfig;
+use crate::dataflow::{layer_assignment, RingNetwork, Dataflow, Pipelining};
+use crate::energy::{power_throttle, EnergyAccount, EnergyBreakdown};
+use crate::xfmr::{Op, Workload};
+
+/// Simulation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    pub dataflow: Dataflow,
+    pub pipelining: Pipelining,
+}
+
+impl SimOptions {
+    pub fn artemis() -> Self {
+        Self { dataflow: Dataflow::Token, pipelining: Pipelining::On }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}_{}", self.dataflow, self.pipelining)
+    }
+}
+
+/// Per-phase latency breakdown, ns (sums to > total under pipelining —
+/// phases overlap).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseBreakdown {
+    /// In-array MAC steps (2-MOC multiplies + MOMCAP charge).
+    pub mac_ns: f64,
+    /// Operand placement into computation rows (latch-row refills).
+    pub placement_ns: f64,
+    /// A_to_B conversions at MOMCAP window boundaries.
+    pub conversion_ns: f64,
+    /// NSC reduction + elementwise (residual/norm/activation) work.
+    pub nsc_ns: f64,
+    /// Softmax pipeline.
+    pub softmax_ns: f64,
+    /// Intra-bank latch movement to the NSCs.
+    pub intra_move_ns: f64,
+    /// Inter-bank collectives (all-gathers / shared-bus transfers).
+    pub inter_move_ns: f64,
+    /// DRAM array writes of inter-layer activations (layer dataflow only).
+    pub relayout_ns: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn serial_total(&self) -> f64 {
+        self.mac_ns
+            + self.placement_ns
+            + self.conversion_ns
+            + self.nsc_ns
+            + self.softmax_ns
+            + self.intra_move_ns
+            + self.inter_move_ns
+            + self.relayout_ns
+    }
+
+    fn add(&mut self, o: &PhaseBreakdown) {
+        self.mac_ns += o.mac_ns;
+        self.placement_ns += o.placement_ns;
+        self.conversion_ns += o.conversion_ns;
+        self.nsc_ns += o.nsc_ns;
+        self.softmax_ns += o.softmax_ns;
+        self.intra_move_ns += o.intra_move_ns;
+        self.inter_move_ns += o.inter_move_ns;
+        self.relayout_ns += o.relayout_ns;
+    }
+}
+
+/// Simulation result for one model under one policy.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub model: String,
+    pub policy: String,
+    pub total_ns: f64,
+    pub phases: PhaseBreakdown,
+    pub energy: EnergyBreakdown,
+    /// Static (refresh/periphery) energy over the run, pJ.
+    pub static_energy_pj: f64,
+    pub total_macs: u64,
+    pub total_mocs: u64,
+}
+
+impl SimReport {
+    pub fn total_energy_pj(&self) -> f64 {
+        self.energy.total_pj() + self.static_energy_pj
+    }
+
+    pub fn total_energy_mj(&self) -> f64 {
+        self.total_energy_pj() * 1e-9
+    }
+
+    pub fn latency_ms(&self) -> f64 {
+        self.total_ns * 1e-6
+    }
+
+    /// Throughput in GOPS (2 ops per MAC).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.total_macs as f64 / self.total_ns.max(1e-9)
+    }
+
+    pub fn avg_power_w(&self) -> f64 {
+        self.total_energy_pj() * 1e-12 / (self.total_ns.max(1e-9) * 1e-9)
+    }
+
+    pub fn gops_per_w(&self) -> f64 {
+        self.gops() / self.avg_power_w().max(1e-9)
+    }
+}
+
+/// Simulate one model inference under the given policy.
+pub fn simulate(cfg: &ArtemisConfig, workload: &Workload, opts: SimOptions) -> SimReport {
+    let hbm = &cfg.hbm;
+    let t = &hbm.timing;
+    let net = RingNetwork::new(hbm);
+    let throttle = power_throttle(cfg);
+    let banks = hbm.banks_total();
+
+    // Compute parallelism per layer: the token dataflow spreads every
+    // layer across all banks (each bank owns its tokens); the layer
+    // dataflow dedicates a bank group per layer (Section III.D.1) — the
+    // dominant reason token sharding wins (Fig. 8).
+    let layer_groups = match opts.dataflow {
+        Dataflow::Token => vec![banks; workload.layers.len()],
+        Dataflow::Layer => layer_assignment(workload.layers.len() as u64, banks)
+            .into_iter()
+            .map(|g| g.len() as u64)
+            .collect(),
+    };
+
+    let mut energy = EnergyAccount::new(cfg);
+    let mut phases_total = PhaseBreakdown::default();
+    let mut total_ns = 0.0;
+    let mut total_mocs = 0u64;
+
+    let nd_bits = workload.interlayer_bits();
+    let n_tokens = workload.model.seq_len as u64;
+    let d_model = workload.model.d_model as u64;
+
+    for (li, layer) in workload.layers.iter().enumerate() {
+        let group_banks = layer_groups[li].max(1);
+        // Tokens per participating bank (ceil: stragglers set the pace).
+        let shard_tokens = n_tokens.div_ceil(match opts.dataflow {
+            Dataflow::Token => group_banks.min(n_tokens.max(1)),
+            Dataflow::Layer => 1, // whole sequence lives in the group
+        });
+
+        let mut ph = PhaseBreakdown::default();
+        // Effective MAC concurrency per bank after the power throttle.
+        let eff_subarrays =
+            (hbm.active_subarrays_per_bank() as f64 * throttle.duty).max(1.0);
+        let macs_per_step_bank = eff_subarrays * hbm.macs_per_subarray_step() as f64;
+        let window_steps = cfg.momcap.max_accumulations as f64; // steps per MOMCAP drain
+
+        for op in &layer.ops {
+            match *op {
+                Op::Matmul { m, k, n, tag } => {
+                    // Rows of the output sharded across the banks that
+                    // participate in this layer.
+                    let m_bank = match opts.dataflow {
+                        Dataflow::Token => m.div_ceil(group_banks.min(m.max(1))),
+                        Dataflow::Layer => m.div_ceil(group_banks.min(m.max(1))),
+                    };
+                    let macs_bank = m_bank * k * n;
+                    let steps = (macs_bank as f64 / macs_per_step_bank).ceil();
+                    ph.mac_ns += steps * t.mac_step_ns;
+                    total_mocs += (steps as u64) * t.mocs_per_multiply;
+
+                    // Operand placement: the moving operand must be
+                    // refilled into the computation rows each step via the
+                    // latch row (Fig. 6 stage ii).  Weight-stationary
+                    // MatMuls refill one operand; dynamic-dynamic
+                    // (QK^T, SV) refill both.
+                    let placements = if tag.contains("QK") || tag.contains("SV") {
+                        2.0
+                    } else {
+                        1.0
+                    };
+                    ph.placement_ns += steps * placements * t.write_row_ns;
+
+                    // A_to_B conversions at window boundaries; the
+                    // sign-split doubles drain events (Section III.C.1).
+                    let sign_factor = if cfg.sign_split_passes { 2.0 } else { 1.0 };
+                    let conv_events = (steps / window_steps).ceil() * sign_factor;
+                    ph.conversion_ns += conv_events * t.a_to_b_ns;
+
+                    // NSC reduction: ceil(k/window) partials per output,
+                    // one adder op each, across the bank's NSCs.
+                    let outputs_bank = m_bank * n;
+                    let partials = k.div_ceil(cfg.momcap.tile_window() as u64);
+                    let adds = outputs_bank * partials;
+                    let nsc_units = hbm.active_subarrays_per_bank() as f64;
+                    ph.nsc_ns += adds as f64 / nsc_units
+                        * (cfg.circuits.adder_subtractor.latency_ps * 1e-3);
+                    energy.charge_nsc_ops(cfg.circuits.adder_subtractor.energy_pj(), adds);
+
+                    // Intra-bank latch movement: each partial's 8 bits hop
+                    // the latch chain to its NSC.
+                    let hops = adds; // one latch hop per partial
+                    ph.intra_move_ns += hops as f64 / nsc_units
+                        * (cfg.circuits.latches.latency_ps * 1e-3);
+                    energy.charge_nsc_ops(cfg.circuits.latches.energy_pj(), hops);
+                    energy.charge_pre_gsa(adds * 8);
+
+                    // B_to_TCU conversions preparing the moving operand.
+                    let conversions = m_bank * k;
+                    energy.charge_nsc_ops(cfg.circuits.b_to_tcu.energy_pj(), conversions);
+
+                    // MAC energy is charged module-wide from the op's
+                    // total MAC count (energy doesn't depend on how the
+                    // work is spread across banks — latency does).
+                    let subarray_steps_total =
+                        (m * k * n) as f64 / hbm.macs_per_subarray_step() as f64;
+                    // 2 AAPs x 2 activations per subarray MAC step.
+                    energy.breakdown.activation_pj +=
+                        subarray_steps_total * 4.0 * hbm.energy.e_act_pj;
+                    // MOMCAP K1 charge toggles.
+                    energy.breakdown.momcap_pj += subarray_steps_total * 0.05;
+                    // A_to_B circuit energy at every window drain.
+                    let conv_events_total =
+                        subarray_steps_total / window_steps * sign_factor;
+                    energy.breakdown.conversion_pj +=
+                        conv_events_total * cfg.circuits.s_to_b.energy_pj();
+                }
+                Op::Softmax { rows, width } => {
+                    let rows_bank = rows.div_ceil(group_banks.min(rows.max(1)));
+                    let nsc_units = hbm.active_subarrays_per_bank() as f64;
+                    // Per element: comparator + exp LUT + add + final exp
+                    // LUT (ln amortized per row).
+                    let per_elem_ps = cfg.circuits.comparator.latency_ps
+                        + 2.0 * cfg.circuits.luts.latency_ps
+                        + cfg.circuits.adder_subtractor.latency_ps;
+                    let elems = rows_bank * width;
+                    ph.softmax_ns += elems as f64 / nsc_units * per_elem_ps * 1e-3;
+                    energy.charge_nsc_ops(
+                        cfg.circuits.comparator.energy_pj()
+                            + 2.0 * cfg.circuits.luts.energy_pj()
+                            + cfg.circuits.adder_subtractor.energy_pj(),
+                        elems,
+                    );
+                }
+                Op::Activation { elems, kind: _ } => {
+                    let e_bank = elems.div_ceil(group_banks.min(elems.max(1)));
+                    let nsc_units = hbm.active_subarrays_per_bank() as f64;
+                    ph.nsc_ns +=
+                        e_bank as f64 / nsc_units * cfg.circuits.luts.latency_ps * 1e-3;
+                    energy.charge_nsc_ops(cfg.circuits.luts.energy_pj(), elems);
+                }
+                Op::Residual { elems } | Op::Norm { elems } => {
+                    let e_bank = elems.div_ceil(group_banks.min(elems.max(1)));
+                    let nsc_units = hbm.active_subarrays_per_bank() as f64;
+                    ph.nsc_ns += e_bank as f64 / nsc_units
+                        * cfg.circuits.adder_subtractor.latency_ps
+                        * 1e-3;
+                    energy.charge_nsc_ops(cfg.circuits.adder_subtractor.energy_pj(), elems);
+                }
+            }
+        }
+
+        // Inter-bank movement.
+        match opts.dataflow {
+            Dataflow::Token => {
+                // All-gather the sharded K (and V) matrices (Fig. 5(b)).
+                let shard_bits = shard_tokens * d_model * 8;
+                for _ in 0..layer.attention_allgathers {
+                    let c = net.allgather(shard_bits);
+                    ph.inter_move_ns += c.latency_ns;
+                    energy.charge_post_gsa(c.bits_moved);
+                }
+            }
+            Dataflow::Layer => {
+                // Move the full activation matrix out of this layer's
+                // bank group and into the next over the single shared
+                // bus, then write it into the destination arrays.
+                let c = net.shared_bus(2 * nd_bits);
+                ph.inter_move_ns += c.latency_ns;
+                energy.charge_post_gsa(c.bits_moved);
+                // Array writes of the incoming activations.
+                let rows = nd_bits.div_ceil(hbm.subarray_row_bits());
+                ph.relayout_ns += rows as f64 * t.write_row_ns
+                    / (group_banks as f64).max(1.0);
+                energy.breakdown.activation_pj += rows as f64 * hbm.energy.e_act_pj;
+                // The attention still needs its K/V gathered within the
+                // group (same volume as token's all-gather, bus-serial).
+                for _ in 0..layer.attention_allgathers {
+                    let c = net.shared_bus(nd_bits);
+                    ph.inter_move_ns += c.latency_ns;
+                    energy.charge_post_gsa(c.bits_moved);
+                }
+            }
+        }
+
+        // Roll up the layer under the pipelining policy (Fig. 6): with
+        // execution pipelining the placement refills, conversions, NSC
+        // reduction, softmax and intra-bank movement all hide behind the
+        // MAC stream, and inter-bank movement overlaps the compute of
+        // the pipelined stages; without it everything serializes.
+        let layer_ns = match opts.pipelining {
+            Pipelining::Off => ph.serial_total(),
+            Pipelining::On => {
+                let hideable = ph.placement_ns
+                    + ph.conversion_ns
+                    + ph.nsc_ns
+                    + ph.softmax_ns
+                    + ph.intra_move_ns;
+                let compute = ph.mac_ns.max(hideable);
+                // Inter-bank transfer overlaps compute (B_to_TCU feeds
+                // operands straight into computation rows as data lands).
+                compute.max(ph.inter_move_ns) + ph.relayout_ns
+            }
+        };
+        total_ns += layer_ns;
+        phases_total.add(&ph);
+    }
+
+    // Input/output I/O: tokens in, logits/embeddings out.
+    let io_bits = n_tokens * d_model * 8 * 2;
+    energy.charge_io(io_bits);
+
+    // Capacity check: when the weight shard + resident activations
+    // exceed a bank, the inference needs multiple mapping rounds and
+    // pays the reload penalty (Section IV.E).
+    let cap = crate::dataflow::capacity_report(cfg, &workload.model);
+    if cap.mapping_rounds > 1 && cap.mapping_rounds != u64::MAX {
+        total_ns += cap.remap_latency_ns;
+        phases_total.relayout_ns += cap.remap_latency_ns;
+        energy.breakdown.io_pj += cap.remap_energy_pj;
+    }
+
+    let static_energy_pj = cfg.static_power_w * total_ns * 1e-9 / 1e-12;
+
+    SimReport {
+        model: workload.model.name.clone(),
+        policy: opts.label(),
+        total_ns,
+        phases: phases_total,
+        energy: energy.breakdown,
+        static_energy_pj,
+        total_macs: workload.total_macs(),
+        total_mocs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+    use crate::xfmr::build_workload;
+
+    fn sim(model: &str, df: Dataflow, pp: Pipelining) -> SimReport {
+        let cfg = ArtemisConfig::default();
+        let m = ModelZoo::by_name(model).unwrap();
+        let w = build_workload(&m);
+        simulate(&cfg, &w, SimOptions { dataflow: df, pipelining: pp })
+    }
+
+    #[test]
+    fn token_pp_beats_everything() {
+        let tp = sim("BERT-base", Dataflow::Token, Pipelining::On);
+        for (df, pp) in [
+            (Dataflow::Token, Pipelining::Off),
+            (Dataflow::Layer, Pipelining::On),
+            (Dataflow::Layer, Pipelining::Off),
+        ] {
+            let other = sim("BERT-base", df, pp);
+            assert!(
+                tp.total_ns < other.total_ns,
+                "token_PP {} vs {} {}",
+                tp.total_ns,
+                other.policy,
+                other.total_ns
+            );
+        }
+    }
+
+    #[test]
+    fn token_dataflow_speedup_is_order_10x() {
+        // Fig. 8: token vs layer dataflow ~11x average.
+        let t = sim("BERT-base", Dataflow::Token, Pipelining::Off);
+        let l = sim("BERT-base", Dataflow::Layer, Pipelining::Off);
+        let speedup = l.total_ns / t.total_ns;
+        assert!((5.0..25.0).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn pipelining_speedup_is_tens_of_percent() {
+        // Fig. 8: pipelining gives ~43-50%.
+        let np = sim("BERT-base", Dataflow::Token, Pipelining::Off);
+        let pp = sim("BERT-base", Dataflow::Token, Pipelining::On);
+        let s = np.total_ns / pp.total_ns;
+        assert!((1.2..2.0).contains(&s), "pipelining speedup {s}");
+    }
+
+    #[test]
+    fn token_dataflow_saves_energy() {
+        let t = sim("BERT-base", Dataflow::Token, Pipelining::On);
+        let l = sim("BERT-base", Dataflow::Layer, Pipelining::On);
+        let ratio = l.total_energy_pj() / t.total_energy_pj();
+        assert!((1.5..8.0).contains(&ratio), "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn power_stays_within_budget() {
+        let cfg = ArtemisConfig::default();
+        for m in ModelZoo::all() {
+            let w = build_workload(&m);
+            let r = simulate(&cfg, &w, SimOptions::artemis());
+            let p = r.avg_power_w();
+            assert!(p <= cfg.power_budget_w * 1.15, "{}: {p} W", m.name);
+        }
+    }
+
+    #[test]
+    fn bert_latency_in_expected_band() {
+        // Our derivation (DESIGN.md): ~10-20 ms for BERT-base at the
+        // 60 W throttle.
+        let r = sim("BERT-base", Dataflow::Token, Pipelining::On);
+        assert!(
+            (2.0..60.0).contains(&r.latency_ms()),
+            "BERT latency {} ms",
+            r.latency_ms()
+        );
+    }
+
+    #[test]
+    fn more_stacks_speed_up_long_sequences() {
+        // Fig. 12 mechanism.
+        let m = ModelZoo::opt_350();
+        let w = build_workload(&m);
+        let r1 = simulate(&ArtemisConfig::with_stacks(1), &w, SimOptions::artemis());
+        let r4 = simulate(&ArtemisConfig::with_stacks(4), &w, SimOptions::artemis());
+        assert!(r4.total_ns < r1.total_ns * 0.5, "{} vs {}", r4.total_ns, r1.total_ns);
+    }
+
+    #[test]
+    fn gops_positive_and_sane() {
+        let r = sim("BERT-base", Dataflow::Token, Pipelining::On);
+        assert!(r.gops() > 100.0, "gops {}", r.gops());
+        assert!(r.gops_per_w() > 1.0);
+        assert!(r.total_mocs > 0);
+    }
+
+    #[test]
+    fn macs_match_workload() {
+        let m = ModelZoo::bert_base();
+        let w = build_workload(&m);
+        let r = simulate(&ArtemisConfig::default(), &w, SimOptions::artemis());
+        assert_eq!(r.total_macs, w.total_macs());
+    }
+}

@@ -1,0 +1,70 @@
+//! Micro-level headline numbers the paper quotes in Sections II.E/III.A:
+//! 34 ns per stochastic multiply, 64 MACs / 48 ns per subarray, 40-MAC
+//! tile windows, 31 ns A_to_B — derived from the configured substrates so
+//! they stay consistent with whatever config is in force.
+
+use crate::config::ArtemisConfig;
+
+/// The headline micro numbers (paper claim vs this config).
+#[derive(Debug, Clone)]
+pub struct MicroHeadlines {
+    pub multiply_ns: f64,
+    pub macs_per_subarray_step: u64,
+    pub subarray_step_ns: f64,
+    pub tile_window_macs: u32,
+    pub a_to_b_ns: f64,
+    pub drisa_multiply_ns: f64,
+    /// Peak module MAC throughput before the power throttle, GMAC/s.
+    pub peak_gmacs: f64,
+    /// Sustained MAC throughput under the 60 W budget, GMAC/s.
+    pub sustained_gmacs: f64,
+}
+
+pub fn micro_headlines(cfg: &ArtemisConfig) -> MicroHeadlines {
+    let t = &cfg.hbm.timing;
+    let throttle = crate::energy::power_throttle(cfg);
+    let macs_step = cfg.hbm.macs_per_subarray_step();
+    let concurrent =
+        cfg.hbm.banks_total() as f64 * cfg.hbm.active_subarrays_per_bank() as f64;
+    let peak = concurrent * macs_step as f64 / t.mac_step_ns; // MACs per ns
+    MicroHeadlines {
+        multiply_ns: t.multiply_ns(),
+        macs_per_subarray_step: macs_step,
+        subarray_step_ns: t.mac_step_ns,
+        tile_window_macs: cfg.momcap.tile_window(),
+        a_to_b_ns: t.a_to_b_ns,
+        drisa_multiply_ns: 1600.0, // DRISA [6] per-MUL latency
+        peak_gmacs: peak,
+        sustained_gmacs: peak * throttle.duty,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headlines_match_paper() {
+        let h = micro_headlines(&ArtemisConfig::default());
+        assert_eq!(h.multiply_ns, 34.0);
+        assert_eq!(h.macs_per_subarray_step, 64);
+        assert_eq!(h.subarray_step_ns, 48.0);
+        assert_eq!(h.tile_window_macs, 40);
+        assert_eq!(h.a_to_b_ns, 31.0);
+    }
+
+    #[test]
+    fn artemis_multiply_47x_faster_than_drisa() {
+        // Section I: 34 ns vs 1600 ns.
+        let h = micro_headlines(&ArtemisConfig::default());
+        let f = h.drisa_multiply_ns / h.multiply_ns;
+        assert!((f - 47.0).abs() < 1.1, "factor {f}");
+    }
+
+    #[test]
+    fn sustained_below_peak() {
+        let h = micro_headlines(&ArtemisConfig::default());
+        assert!(h.sustained_gmacs < h.peak_gmacs);
+        assert!(h.sustained_gmacs > 100.0, "sustained {}", h.sustained_gmacs);
+    }
+}

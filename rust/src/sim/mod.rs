@@ -1,0 +1,15 @@
+//! The ARTEMIS performance/energy simulator engine.
+//!
+//! Maps a transformer workload (`xfmr`) onto the architecture (`config`)
+//! under a dataflow/pipelining policy (`dataflow`) and produces latency +
+//! energy with per-phase breakdowns.  The cost model is derived from the
+//! bit-level substrates: MAC steps from the tile/subarray model, A_to_B
+//! windows from the MOMCAP model, NSC costs from Table III, movement from
+//! the ring-network model.  Modeling decisions that fill gaps the paper
+//! leaves open are documented in DESIGN.md §Modeling-decisions.
+
+mod engine;
+mod micro;
+
+pub use engine::{simulate, PhaseBreakdown, SimOptions, SimReport};
+pub use micro::{micro_headlines, MicroHeadlines};

@@ -1,0 +1,31 @@
+//! Timing roll-up: MOC accounting and the execution-pipeline model that
+//! distinguishes the paper's `_NP` (no pipelining) and `_PP` (pipelined)
+//! configurations (Section III.D.3, Fig. 6).
+
+mod pipeline;
+
+pub use pipeline::{Pipeline, Stage};
+
+/// Nanoseconds, the simulator's base time unit.
+pub type Ns = f64;
+
+/// Convert ns to ms for reporting.
+pub fn ns_to_ms(ns: Ns) -> f64 {
+    ns * 1e-6
+}
+
+/// Convert ns to seconds.
+pub fn ns_to_s(ns: Ns) -> f64 {
+    ns * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(ns_to_ms(1_000_000.0), 1.0);
+        assert_eq!(ns_to_s(1_000_000_000.0), 1.0);
+    }
+}

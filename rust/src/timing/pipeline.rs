@@ -1,0 +1,143 @@
+//! The pipeline roll-up model (Fig. 6).
+//!
+//! ARTEMIS overlaps (i) in-situ MACs, (ii) latch-row data movement,
+//! (iii) NSC reduction — and at the layer level overlaps inter-bank
+//! movement with B_to_TCU conversion, softmax, and the next MatMul.
+//! The `_NP` configurations execute the same stages back-to-back.
+//!
+//! We model a pipeline as a sequence of stages with per-item service
+//! times.  For `n` items flowing through stages with service times
+//! `t_1..t_k`:
+//!   * no pipelining: `n * sum(t_i)`
+//!   * pipelined:     `sum(t_i) + (n-1) * max(t_i)`  (classic fill+drain)
+
+use super::Ns;
+
+/// One pipeline stage: a label plus per-item service time.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: &'static str,
+    pub service_ns: Ns,
+}
+
+impl Stage {
+    pub fn new(name: &'static str, service_ns: Ns) -> Self {
+        assert!(service_ns >= 0.0, "negative service time");
+        Self { name, service_ns }
+    }
+}
+
+/// A linear pipeline of stages.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline {
+    stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stage(mut self, name: &'static str, service_ns: Ns) -> Self {
+        self.stages.push(Stage::new(name, service_ns));
+        self
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Per-item latency through all stages.
+    pub fn item_latency_ns(&self) -> Ns {
+        self.stages.iter().map(|s| s.service_ns).sum()
+    }
+
+    /// Bottleneck stage service time.
+    pub fn bottleneck_ns(&self) -> Ns {
+        self.stages
+            .iter()
+            .map(|s| s.service_ns)
+            .fold(0.0, f64::max)
+    }
+
+    /// Total time for `n` items with NO pipelining (Fig. 8 `_NP`).
+    pub fn total_sequential_ns(&self, n: u64) -> Ns {
+        n as f64 * self.item_latency_ns()
+    }
+
+    /// Total time for `n` items with pipelining (Fig. 8 `_PP`):
+    /// fill + (n-1) beats at the bottleneck.
+    pub fn total_pipelined_ns(&self, n: u64) -> Ns {
+        if n == 0 {
+            return 0.0;
+        }
+        self.item_latency_ns() + (n - 1) as f64 * self.bottleneck_ns()
+    }
+
+    /// Pipelining speedup for `n` items.
+    pub fn speedup(&self, n: u64) -> f64 {
+        let p = self.total_pipelined_ns(n);
+        if p == 0.0 {
+            return 1.0;
+        }
+        self.total_sequential_ns(n) / p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_stage() -> Pipeline {
+        Pipeline::new()
+            .stage("mac", 48.0)
+            .stage("latch-move", 10.0)
+            .stage("nsc-reduce", 20.0)
+    }
+
+    #[test]
+    fn sequential_is_n_times_sum() {
+        let p = three_stage();
+        assert_eq!(p.total_sequential_ns(10), 10.0 * 78.0);
+    }
+
+    #[test]
+    fn pipelined_is_fill_plus_beats() {
+        let p = three_stage();
+        assert_eq!(p.total_pipelined_ns(10), 78.0 + 9.0 * 48.0);
+    }
+
+    #[test]
+    fn pipelined_never_slower() {
+        let p = three_stage();
+        for n in [0u64, 1, 2, 100, 10_000] {
+            assert!(p.total_pipelined_ns(n) <= p.total_sequential_ns(n) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_item_same_latency() {
+        let p = three_stage();
+        assert_eq!(p.total_pipelined_ns(1), p.total_sequential_ns(1));
+    }
+
+    #[test]
+    fn speedup_approaches_sum_over_max() {
+        let p = three_stage();
+        let s = p.speedup(100_000);
+        assert!((s - 78.0 / 48.0).abs() < 0.01, "s={s}");
+    }
+
+    #[test]
+    fn zero_items() {
+        let p = three_stage();
+        assert_eq!(p.total_pipelined_ns(0), 0.0);
+        assert_eq!(p.total_sequential_ns(0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_service_time_panics() {
+        Stage::new("bad", -1.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny property-testing harness (offline substitute for `proptest`).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` deterministic random
+//! inputs produced by a [`Gen`]; on failure it reports the case index and
+//! seed so the exact input can be replayed.
+
+use super::XorShift64;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: XorShift64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift64::new(seed) }
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.unit()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.unit() * (hi - lo)
+    }
+
+    pub fn code(&mut self) -> i32 {
+        self.rng.code()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_codes(&mut self, len: usize) -> Vec<i32> {
+        (0..len).map(|_| self.code()).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run a property over `cases` generated inputs; panics with a replayable
+/// seed on the first failure.
+pub fn check<F: FnMut(&mut Gen)>(cases: u64, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(50, 1, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        check(50, 2, |g| {
+            let v = g.u64_below(10);
+            assert!(v < 9, "hit the failing value");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(3);
+        for _ in 0..100 {
+            let x = g.usize_in(5, 9);
+            assert!((5..=9).contains(&x));
+            let f = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.vec_codes(10), b.vec_codes(10));
+    }
+}

@@ -1,0 +1,110 @@
+//! Autoregressive decoding workloads.
+//!
+//! The paper's decoder "iteratively generates a single output while
+//! incorporating the preceding outputs" (Section II.A).  This module
+//! models that regime explicitly: per generated token the decoder runs
+//! its layers with a single query row against a growing key/value
+//! context (the PIM analogue of a KV cache — each bank keeps the K/V of
+//! its token shard resident, so only the new token's K/V row moves).
+
+use super::ops::{ActKind, LayerOps, Op, Workload};
+use crate::config::TransformerModel;
+
+/// One decode step's workload: `ctx` tokens of context, one new token.
+pub fn decode_step_workload(model: &TransformerModel, ctx: u64) -> Workload {
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+    let ctx = ctx.max(1);
+
+    let mut layers = Vec::with_capacity(model.layers as usize);
+    for _ in 0..model.layers {
+        layers.push(LayerOps {
+            ops: vec![
+                // New token's projections only (cached K/V for the rest).
+                Op::Matmul { m: 1, k: d, n: d, tag: "Wq" },
+                Op::Matmul { m: 1, k: d, n: d, tag: "Wk" },
+                Op::Matmul { m: 1, k: d, n: d, tag: "Wv" },
+                // One query row against the whole context, per head.
+                Op::Matmul { m: h, k: dh, n: ctx, tag: "QK^T" },
+                Op::Softmax { rows: h, width: ctx },
+                Op::Matmul { m: h, k: ctx, n: dh, tag: "SV" },
+                Op::Matmul { m: 1, k: d, n: d, tag: "Wo" },
+                Op::Residual { elems: d },
+                Op::Norm { elems: d },
+                Op::Matmul { m: 1, k: d, n: f, tag: "FF1" },
+                Op::Activation { elems: f, kind: act },
+                Op::Matmul { m: 1, k: f, n: d, tag: "FF2" },
+                Op::Residual { elems: d },
+                Op::Norm { elems: d },
+            ],
+            // Only the new token's K/V row is broadcast to the banks
+            // holding the attention shards (not a full all-gather).
+            attention_allgathers: 0,
+        });
+    }
+    let mut m = model.clone();
+    m.seq_len = 1;
+    m.name = format!("{}@decode", model.name);
+    Workload { model: m, layers }
+}
+
+/// Full generation trace: prefill of `prompt` tokens (one encoder-style
+/// pass) followed by `gen` decode steps.  Returns (prefill, steps).
+pub fn generation_workloads(
+    model: &TransformerModel,
+    prompt: u64,
+    gen: u64,
+) -> (Workload, Vec<Workload>) {
+    let mut prefill_model = model.clone();
+    prefill_model.seq_len = prompt.max(1) as u32;
+    let prefill = super::build_workload(&prefill_model);
+    let steps = (0..gen)
+        .map(|t| decode_step_workload(model, prompt + t))
+        .collect();
+    (prefill, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    #[test]
+    fn decode_step_macs_scale_linearly_in_context() {
+        let m = ModelZoo::opt_350();
+        let a = decode_step_workload(&m, 256).total_macs();
+        let b = decode_step_workload(&m, 2048).total_macs();
+        // The context-dependent part (QK^T + SV) grows 8x; projections
+        // and FFN are context-free, so total growth is between 1x and 8x.
+        assert!(b > a);
+        assert!(b < a * 8);
+    }
+
+    #[test]
+    fn decode_step_is_much_cheaper_than_full_pass() {
+        let m = ModelZoo::opt_350();
+        let full = super::super::build_workload(&m).total_macs();
+        let step = decode_step_workload(&m, m.seq_len as u64).total_macs();
+        assert!(step * 100 < full, "step {step} vs full {full}");
+    }
+
+    #[test]
+    fn generation_trace_has_prompt_and_steps() {
+        let m = ModelZoo::transformer_base();
+        let (prefill, steps) = generation_workloads(&m, 64, 16);
+        assert_eq!(steps.len(), 16);
+        assert_eq!(prefill.model.seq_len, 64);
+        // later steps see more context
+        assert!(steps[15].total_macs() > steps[0].total_macs());
+    }
+
+    #[test]
+    fn zero_context_is_clamped() {
+        let m = ModelZoo::opt_350();
+        let w = decode_step_workload(&m, 0);
+        assert!(w.total_macs() > 0);
+    }
+}

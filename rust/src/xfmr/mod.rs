@@ -1,0 +1,147 @@
+//! Transformer workload graphs: decompose a Table II model into the op
+//! sequence the accelerator executes (Section II.A / Fig. 1).
+
+mod decode;
+mod ops;
+
+pub use decode::{decode_step_workload, generation_workloads};
+pub use ops::{ActKind, LayerOps, Op, Workload};
+
+use crate::config::{Arch, TransformerModel};
+
+/// Build the full inference workload for a model.
+pub fn build_workload(model: &TransformerModel) -> Workload {
+    let n = model.seq_len as u64;
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+
+    let mut layers = Vec::new();
+    let encoder_layers = model.layers as usize;
+
+    // One encoder layer (Fig. 1 left block).
+    let enc_layer = |causal: bool| -> LayerOps {
+        let score_n = if causal { n.div_ceil(2) } else { n };
+        LayerOps {
+            ops: vec![
+                // Q, K, V projections.
+                Op::Matmul { m: n, k: d, n: d, tag: "Wq" },
+                Op::Matmul { m: n, k: d, n: d, tag: "Wk" },
+                Op::Matmul { m: n, k: d, n: d, tag: "Wv" },
+                // Attention scores QK^T per head (causal halves the work).
+                Op::Matmul { m: n * h, k: dh, n: score_n, tag: "QK^T" },
+                Op::Softmax { rows: n * h, width: score_n },
+                // Attention output S x V per head.
+                Op::Matmul { m: n * h, k: score_n, n: dh, tag: "SV" },
+                // Output projection.
+                Op::Matmul { m: n, k: d, n: d, tag: "Wo" },
+                Op::Residual { elems: n * d },
+                Op::Norm { elems: n * d },
+                // FFN.
+                Op::Matmul { m: n, k: d, n: f, tag: "FF1" },
+                Op::Activation { elems: n * f, kind: act },
+                Op::Matmul { m: n, k: f, n: d, tag: "FF2" },
+                Op::Residual { elems: n * d },
+                Op::Norm { elems: n * d },
+            ],
+            // K and V shards must be all-gathered across banks for the
+            // attention (Fig. 5(b) rounds 3-4, repeated for V).
+            attention_allgathers: 2,
+        }
+    };
+
+    match model.arch {
+        Arch::EncoderOnly | Arch::Vit => {
+            for _ in 0..encoder_layers {
+                layers.push(enc_layer(false));
+            }
+        }
+        Arch::DecoderOnly => {
+            for _ in 0..encoder_layers {
+                layers.push(enc_layer(true));
+            }
+        }
+        Arch::EncoderDecoder => {
+            for _ in 0..encoder_layers {
+                layers.push(enc_layer(false));
+            }
+            // Decoder layers: causal self-attention + cross-attention +
+            // FFN.  Cross-attention adds one more score/SV/proj group.
+            for _ in 0..encoder_layers {
+                let mut l = enc_layer(true);
+                l.ops.extend_from_slice(&[
+                    Op::Matmul { m: n, k: d, n: d, tag: "xWq" },
+                    Op::Matmul { m: n, k: d, n: d, tag: "xWk" },
+                    Op::Matmul { m: n, k: d, n: d, tag: "xWv" },
+                    Op::Matmul { m: n * h, k: dh, n, tag: "xQK^T" },
+                    Op::Softmax { rows: n * h, width: n },
+                    Op::Matmul { m: n * h, k: n, n: dh, tag: "xSV" },
+                    Op::Matmul { m: n, k: d, n: d, tag: "xWo" },
+                    Op::Residual { elems: n * d },
+                    Op::Norm { elems: n * d },
+                ]);
+                l.attention_allgathers += 2;
+                layers.push(l);
+            }
+        }
+    }
+
+    Workload { model: model.clone(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    #[test]
+    fn bert_macs_match_analytic_formula() {
+        let m = ModelZoo::bert_base();
+        let w = build_workload(&m);
+        let macs = w.total_macs();
+        // Analytic: L * (4*N*D^2 + 2*N^2*D + 2*N*D*F)
+        let (l, n, d, f) = (12u64, 128u64, 768u64, 3072u64);
+        let want = l * (4 * n * d * d + 2 * n * n * d + 2 * n * d * f);
+        assert_eq!(macs, want);
+    }
+
+    #[test]
+    fn encoder_decoder_has_double_layers() {
+        let m = ModelZoo::transformer_base();
+        let w = build_workload(&m);
+        assert_eq!(w.layers.len(), 2 * m.layers as usize);
+    }
+
+    #[test]
+    fn causal_scores_halved() {
+        let full = ModelZoo::bert_base();
+        let mut causal = full.clone();
+        causal.arch = crate::config::Arch::DecoderOnly;
+        let wf = build_workload(&full);
+        let wc = build_workload(&causal);
+        assert!(wc.total_macs() < wf.total_macs());
+    }
+
+    #[test]
+    fn opt_is_biggest_workload() {
+        let all = ModelZoo::all();
+        let macs: Vec<u64> = all.iter().map(|m| build_workload(m).total_macs()).collect();
+        let opt_idx = 4;
+        for (i, &v) in macs.iter().enumerate() {
+            if i != opt_idx {
+                assert!(macs[opt_idx] > v, "OPT should dominate: {macs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_layer_has_softmax_and_ffn() {
+        let w = build_workload(&ModelZoo::bert_base());
+        for l in &w.layers {
+            assert!(l.ops.iter().any(|o| matches!(o, Op::Softmax { .. })));
+            assert!(l.ops.iter().any(|o| matches!(o, Op::Matmul { tag: "FF1", .. })));
+        }
+    }
+}

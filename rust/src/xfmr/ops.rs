@@ -1,0 +1,108 @@
+//! Op vocabulary for transformer workloads.
+
+use crate::config::TransformerModel;
+
+/// Nonlinear activation kinds the NSC LUTs realize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    Gelu,
+}
+
+/// One accelerator-level operation with full dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Dense MatMul: (m x k) . (k x n).  `tag` names the paper's op
+    /// (Wq/Wk/Wv/QK^T/SV/Wo/FF1/FF2, x-prefixed for cross-attention).
+    Matmul { m: u64, k: u64, n: u64, tag: &'static str },
+    /// Softmax over `rows` rows of `width` (NSC log-sum-exp pipeline).
+    Softmax { rows: u64, width: u64 },
+    /// Elementwise activation through the NSC LUTs.
+    Activation { elems: u64, kind: ActKind },
+    /// Residual add (NSC adders).
+    Residual { elems: u64 },
+    /// Layer norm (NSC adders + LUTs for rsqrt).
+    Norm { elems: u64 },
+}
+
+impl Op {
+    /// MAC count of this op (0 for non-MatMul ops).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Op::Matmul { m, k, n, .. } => m * k * n,
+            _ => 0,
+        }
+    }
+
+    /// Output element count.
+    pub fn out_elems(&self) -> u64 {
+        match self {
+            Op::Matmul { m, n, .. } => m * n,
+            Op::Softmax { rows, width } => rows * width,
+            Op::Activation { elems, .. } | Op::Residual { elems } | Op::Norm { elems } => *elems,
+        }
+    }
+
+    pub fn is_matmul(&self) -> bool {
+        matches!(self, Op::Matmul { .. })
+    }
+}
+
+/// One transformer layer's ops plus its inter-bank collective count.
+#[derive(Debug, Clone)]
+pub struct LayerOps {
+    pub ops: Vec<Op>,
+    /// All-gathers of sharded K/V matrices needed by the attention under
+    /// the token dataflow (2 for self-attention: K and V).
+    pub attention_allgathers: u32,
+}
+
+impl LayerOps {
+    pub fn macs(&self) -> u64 {
+        self.ops.iter().map(Op::macs).sum()
+    }
+}
+
+/// The complete inference workload of one model.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: TransformerModel,
+    pub layers: Vec<LayerOps>,
+}
+
+impl Workload {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(LayerOps::macs).sum()
+    }
+
+    /// Total ops for GOPS reporting (2 ops per MAC, paper convention).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Activation footprint moved between consecutive layers (bits),
+    /// for the layer-based dataflow cost: N x D values at 8-bit.
+    pub fn interlayer_bits(&self) -> u64 {
+        self.model.seq_len as u64 * self.model.d_model as u64 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_macs() {
+        let op = Op::Matmul { m: 4, k: 5, n: 6, tag: "t" };
+        assert_eq!(op.macs(), 120);
+        assert_eq!(op.out_elems(), 24);
+        assert!(op.is_matmul());
+    }
+
+    #[test]
+    fn non_matmul_macs_zero() {
+        assert_eq!(Op::Softmax { rows: 3, width: 7 }.macs(), 0);
+        assert_eq!(Op::Residual { elems: 9 }.macs(), 0);
+        assert_eq!(Op::Softmax { rows: 3, width: 7 }.out_elems(), 21);
+    }
+}

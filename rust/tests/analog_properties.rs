@@ -1,0 +1,85 @@
+//! Property tests over the analog substrate (MOMCAP + conversion).
+
+use artemis::analog::{a_to_b, momcap_staircase, AtoBConfig, MomCap};
+use artemis::util::prop::check;
+
+#[test]
+fn prop_voltage_monotone_nondecreasing() {
+    check(200, 0x20, |g| {
+        let c = g.f64_in(2.0, 48.0);
+        let mut cap = MomCap::new(c);
+        let mut last = 0.0;
+        for _ in 0..60 {
+            cap.accumulate(g.u64_below(129) as u32);
+            assert!(cap.voltage() >= last - 1e-12);
+            last = cap.voltage();
+        }
+    });
+}
+
+#[test]
+fn prop_linear_region_readout_exact() {
+    check(200, 0x21, |g| {
+        let mut cap = MomCap::new(8.0);
+        let window = cap.max_accumulations();
+        let steps = 1 + g.u64_below(window as u64) as u32;
+        for _ in 0..steps {
+            cap.accumulate(g.u64_below(129) as u32);
+        }
+        let err = (cap.readout_units() - cap.ideal_units() as f64).abs();
+        assert!(err < 0.5, "err={err} steps={steps}");
+    });
+}
+
+#[test]
+fn prop_noiseless_a_to_b_exact_in_window() {
+    let cfg = AtoBConfig { offset_noise: 0.0, ..Default::default() };
+    check(200, 0x22, |g| {
+        let mut cap = MomCap::new(8.0);
+        let steps = 1 + g.u64_below(20) as u32;
+        for _ in 0..steps {
+            cap.accumulate(g.u64_below(129) as u32);
+        }
+        let got = a_to_b(&cap, &cfg, None) as i64;
+        let want = cap.ideal_units() as i64;
+        assert!((got - want).abs() <= 1, "got={got} want={want}");
+    });
+}
+
+#[test]
+fn prop_capacitance_monotone_window() {
+    check(50, 0x23, |g| {
+        let c1 = g.f64_in(2.0, 20.0);
+        let c2 = c1 + g.f64_in(1.0, 20.0);
+        let w1 = MomCap::new(c1).max_accumulations();
+        let w2 = MomCap::new(c2).max_accumulations();
+        assert!(w2 >= w1, "c1={c1} w1={w1} c2={c2} w2={w2}");
+    });
+}
+
+#[test]
+fn prop_staircase_linear_count_matches_capacity() {
+    check(30, 0x24, |g| {
+        let c = g.f64_in(4.0, 40.0);
+        let s = momcap_staircase(c, 150);
+        let expect = MomCap::new(c).max_accumulations();
+        let diff = s.max_linear_accumulations as i64 - expect as i64;
+        assert!(diff.abs() <= 1, "c={c} staircase={} capacity={expect}", s.max_linear_accumulations);
+    });
+}
+
+#[test]
+fn prop_reset_restores_full_window() {
+    check(100, 0x25, |g| {
+        let mut cap = MomCap::new(8.0);
+        for _ in 0..g.u64_below(40) {
+            cap.accumulate(g.u64_below(129) as u32);
+        }
+        cap.reset();
+        for _ in 0..cap.max_accumulations() {
+            cap.accumulate(128);
+        }
+        let err = (cap.readout_units() - cap.ideal_units() as f64).abs();
+        assert!(err < 0.5, "window not restored: {err}");
+    });
+}

@@ -1,0 +1,201 @@
+//! Coordinator integration: serving through the PJRT artifacts with
+//! batching, multi-producer channels, and functional scoring.
+//!
+//! Uses the fp32/q8 artifacts (fast XLA compiles); the q8sc variant is
+//! exercised by `examples/end_to_end.rs`.
+
+use artemis::config::ArtemisConfig;
+use artemis::coordinator::{synth_eval_batch, Coordinator, InferenceRequest};
+use artemis::runtime::ArtifactRegistry;
+use artemis::util::XorShift64;
+
+fn registry() -> Option<ArtifactRegistry> {
+    match ArtifactRegistry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping coordinator tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn serves_all_requests_exactly_once() {
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let mut coord = Coordinator::new(&mut reg, &cfg, "fp32").expect("coordinator");
+    let seq = coord.seq_len();
+    let mut rng = XorShift64::new(1);
+    let n = 37; // deliberately not a batch multiple
+    let requests: Vec<InferenceRequest> = (0..n)
+        .map(|id| InferenceRequest {
+            id,
+            tokens: (0..seq).map(|_| rng.below(32) as f32).collect(),
+            enqueued_ns: 0,
+        })
+        .collect();
+    let (responses, stats) = coord.serve_all(requests).expect("serve");
+    assert_eq!(responses.len(), n as usize);
+    assert_eq!(stats.requests, n);
+    // every id exactly once
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n as usize);
+    // padding only on the last batch
+    assert_eq!(stats.padded_rows as usize, (8 - (n as usize % 8)) % 8);
+    assert!(stats.sim_total_ns > 0.0);
+    assert!(stats.sim_total_pj > 0.0);
+}
+
+#[test]
+fn trained_model_beats_chance_through_serving_path() {
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let mut coord = Coordinator::new(&mut reg, &cfg, "fp32").expect("coordinator");
+    let seq = coord.seq_len();
+    let mut rng = XorShift64::new(9);
+    let mut labels = Vec::new();
+    let requests: Vec<InferenceRequest> = (0..256u64)
+        .map(|id| {
+            let tokens: Vec<f32> = (0..seq).map(|_| rng.below(32) as f32).collect();
+            let ones = tokens.iter().filter(|&&t| t == 1.0).count();
+            let twos = tokens.iter().filter(|&&t| t == 2.0).count();
+            labels.push(usize::from(ones > twos));
+            InferenceRequest { id, tokens, enqueued_ns: 0 }
+        })
+        .collect();
+    let (responses, _) = coord.serve_all(requests).expect("serve");
+    let correct = responses
+        .iter()
+        .filter(|r| r.predicted == labels[r.id as usize])
+        .count();
+    let acc = correct as f64 / responses.len() as f64;
+    assert!(acc > 0.7, "serving-path accuracy {acc}");
+}
+
+#[test]
+fn producers_on_other_threads() {
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let mut coord = Coordinator::new(&mut reg, &cfg, "fp32").expect("coordinator");
+    let seq = coord.seq_len();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producers: Vec<_> = (0..4u64)
+        .map(|p| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(p + 100);
+                for i in 0..16u64 {
+                    tx.send(InferenceRequest {
+                        id: p * 16 + i,
+                        tokens: (0..seq).map(|_| rng.below(32) as f32).collect(),
+                        enqueued_ns: 0,
+                    })
+                    .unwrap();
+                }
+            })
+        })
+        .collect();
+    drop(tx);
+    let (responses, stats) = coord.serve(rx).expect("serve");
+    for p in producers {
+        p.join().unwrap();
+    }
+    assert_eq!(responses.len(), 64);
+    assert_eq!(stats.batches, 8);
+    assert_eq!(stats.padded_rows, 0);
+}
+
+#[test]
+fn q8_and_fp32_mostly_agree_on_predictions() {
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let tiny = reg.tiny_config().unwrap().clone();
+
+    let mut rng = XorShift64::new(0x51);
+    let (tokens, _) = synth_eval_batch(&mut rng, tiny.batch, tiny.seq_len, tiny.vocab);
+
+    let fp32 = reg.load("tiny_fp32").unwrap();
+    let q8 = reg.load("tiny_q8").unwrap();
+    let l32 = fp32.run_f32(&[tokens.clone()]).unwrap();
+    let l8 = q8.run_f32(&[tokens]).unwrap();
+    let mut agree = 0;
+    for i in 0..tiny.batch {
+        let am = |l: &[f32]| {
+            let row = &l[i * tiny.n_classes..(i + 1) * tiny.n_classes];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        agree += usize::from(am(&l32) == am(&l8));
+    }
+    assert!(agree >= tiny.batch - 1, "q8 disagreed on {} of {}", tiny.batch - agree, tiny.batch);
+}
+
+#[test]
+fn token_placement_covers_sequence() {
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let mut coord = Coordinator::new(&mut reg, &cfg, "fp32").expect("coordinator");
+    let seq = coord.seq_len();
+    let requests: Vec<InferenceRequest> = (0..8u64)
+        .map(|id| InferenceRequest {
+            id,
+            tokens: vec![0.0; seq],
+            enqueued_ns: 0,
+        })
+        .collect();
+    let (_, stats) = coord.serve_all(requests).expect("serve");
+    let total_tokens: u64 = stats.tokens_per_bank.iter().sum();
+    assert_eq!(total_tokens, seq as u64 * 8);
+}
+
+#[test]
+fn router_dispatches_mixed_variants() {
+    use artemis::coordinator::{RoutedRequest, Router};
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    // fp32 + q8 only (q8sc compiles take minutes; exercised elsewhere).
+    let mut router = Router::new(&mut reg, &cfg, &["fp32", "q8"]).expect("router");
+    let seq = router.seq_len();
+    let mut rng = XorShift64::new(77);
+    let requests: Vec<RoutedRequest> = (0..48u64)
+        .map(|id| RoutedRequest {
+            variant: if id % 3 == 0 { "q8".into() } else { "fp32".into() },
+            request: InferenceRequest {
+                id,
+                tokens: (0..seq).map(|_| rng.below(32) as f32).collect(),
+                enqueued_ns: 0,
+            },
+        })
+        .collect();
+    let (responses, outcomes) = router.route_all(requests).expect("route");
+    assert_eq!(responses.len(), 48);
+    assert_eq!(outcomes.len(), 2);
+    let by_variant: std::collections::HashMap<_, _> = outcomes
+        .iter()
+        .map(|o| (o.variant.as_str(), o.stats.requests))
+        .collect();
+    assert_eq!(by_variant["q8"], 16);
+    assert_eq!(by_variant["fp32"], 32);
+    for o in &outcomes {
+        assert!(o.exec_percentiles.p50 <= o.exec_percentiles.p99);
+        assert!(o.exec_percentiles.max > 0);
+    }
+}
+
+#[test]
+fn router_rejects_unknown_variant() {
+    use artemis::coordinator::{RoutedRequest, Router};
+    let Some(mut reg) = registry() else { return };
+    let cfg = ArtemisConfig::default();
+    let mut router = Router::new(&mut reg, &cfg, &["fp32"]).expect("router");
+    let bad = vec![RoutedRequest {
+        variant: "int4".into(),
+        request: InferenceRequest { id: 0, tokens: vec![0.0; router.seq_len()], enqueued_ns: 0 },
+    }];
+    assert!(router.route_all(bad).is_err());
+}

@@ -1,0 +1,134 @@
+//! Cross-layer validation: the AOT artifacts (L1 Pallas kernels lowered
+//! through L2 jax) must agree bit-for-bit with the rust bit-exact SC
+//! substrate (L3).  This is the strongest correctness statement in the
+//! repo: three independent implementations of the ARTEMIS arithmetic —
+//! python/jnp oracle, Pallas kernel, rust TCU streams — give identical
+//! numbers.
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) if the
+//! artifacts directory is absent so `cargo test` works pre-build.
+
+use artemis::runtime::ArtifactRegistry;
+use artemis::sc::sc_multiply;
+use artemis::util::XorShift64;
+
+fn registry() -> Option<ArtifactRegistry> {
+    match ArtifactRegistry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping cross-layer tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// The rust reference: quantize like the python `common.py`, multiply
+/// through the bit-exact TCU streams, dequantize.
+fn artemis_matmul_rust(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let amax = a.iter().fold(0f32, |x, y| x.max(y.abs())).max(1e-12);
+    let bmax = b.iter().fold(0f32, |x, y| x.max(y.abs())).max(1e-12);
+    let (sa, sb) = (amax / 127.0, bmax / 127.0);
+    let q = |x: f32, s: f32| (x / s).round_ties_even().clamp(-127.0, 127.0) as i32;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                let qa = q(a[i * k + kk], sa);
+                let qb = q(b[kk * n + j], sb);
+                let p = sc_multiply(qa.unsigned_abs(), qb.unsigned_abs()) as i64;
+                acc += if (qa < 0) != (qb < 0) { -p } else { p };
+            }
+            out[i * n + j] = acc as f32 * sa * sb * 128.0;
+        }
+    }
+    out
+}
+
+#[test]
+fn kernel_artifacts_match_rust_bit_exact_sc() {
+    let Some(mut reg) = registry() else { return };
+    for (name, m, k, n) in [
+        ("sc_matmul_8x16x8", 8usize, 16usize, 8usize),
+        ("sc_matmul_16x64x32", 16, 64, 32),
+        ("sc_matmul_32x128x64", 32, 128, 64),
+    ] {
+        let model = reg.load(name).expect("artifact loads");
+        for seed in 0..3u64 {
+            let mut rng = XorShift64::new(seed * 31 + 7);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let got = model.run_f32(&[a.clone(), b.clone()]).expect("runs");
+            let want = artemis_matmul_rust(&a, &b, m, k, n);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let tol = 1e-4 * w.abs().max(1.0);
+                assert!(
+                    (g - w).abs() < tol,
+                    "{name} seed={seed} elem {i}: pallas {g} vs rust {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_variants_rank_by_fidelity() {
+    // fp32 and q8 logits should be close; q8sc close-ish; all argmax
+    // mostly agreeing — the Table IV structure.
+    let Some(mut reg) = registry() else { return };
+    let tiny = reg.tiny_config().unwrap().clone();
+    let fp32 = reg.load("tiny_fp32").expect("fp32");
+    let q8 = reg.load("tiny_q8").expect("q8");
+
+    let mut rng = XorShift64::new(0xCAFE);
+    let toks: Vec<f32> = (0..tiny.batch * tiny.seq_len)
+        .map(|_| rng.below(tiny.vocab as u64) as f32)
+        .collect();
+    let l32 = fp32.run_f32(&[toks.clone()]).unwrap();
+    let l8 = q8.run_f32(&[toks.clone()]).unwrap();
+    let max_diff = l32
+        .iter()
+        .zip(&l8)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    let scale = l32.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    assert!(
+        max_diff < 0.35 * scale.max(1.0),
+        "q8 drifted from fp32: {max_diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn encoder_artifact_runs_at_declared_shapes() {
+    let Some(mut reg) = registry() else { return };
+    let enc = reg.load("encoder_q8").expect("encoder");
+    let shapes = enc.input_shapes.clone();
+    let mut rng = XorShift64::new(5);
+    let ins: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|s| (0..s.iter().product()).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect();
+    let out = enc.run_f32(&ins).expect("encoder runs");
+    assert_eq!(out.len(), shapes[0].iter().product::<usize>());
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(reg) = registry() else { return };
+    let names = reg.names();
+    for required in [
+        "tiny_fp32",
+        "tiny_q8",
+        "tiny_q8sc",
+        "encoder_q8",
+        "encoder_q8sc",
+        "sc_matmul_8x16x8",
+    ] {
+        assert!(names.iter().any(|n| n == required), "missing {required}: {names:?}");
+    }
+    let tiny = reg.tiny_config().unwrap();
+    assert_eq!(tiny.seq_len, 16);
+    assert_eq!(tiny.n_classes, 2);
+    assert!(tiny.batch > 0);
+}

@@ -1,0 +1,88 @@
+//! Property tests over sharding and the inter-bank network.
+
+use artemis::config::HbmConfig;
+use artemis::dataflow::{layer_assignment, token_shards, RingNetwork, Shard};
+use artemis::util::prop::check;
+
+#[test]
+fn prop_token_shards_partition() {
+    check(500, 0x30, |g| {
+        let n = g.u64_below(5000);
+        let k = 1 + g.u64_below(256);
+        let shards = token_shards(n, k);
+        assert_eq!(shards.len(), k as usize);
+        // exact cover, in order, no overlap
+        let mut next = 0u64;
+        for s in &shards {
+            assert_eq!(s.start, next, "n={n} k={k}");
+            assert!(s.end >= s.start);
+            next = s.end;
+        }
+        assert_eq!(next, n);
+        // balance within 1
+        let lens: Vec<u64> = shards.iter().map(Shard::len).collect();
+        let min = lens.iter().min().unwrap();
+        let max = lens.iter().max().unwrap();
+        assert!(max - min <= 1, "n={n} k={k} lens span {min}..{max}");
+    });
+}
+
+#[test]
+fn prop_layer_assignment_total_banks_conserved() {
+    check(300, 0x31, |g| {
+        let layers = 1 + g.u64_below(64);
+        let banks = 1 + g.u64_below(128);
+        let a = layer_assignment(layers, banks);
+        assert_eq!(a.len(), layers as usize);
+        for group in &a {
+            assert!(!group.is_empty());
+            for &b in group {
+                assert!(b < banks);
+            }
+        }
+        if layers < banks {
+            // groups partition the banks
+            let total: usize = a.iter().map(Vec::len).sum();
+            assert_eq!(total as u64, banks);
+        }
+    });
+}
+
+#[test]
+fn prop_allgather_latency_scales_linearly_in_shard() {
+    let hbm = HbmConfig::default();
+    let net = RingNetwork::new(&hbm);
+    check(200, 0x32, |g| {
+        let bits = 256 * (1 + g.u64_below(1000));
+        let c1 = net.allgather(bits);
+        let c2 = net.allgather(2 * bits);
+        assert!((c2.latency_ns / c1.latency_ns - 2.0).abs() < 0.01);
+        assert_eq!(c2.bits_moved, 2 * c1.bits_moved);
+    });
+}
+
+#[test]
+fn prop_allgather_energy_conserves_bits() {
+    let hbm = HbmConfig::default();
+    let net = RingNetwork::new(&hbm);
+    let k = hbm.banks_total();
+    check(200, 0x33, |g| {
+        let bits = 1 + g.u64_below(100_000);
+        let c = net.allgather(bits);
+        // every bank must receive K-1 foreign shards
+        assert_eq!(c.bits_moved, k * (k - 1) * bits);
+    });
+}
+
+#[test]
+fn prop_broadcast_never_beats_single_transfer() {
+    let hbm = HbmConfig::default();
+    let net = RingNetwork::new(&hbm);
+    check(200, 0x34, |g| {
+        let bits = 1 + g.u64_below(1_000_000);
+        let bcast = net.broadcast(bits);
+        let single = net.shared_bus(bits);
+        assert!(bcast.latency_ns >= single.latency_ns);
+        assert!(bcast.bits_moved >= single.bits_moved);
+    });
+}

@@ -1,0 +1,102 @@
+//! Property tests over the stochastic-computing substrate.
+
+use artemis::sc::{
+    correlation_encode, sc_multiply, sc_multiply_signed, tcu_encode, u_to_b_priority,
+    BitStream, SignedCode, STREAM_LEN,
+};
+use artemis::util::prop::check;
+
+#[test]
+fn prop_multiply_equals_trunc_toward_zero() {
+    check(2000, 0xA, |g| {
+        let a = g.code();
+        let b = g.code();
+        let got = sc_multiply_signed(SignedCode::from_i32(a), SignedCode::from_i32(b));
+        let want = (a as i64 * b as i64) / 128; // rust / truncates toward zero
+        assert_eq!(got as i64, want, "a={a} b={b}");
+    });
+}
+
+#[test]
+fn prop_multiply_monotone_in_each_operand() {
+    check(500, 0xB, |g| {
+        let a = g.u64_below(128) as u32;
+        let b = g.u64_below(129) as u32;
+        assert!(sc_multiply(a, b) <= sc_multiply(a + 1, b), "a={a} b={b}");
+        assert!(sc_multiply(b, a) <= sc_multiply(b, a + 1), "a={a} b={b}");
+    });
+}
+
+#[test]
+fn prop_encodings_preserve_popcount() {
+    check(500, 0xC, |g| {
+        let m = g.u64_below(129) as u32;
+        assert_eq!(tcu_encode(m).popcount(), m);
+        assert_eq!(correlation_encode(m).popcount(), m);
+    });
+}
+
+#[test]
+fn prop_priority_decoder_inverts_tcu_encode() {
+    check(500, 0xD, |g| {
+        let m = g.u64_below(129) as u32;
+        assert_eq!(u_to_b_priority(&tcu_encode(m)).unwrap(), m);
+    });
+}
+
+#[test]
+fn prop_and_popcount_never_exceeds_operands() {
+    check(1000, 0xE, |g| {
+        let a = g.u64_below(129) as u32;
+        let b = g.u64_below(129) as u32;
+        let p = correlation_encode(a).and(&tcu_encode(b)).popcount();
+        assert!(p <= a.min(b), "a={a} b={b} p={p}");
+    });
+}
+
+#[test]
+fn prop_multiply_identity_and_zero() {
+    check(300, 0xF, |g| {
+        let a = g.u64_below(129) as u32;
+        assert_eq!(sc_multiply(a, STREAM_LEN), a, "x * 1.0 == x");
+        assert_eq!(sc_multiply(a, 0), 0);
+        assert_eq!(sc_multiply(0, a), 0);
+    });
+}
+
+#[test]
+fn prop_stream_set_get_consistent() {
+    check(500, 0x10, |g| {
+        let mut s = BitStream::ZERO;
+        let mut reference = [false; 128];
+        for _ in 0..40 {
+            let i = g.u64_below(128) as u32;
+            let v = g.bool();
+            s.set(i, v);
+            reference[i as usize] = v;
+        }
+        for (i, &want) in reference.iter().enumerate() {
+            assert_eq!(s.get(i as u32), want, "bit {i}");
+        }
+        assert_eq!(s.popcount() as usize, reference.iter().filter(|&&b| b).count());
+    });
+}
+
+#[test]
+fn prop_distributivity_error_bounded() {
+    // SC products lose at most 1 unit each vs the exact scaled product,
+    // so a k-term dot drifts at most k units below exact.
+    check(300, 0x11, |g| {
+        let k = g.usize_in(1, 64);
+        let mut sc_sum = 0i64;
+        let mut exact_scaled = 0.0f64;
+        for _ in 0..k {
+            let a = g.u64_below(129) as u32;
+            let b = g.u64_below(129) as u32;
+            sc_sum += sc_multiply(a, b) as i64;
+            exact_scaled += (a as f64) * (b as f64) / 128.0;
+        }
+        let err = exact_scaled - sc_sum as f64;
+        assert!((0.0..k as f64).contains(&err) || err.abs() < 1e-9, "k={k} err={err}");
+    });
+}
