@@ -126,7 +126,7 @@ impl MomCap {
     /// deterministic transfer.  `sigma_units` is the per-step standard
     /// deviation in bit-line charge units (Table V's analog-ACC error
     /// analysis uses 4 units ~ 3% of a full step; the deterministic
-    /// functional path uses [`accumulate`], which is noise-free).
+    /// functional path uses [`Self::accumulate`], which is noise-free).
     pub fn accumulate_noisy(
         &mut self,
         popcount: u32,

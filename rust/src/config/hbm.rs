@@ -155,8 +155,9 @@ mod tests {
 
     #[test]
     fn capacity_matches_table1_geometry() {
-        // Paper inconsistency (noted in DESIGN.md): Section III says "8GB
-        // HBM module" but the Table I geometry (32 banks x 128 subarrays
+        // Paper inconsistency — see DESIGN.md §Modeling-decisions, entry
+        // "HBM capacity (8 GB vs 1 GiB)": Section III says "8GB HBM
+        // module" but the Table I geometry (32 banks x 128 subarrays
         // x 32 tiles x 256 rows x 256 bits) works out to exactly 1 GiB.
         // We implement Table I as written.
         let c = HbmConfig::default();

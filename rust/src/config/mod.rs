@@ -14,6 +14,25 @@ pub use hbm::{EnergyParams, HbmConfig, TimingParams};
 pub use models::{Arch, ModelZoo, TransformerModel};
 
 /// Top-level ARTEMIS configuration: architecture + circuits + policy.
+///
+/// # Examples
+///
+/// ```
+/// use artemis::config::ArtemisConfig;
+///
+/// // Paper Table I defaults: 1 stack x 8 channels x 4 banks.
+/// let cfg = ArtemisConfig::default();
+/// assert_eq!(cfg.hbm.banks_total(), 32);
+/// assert_eq!(cfg.power_budget_w, 60.0);
+///
+/// // Fig. 12 scalability sweeps scale stacks and the power budget.
+/// let big = ArtemisConfig::with_stacks(4);
+/// assert_eq!(big.hbm.banks_total(), 128);
+///
+/// // Configs round-trip through JSON (subset overrides supported).
+/// let back = ArtemisConfig::from_json(&cfg.to_json()).unwrap();
+/// assert_eq!(back.hbm.banks_total(), cfg.hbm.banks_total());
+/// ```
 #[derive(Debug, Clone)]
 pub struct ArtemisConfig {
     pub hbm: HbmConfig,

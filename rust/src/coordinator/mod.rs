@@ -1,10 +1,12 @@
 //! The serving coordinator: request queue, dynamic batcher, token-shard
 //! placement, and the functional+timing co-simulation loop.
 //!
-//! Functional outputs come from the AOT artifacts via PJRT (`runtime`);
-//! accelerator latency/energy come from the simulator (`sim`).  Requests
-//! are produced on any thread and flow over a channel; execution happens
-//! on the coordinator thread because PJRT executables are not `Send`.
+//! Functional outputs come from the active runtime backend (`runtime`:
+//! the pure-Rust reference executor by default, PJRT artifacts under
+//! `--features pjrt`); accelerator latency/energy come from the
+//! simulator (`sim`).  Requests are produced on any thread and flow over
+//! a channel; execution happens on the coordinator thread because PJRT
+//! executables are not `Send`.
 
 mod accuracy;
 mod batcher;

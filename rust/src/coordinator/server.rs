@@ -1,5 +1,6 @@
 //! The coordinator proper: receives requests over a channel, batches,
-//! executes via PJRT, accounts simulated accelerator cost, responds.
+//! executes through the active runtime backend (reference executor or
+//! PJRT), accounts simulated accelerator cost, responds.
 
 use super::batcher::{Batch, Batcher};
 use super::requests::{InferenceRequest, InferenceResponse, SimCost};
@@ -42,6 +43,30 @@ impl ServeStats {
 }
 
 /// The serving coordinator for one compiled model variant.
+///
+/// # Examples
+///
+/// ```no_run
+/// use artemis::config::ArtemisConfig;
+/// use artemis::coordinator::{Coordinator, InferenceRequest};
+/// use artemis::runtime::ArtifactRegistry;
+///
+/// // Falls back to the built-in reference backend when artifacts/ is
+/// // absent, so this works in a bare checkout.
+/// let mut registry = ArtifactRegistry::open_default().unwrap();
+/// let cfg = ArtemisConfig::default();
+/// let mut coord = Coordinator::new(&mut registry, &cfg, "fp32").unwrap();
+/// let requests: Vec<InferenceRequest> = (0..16)
+///     .map(|id| InferenceRequest {
+///         id,
+///         tokens: vec![0.0; coord.seq_len()],
+///         enqueued_ns: coord.now_ns(),
+///     })
+///     .collect();
+/// let (responses, stats) = coord.serve_all(requests).unwrap();
+/// assert_eq!(responses.len(), 16);
+/// assert_eq!(stats.requests, 16);
+/// ```
 pub struct Coordinator {
     model: Arc<CompiledModel>,
     tiny: TinyModelConfig,
@@ -54,7 +79,11 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Build for `variant` in {"fp32", "q8", "q8sc"}.
-    pub fn new(registry: &mut ArtifactRegistry, cfg: &ArtemisConfig, variant: &str) -> Result<Self> {
+    pub fn new(
+        registry: &mut ArtifactRegistry,
+        cfg: &ArtemisConfig,
+        variant: &str,
+    ) -> Result<Self> {
         let tiny = registry
             .tiny_config()
             .ok_or_else(|| anyhow!("manifest missing tiny config"))?
@@ -147,7 +176,10 @@ impl Coordinator {
     /// Drain a channel of requests until it closes, batching and
     /// executing as batches fill; flushes the tail.  Producers run on
     /// other threads; execution stays here (PJRT handles are not Send).
-    pub fn serve(&mut self, rx: Receiver<InferenceRequest>) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+    pub fn serve(
+        &mut self,
+        rx: Receiver<InferenceRequest>,
+    ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
         let mut stats = ServeStats::default();
         let mut responses = Vec::new();
         let t0 = Instant::now();
@@ -164,7 +196,10 @@ impl Coordinator {
     }
 
     /// Synchronous convenience: serve a vector of requests.
-    pub fn serve_all(&mut self, requests: Vec<InferenceRequest>) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+    pub fn serve_all(
+        &mut self,
+        requests: Vec<InferenceRequest>,
+    ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
         let (tx, rx) = std::sync::mpsc::channel();
         for r in requests {
             tx.send(r).expect("channel open");

@@ -16,7 +16,7 @@ impl BankAddr {
             + self.bank as u64
     }
 
-    /// Inverse of [`linear`].
+    /// Inverse of [`Self::linear`].
     pub fn from_linear(idx: u64, channels_per_stack: u32, banks_per_channel: u32) -> Self {
         let bank = (idx % banks_per_channel as u64) as u32;
         let chan_flat = idx / banks_per_channel as u64;

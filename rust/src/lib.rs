@@ -3,10 +3,12 @@
 //! This crate is the Layer-3 system of the reproduction: a
 //! cycle-approximate simulator of the ARTEMIS architecture (Afifi,
 //! Thakkar, Pasricha, 2024) plus a serving-style coordinator that executes
-//! the *functional* transformer models through AOT-compiled XLA artifacts
-//! (PJRT CPU client) while the simulator accounts latency and energy.
+//! the *functional* transformer models through a pluggable runtime backend
+//! — the pure-Rust reference executor by default, or AOT-compiled XLA
+//! artifacts (PJRT CPU client, feature `pjrt`) — while the simulator
+//! accounts latency and energy.
 //!
-//! Module map (see `DESIGN.md` for the full inventory):
+//! Module map (see `DESIGN.md` §Module-inventory for the full inventory):
 //!
 //! * [`config`]    — Table I/II/III parameters, architecture + model zoo.
 //! * [`sc`]        — bit-exact stochastic-computing substrate (TCU streams,
@@ -24,9 +26,12 @@
 //! * [`xfmr`]      — transformer workload graphs (Table II models).
 //! * [`sim`]       — the performance/energy simulator engine.
 //! * [`baselines`] — DRISA/TransPIM/HAIMA/ReBERT/CPU/GPU/TPU/FPGA models.
-//! * [`runtime`]   — PJRT artifact loading & execution (`xla` crate).
+//! * [`runtime`]   — pluggable execution backends: pure-Rust reference
+//!   executor (default) or PJRT artifact loading (feature `pjrt`).
 //! * [`coordinator`] — request router, batcher, co-simulation driver.
 //! * [`report`]    — table/figure emitters for the paper's evaluation.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod analog;
 pub mod baselines;

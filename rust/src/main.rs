@@ -27,7 +27,8 @@ Experiment commands (regenerate paper tables/figures):
   fig11     power efficiency (GOPS/W)
   fig12     scalability: sequence length x HBM stacks
   tab3      per-subarray hardware overheads
-  tab4      accuracy FP32 vs Q8 vs Q8+SC (needs artifacts/)
+  tab4      accuracy FP32 vs Q8 vs Q8+SC (reference backend, or
+            artifacts/ + --features pjrt for the trained models)
   tab5      per-component calibration accuracy (measured)
   micro     headline micro numbers (34ns multiply, 64 MACs/48ns, ...)
   all       run every experiment above, print everything
@@ -44,7 +45,7 @@ Other commands:
            [--stacks N] [--config file.json]
            detailed simulation report for one model
   serve    [--requests N] [--variant fp32|q8|q8sc]
-           batched serving demo through the PJRT artifacts
+           batched serving demo through the functional runtime
   config   print the default configuration as JSON
   help     this text
 
@@ -80,6 +81,7 @@ fn run_serve(args: &[String]) -> Result<()> {
     let variant = flag_value(args, "--variant").unwrap_or_else(|| "q8sc".into());
     let cfg = build_config(args)?;
     let mut registry = ArtifactRegistry::open_default()?;
+    println!("runtime backend: {}", registry.backend_name());
     let mut coord = Coordinator::new(&mut registry, &cfg, &variant)?;
 
     let seq = coord.seq_len();

@@ -6,7 +6,7 @@
 /// (Table III), operating on A_to_B outputs; successive additions spill
 /// into a wider local register (the same trick the paper's reduction
 /// chain needs to sum thousands of 8-bit partials without overflow —
-/// modeled as a 32-bit register, documented in DESIGN.md).
+/// modeled as a wide integer register, see DESIGN.md §Modeling-decisions).
 #[derive(Debug, Clone, Default)]
 pub struct WideAccumulator {
     value: i64,

@@ -37,16 +37,10 @@ impl SoftmaxUnit {
 
         // Step 2: exp LUT on shifted values, NSC adds, ln LUT.
         let mut sum = 0.0;
-        let exps: Vec<f64> = y
-            .iter()
-            .map(|&v| {
-                let e = self.exp_lut.eval(v - y_max);
-                sum += e;
-                self.adds += 1;
-                e
-            })
-            .collect();
-        drop(exps);
+        for &v in y {
+            sum += self.exp_lut.eval(v - y_max);
+            self.adds += 1;
+        }
         let mut ln_lut = Lut::new(LutKind::Ln { max_in: y.len() as f64 });
         let ln_s = ln_lut.eval(sum);
 

@@ -127,7 +127,8 @@ pub fn fig8(cfg: &ArtemisConfig) -> TableBuilder {
     ];
     for m in ModelZoo::all() {
         let w = build_workload(&m);
-        let base = simulate(cfg, &w, SimOptions { dataflow: Dataflow::Layer, pipelining: Pipelining::Off });
+        let base_opts = SimOptions { dataflow: Dataflow::Layer, pipelining: Pipelining::Off };
+        let base = simulate(cfg, &w, base_opts);
         for (df, pp) in policies {
             let r = simulate(cfg, &w, SimOptions { dataflow: df, pipelining: pp });
             t.row(vec![
@@ -308,7 +309,11 @@ pub fn micro(cfg: &ArtemisConfig) -> TableBuilder {
 }
 
 /// Full ARTEMIS report per model (the `simulate` subcommand).
-pub fn model_report(cfg: &ArtemisConfig, model_name: &str, opts: SimOptions) -> Option<TableBuilder> {
+pub fn model_report(
+    cfg: &ArtemisConfig,
+    model_name: &str,
+    opts: SimOptions,
+) -> Option<TableBuilder> {
     let m = ModelZoo::by_name(model_name)?;
     let w = build_workload(&m);
     let r = simulate(cfg, &w, opts);

@@ -119,11 +119,14 @@ pub fn ablation_deterministic_vs_lfsr() -> TableBuilder {
             let a: Vec<i64> = (0..k).map(|_| rng.code() as i64).collect();
             let b: Vec<i64> = (0..k).map(|_| rng.code() as i64).collect();
             let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64 / 128.0).sum();
-            let signed = |p: u32, x: i64, y: i64| if (x < 0) != (y < 0) { -(p as i64) } else { p as i64 };
+            let signed =
+                |p: u32, x: i64, y: i64| if (x < 0) != (y < 0) { -(p as i64) } else { p as i64 };
             let det: i64 = a
                 .iter()
                 .zip(&b)
-                .map(|(&x, &y)| signed(sc_multiply(x.unsigned_abs() as u32, y.unsigned_abs() as u32), x, y))
+                .map(|(&x, &y)| {
+                    signed(sc_multiply(x.unsigned_abs() as u32, y.unsigned_abs() as u32), x, y)
+                })
                 .sum();
             let rnd: i64 = a
                 .iter()

@@ -1,7 +1,16 @@
 //! Artifact registry: parses `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`) and lazily loads + compiles executables.
+//! `python/compile/aot.py`) and lazily compiles executables through the
+//! active [`Backend`].
+//!
+//! When no artifacts directory exists (the default offline build),
+//! [`ArtifactRegistry::open_default`] falls back to a built-in manifest
+//! served by the pure-Rust [`ReferenceBackend`], so the serving path and
+//! the Table IV experiment degrade gracefully instead of erroring.
+//!
+//! [`ReferenceBackend`]: super::ReferenceBackend
 
-use super::client::{CompiledModel, XlaRuntime};
+use super::backend::{Backend, BackendCtx, CompiledModel};
+use super::reference::ReferenceBackend;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -28,18 +37,42 @@ pub struct TinyModelConfig {
     pub batch: usize,
 }
 
-/// The registry: manifest + compile cache.
+impl TinyModelConfig {
+    /// The geometry `python/compile/aot.py` bakes into real manifests
+    /// (model.TINY + TINY_BATCH), used by the built-in fallback manifest.
+    pub fn builtin() -> Self {
+        Self {
+            vocab: 32,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            n_layers: 2,
+            seq_len: 16,
+            n_classes: 2,
+            batch: 8,
+        }
+    }
+}
+
+/// The registry: manifest + backend + compile cache.
 pub struct ArtifactRegistry {
     dir: PathBuf,
     infos: HashMap<String, ArtifactInfo>,
     tiny: Option<TinyModelConfig>,
-    runtime: XlaRuntime,
+    backend: Box<dyn Backend>,
     cache: HashMap<String, std::sync::Arc<CompiledModel>>,
 }
 
 impl ArtifactRegistry {
-    /// Open the registry at `dir` (normally `artifacts/`).
+    /// Open the registry at `dir` (normally `artifacts/`) with the
+    /// default backend: PJRT when the `pjrt` feature is enabled, the
+    /// pure-Rust reference executor otherwise.
     pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_with_backend(dir, Self::default_backend()?)
+    }
+
+    /// Open the registry at `dir` with an explicit backend.
+    pub fn open_with_backend(dir: &Path, backend: Box<dyn Backend>) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
@@ -86,22 +119,96 @@ impl ArtifactRegistry {
             }
         });
 
-        Ok(Self {
-            dir: dir.to_path_buf(),
-            infos,
-            tiny,
-            runtime: XlaRuntime::cpu()?,
-            cache: HashMap::new(),
-        })
+        Ok(Self { dir: dir.to_path_buf(), infos, tiny, backend, cache: HashMap::new() })
     }
 
-    /// Default location relative to the repo root.
+    /// Default location: `artifacts/` relative to the current directory,
+    /// or `../artifacts/` (the repo root when running from `rust/`).
+    /// Falls back to the built-in reference registry when no manifest is
+    /// found (`make artifacts` was never run — the normal offline case).
     pub fn open_default() -> Result<Self> {
-        Self::open(Path::new("artifacts"))
+        for dir in [Path::new("artifacts"), Path::new("../artifacts")] {
+            if dir.join("manifest.json").exists() {
+                return Self::open(dir);
+            }
+        }
+        // In a PJRT build a missing artifacts directory is almost
+        // certainly a setup mistake — say so instead of silently
+        // degrading to the reference executor.
+        #[cfg(feature = "pjrt")]
+        eprintln!(
+            "artemis: no artifacts/manifest.json found; \
+             falling back to the built-in reference backend"
+        );
+        Ok(Self::builtin_reference())
+    }
+
+    /// A registry that needs nothing on disk: the standard artifact set
+    /// (same names and shapes `aot.py` would emit) served by the
+    /// pure-Rust [`ReferenceBackend`].
+    pub fn builtin_reference() -> Self {
+        let tiny = TinyModelConfig::builtin();
+        let mut infos = HashMap::new();
+        let mut add = |name: &str, input_shapes: Vec<Vec<usize>>| {
+            infos.insert(
+                name.to_string(),
+                ArtifactInfo {
+                    name: name.to_string(),
+                    path: PathBuf::from(format!("artifacts/{name}.hlo.txt")),
+                    input_shapes,
+                },
+            );
+        };
+        for variant in ["fp32", "q8", "q8sc"] {
+            add(&format!("tiny_{variant}"), vec![vec![tiny.batch, tiny.seq_len]]);
+        }
+        // Parameterized encoder block at the aot.BLOCK_CFG geometry:
+        // d_model 64, 4 heads, d_ff 128, seq_len 32.
+        let (n, d, f) = (32, 64, 128);
+        for variant in ["q8", "q8sc"] {
+            add(
+                &format!("encoder_{variant}"),
+                vec![
+                    vec![n, d],
+                    vec![d, d],
+                    vec![d, d],
+                    vec![d, d],
+                    vec![d, d],
+                    vec![d, f],
+                    vec![f, d],
+                ],
+            );
+        }
+        // Bare kernel cross-validation shapes (aot.KERNEL_SHAPES).
+        for (m, k, nn) in [(8, 16, 8), (16, 64, 32), (32, 128, 64)] {
+            add(&format!("sc_matmul_{m}x{k}x{nn}"), vec![vec![m, k], vec![k, nn]]);
+        }
+        Self {
+            dir: PathBuf::from("artifacts"),
+            infos,
+            tiny: Some(tiny),
+            backend: Box::new(ReferenceBackend),
+            cache: HashMap::new(),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn default_backend() -> Result<Box<dyn Backend>> {
+        Ok(Box::new(super::client::XlaBackend::new()?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn default_backend() -> Result<Box<dyn Backend>> {
+        Ok(Box::new(ReferenceBackend))
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// The active backend's label (`"reference"` or `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -128,10 +235,82 @@ impl ArtifactRegistry {
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
             .clone();
-        let model = std::sync::Arc::new(
-            self.runtime.load_hlo_text(&info.path, info.input_shapes.clone())?,
-        );
+        let ctx = BackendCtx { dir: &self.dir, tiny: self.tiny.as_ref() };
+        let model = std::sync::Arc::new(self.backend.compile(&info, &ctx)?);
         self.cache.insert(name.to_string(), model.clone());
         Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_lists_standard_artifacts() {
+        let reg = ArtifactRegistry::builtin_reference();
+        assert_eq!(reg.backend_name(), "reference");
+        let names = reg.names();
+        for required in [
+            "tiny_fp32",
+            "tiny_q8",
+            "tiny_q8sc",
+            "encoder_q8",
+            "encoder_q8sc",
+            "sc_matmul_8x16x8",
+            "sc_matmul_16x64x32",
+            "sc_matmul_32x128x64",
+        ] {
+            assert!(names.iter().any(|n| n == required), "missing {required}");
+        }
+        let tiny = reg.tiny_config().unwrap();
+        assert_eq!(tiny.seq_len, 16);
+        assert_eq!(tiny.batch, 8);
+    }
+
+    #[test]
+    fn builtin_tiny_model_loads_and_runs() {
+        let mut reg = ArtifactRegistry::builtin_reference();
+        let model = reg.load("tiny_fp32").unwrap();
+        let tiny = reg.tiny_config().unwrap().clone();
+        let tokens = vec![0.0f32; tiny.batch * tiny.seq_len];
+        let out = model.run_f32(&[tokens]).unwrap();
+        assert_eq!(out.len(), tiny.batch * tiny.n_classes);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn builtin_sc_matmul_matches_bit_exact_sc() {
+        let mut reg = ArtifactRegistry::builtin_reference();
+        let model = reg.load("sc_matmul_8x16x8").unwrap();
+        let mut rng = crate::util::XorShift64::new(7);
+        let a: Vec<f32> = (0..8 * 16).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..16 * 8).map(|_| rng.normal() as f32).collect();
+        let got = model.run_f32(&[a.clone(), b.clone()]).unwrap();
+        // Rebuild the expected value by hand with the same arithmetic.
+        let amax = a.iter().fold(0f32, |x, y| x.max(y.abs())).max(1e-12);
+        let bmax = b.iter().fold(0f32, |x, y| x.max(y.abs())).max(1e-12);
+        let (sa, sb) = (amax / 127.0, bmax / 127.0);
+        let q = |x: f32, s: f32| (x / s).round_ties_even().clamp(-127.0, 127.0) as i32;
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0i64;
+                for kk in 0..16 {
+                    let qa = q(a[i * 16 + kk], sa);
+                    let qb = q(b[kk * 8 + j], sb);
+                    let p = crate::sc::sc_multiply(qa.unsigned_abs(), qb.unsigned_abs()) as i64;
+                    acc += if (qa < 0) != (qb < 0) { -p } else { p };
+                }
+                let want = acc as f32 * sa * sb * 128.0;
+                let g = got[i * 8 + j];
+                assert!((g - want).abs() < 1e-4 * want.abs().max(1.0), "{g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_unknown_name_errors() {
+        let mut reg = ArtifactRegistry::builtin_reference();
+        assert!(reg.load("nope").is_err());
     }
 }

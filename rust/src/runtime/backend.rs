@@ -1,0 +1,101 @@
+//! The pluggable execution-backend abstraction.
+//!
+//! The functional transformer models can execute through more than one
+//! engine: the PJRT CPU client (feature `pjrt`, compiles real AOT HLO
+//! artifacts) or the pure-Rust [`ReferenceBackend`] that mirrors the
+//! `python/compile/kernels/ref.py` oracles and needs nothing beyond this
+//! crate.  [`ArtifactRegistry`] talks only to this trait, so the
+//! coordinator, the Table IV accuracy path, and the serving demo are
+//! backend-agnostic.
+//!
+//! [`ReferenceBackend`]: super::ReferenceBackend
+//! [`ArtifactRegistry`]: super::ArtifactRegistry
+
+use super::artifacts::{ArtifactInfo, TinyModelConfig};
+use anyhow::Result;
+use std::path::Path;
+
+/// Context handed to a backend when it compiles an artifact: where the
+/// artifact files live and, when the manifest declares one, the tiny
+/// model geometry (the reference backend synthesizes tiny-model weights
+/// from it; the PJRT backend ignores it — weights are baked in the HLO).
+pub struct BackendCtx<'a> {
+    pub dir: &'a Path,
+    pub tiny: Option<&'a TinyModelConfig>,
+}
+
+/// An execution backend: turns a manifest entry into a runnable model.
+pub trait Backend {
+    /// Short backend label for logs and reports (e.g. `"reference"`).
+    fn name(&self) -> &'static str;
+
+    /// Compile (or synthesize) the executable for one artifact.
+    fn compile(&self, info: &ArtifactInfo, ctx: &BackendCtx<'_>) -> Result<CompiledModel>;
+}
+
+/// One runnable program produced by a [`Backend`].  Object-safe so
+/// heterogeneous executables can share the registry's compile cache.
+pub trait Executable {
+    /// Execute with validated, flat row-major f32 inputs and return the
+    /// flat f32 output (the first tuple element for PJRT artifacts).
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>>;
+}
+
+/// One compiled model plus its expected input shapes.  Input validation
+/// lives here so every backend gets it for free.
+pub struct CompiledModel {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    exec: Box<dyn Executable>,
+}
+
+impl CompiledModel {
+    pub fn new(name: String, input_shapes: Vec<Vec<usize>>, exec: Box<dyn Executable>) -> Self {
+        Self { name, input_shapes, exec }
+    }
+
+    /// Execute with f32 inputs (row-major), returning the flat f32
+    /// output.  Validates input count and element counts first.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        for (data, shape) in inputs.iter().zip(&self.input_shapes) {
+            let elems: usize = shape.iter().product();
+            anyhow::ensure!(
+                elems == data.len(),
+                "{}: shape {:?} needs {} elems, got {}",
+                self.name,
+                shape,
+                elems,
+                data.len()
+            );
+        }
+        self.exec.execute(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Executable for Echo {
+        fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+            Ok(inputs[0].clone())
+        }
+    }
+
+    #[test]
+    fn run_f32_validates_arity_and_shape() {
+        let m = CompiledModel::new("echo".into(), vec![vec![2, 2]], Box::new(Echo));
+        assert!(m.run_f32(&[]).is_err(), "missing input");
+        assert!(m.run_f32(&[vec![1.0; 3]]).is_err(), "wrong elem count");
+        let out = m.run_f32(&[vec![1.0, 2.0, 3.0, 4.0]]).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

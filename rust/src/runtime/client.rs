@@ -1,5 +1,15 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//! Thin wrapper over the `xla` crate's PJRT CPU client (feature `pjrt`).
+//!
+//! Loads AOT-compiled HLO-text artifacts and executes them from the rust
+//! hot path.  Python never runs here — `make artifacts` produced the
+//! `.hlo.txt` files once at build time.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
 
+use super::artifacts::ArtifactInfo;
+use super::backend::{Backend, BackendCtx, CompiledModel, Executable};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
@@ -20,7 +30,11 @@ impl XlaRuntime {
     }
 
     /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path, input_shapes: Vec<Vec<usize>>) -> Result<CompiledModel> {
+    pub fn load_hlo_text(
+        &self,
+        path: &Path,
+        input_shapes: Vec<Vec<usize>>,
+    ) -> Result<CompiledModel> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
@@ -30,40 +44,28 @@ impl XlaRuntime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(CompiledModel { exe, input_shapes, name: path.display().to_string() })
+        Ok(CompiledModel::new(
+            path.display().to_string(),
+            input_shapes.clone(),
+            Box::new(PjrtExecutable { exe, input_shapes }),
+        ))
     }
 }
 
-/// One compiled executable plus its expected input shapes.
-pub struct CompiledModel {
+/// One compiled PJRT executable plus its expected input shapes (needed to
+/// reshape the flat f32 buffers into literals).
+struct PjrtExecutable {
     exe: xla::PjRtLoadedExecutable,
-    pub input_shapes: Vec<Vec<usize>>,
-    pub name: String,
+    input_shapes: Vec<Vec<usize>>,
 }
 
-impl CompiledModel {
+impl Executable for PjrtExecutable {
     /// Execute with f32 inputs (row-major), returning the first tuple
     /// element as a flat f32 vector.  All our artifacts are lowered with
     /// `return_tuple=True` and a single output.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            inputs.len() == self.input_shapes.len(),
-            "{}: expected {} inputs, got {}",
-            self.name,
-            self.input_shapes.len(),
-            inputs.len()
-        );
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs.iter().zip(&self.input_shapes) {
-            let elems: usize = shape.iter().product();
-            anyhow::ensure!(
-                elems == data.len(),
-                "{}: shape {:?} needs {} elems, got {}",
-                self.name,
-                shape,
-                elems,
-                data.len()
-            );
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             literals.push(xla::Literal::vec1(data).reshape(&dims)?);
         }
@@ -71,5 +73,26 @@ impl CompiledModel {
             .to_literal_sync()?;
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT execution backend: compiles the HLO-text artifact files.
+pub struct XlaBackend {
+    runtime: XlaRuntime,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<Self> {
+        Ok(Self { runtime: XlaRuntime::cpu()? })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, info: &ArtifactInfo, _ctx: &BackendCtx<'_>) -> Result<CompiledModel> {
+        self.runtime.load_hlo_text(&info.path, info.input_shapes.clone())
     }
 }

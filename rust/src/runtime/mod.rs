@@ -1,13 +1,28 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
-//! from the rust hot path.  Python never runs here — `make artifacts`
-//! produced the `.hlo.txt` files once at build time.
+//! Functional-model runtime: artifact registry plus pluggable execution
+//! backends.
 //!
-//! Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Two backends implement [`Backend`]:
+//!
+//! * [`ReferenceBackend`] (always available, the default-build path) —
+//!   a pure-Rust executor mirroring the `python/compile/kernels/ref.py`
+//!   oracles; needs no artifacts directory, no Python, no XLA.
+//! * `XlaBackend` (feature `pjrt`) — loads AOT-compiled HLO-text
+//!   artifacts and executes them through the `xla` crate's PJRT CPU
+//!   client.  Interchange is HLO **text**: jax >= 0.5 serializes
+//!   HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids.
+//!
+//! See DESIGN.md §Runtime-backends for the selection rules and the
+//! fidelity trade-offs.
 
 mod artifacts;
+mod backend;
+#[cfg(feature = "pjrt")]
 mod client;
+mod reference;
 
 pub use artifacts::{ArtifactInfo, ArtifactRegistry, TinyModelConfig};
-pub use client::{CompiledModel, XlaRuntime};
+pub use backend::{Backend, BackendCtx, CompiledModel, Executable};
+#[cfg(feature = "pjrt")]
+pub use client::{XlaBackend, XlaRuntime};
+pub use reference::ReferenceBackend;

@@ -6,6 +6,21 @@ use crate::energy::{power_throttle, EnergyAccount, EnergyBreakdown};
 use crate::xfmr::{Op, Workload};
 
 /// Simulation policy.
+///
+/// # Examples
+///
+/// ```
+/// use artemis::config::{ArtemisConfig, ModelZoo};
+/// use artemis::sim::{simulate, SimOptions};
+/// use artemis::xfmr::build_workload;
+///
+/// let cfg = ArtemisConfig::default();
+/// let workload = build_workload(&ModelZoo::bert_base());
+/// // The paper's configuration: token dataflow with pipelining.
+/// let report = simulate(&cfg, &workload, SimOptions::artemis());
+/// assert!(report.total_ns > 0.0);
+/// assert_eq!(report.policy, "token_PP");
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct SimOptions {
     pub dataflow: Dataflow,

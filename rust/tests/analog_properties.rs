@@ -64,7 +64,8 @@ fn prop_staircase_linear_count_matches_capacity() {
         let s = momcap_staircase(c, 150);
         let expect = MomCap::new(c).max_accumulations();
         let diff = s.max_linear_accumulations as i64 - expect as i64;
-        assert!(diff.abs() <= 1, "c={c} staircase={} capacity={expect}", s.max_linear_accumulations);
+        let got = s.max_linear_accumulations;
+        assert!(diff.abs() <= 1, "c={c} staircase={got} capacity={expect}");
     });
 }
 

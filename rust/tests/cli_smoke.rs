@@ -1,0 +1,64 @@
+//! CLI smoke tests: the `artemis` binary's core commands must exit 0 and
+//! print the paper's headline numbers (34 ns multiply, 64 MACs / 48 ns).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_artemis"))
+        .args(args)
+        .output()
+        .expect("spawn artemis binary");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_exits_zero_and_lists_commands() {
+    let (ok, stdout, stderr) = run(&["help"]);
+    assert!(ok, "help failed: {stderr}");
+    for cmd in ["fig2", "fig7", "tab4", "micro", "simulate", "serve", "csv"] {
+        assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
+    }
+}
+
+#[test]
+fn no_args_defaults_to_help() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE: artemis"));
+}
+
+#[test]
+fn micro_prints_headline_numbers() {
+    let (ok, stdout, stderr) = run(&["micro"]);
+    assert!(ok, "micro failed: {stderr}");
+    // 34 ns stochastic multiply (2 MOCs x 17 ns)...
+    assert!(stdout.contains("34"), "missing 34ns multiply:\n{stdout}");
+    // ... and 64 MACs per 48 ns subarray step.
+    assert!(stdout.contains("64 in 48ns"), "missing 64 MACs/48ns:\n{stdout}");
+    // The DRISA comparison (Section I: ~47x).
+    assert!(stdout.contains("47"), "missing 47x DRISA factor:\n{stdout}");
+}
+
+#[test]
+fn fig7_prints_momcap_staircases() {
+    let (ok, stdout, stderr) = run(&["fig7"]);
+    assert!(ok, "fig7 failed: {stderr}");
+    assert!(stdout.contains("Fig. 7"), "missing title:\n{stdout}");
+    // The 8 pF design point supports exactly 20 linear accumulations.
+    let eight_pf = stdout
+        .lines()
+        .find(|l| l.trim_start().starts_with('8'))
+        .unwrap_or_else(|| panic!("no 8 pF row:\n{stdout}"));
+    assert!(eight_pf.contains("20"), "8 pF row should show 20 steps: {eight_pf}");
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let (ok, _, stderr) = run(&["not-a-command"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}

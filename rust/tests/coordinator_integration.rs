@@ -1,7 +1,9 @@
-//! Coordinator integration: serving through the PJRT artifacts with
-//! batching, multi-producer channels, and functional scoring.
+//! Coordinator integration: serving through the active runtime backend
+//! (PJRT artifacts when available, the built-in reference backend
+//! otherwise) with batching, multi-producer channels, and functional
+//! scoring.
 //!
-//! Uses the fp32/q8 artifacts (fast XLA compiles); the q8sc variant is
+//! Uses the fp32/q8 models (fast compiles); the q8sc variant is
 //! exercised by `examples/end_to_end.rs`.
 
 use artemis::config::ArtemisConfig;

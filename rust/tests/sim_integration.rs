@@ -54,9 +54,10 @@ fn fig8_shape_token_11x_pipelining_40pct() {
     let mut pp_speedups = Vec::new();
     for m in ModelZoo::all() {
         let w = build_workload(&m);
-        let l_np = simulate(&cfg, &w, SimOptions { dataflow: Dataflow::Layer, pipelining: Pipelining::Off });
-        let t_np = simulate(&cfg, &w, SimOptions { dataflow: Dataflow::Token, pipelining: Pipelining::Off });
-        let t_pp = simulate(&cfg, &w, SimOptions { dataflow: Dataflow::Token, pipelining: Pipelining::On });
+        let opt = |dataflow, pipelining| SimOptions { dataflow, pipelining };
+        let l_np = simulate(&cfg, &w, opt(Dataflow::Layer, Pipelining::Off));
+        let t_np = simulate(&cfg, &w, opt(Dataflow::Token, Pipelining::Off));
+        let t_pp = simulate(&cfg, &w, opt(Dataflow::Token, Pipelining::On));
         token_speedups.push(l_np.total_ns / t_np.total_ns);
         pp_speedups.push(t_np.total_ns / t_pp.total_ns);
     }
