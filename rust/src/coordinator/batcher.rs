@@ -17,14 +17,27 @@ pub struct Batch {
 
 impl Batch {
     /// Flatten to the artifact's f32[B, N] input.
-    pub fn to_input(&self, batch_size: usize, seq_len: usize) -> Vec<f32> {
+    ///
+    /// Requests shorter than the artifact `seq_len` are right-padded
+    /// with zeros (a server must tolerate short prompts, not crash);
+    /// longer ones are truncated to the artifact shape.  Returns the
+    /// flat input plus the zero elements added to short rows and the
+    /// elements dropped from long rows, which the coordinator folds
+    /// into `ServeStats.padded_elems` / `ServeStats.truncated_elems` so
+    /// neither adjustment is silent.
+    pub fn to_input(&self, batch_size: usize, seq_len: usize) -> (Vec<f32>, u64, u64) {
         let mut flat = Vec::with_capacity(batch_size * seq_len);
+        let mut padded_elems = 0u64;
+        let mut truncated_elems = 0u64;
         for r in &self.requests {
-            assert_eq!(r.tokens.len(), seq_len, "request {} wrong seq len", r.id);
-            flat.extend_from_slice(&r.tokens);
+            let take = r.tokens.len().min(seq_len);
+            flat.extend_from_slice(&r.tokens[..take]);
+            padded_elems += (seq_len - take) as u64;
+            truncated_elems += (r.tokens.len() - take) as u64;
+            flat.resize(flat.len() + (seq_len - take), 0.0);
         }
         flat.resize(batch_size * seq_len, 0.0);
-        flat
+        (flat, padded_elems, truncated_elems)
     }
 }
 
@@ -106,17 +119,37 @@ mod tests {
         let mut b = Batcher::new(3);
         b.push(req(7, 4));
         let batch = b.flush().unwrap();
-        let flat = batch.to_input(3, 4);
+        let (flat, padded_elems, truncated_elems) = batch.to_input(3, 4);
         assert_eq!(flat.len(), 12);
         assert_eq!(&flat[0..4], &[7.0; 4]);
         assert_eq!(&flat[4..], &[0.0; 8]);
+        // Padding rows are whole dropped rows, not short-row elements.
+        assert_eq!(padded_elems, 0);
+        assert_eq!(truncated_elems, 0);
     }
 
     #[test]
-    #[should_panic]
-    fn wrong_seq_len_panics() {
+    fn short_rows_are_right_padded_and_counted() {
         let mut b = Batcher::new(2);
-        b.push(req(0, 5));
-        b.flush().unwrap().to_input(2, 4);
+        assert!(b.push(req(1, 2)).is_none()); // 2 of 4 tokens: pads 2
+        let batch = b.push(req(2, 4)).unwrap(); // exact fit, batch full
+        let (flat, padded_elems, truncated_elems) = batch.to_input(2, 4);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[0..4], &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&flat[4..8], &[2.0; 4]);
+        assert_eq!(padded_elems, 2);
+        assert_eq!(truncated_elems, 0);
+    }
+
+    #[test]
+    fn long_rows_are_truncated() {
+        let mut b = Batcher::new(2);
+        b.push(req(0, 6)); // 6 tokens into a 4-token artifact
+        let batch = b.flush().unwrap();
+        let (flat, padded_elems, truncated_elems) = batch.to_input(2, 4);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[0..4], &[0.0; 4]); // id 0 → tokens all 0.0
+        assert_eq!(padded_elems, 0);
+        assert_eq!(truncated_elems, 2); // the dropped overflow is counted
     }
 }

@@ -16,6 +16,6 @@ mod server;
 
 pub use accuracy::{evaluate_variants, synth_eval_batch, VariantAccuracy};
 pub use batcher::{Batch, Batcher};
-pub use requests::{InferenceRequest, InferenceResponse, SimCost};
-pub use router::{Percentiles, RoutedRequest, Router, VariantOutcome};
+pub use requests::{InferenceRequest, InferenceResponse, Percentiles, SimCost};
+pub use router::{RoutedRequest, Router, VariantOutcome};
 pub use server::{Coordinator, ServeStats};

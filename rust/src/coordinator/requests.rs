@@ -19,6 +19,34 @@ pub struct SimCost {
     pub batch_energy_pj: f64,
 }
 
+/// Latency percentile summary, ns (nearest-rank over exact samples).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl Percentiles {
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        samples.sort_unstable();
+        let pick = |q: f64| {
+            let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+            samples[idx]
+        };
+        Self {
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            max: *samples.last().unwrap(),
+        }
+    }
+}
+
 /// One inference response.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {

@@ -6,7 +6,7 @@
 //! [`Coordinator`] per variant, dispatches tagged requests, and tracks
 //! per-variant latency percentiles.
 
-use super::requests::{InferenceRequest, InferenceResponse};
+use super::requests::{InferenceRequest, InferenceResponse, Percentiles};
 use super::server::{Coordinator, ServeStats};
 use crate::config::ArtemisConfig;
 use crate::runtime::ArtifactRegistry;
@@ -18,34 +18,6 @@ use std::collections::HashMap;
 pub struct RoutedRequest {
     pub variant: String,
     pub request: InferenceRequest,
-}
-
-/// Latency percentile summary, ns.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Percentiles {
-    pub p50: u64,
-    pub p95: u64,
-    pub p99: u64,
-    pub max: u64,
-}
-
-impl Percentiles {
-    pub fn from_samples(mut samples: Vec<u64>) -> Self {
-        if samples.is_empty() {
-            return Self::default();
-        }
-        samples.sort_unstable();
-        let pick = |q: f64| {
-            let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
-            samples[idx]
-        };
-        Self {
-            p50: pick(0.50),
-            p95: pick(0.95),
-            p99: pick(0.99),
-            max: *samples.last().unwrap(),
-        }
-    }
 }
 
 /// Per-variant routing outcome.

@@ -3,7 +3,7 @@
 //! PJRT), accounts simulated accelerator cost, responds.
 
 use super::batcher::{Batch, Batcher};
-use super::requests::{InferenceRequest, InferenceResponse, SimCost};
+use super::requests::{InferenceRequest, InferenceResponse, Percentiles, SimCost};
 use crate::config::{Arch, ArtemisConfig, TransformerModel};
 use crate::dataflow::token_shards;
 use crate::runtime::{ArtifactRegistry, CompiledModel, TinyModelConfig};
@@ -20,8 +20,16 @@ pub struct ServeStats {
     pub requests: u64,
     pub batches: u64,
     pub padded_rows: u64,
+    /// Zero elements appended to right-pad requests shorter than the
+    /// artifact sequence length (distinct from whole `padded_rows`).
+    pub padded_elems: u64,
+    /// Elements dropped from requests longer than the artifact sequence
+    /// length (truncation is tolerated but never silent).
+    pub truncated_elems: u64,
     pub wall_total_ns: u64,
     pub wall_exec_ns: u64,
+    /// Wall-clock per-request latency (queue + exec) percentiles, ns.
+    pub wall_latency: Percentiles,
     /// Simulated ARTEMIS time for all batches, ns.
     pub sim_total_ns: f64,
     /// Simulated ARTEMIS energy, pJ.
@@ -134,13 +142,16 @@ impl Coordinator {
 
     /// Execute one batch, producing responses for its real rows.
     fn run_batch(&self, batch: Batch, stats: &mut ServeStats) -> Result<Vec<InferenceResponse>> {
-        let input = batch.to_input(self.tiny.batch, self.tiny.seq_len);
+        let (input, padded_elems, truncated_elems) =
+            batch.to_input(self.tiny.batch, self.tiny.seq_len);
         let t0 = Instant::now();
         let flat = self.model.run_f32(&[input])?;
         let exec_ns = t0.elapsed().as_nanos() as u64;
 
         stats.batches += 1;
         stats.padded_rows += batch.padding as u64;
+        stats.padded_elems += padded_elems;
+        stats.truncated_elems += truncated_elems;
         stats.wall_exec_ns += exec_ns;
         stats.sim_total_ns += self.batch_sim.batch_latency_ns;
         stats.sim_total_pj += self.batch_sim.batch_energy_pj;
@@ -192,6 +203,9 @@ impl Coordinator {
             responses.extend(self.run_batch(batch, &mut stats)?);
         }
         stats.wall_total_ns = t0.elapsed().as_nanos() as u64;
+        stats.wall_latency = Percentiles::from_samples(
+            responses.iter().map(|r| r.wall_queue_ns + r.wall_exec_ns).collect(),
+        );
         Ok((responses, stats))
     }
 

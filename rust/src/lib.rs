@@ -29,6 +29,8 @@
 //! * [`runtime`]   — pluggable execution backends: pure-Rust reference
 //!   executor (default) or PJRT artifact loading (feature `pjrt`).
 //! * [`coordinator`] — request router, batcher, co-simulation driver.
+//! * [`serve`]     — continuous-batching generation server: simulated
+//!   clock, KV-residency admission, load generator, latency histograms.
 //! * [`report`]    — table/figure emitters for the paper's evaluation.
 
 #![deny(rustdoc::broken_intra_doc_links)]
@@ -44,6 +46,7 @@ pub mod nsc;
 pub mod report;
 pub mod runtime;
 pub mod sc;
+pub mod serve;
 pub mod sim;
 pub mod timing;
 pub mod util;

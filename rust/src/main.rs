@@ -4,12 +4,13 @@
 //! simulations, and drive the serving demo.  Arg parsing is hand-rolled
 //! (the offline build has no clap); `artemis help` lists everything.
 
-use anyhow::Result;
-use artemis::config::ArtemisConfig;
+use anyhow::{anyhow, Result};
+use artemis::config::{ArtemisConfig, ModelZoo};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
+use artemis::serve::{run_continuous, run_static, Policy, Scenario, SchedulerConfig};
 use artemis::sim::SimOptions;
 use artemis::util::XorShift64;
 
@@ -46,6 +47,11 @@ Other commands:
            detailed simulation report for one model
   serve    [--requests N] [--variant fp32|q8|q8sc]
            batched serving demo through the functional runtime
+  serve-gen [--scenario chat|summarize|burst] [--seed N] [--sessions N]
+           [--policy fifo|spf] [--batch B] [--model name]
+           continuous-batching generation server on the simulated clock:
+           TTFT + per-token p50/p95/p99 (simulated ns), tokens/s, and the
+           comparison against the static pad-and-drop batcher
   config   print the default configuration as JSON
   help     this text
 
@@ -114,6 +120,81 @@ fn run_serve(args: &[String]) -> Result<()> {
     let mean_queue = responses.iter().map(|r| r.wall_queue_ns).sum::<u64>() as f64
         / responses.len().max(1) as f64;
     println!("mean wall queue delay: {:.2} ms", mean_queue * 1e-6);
+    println!(
+        "wall latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms ({} short-row padded elems)",
+        stats.wall_latency.p50 as f64 * 1e-6,
+        stats.wall_latency.p95 as f64 * 1e-6,
+        stats.wall_latency.p99 as f64 * 1e-6,
+        stats.padded_elems
+    );
+    Ok(())
+}
+
+fn run_serve_gen(args: &[String]) -> Result<()> {
+    let scenario = flag_value(args, "--scenario").unwrap_or_else(|| "chat".into());
+    let mut sc = Scenario::by_name(&scenario)
+        .ok_or_else(|| anyhow!("unknown scenario '{scenario}' (chat|summarize|burst)"))?;
+    let seed: u64 = flag_value(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    if let Some(n) = flag_value(args, "--sessions") {
+        sc = sc.with_sessions(n.parse()?);
+    }
+    if let Some(name) = flag_value(args, "--model") {
+        sc.model = ModelZoo::by_name(&name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' — see `artemis help`"))?;
+    }
+    let batch: usize =
+        flag_value(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(sc.max_batch);
+    if batch == 0 {
+        return Err(anyhow!("--batch must be positive"));
+    }
+    let policy = match flag_value(args, "--policy") {
+        None => Policy::Fifo,
+        Some(p) => Policy::parse(&p).ok_or_else(|| anyhow!("unknown policy '{p}' (fifo|spf)"))?,
+    };
+    let cfg = build_config(args)?;
+
+    let trace = sc.generate(seed);
+    let sched = SchedulerConfig { max_batch: batch, policy };
+    let cont = run_continuous(&cfg, &sc.model, &trace, &sched);
+    let stat = run_static(&cfg, &sc.model, &trace, batch);
+
+    println!(
+        "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {})",
+        sc.name,
+        seed,
+        sc.model.name,
+        trace.len(),
+        batch,
+        policy
+    );
+    for r in [&cont, &stat] {
+        println!("{}:", r.scheme);
+        println!(
+            "  ttft            p50 {:>12.0} ns  p95 {:>12.0} ns  p99 {:>12.0} ns",
+            r.ttft.p50, r.ttft.p95, r.ttft.p99
+        );
+        println!(
+            "  per-token       p50 {:>12.0} ns  p95 {:>12.0} ns  p99 {:>12.0} ns  mean {:.0} ns",
+            r.per_token.p50, r.per_token.p95, r.per_token.p99, r.per_token.mean
+        );
+        println!(
+            "  inter-token gap p50 {:>12.0} ns  p95 {:>12.0} ns  p99 {:>12.0} ns",
+            r.itl.p50, r.itl.p95, r.itl.p99
+        );
+        println!(
+            "  tokens/s {:.0}   makespan {:.3} ms   energy {:.3} mJ   \
+             mean batch {:.2}   peak KV/bank {:.2} MB (budget {:.2} MB)   rejected {}",
+            r.tokens_per_s(),
+            r.makespan_ns * 1e-6,
+            r.sim_energy_pj * 1e-9,
+            r.mean_batch,
+            r.peak_kv_per_bank as f64 * 1e-6,
+            r.kv_budget_per_bank as f64 * 1e-6,
+            r.rejected
+        );
+    }
+    println!();
+    report::serving_comparison(&[cont, stat]).print();
     Ok(())
 }
 
@@ -182,6 +263,7 @@ fn main() -> Result<()> {
                 ("noise", report::noise_study()),
                 ("ablation", report::ablation_deterministic_vs_lfsr()),
                 ("capacity", report::capacity_study()),
+                ("serving", report::serving_study(&cfg)),
             ];
             for (name, t) in tables {
                 let path = format!("{outdir}/{name}.csv");
@@ -204,6 +286,7 @@ fn main() -> Result<()> {
             report::noise_study().print();
             report::ablation_deterministic_vs_lfsr().print();
             report::capacity_study().print();
+            report::serving_study(&cfg).print();
             if let Err(e) = run_tab4() {
                 eprintln!("tab4 skipped (artifacts missing?): {e}");
             }
@@ -228,6 +311,7 @@ fn main() -> Result<()> {
             }
         }
         "serve" => run_serve(&args)?,
+        "serve-gen" => run_serve_gen(&args)?,
         "config" => println!("{}", cfg.to_json()),
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {

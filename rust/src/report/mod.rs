@@ -5,8 +5,10 @@
 
 mod experiments;
 mod extensions;
+mod serving;
 mod table;
 
 pub use experiments::*;
 pub use extensions::*;
+pub use serving::{serving_comparison, serving_study};
 pub use table::TableBuilder;

@@ -1,0 +1,96 @@
+//! Serving study: continuous batching vs the static pad-and-drop
+//! batcher on the same generation trace (the `serve-gen` comparison).
+
+use super::table::TableBuilder;
+use crate::config::ArtemisConfig;
+use crate::serve::{run_continuous, run_static, Policy, Scenario, SchedulerConfig, ServeGenReport};
+
+fn us(ns: f64) -> String {
+    format!("{:.1}", ns * 1e-3)
+}
+
+/// Tabulate one trace's outcomes, one row per scheme.  Latencies are
+/// simulated ARTEMIS microseconds; "tok" is the per-session normalized
+/// per-token latency (request latency / generated tokens), the metric
+/// continuous batching is expected to win.
+pub fn serving_comparison(reports: &[ServeGenReport]) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Serving study — continuous batching vs static pad-and-drop on one trace \
+         (simulated time; per-token = request latency / generated tokens)",
+        &[
+            "scheme",
+            "ttft p50(us)",
+            "ttft p99(us)",
+            "tok mean(us)",
+            "tok p50(us)",
+            "tok p99(us)",
+            "itl p50(us)",
+            "tok/s",
+            "mJ/tok",
+            "peak KV/bank(MB)",
+            "rejected",
+        ],
+    );
+    for r in reports {
+        t.row(vec![
+            r.scheme.clone(),
+            us(r.ttft.p50),
+            us(r.ttft.p99),
+            us(r.per_token.mean),
+            us(r.per_token.p50),
+            us(r.per_token.p99),
+            us(r.itl.p50),
+            format!("{:.0}", r.tokens_per_s()),
+            format!("{:.2}", r.pj_per_token() * 1e-9),
+            format!("{:.2}", r.peak_kv_per_bank as f64 * 1e-6),
+            r.rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The standing experiment: the `chat` scenario (seed 1, 16 sessions)
+/// under continuous batching (both policies) and the static batcher.
+pub fn serving_study(cfg: &ArtemisConfig) -> TableBuilder {
+    let sc = Scenario::chat().with_sessions(16);
+    let trace = sc.generate(1);
+    let fifo = run_continuous(
+        cfg,
+        &sc.model,
+        &trace,
+        &SchedulerConfig::for_scenario(&sc, Policy::Fifo),
+    );
+    let spf = run_continuous(
+        cfg,
+        &sc.model,
+        &trace,
+        &SchedulerConfig::for_scenario(&sc, Policy::ShortestPromptFirst),
+    );
+    let stat = run_static(cfg, &sc.model, &trace, sc.max_batch);
+    serving_comparison(&[fifo, spf, stat])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_study_renders_and_continuous_wins() {
+        let t = serving_study(&ArtemisConfig::default());
+        let csv = t.to_csv();
+        assert!(!t.is_empty());
+        assert!(!t.render().contains("NaN"));
+        // Row order: continuous(fifo), continuous(spf), static.
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 3);
+        let tok_mean = |row: &str| -> f64 {
+            row.split(',').nth(3).unwrap().parse().unwrap()
+        };
+        assert!(rows[0].starts_with("continuous(fifo"));
+        assert!(rows[2].starts_with("static"));
+        assert!(
+            tok_mean(rows[0]) < tok_mean(rows[2]),
+            "continuous must beat static on mean per-token latency:\n{csv}"
+        );
+    }
+}

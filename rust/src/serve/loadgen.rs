@@ -1,0 +1,222 @@
+//! Deterministic seeded traffic generator for the generation server.
+//!
+//! Produces a [`SessionSpec`] trace — arrival times plus prompt and
+//! generation lengths — from a named scenario preset and a seed.  All
+//! randomness flows through [`XorShift64`], so the same (scenario, seed)
+//! pair yields the same trace on every run and platform; the simulated
+//! serving results built on top are therefore fully reproducible.
+
+use super::session::SessionSpec;
+use crate::config::{ModelZoo, TransformerModel};
+use crate::util::XorShift64;
+
+/// Token-length distribution for prompts / generation lengths.
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    Fixed(u64),
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: u64, hi: u64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut XorShift64) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => {
+                let (lo, hi) = (lo.max(1), hi.max(lo.max(1)));
+                lo + rng.below(hi - lo + 1)
+            }
+        }
+    }
+
+    /// Largest value the distribution can produce.
+    pub fn max(&self) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => hi.max(lo.max(1)),
+        }
+    }
+}
+
+/// Arrival process on the simulated clock.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals: exponential interarrival at `rate_per_s`
+    /// (simulated seconds).
+    Poisson { rate_per_s: f64 },
+    /// Bursts of `size` simultaneous arrivals separated by `gap_ns`.
+    Burst { size: u64, gap_ns: f64 },
+}
+
+/// A named traffic scenario: model, arrival process, length
+/// distributions, and the scheduler knobs it defaults to.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub model: TransformerModel,
+    pub sessions: usize,
+    pub arrivals: ArrivalProcess,
+    pub prompt: LengthDist,
+    pub gen: LengthDist,
+    /// Default continuous-batch slot count (= the static baseline's
+    /// fixed batch size, so comparisons are apples-to-apples).
+    pub max_batch: usize,
+}
+
+impl Scenario {
+    /// Interactive chat: short-to-medium prompts, medium generations,
+    /// steady Poisson traffic.
+    pub fn chat() -> Self {
+        Self {
+            name: "chat",
+            model: ModelZoo::opt_350(),
+            sessions: 32,
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 100.0 },
+            prompt: LengthDist::Uniform { lo: 16, hi: 256 },
+            gen: LengthDist::Uniform { lo: 16, hi: 96 },
+            max_batch: 8,
+        }
+    }
+
+    /// Summarization: long prompts, short generations, sparse traffic —
+    /// the KV-residency-bound regime.
+    pub fn summarize() -> Self {
+        Self {
+            name: "summarize",
+            model: ModelZoo::opt_350(),
+            sessions: 16,
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 25.0 },
+            prompt: LengthDist::Uniform { lo: 512, hi: 1536 },
+            gen: LengthDist::Uniform { lo: 8, hi: 32 },
+            max_batch: 4,
+        }
+    }
+
+    /// Bursty traffic: groups of simultaneous arrivals, stressing
+    /// admission control and queue depth.
+    pub fn burst() -> Self {
+        Self {
+            name: "burst",
+            model: ModelZoo::opt_350(),
+            sessions: 48,
+            arrivals: ArrivalProcess::Burst { size: 12, gap_ns: 50e6 },
+            prompt: LengthDist::Uniform { lo: 32, hi: 128 },
+            gen: LengthDist::Uniform { lo: 8, hi: 64 },
+            max_batch: 8,
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["chat", "summarize", "burst"]
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "chat" => Some(Self::chat()),
+            "summarize" => Some(Self::summarize()),
+            "burst" => Some(Self::burst()),
+            _ => None,
+        }
+    }
+
+    /// Same scenario with a different session count.
+    pub fn with_sessions(mut self, n: usize) -> Self {
+        self.sessions = n;
+        self
+    }
+
+    /// Generate the deterministic trace for `seed`, sorted by arrival.
+    pub fn generate(&self, seed: u64) -> Vec<SessionSpec> {
+        let mut rng = XorShift64::new(seed);
+        let mut t = 0.0f64;
+        let mut trace = Vec::with_capacity(self.sessions);
+        for id in 0..self.sessions as u64 {
+            match self.arrivals {
+                ArrivalProcess::Poisson { rate_per_s } => {
+                    let u = rng.unit();
+                    t += -(1.0 - u).ln() / rate_per_s.max(1e-12) * 1e9;
+                }
+                ArrivalProcess::Burst { size, gap_ns } => {
+                    if id > 0 && id % size.max(1) == 0 {
+                        t += gap_ns;
+                    }
+                }
+            }
+            trace.push(SessionSpec {
+                id,
+                arrival_ns: t,
+                prompt: self.prompt.sample(&mut rng),
+                gen: self.gen.sample(&mut rng),
+            });
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let sc = Scenario::chat();
+        let a = sc.generate(7);
+        let b = sc.generate(7);
+        let c = sc.generate(8);
+        assert_eq!(a.len(), sc.sessions);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ns, y.arrival_ns);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.gen, y.gen);
+        }
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_ns != y.arrival_ns));
+    }
+
+    #[test]
+    fn arrivals_non_decreasing_and_lengths_in_bounds() {
+        for name in Scenario::names() {
+            let sc = Scenario::by_name(name).unwrap();
+            let trace = sc.generate(3);
+            for w in trace.windows(2) {
+                assert!(w[0].arrival_ns <= w[1].arrival_ns, "{name}");
+            }
+            for s in &trace {
+                assert!(s.prompt >= 1 && s.prompt <= sc.prompt.max(), "{name}");
+                assert!(s.gen >= 1 && s.gen <= sc.gen.max(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn burst_scenario_clusters_arrivals() {
+        let sc = Scenario::burst();
+        let trace = sc.generate(1);
+        // Arrivals within a burst share a timestamp; bursts are apart.
+        assert_eq!(trace[0].arrival_ns, trace[11].arrival_ns);
+        assert!(trace[12].arrival_ns > trace[11].arrival_ns);
+    }
+
+    #[test]
+    fn unknown_scenario_is_none() {
+        assert!(Scenario::by_name("nope").is_none());
+        assert!(Scenario::by_name("CHAT").is_some());
+    }
+
+    #[test]
+    fn with_sessions_overrides_count() {
+        let sc = Scenario::chat().with_sessions(5);
+        assert_eq!(sc.generate(1).len(), 5);
+    }
+
+    #[test]
+    fn length_dist_sample_bounds() {
+        let mut rng = XorShift64::new(11);
+        let d = LengthDist::Uniform { lo: 10, hi: 20 };
+        for _ in 0..200 {
+            let v = d.sample(&mut rng);
+            assert!((10..=20).contains(&v));
+        }
+        assert_eq!(LengthDist::Fixed(0).sample(&mut rng), 1);
+        assert_eq!(LengthDist::Fixed(7).max(), 7);
+    }
+}

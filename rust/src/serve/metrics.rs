@@ -1,0 +1,254 @@
+//! Streaming latency histograms and bank-occupancy timelines.
+//!
+//! The serving scheduler records every latency sample into log-bucketed
+//! streaming histograms (constant memory, ~9% relative resolution —
+//! the shape HdrHistogram-style serving monitors use) and samples the
+//! KV/batch occupancy each tick into a bounded, self-decimating
+//! timeline.  All values are simulated-clock nanoseconds.
+
+/// Bucket growth factor: 2^(1/8) per bucket (~9% relative error).
+const GROWTH: f64 = 1.090_507_732_665_257_7;
+/// ln(GROWTH), precomputed for bucket indexing.
+const LN_GROWTH: f64 = 0.086_643_397_569_993_16;
+/// 512 buckets cover [1 ns, 2^64 ns) — any simulated latency.
+const BUCKETS: usize = 512;
+
+/// Log-bucketed streaming histogram over positive ns values.
+#[derive(Debug, Clone)]
+pub struct StreamingHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl StreamingHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], count: 0, sum: 0.0, min: f64::MAX, max: 0.0 }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v < 1.0 {
+            return 0;
+        }
+        ((v.ln() / LN_GROWTH) as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one latency sample (ns; clamped to ≥ 0).
+    pub fn record(&mut self, v: f64) {
+        let v = v.max(0.0);
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate (nearest-rank over buckets, geometric midpoint
+    /// within the hit bucket, clamped to the observed min/max).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > target {
+                let lo = (i as f64 * LN_GROWTH).exp();
+                let mid = lo * GROWTH.sqrt();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Snapshot the p50/p95/p99/mean/max summary.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            mean: self.mean(),
+            max: self.max,
+            count: self.count,
+        }
+    }
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Percentile snapshot of one histogram, ns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub count: u64,
+}
+
+/// One occupancy observation at the end of a scheduler tick.
+#[derive(Debug, Clone, Copy)]
+pub struct OccupancySample {
+    /// Simulated clock at the sample, ns.
+    pub t_ns: f64,
+    /// Sessions in the continuous batch (decoding).
+    pub active: usize,
+    /// Arrived sessions waiting for a slot / KV reservation.
+    pub queued: usize,
+    /// Reserved KV bytes on the fullest bank.
+    pub kv_per_bank_bytes: u64,
+}
+
+/// Bounded occupancy timeline: keeps at most [`Self::MAX_SAMPLES`]
+/// samples by doubling its stride (dropping every other sample) when
+/// full; peaks are tracked before decimation so they are exact.
+#[derive(Debug, Clone)]
+pub struct OccupancyTimeline {
+    samples: Vec<OccupancySample>,
+    stride: u64,
+    seen: u64,
+    peak_active: usize,
+    peak_kv_per_bank: u64,
+}
+
+impl OccupancyTimeline {
+    pub const MAX_SAMPLES: usize = 4096;
+
+    pub fn new() -> Self {
+        Self { samples: Vec::new(), stride: 1, seen: 0, peak_active: 0, peak_kv_per_bank: 0 }
+    }
+
+    pub fn record(&mut self, s: OccupancySample) {
+        self.peak_active = self.peak_active.max(s.active);
+        self.peak_kv_per_bank = self.peak_kv_per_bank.max(s.kv_per_bank_bytes);
+        if self.seen % self.stride == 0 {
+            self.samples.push(s);
+            if self.samples.len() >= Self::MAX_SAMPLES {
+                let mut i = 0u64;
+                self.samples.retain(|_| {
+                    i += 1;
+                    i % 2 == 1
+                });
+                self.stride *= 2;
+            }
+        }
+        self.seen += 1;
+    }
+
+    pub fn samples(&self) -> &[OccupancySample] {
+        &self.samples
+    }
+
+    /// Exact peak of concurrent decoding sessions (pre-decimation).
+    pub fn peak_active(&self) -> usize {
+        self.peak_active
+    }
+
+    /// Exact peak per-bank KV residency, bytes (pre-decimation).
+    pub fn peak_kv_per_bank(&self) -> u64 {
+        self.peak_kv_per_bank
+    }
+}
+
+impl Default for OccupancyTimeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_ordered_and_within_relative_error() {
+        let mut h = StreamingHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v as f64 * 1000.0); // 1 µs .. 1 ms
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        // ~9% bucket resolution: p50 of uniform(1k..1M) is ~500k ns.
+        assert!((s.p50 - 500_500.0).abs() / 500_500.0 < 0.10, "p50 {}", s.p50);
+        assert!((s.p99 - 990_000.0).abs() / 990_000.0 < 0.10, "p99 {}", s.p99);
+        assert!((s.mean - 500_500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_and_single_sample_histograms() {
+        let h = StreamingHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.summary().mean, 0.0);
+        let mut one = StreamingHistogram::new();
+        one.record(42.0);
+        let s = one.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.max, 42.0);
+        // Clamped to the observed range despite bucket midpointing.
+        assert_eq!(s.p50, 42.0);
+        assert_eq!(s.p99, 42.0);
+    }
+
+    #[test]
+    fn sub_ns_and_zero_samples_are_clamped() {
+        let mut h = StreamingHistogram::new();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(0.5);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.5), 0.0); // min-clamped
+    }
+
+    #[test]
+    fn timeline_decimates_but_keeps_exact_peaks() {
+        let mut t = OccupancyTimeline::new();
+        for i in 0..20_000u64 {
+            t.record(OccupancySample {
+                t_ns: i as f64,
+                active: (i % 97) as usize,
+                queued: 0,
+                kv_per_bank_bytes: i % 1013,
+            });
+        }
+        assert!(t.samples().len() < OccupancyTimeline::MAX_SAMPLES);
+        assert_eq!(t.peak_active(), 96);
+        assert_eq!(t.peak_kv_per_bank(), 1012);
+        // Samples stay time-ordered after decimation.
+        for w in t.samples().windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Continuous-batching generation server on a simulated clock.
+//!
+//! The missing serving layer for the decode regime: an event-driven
+//! scheduler that admits generation sessions as they arrive, advances
+//! every in-flight session by one token per tick (iteration-level
+//! continuous batching, the Orca/vLLM discipline), accounts each
+//! session's KV-cache residency against the banks' capacity
+//! ([`dataflow::capacity`](crate::dataflow::capacity_report)), and
+//! costs every tick through [`sim::simulate`](crate::sim::simulate) so
+//! all reported latencies are simulated ARTEMIS nanoseconds.
+//!
+//! * [`session`](Session) — session state machine + [`KvTracker`]
+//!   admission control.
+//! * [`scheduler`](run_continuous) — the tick loop, FIFO /
+//!   shortest-prompt-first policies, and the static pad-and-drop
+//!   baseline ([`run_static`]).
+//! * [`loadgen`](Scenario) — deterministic seeded traffic (Poisson /
+//!   burst arrivals, `chat` / `summarize` / `burst` presets).
+//! * [`metrics`](StreamingHistogram) — streaming latency histograms
+//!   (TTFT, per-token, inter-token gap) and occupancy timelines.
+//!
+//! Driven by the `serve-gen` CLI subcommand and the
+//! [`report`](crate::report) serving-comparison table; the tick model
+//! and accounting rules are documented in DESIGN.md
+//! §Serving-scheduler.
+
+mod loadgen;
+mod metrics;
+mod scheduler;
+mod session;
+
+pub use loadgen::{ArrivalProcess, LengthDist, Scenario};
+pub use metrics::{LatencySummary, OccupancySample, OccupancyTimeline, StreamingHistogram};
+pub use scheduler::{
+    run_continuous, run_static, Policy, SchedulerConfig, ServeGenReport, SessionReport,
+};
+pub use session::{kv_bytes, KvTracker, Session, SessionSpec, SessionState};

@@ -1,0 +1,243 @@
+//! Generation-session state machine and KV-cache residency accounting.
+//!
+//! A session is one autoregressive generation request: a prompt that is
+//! prefetched into the banks' K/V shards (prefill) followed by `gen`
+//! decode steps, each emitting one token.  Its lifecycle is
+//! queued → prefill → decoding → done (or rejected at admission when its
+//! KV cache could never fit the banks).
+//!
+//! KV residency follows the paper's token-sharded placement: each bank
+//! keeps the K/V rows of its token shard resident, and in the decode
+//! regime (unlike the single encoder pass `dataflow::capacity` models)
+//! *every* layer's K/V must stay resident for the whole generation, so a
+//! session's footprint is `2 · L · ctx · d_model` bytes at 8-bit.  The
+//! tracker reserves a session's footprint at its *maximum* context
+//! (prompt + requested generation) up front, so an admitted session can
+//! always run to completion without preemption — the conservative
+//! no-preemption discipline; see DESIGN.md §Serving-scheduler.
+
+use crate::config::{ArtemisConfig, TransformerModel};
+use crate::dataflow::capacity_report;
+
+/// Immutable description of one generation request.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionSpec {
+    pub id: u64,
+    /// Arrival time on the simulated clock, ns.
+    pub arrival_ns: f64,
+    /// Prompt length, tokens.
+    pub prompt: u64,
+    /// Requested generation length, tokens (= decode steps).
+    pub gen: u64,
+}
+
+/// Lifecycle state of a generation session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Arrived, waiting for a batch slot and KV reservation.
+    Queued,
+    /// Admitted; prompt K/V being written into the banks.
+    Prefill,
+    /// In the continuous batch; one token per scheduler tick.
+    Decoding,
+    /// All requested tokens emitted; KV released.
+    Done,
+    /// Rejected at admission: its maximum-context KV cache exceeds the
+    /// per-bank budget even with the banks otherwise empty.
+    Rejected,
+}
+
+/// Mutable per-session serving state.
+///
+/// Timestamps are on the simulated clock (ns) and are only meaningful
+/// once the corresponding state has been reached: `admitted_ns` from
+/// [`SessionState::Prefill`], `first_token_ns`/`last_token_ns` once
+/// `generated > 0`, `finished_ns` from [`SessionState::Done`] (or
+/// [`SessionState::Rejected`], where it records the rejection time).
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub spec: SessionSpec,
+    pub state: SessionState,
+    /// Tokens produced so far by decode steps.
+    pub generated: u64,
+    pub admitted_ns: f64,
+    pub first_token_ns: f64,
+    pub last_token_ns: f64,
+    pub finished_ns: f64,
+}
+
+impl Session {
+    pub fn new(spec: SessionSpec) -> Self {
+        Self {
+            spec,
+            state: SessionState::Queued,
+            generated: 0,
+            admitted_ns: 0.0,
+            first_token_ns: 0.0,
+            last_token_ns: 0.0,
+            finished_ns: 0.0,
+        }
+    }
+
+    /// Current attention context: prompt plus tokens generated so far.
+    pub fn context(&self) -> u64 {
+        self.spec.prompt + self.generated
+    }
+
+    /// Context the session will have at its final decode step's end.
+    pub fn max_context(&self) -> u64 {
+        self.spec.prompt + self.spec.gen
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == SessionState::Done
+    }
+}
+
+/// Resident K/V bytes for `ctx` tokens of context: K and V, 8-bit, for
+/// every layer (the decode regime keeps all layers' shards resident).
+pub fn kv_bytes(model: &TransformerModel, ctx: u64) -> u64 {
+    2 * model.layers as u64 * ctx * model.d_model as u64
+}
+
+/// Per-bank KV-residency tracker with conservative admission control.
+///
+/// The per-bank byte budget is what a bank has left after its weight
+/// shard (`dataflow::capacity_report`).  Each session's K/V is sharded
+/// evenly across all banks, and every session rounds up to its own
+/// `ceil(bytes / banks)` slice on the fullest bank (sessions do not
+/// pack into each other's slack rows), so the tracker accounts the
+/// *sum of per-session per-bank footprints* — the fullest bank's true
+/// load under the token-sharded placement.
+#[derive(Debug, Clone)]
+pub struct KvTracker {
+    banks: u64,
+    budget_per_bank: u64,
+    reserved_per_bank: u64,
+    peak_per_bank: u64,
+}
+
+impl KvTracker {
+    pub fn new(cfg: &ArtemisConfig, model: &TransformerModel) -> Self {
+        let cap = capacity_report(cfg, model);
+        let budget_per_bank = cap.bank_capacity_bytes.saturating_sub(cap.weights_bytes_per_bank);
+        Self {
+            banks: cfg.hbm.banks_total().max(1),
+            budget_per_bank,
+            reserved_per_bank: 0,
+            peak_per_bank: 0,
+        }
+    }
+
+    /// A session's footprint on the fullest bank: its total KV bytes
+    /// rounded up to the per-bank shard.
+    fn per_bank(&self, total_bytes: u64) -> u64 {
+        total_bytes.div_ceil(self.banks)
+    }
+
+    /// Bytes per bank available for KV after the weight shard.
+    pub fn budget_per_bank(&self) -> u64 {
+        self.budget_per_bank
+    }
+
+    /// Currently reserved KV bytes on the fullest bank.
+    pub fn reserved_per_bank(&self) -> u64 {
+        self.reserved_per_bank
+    }
+
+    /// High-water mark of [`Self::reserved_per_bank`] over the run.
+    pub fn peak_per_bank(&self) -> u64 {
+        self.peak_per_bank
+    }
+
+    /// Whether a session needing `total_bytes` of KV at its maximum
+    /// context could ever be admitted (i.e. fits an empty machine).
+    pub fn fits_alone(&self, total_bytes: u64) -> bool {
+        self.per_bank(total_bytes) <= self.budget_per_bank
+    }
+
+    /// Reserve `total_bytes` across the banks; false (and no change)
+    /// when the reservation would overflow the per-bank budget.
+    pub fn try_reserve(&mut self, total_bytes: u64) -> bool {
+        let would = self.reserved_per_bank + self.per_bank(total_bytes);
+        if would > self.budget_per_bank {
+            return false;
+        }
+        self.reserved_per_bank = would;
+        self.peak_per_bank = self.peak_per_bank.max(would);
+        true
+    }
+
+    /// Release a prior reservation (session finished).  Pass the same
+    /// `total_bytes` that was reserved.
+    pub fn release(&mut self, total_bytes: u64) {
+        self.reserved_per_bank = self.reserved_per_bank.saturating_sub(self.per_bank(total_bytes));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    fn spec(prompt: u64, gen: u64) -> SessionSpec {
+        SessionSpec { id: 0, arrival_ns: 0.0, prompt, gen }
+    }
+
+    #[test]
+    fn kv_bytes_matches_closed_form() {
+        let m = ModelZoo::opt_350(); // L=12, d=768
+        assert_eq!(kv_bytes(&m, 100), 2 * 12 * 100 * 768);
+        assert_eq!(kv_bytes(&m, 0), 0);
+    }
+
+    #[test]
+    fn session_context_grows_with_generation() {
+        let mut s = Session::new(spec(64, 16));
+        assert_eq!(s.context(), 64);
+        assert_eq!(s.max_context(), 80);
+        s.generated = 5;
+        assert_eq!(s.context(), 69);
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    fn tracker_reserve_release_round_trip() {
+        let cfg = ArtemisConfig::default();
+        let m = ModelZoo::opt_350();
+        let mut kv = KvTracker::new(&cfg, &m);
+        let budget = kv.budget_per_bank();
+        assert!(budget > 0);
+        let chunk = kv_bytes(&m, 512);
+        assert!(kv.try_reserve(chunk));
+        assert!(kv.reserved_per_bank() > 0);
+        kv.release(chunk);
+        assert_eq!(kv.reserved_per_bank(), 0);
+        // Peak survives the release.
+        assert!(kv.peak_per_bank() > 0);
+    }
+
+    #[test]
+    fn tracker_rejects_overflow_and_stays_consistent() {
+        let mut cfg = ArtemisConfig::default();
+        cfg.hbm.subarrays_per_bank = 8; // tiny ~2 MB banks
+        let m = ModelZoo::transformer_base();
+        let mut kv = KvTracker::new(&cfg, &m);
+        let banks = cfg.hbm.banks_total();
+        // A reservation one byte over the machine-wide budget must fail.
+        let over = kv.budget_per_bank() * banks + 1;
+        assert!(!kv.fits_alone(over));
+        assert!(!kv.try_reserve(over));
+        assert_eq!(kv.reserved_per_bank(), 0);
+        // Fill up with admissible chunks until one bounces.
+        let chunk = kv_bytes(&m, 2048);
+        assert!(kv.fits_alone(chunk));
+        let mut admitted = 0u64;
+        while kv.try_reserve(chunk) {
+            admitted += 1;
+            assert!(admitted < 1_000_000, "budget never exhausted");
+        }
+        assert!(admitted > 0);
+        assert!(kv.reserved_per_bank() <= kv.budget_per_bank());
+    }
+}

@@ -8,7 +8,7 @@
 //! its token shard resident, so only the new token's K/V row moves).
 
 use super::ops::{ActKind, LayerOps, Op, Workload};
-use crate::config::TransformerModel;
+use crate::config::{Arch, TransformerModel};
 
 /// One decode step's workload: `ctx` tokens of context, one new token.
 pub fn decode_step_workload(model: &TransformerModel, ctx: u64) -> Workload {
@@ -67,6 +67,118 @@ pub fn generation_workloads(
     (prefill, steps)
 }
 
+/// One continuous-batching decode tick: `contexts.len()` in-flight
+/// sessions each advance by one token.  The projections and the FFN
+/// batch across sessions (`m = B` — the weight shard stays resident
+/// while the B rows stream through it, which is exactly why
+/// iteration-level batching is nearly free on the token-sharded
+/// dataflow), while the attention is per-session over its own context.
+///
+/// `batched_decode_step_workload(m, &[ctx])` is MAC-identical to
+/// [`decode_step_workload`]`(m, ctx)` — batching buys latency, not a
+/// different op count.  An empty batch is an empty (zero-cost)
+/// workload, not a phantom session.
+pub fn batched_decode_step_workload(model: &TransformerModel, contexts: &[u64]) -> Workload {
+    if contexts.is_empty() {
+        let mut m = model.clone();
+        m.seq_len = 0;
+        m.name = format!("{}@decode[b0]", model.name);
+        return Workload { model: m, layers: Vec::new() };
+    }
+    let b = contexts.len() as u64;
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+
+    let mut layers = Vec::with_capacity(model.layers as usize);
+    for _ in 0..model.layers {
+        let mut ops = vec![
+            Op::Matmul { m: b, k: d, n: d, tag: "Wq" },
+            Op::Matmul { m: b, k: d, n: d, tag: "Wk" },
+            Op::Matmul { m: b, k: d, n: d, tag: "Wv" },
+        ];
+        for &ctx in contexts {
+            let ctx = ctx.max(1);
+            ops.push(Op::Matmul { m: h, k: dh, n: ctx, tag: "QK^T" });
+            ops.push(Op::Softmax { rows: h, width: ctx });
+            ops.push(Op::Matmul { m: h, k: ctx, n: dh, tag: "SV" });
+        }
+        ops.extend_from_slice(&[
+            Op::Matmul { m: b, k: d, n: d, tag: "Wo" },
+            Op::Residual { elems: b * d },
+            Op::Norm { elems: b * d },
+            Op::Matmul { m: b, k: d, n: f, tag: "FF1" },
+            Op::Activation { elems: b * f, kind: act },
+            Op::Matmul { m: b, k: f, n: d, tag: "FF2" },
+            Op::Residual { elems: b * d },
+            Op::Norm { elems: b * d },
+        ]);
+        // As in the single-row step: only new K/V rows are broadcast,
+        // no full all-gather.
+        layers.push(LayerOps { ops, attention_allgathers: 0 });
+    }
+    let mut m = model.clone();
+    m.seq_len = b as u32;
+    m.name = format!("{}@decode[b{}]", model.name, b);
+    Workload { model: m, layers }
+}
+
+/// Batched prefill: several prompts written into the banks in one pass.
+/// Projections/FFN batch across the total token rows; each prompt is
+/// its own attention problem (causal for decoder-only models — the
+/// generation regime).  With a single prompt this is MAC-identical to
+/// [`build_workload`](super::build_workload) at that sequence length
+/// for decoder-only models.  An empty batch is an empty workload.
+pub fn batched_prefill_workload(model: &TransformerModel, prompts: &[u64]) -> Workload {
+    if prompts.is_empty() {
+        let mut m = model.clone();
+        m.seq_len = 0;
+        m.name = format!("{}@prefill[b0]", model.name);
+        return Workload { model: m, layers: Vec::new() };
+    }
+    let total: u64 = prompts.iter().map(|&p| p.max(1)).sum();
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+    let causal = matches!(model.arch, Arch::DecoderOnly);
+
+    let mut layers = Vec::with_capacity(model.layers as usize);
+    for _ in 0..model.layers {
+        let mut ops = vec![
+            Op::Matmul { m: total, k: d, n: d, tag: "Wq" },
+            Op::Matmul { m: total, k: d, n: d, tag: "Wk" },
+            Op::Matmul { m: total, k: d, n: d, tag: "Wv" },
+        ];
+        for &p in prompts {
+            let p = p.max(1);
+            let score_n = if causal { p.div_ceil(2) } else { p };
+            ops.push(Op::Matmul { m: p * h, k: dh, n: score_n, tag: "QK^T" });
+            ops.push(Op::Softmax { rows: p * h, width: score_n });
+            ops.push(Op::Matmul { m: p * h, k: score_n, n: dh, tag: "SV" });
+        }
+        ops.extend_from_slice(&[
+            Op::Matmul { m: total, k: d, n: d, tag: "Wo" },
+            Op::Residual { elems: total * d },
+            Op::Norm { elems: total * d },
+            Op::Matmul { m: total, k: d, n: f, tag: "FF1" },
+            Op::Activation { elems: total * f, kind: act },
+            Op::Matmul { m: total, k: f, n: d, tag: "FF2" },
+            Op::Residual { elems: total * d },
+            Op::Norm { elems: total * d },
+        ]);
+        // Prefill K/V shards are all-gathered like any encoder pass.
+        layers.push(LayerOps { ops, attention_allgathers: 2 });
+    }
+    let mut m = model.clone();
+    m.seq_len = total as u32;
+    m.name = format!("{}@prefill[b{}]", model.name, prompts.len());
+    Workload { model: m, layers }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +218,96 @@ mod tests {
         let m = ModelZoo::opt_350();
         let w = decode_step_workload(&m, 0);
         assert!(w.total_macs() > 0);
+    }
+
+    /// Closed form per decode step (one new token against `ctx`):
+    /// `L * (4d² + 2·d·f + 2·h·d_head·ctx)` MACs — the four d×d
+    /// projections, the two FFN matmuls, and QK^T + SV over the context.
+    fn decode_macs_closed_form(m: &crate::config::TransformerModel, ctx: u64) -> u64 {
+        let (l, d, f) = (m.layers as u64, m.d_model as u64, m.d_ff as u64);
+        let (h, dh) = (m.heads as u64, m.d_head() as u64);
+        l * (4 * d * d + 2 * d * f + 2 * h * dh * ctx)
+    }
+
+    #[test]
+    fn decode_step_macs_match_closed_form() {
+        for m in ModelZoo::all() {
+            for ctx in [1u64, 17, 128, 2048] {
+                assert_eq!(
+                    decode_step_workload(&m, ctx).total_macs(),
+                    decode_macs_closed_form(&m, ctx),
+                    "{} ctx={ctx}",
+                    m.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generation_steps_have_contexts_prompt_to_prompt_plus_gen() {
+        let m = ModelZoo::opt_350();
+        let (prompt, gen) = (100u64, 7u64);
+        let (_, steps) = generation_workloads(&m, prompt, gen);
+        assert_eq!(steps.len(), gen as usize);
+        // Invert each step's context from its MAC count via the closed
+        // form: contexts must be exactly prompt, prompt+1, ..
+        let (l, d, f) = (m.layers as u64, m.d_model as u64, m.d_ff as u64);
+        let (h, dh) = (m.heads as u64, m.d_head() as u64);
+        for (t, step) in steps.iter().enumerate() {
+            let macs = step.total_macs();
+            let ctx = (macs / l - 4 * d * d - 2 * d * f) / (2 * h * dh);
+            assert_eq!(ctx, prompt + t as u64, "step {t}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_single_matches_unbatched_step() {
+        let m = ModelZoo::opt_350();
+        for ctx in [1u64, 64, 511] {
+            assert_eq!(
+                batched_decode_step_workload(&m, &[ctx]).total_macs(),
+                decode_step_workload(&m, ctx).total_macs()
+            );
+        }
+    }
+
+    #[test]
+    fn batched_decode_macs_are_sum_of_singles() {
+        // Batching buys latency, never a different op count.
+        let m = ModelZoo::transformer_base();
+        let ctxs = [33u64, 64, 100, 257];
+        let batched = batched_decode_step_workload(&m, &ctxs).total_macs();
+        let singles: u64 = ctxs.iter().map(|&c| decode_step_workload(&m, c).total_macs()).sum();
+        assert_eq!(batched, singles);
+        // An empty batch costs nothing — no phantom session.
+        assert_eq!(batched_decode_step_workload(&m, &[]).total_macs(), 0);
+        assert_eq!(batched_prefill_workload(&m, &[]).total_macs(), 0);
+    }
+
+    #[test]
+    fn batched_prefill_single_matches_build_workload() {
+        let m = ModelZoo::opt_350(); // decoder-only, causal — generation
+        for n in [16u64, 128, 777] {
+            let mut at_n = m.clone();
+            at_n.seq_len = n as u32;
+            assert_eq!(
+                batched_prefill_workload(&m, &[n]).total_macs(),
+                super::super::build_workload(&at_n).total_macs(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_prefill_totals_scale_with_prompts() {
+        let m = ModelZoo::opt_350();
+        let w = batched_prefill_workload(&m, &[64, 128]);
+        assert_eq!(w.model.seq_len, 192);
+        assert_eq!(w.layers.len(), m.layers as usize);
+        // Projections batch across rows; attention stays per-prompt, so
+        // two prompts cost less than one fused 192-token prompt (whose
+        // scores grow quadratically).
+        let fused = batched_prefill_workload(&m, &[192]);
+        assert!(w.total_macs() < fused.total_macs());
     }
 }

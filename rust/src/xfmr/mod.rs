@@ -4,7 +4,10 @@
 mod decode;
 mod ops;
 
-pub use decode::{decode_step_workload, generation_workloads};
+pub use decode::{
+    batched_decode_step_workload, batched_prefill_workload, decode_step_workload,
+    generation_workloads,
+};
 pub use ops::{ActKind, LayerOps, Op, Workload};
 
 use crate::config::{Arch, TransformerModel};

@@ -19,7 +19,7 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_exits_zero_and_lists_commands() {
     let (ok, stdout, stderr) = run(&["help"]);
     assert!(ok, "help failed: {stderr}");
-    for cmd in ["fig2", "fig7", "tab4", "micro", "simulate", "serve", "csv"] {
+    for cmd in ["fig2", "fig7", "tab4", "micro", "simulate", "serve", "serve-gen", "csv"] {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
     }
 }
@@ -54,6 +54,29 @@ fn fig7_prints_momcap_staircases() {
         .find(|l| l.trim_start().starts_with('8'))
         .unwrap_or_else(|| panic!("no 8 pF row:\n{stdout}"));
     assert!(eight_pf.contains("20"), "8 pF row should show 20 steps: {eight_pf}");
+}
+
+#[test]
+fn serve_gen_prints_percentiles_and_is_deterministic() {
+    // Small seeded trace so the debug binary finishes quickly.
+    let args =
+        ["serve-gen", "--scenario", "chat", "--seed", "1", "--sessions", "6", "--batch", "4"];
+    let (ok, out1, stderr) = run(&args);
+    assert!(ok, "serve-gen failed: {stderr}");
+    for needle in ["p99", "ttft", "per-token", "tokens/s", "continuous(fifo b4)", "static(b4)"] {
+        assert!(out1.contains(needle), "missing '{needle}':\n{out1}");
+    }
+    // Simulated clock + seeded loadgen: byte-identical across runs.
+    let (ok2, out2, _) = run(&args);
+    assert!(ok2);
+    assert_eq!(out1, out2, "serve-gen must be deterministic for a fixed seed");
+}
+
+#[test]
+fn serve_gen_rejects_unknown_scenario() {
+    let (ok, _, stderr) = run(&["serve-gen", "--scenario", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown scenario"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,98 @@
+//! Property tests for the continuous-batching generation scheduler:
+//! load-monotonic completion, generation-length obedience, and the
+//! KV-admission capacity invariant, over randomized traces and knobs
+//! (deterministic in-repo harness, `util::prop`).
+
+use artemis::config::{ArtemisConfig, ModelZoo};
+use artemis::serve::{kv_bytes, run_continuous, Policy, Scenario, SchedulerConfig};
+use artemis::util::prop::check;
+
+/// Small fast scenario: chat traffic shapes on the 2-layer
+/// Transformer-base so each property case simulates in milliseconds.
+fn fast_scenario(sessions: usize) -> Scenario {
+    let mut sc = Scenario::chat().with_sessions(sessions);
+    sc.model = ModelZoo::transformer_base();
+    sc
+}
+
+#[test]
+fn completion_time_is_monotone_in_arrival_load() {
+    let cfg = ArtemisConfig::default();
+    let sc = fast_scenario(12);
+    check(6, 0x5E12_0001, |g| {
+        let seed = g.u64_below(1 << 20) + 1;
+        let n = g.usize_in(2, 8);
+        let extra = g.usize_in(1, 4);
+        let batch = g.usize_in(2, 6);
+        let trace = sc.generate(seed);
+        let sched = SchedulerConfig { max_batch: batch, policy: Policy::Fifo };
+        let small = run_continuous(&cfg, &sc.model, &trace[..n], &sched);
+        let big = run_continuous(&cfg, &sc.model, &trace[..n + extra], &sched);
+        // Serving a superset of the arrivals can never finish earlier.
+        assert!(
+            big.makespan_ns >= small.makespan_ns - 1e-6,
+            "load {} -> {}: makespan {} < {}",
+            n,
+            n + extra,
+            big.makespan_ns,
+            small.makespan_ns
+        );
+        assert!(big.total_tokens >= small.total_tokens);
+    });
+}
+
+#[test]
+fn no_session_decodes_past_its_requested_length() {
+    let cfg = ArtemisConfig::default();
+    check(6, 0x5E12_0002, |g| {
+        let sc = fast_scenario(g.usize_in(3, 10));
+        let seed = g.u64_below(1 << 20) + 1;
+        let policy = if g.bool() { Policy::Fifo } else { Policy::ShortestPromptFirst };
+        let sched = SchedulerConfig { max_batch: g.usize_in(1, 6), policy };
+        let trace = sc.generate(seed);
+        let r = run_continuous(&cfg, &sc.model, &trace, &sched);
+        for s in &r.session_reports {
+            assert!(s.generated <= s.gen, "session {} overshot: {s:?}", s.id);
+            if !s.rejected {
+                assert_eq!(s.generated, s.gen, "session {} undershot", s.id);
+            } else {
+                assert_eq!(s.generated, 0);
+            }
+        }
+        let want: u64 =
+            r.session_reports.iter().filter(|s| !s.rejected).map(|s| s.gen).sum();
+        assert_eq!(r.total_tokens, want);
+    });
+}
+
+#[test]
+fn kv_admission_never_exceeds_bank_capacity() {
+    check(6, 0x5E12_0003, |g| {
+        let mut cfg = ArtemisConfig::default();
+        // Shrink the banks so KV pressure (and rejection) is real.
+        cfg.hbm.subarrays_per_bank = [8, 16, 32][g.usize_in(0, 2)];
+        let mut sc = Scenario::summarize().with_sessions(g.usize_in(3, 8));
+        sc.model = ModelZoo::transformer_base();
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let sched = SchedulerConfig { max_batch: g.usize_in(2, 16), policy: Policy::Fifo };
+        let r = run_continuous(&cfg, &sc.model, &trace, &sched);
+        assert!(
+            r.peak_kv_per_bank <= r.kv_budget_per_bank,
+            "KV overflow: peak {} > budget {}",
+            r.peak_kv_per_bank,
+            r.kv_budget_per_bank
+        );
+        // Rejection is exactly the could-never-fit predicate.
+        let banks = cfg.hbm.banks_total().max(1);
+        for s in &r.session_reports {
+            let need = kv_bytes(&sc.model, s.prompt + s.gen).div_ceil(banks);
+            assert_eq!(
+                s.rejected,
+                need > r.kv_budget_per_bank,
+                "session {}: need {need} vs budget {}",
+                s.id,
+                r.kv_budget_per_bank
+            );
+        }
+    });
+}
