@@ -1,0 +1,169 @@
+"""NumPy-only reference-model tests — the blocking python CI lane.
+
+The functional ARTEMIS arithmetic (``compile/kernels/common.py``) is
+defined by a handful of closed forms that need no jax to validate:
+symmetric 8-bit quantization, the deterministic stochastic product
+``trunc(qa*qb/128)`` (= the popcount of a correlation-encoded stream
+ANDed with a TCU stream), and the LUT-based log-sum-exp softmax.  This
+file re-derives those semantics in plain numpy and checks them against
+explicit bit-level stream constructions, so the contract holds even
+when jax/Pallas is unavailable (CI keeps this lane blocking while the
+jax lane stays advisory).
+"""
+
+import numpy as np
+
+STREAM_LEN = 128
+QMAX = 127.0
+LUT_SIZE = 256
+LUT_EXP_RANGE = 16.0
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors of compile/kernels/common.py
+
+
+def quant_scale(x):
+    return max(np.max(np.abs(x)), 1e-12) / QMAX
+
+
+def quantize(x, scale):
+    return np.clip(np.round(x / scale), -QMAX, QMAX)
+
+
+def sc_product(qa, qb):
+    return np.trunc(qa * qb / STREAM_LEN)
+
+
+def exp_lut_lookup(x):
+    x = np.clip(x, -LUT_EXP_RANGE, 0.0)
+    code = np.round((x + LUT_EXP_RANGE) * ((LUT_SIZE - 1) / LUT_EXP_RANGE))
+    xs = -LUT_EXP_RANGE + code * (LUT_EXP_RANGE / (LUT_SIZE - 1))
+    return np.exp(xs)
+
+
+def ln_lut_lookup(x, max_in):
+    ln_max = np.log(np.float32(max_in))
+    xc = np.clip(x, 1.0, max_in)
+    code = np.round(np.log(xc) * ((LUT_SIZE - 1) / ln_max))
+    return code * (ln_max / (LUT_SIZE - 1))
+
+
+def nsc_softmax(y):
+    y_max = np.max(y, axis=-1, keepdims=True)
+    z = y - y_max
+    e = exp_lut_lookup(z)
+    s = np.sum(e, axis=-1, keepdims=True)
+    ln_s = ln_lut_lookup(s, max_in=float(y.shape[-1]))
+    return exp_lut_lookup(z - ln_s)
+
+
+# ---------------------------------------------------------------------------
+# bit-level stream constructions (hardware ground truth)
+
+
+def tcu_stream(m):
+    """TCU stream of magnitude m: m leading ones."""
+    bits = np.zeros(STREAM_LEN, dtype=bool)
+    bits[: int(m)] = True
+    return bits
+
+
+def correlation_stream(m):
+    """Bresenham/low-discrepancy spread of m ones over 128 positions.
+
+    Bit i is set iff floor((i+1)*m/128) > floor(i*m/128) — the fixed
+    decode-ROM pattern of the bit-position correlation encoder.
+    """
+    i = np.arange(STREAM_LEN)
+    return ((i + 1) * int(m)) // STREAM_LEN > (i * int(m)) // STREAM_LEN
+
+
+def test_stream_and_popcount_is_trunc_product():
+    # The in-DRAM AND of a correlation-encoded stream with a TCU stream
+    # pops exactly floor(ma*mb/128) — the telescoping-sum identity the
+    # whole deterministic-SC multiply rests on.  Full 128x128 grid.
+    for ma in range(0, 128):
+        enc = correlation_stream(ma)
+        assert enc.sum() == ma  # encoder preserves magnitude
+        for mb in range(0, 128, 7):
+            pop = int(np.logical_and(enc, tcu_stream(mb)).sum())
+            assert pop == (ma * mb) // STREAM_LEN, (ma, mb)
+
+
+def test_sc_product_matches_stream_popcount_with_signs():
+    rng = np.random.default_rng(7)
+    qa = rng.integers(-127, 128, size=200).astype(np.float64)
+    qb = rng.integers(-127, 128, size=200).astype(np.float64)
+    got = sc_product(qa, qb)
+    for a, b, g in zip(qa, qb, got):
+        pop = int(
+            np.logical_and(
+                correlation_stream(abs(int(a))), tcu_stream(abs(int(b)))
+            ).sum()
+        )
+        want = np.sign(a) * np.sign(b) * pop
+        # trunc(a*b/128) truncates toward zero == signed popcount.
+        assert g == want, (a, b, g, want)
+
+
+def test_sc_product_error_bound():
+    # The only multiplicative error source: |q_a*q_b/128 - trunc| < 1.
+    rng = np.random.default_rng(3)
+    qa = rng.integers(-127, 128, size=1000).astype(np.float64)
+    qb = rng.integers(-127, 128, size=1000).astype(np.float64)
+    err = np.abs(qa * qb / STREAM_LEN - sc_product(qa, qb))
+    assert np.all(err < 1.0)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=2048) * 3.0
+    s = quant_scale(x)
+    q = quantize(x, s)
+    assert np.all(q == np.round(q))  # integer-valued codes
+    assert np.max(np.abs(q)) <= QMAX
+    # Within the clip range the roundtrip error is half a step.
+    assert np.max(np.abs(q * s - x)) <= s / 2 + 1e-12
+
+
+def test_sc_matmul_tracks_float_matmul():
+    # End-to-end functional form: quantize, trunc-SC accumulate,
+    # dequantize with the s_a*s_b*128 scale — close to the fp matmul.
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(16, 32)).astype(np.float64)
+    b = rng.normal(size=(32, 8)).astype(np.float64)
+    sa, sb = quant_scale(a), quant_scale(b)
+    qa, qb = quantize(a, sa), quantize(b, sb)
+    acc = np.zeros((16, 8))
+    for k in range(32):
+        acc += sc_product(qa[:, k, None], qb[None, k, :])
+    out = acc * (sa * sb * STREAM_LEN)
+    ref = a @ b
+    # Error budget: K truncations of < 1 popcount unit each.
+    bound = 32 * sa * sb * STREAM_LEN
+    assert np.max(np.abs(out - ref)) < bound
+    # And the quantized path is far better than the worst case (the
+    # truncations are one-sided but only ~half a unit on average).
+    assert np.max(np.abs(out - ref)) < bound / 3
+
+
+def test_nsc_softmax_rows_normalized_within_lut_error():
+    rng = np.random.default_rng(9)
+    y = rng.normal(size=(32, 64)) * 4.0
+    p = nsc_softmax(y)
+    assert np.all(p >= 0.0)
+    # LUT-quantized exp/ln: rows sum to 1 within the 8-bit grid error.
+    assert np.max(np.abs(p.sum(axis=-1) - 1.0)) < 0.05
+    # Ordering is preserved: the max logit gets the max probability.
+    assert np.all(np.argmax(p, axis=-1) == np.argmax(y, axis=-1))
+
+
+def test_nsc_softmax_matches_exact_softmax_loosely():
+    rng = np.random.default_rng(13)
+    y = rng.normal(size=(8, 16)) * 2.0
+    p = nsc_softmax(y)
+    e = np.exp(y - y.max(axis=-1, keepdims=True))
+    exact = e / e.sum(axis=-1, keepdims=True)
+    # Table V scale: softmax error is small but nonzero (LUT grids).
+    assert np.max(np.abs(p - exact)) < 0.05

@@ -1,0 +1,330 @@
+//! Multi-stack cluster scale-out: serve one generation trace across D
+//! HBM stacks.
+//!
+//! Each stack runs the per-bank token dataflow internally (everything
+//! `sim`/`dataflow` model); stacks compose in one of two placements
+//! ([`Placement`](crate::config::Placement)):
+//!
+//! * **Data-parallel** (`dp`) — every stack is a full replica
+//!   ([`ReplicaSim`]) owning whole sessions; an arriving session is
+//!   routed to one replica by the [`Router`] policy (round-robin /
+//!   least-loaded / KV-headroom) against per-stack KV capacity budgets.
+//! * **Pipeline-parallel** (`pp`) — the stacks form one pipeline; each
+//!   owns a contiguous layer range
+//!   ([`stack_groups`](crate::dataflow::stack_groups)), activations hop
+//!   stack-to-stack over the [`StackLink`](crate::dataflow::StackLink),
+//!   and a steady-state decode tick advances by the bottleneck stage
+//!   plus one hop (`sim::StackCoster`).
+//!
+//! All replicas share one memoized [`CostCache`]: the decomposed tick
+//! costing makes structurally identical sub-workloads recur across
+//! ticks, sessions and stacks, so the cache removes most `simulate`
+//! calls from the hot loop while staying bit-identical to uncached
+//! costing (DESIGN.md §Cluster-scale-out).
+//!
+//! The driver interleaves the replicas on the shared simulated
+//! timeline: before routing an arrival every replica is advanced to
+//! the arrival time, so routing decisions see live load — and the
+//! whole run stays deterministic for a fixed (trace, shape).
+
+use crate::config::{ArtemisConfig, ClusterConfig, Placement, TransformerModel};
+use crate::dataflow::{stack_groups, StackLink};
+use crate::serve::{
+    aggregate_report, Coster, KvTracker, ReplicaSim, RoutePolicy, Router, SchedulerConfig,
+    ServeGenReport, SessionSpec,
+};
+use crate::sim::{CacheStats, CostCache, SimOptions, StackCoster};
+
+/// Outcome of one cluster run: per-stack reports plus the exact
+/// aggregate (merged histograms, summed tokens/energy, max makespan).
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub stacks: u64,
+    pub placement: Placement,
+    pub route: RoutePolicy,
+    /// Whether the memoized cost cache was enabled.
+    pub cached: bool,
+    pub per_stack: Vec<ServeGenReport>,
+    pub aggregate: ServeGenReport,
+    pub cache: CacheStats,
+}
+
+impl ClusterReport {
+    /// Cluster-wide delivered generation throughput.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.aggregate.tokens_per_s()
+    }
+}
+
+/// Serve `trace` on a D-stack cluster.
+///
+/// `cfg` describes one stack (weights are replicated per stack under
+/// `dp`; split by layer range under `pp`).  Deterministic: same
+/// (cfg, model, trace, cluster, sched, route) → same report, cache on
+/// or off (`cached` only changes wall-clock, never a metric bit).
+pub fn run_cluster(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+) -> ClusterReport {
+    assert!(cluster.stacks > 0, "cluster needs at least one stack");
+    let opts = SimOptions::artemis();
+    let cache = cached.then(CostCache::shared);
+    let layers = model.layers as u64;
+
+    let mut replicas: Vec<ReplicaSim<'_>> = match cluster.placement {
+        Placement::DataParallel => (0..cluster.stacks)
+            .map(|_| {
+                let coster =
+                    Coster::Stack(StackCoster::single(cfg, model, opts, cache.clone()));
+                ReplicaSim::new(
+                    model,
+                    sched.clone(),
+                    coster,
+                    KvTracker::new(cfg, model),
+                    layers,
+                )
+            })
+            .collect(),
+        Placement::PipelineParallel => {
+            let groups = stack_groups(layers, cluster.stacks);
+            let link = StackLink::new(&cluster.link);
+            let coster = Coster::Stack(StackCoster::pipelined(
+                cfg,
+                model,
+                opts,
+                cache.clone(),
+                &groups,
+                link,
+            ));
+            // The binding stack owns the most layers: its weight share
+            // and KV footprint gate admission for the whole group.
+            let l_max = groups.iter().map(|g| g.len()).max().unwrap_or(layers).max(1);
+            let kv = KvTracker::for_layer_share(cfg, model, l_max);
+            vec![ReplicaSim::new(model, sched.clone(), coster, kv, l_max)]
+        }
+    };
+
+    // Interleave the replicas on the shared timeline: advance everyone
+    // to each arrival, route it against live load, hand it over.
+    let mut order: Vec<SessionSpec> = trace.to_vec();
+    order.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+    let mut router = Router::new(route);
+    for spec in &order {
+        for r in replicas.iter_mut() {
+            r.advance_to(spec.arrival_ns);
+        }
+        let loads: Vec<_> = replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
+        let pick = router.route(&loads);
+        replicas[pick].push(*spec);
+    }
+    for r in replicas.iter_mut() {
+        r.run_to_completion();
+    }
+
+    let label = format!(
+        "{} {} b{} {}",
+        cluster.label(),
+        route,
+        sched.max_batch,
+        if cached { "cache" } else { "nocache" }
+    );
+    let per_stack: Vec<ServeGenReport> = replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r.report(format!("stack{i}({label})")))
+        .collect();
+    let aggregate = aggregate_report(&replicas, format!("cluster({label})"), model);
+    let cache_stats =
+        cache.map(|c| c.borrow().stats()).unwrap_or_default();
+
+    ClusterReport {
+        stacks: cluster.stacks,
+        placement: cluster.placement,
+        route,
+        cached,
+        per_stack,
+        aggregate,
+        cache: cache_stats,
+    }
+}
+
+/// Convenience: run the chat-trace scaling point used by the
+/// `cluster-scale` report and the CI serve benchmark.
+pub fn run_chat_cluster(
+    cfg: &ArtemisConfig,
+    stacks: u64,
+    placement: Placement,
+    seed: u64,
+    sessions: usize,
+    cached: bool,
+) -> ClusterReport {
+    let sc = crate::serve::Scenario::chat().with_sessions(sessions);
+    let trace = sc.generate(seed);
+    let sched = SchedulerConfig::for_scenario(&sc, crate::serve::Policy::Fifo);
+    let cluster = ClusterConfig::new(stacks, placement);
+    run_cluster(cfg, &sc.model, &trace, &cluster, &sched, RoutePolicy::LeastLoaded, cached)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+    use crate::serve::{Policy, Scenario};
+
+    fn fast_trace(n: usize) -> (ArtemisConfig, TransformerModel, Vec<SessionSpec>) {
+        let cfg = ArtemisConfig::default();
+        let model = ModelZoo::transformer_base(); // 2 layers: fast sim
+        let sc = Scenario::chat().with_sessions(n);
+        (cfg, model, sc.generate(1))
+    }
+
+    fn sched(batch: usize) -> SchedulerConfig {
+        SchedulerConfig { max_batch: batch, policy: Policy::Fifo }
+    }
+
+    #[test]
+    fn dp_serves_every_session_exactly_once() {
+        let (cfg, model, trace) = fast_trace(12);
+        let cl = ClusterConfig::new(3, Placement::DataParallel);
+        let r = run_cluster(&cfg, &model, &trace, &cl, &sched(4), RoutePolicy::RoundRobin, true);
+        assert_eq!(r.per_stack.len(), 3);
+        assert_eq!(r.aggregate.sessions, 12);
+        assert_eq!(r.aggregate.rejected, 0);
+        let want: u64 = trace.iter().map(|s| s.gen).sum();
+        assert_eq!(r.aggregate.total_tokens, want);
+        // Every session id appears exactly once across the stacks.
+        let mut ids: Vec<u64> = r
+            .per_stack
+            .iter()
+            .flat_map(|s| s.session_reports.iter().map(|x| x.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+        // And the aggregate lists them in id order.
+        let agg_ids: Vec<u64> = r.aggregate.session_reports.iter().map(|s| s.id).collect();
+        assert_eq!(agg_ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn more_stacks_raise_aggregate_throughput() {
+        let (cfg, model, trace) = fast_trace(16);
+        let one = ClusterConfig::new(1, Placement::DataParallel);
+        let four = ClusterConfig::new(4, Placement::DataParallel);
+        let r1 = run_cluster(&cfg, &model, &trace, &one, &sched(4), RoutePolicy::LeastLoaded, true);
+        let r4 =
+            run_cluster(&cfg, &model, &trace, &four, &sched(4), RoutePolicy::LeastLoaded, true);
+        assert_eq!(r1.aggregate.total_tokens, r4.aggregate.total_tokens);
+        assert!(
+            r4.tokens_per_s() > r1.tokens_per_s(),
+            "4 stacks {} tok/s vs 1 stack {} tok/s",
+            r4.tokens_per_s(),
+            r1.tokens_per_s()
+        );
+        assert!(r4.aggregate.makespan_ns < r1.aggregate.makespan_ns);
+    }
+
+    #[test]
+    fn cache_on_off_is_bit_identical_with_high_hit_rate() {
+        let (cfg, model, trace) = fast_trace(24);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let hot = run_cluster(&cfg, &model, &trace, &cl, &sched(8), RoutePolicy::LeastLoaded, true);
+        let cold =
+            run_cluster(&cfg, &model, &trace, &cl, &sched(8), RoutePolicy::LeastLoaded, false);
+        // Memoization must not move a single bit of any metric.
+        let (h, c) = (&hot.aggregate, &cold.aggregate);
+        assert_eq!(h.makespan_ns.to_bits(), c.makespan_ns.to_bits());
+        assert_eq!(h.sim_energy_pj.to_bits(), c.sim_energy_pj.to_bits());
+        assert_eq!(h.per_token.mean.to_bits(), c.per_token.mean.to_bits());
+        assert_eq!(h.ttft.p99.to_bits(), c.ttft.p99.to_bits());
+        assert_eq!(h.total_tokens, c.total_tokens);
+        assert_eq!(h.ticks, c.ticks);
+        // The cache actually worked (and the uncached run never looked).
+        assert!(hot.cache.hit_rate() > 0.8, "hit rate {}", hot.cache.hit_rate());
+        assert_eq!(cold.cache, CacheStats::default());
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let (cfg, model, trace) = fast_trace(10);
+        let cl = ClusterConfig::new(4, Placement::DataParallel);
+        let routes =
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::KvHeadroom];
+        for route in routes {
+            let a = run_cluster(&cfg, &model, &trace, &cl, &sched(4), route, true);
+            let b = run_cluster(&cfg, &model, &trace, &cl, &sched(4), route, true);
+            assert_eq!(a.aggregate.makespan_ns.to_bits(), b.aggregate.makespan_ns.to_bits());
+            assert_eq!(a.aggregate.total_tokens, b.aggregate.total_tokens);
+            assert_eq!(a.aggregate.rejected, b.aggregate.rejected);
+            // All policies serve the full trace on an uncontended cluster.
+            assert_eq!(a.aggregate.rejected, 0);
+        }
+    }
+
+    #[test]
+    fn pp_group_beats_one_stack_on_throughput() {
+        let (cfg, model, trace) = fast_trace(12);
+        let one = ClusterConfig::new(1, Placement::DataParallel);
+        let pp2 = ClusterConfig::new(2, Placement::PipelineParallel);
+        let r1 = run_cluster(&cfg, &model, &trace, &one, &sched(4), RoutePolicy::LeastLoaded, true);
+        let rp =
+            run_cluster(&cfg, &model, &trace, &pp2, &sched(4), RoutePolicy::LeastLoaded, true);
+        assert_eq!(rp.per_stack.len(), 1, "pp group is one logical replica");
+        assert_eq!(rp.aggregate.total_tokens, r1.aggregate.total_tokens);
+        // Halving the per-stage layer count shrinks the bottleneck
+        // tick below the whole-stack tick (hop included).
+        assert!(
+            rp.tokens_per_s() > r1.tokens_per_s(),
+            "pp x2 {} tok/s vs single {} tok/s",
+            rp.tokens_per_s(),
+            r1.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn pp_kv_budget_grows_with_freed_weight_room() {
+        // A pp stage stores only its layer share of weights and KV: the
+        // binding stack's budget must be >= the whole-model budget.
+        let (cfg, model, trace) = fast_trace(6);
+        let pp = ClusterConfig::new(2, Placement::PipelineParallel);
+        let r = run_cluster(&cfg, &model, &trace, &pp, &sched(4), RoutePolicy::LeastLoaded, true);
+        let full = KvTracker::new(&cfg, &model);
+        assert!(r.aggregate.kv_budget_per_bank >= full.budget_per_bank());
+        assert!(r.aggregate.peak_kv_per_bank <= r.aggregate.kv_budget_per_bank);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let (cfg, model, _) = fast_trace(0);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let r = run_cluster(&cfg, &model, &[], &cl, &sched(4), RoutePolicy::LeastLoaded, true);
+        assert_eq!(r.aggregate.sessions, 0);
+        assert_eq!(r.aggregate.total_tokens, 0);
+        assert_eq!(r.aggregate.makespan_ns, 0.0);
+        assert_eq!(r.cache.lookups(), 0);
+    }
+
+    #[test]
+    fn kv_headroom_routing_respects_budgets_under_pressure() {
+        // Tiny banks + summarize-length sessions: KV pressure is real;
+        // every stack must stay within budget and every session must be
+        // served or cleanly rejected.
+        let mut cfg = ArtemisConfig::default();
+        cfg.hbm.subarrays_per_bank = 16;
+        let model = ModelZoo::transformer_base();
+        let sc = Scenario::summarize().with_sessions(10);
+        let trace = sc.generate(3);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let r = run_cluster(&cfg, &model, &trace, &cl, &sched(8), RoutePolicy::KvHeadroom, true);
+        for s in &r.per_stack {
+            assert!(s.peak_kv_per_bank <= s.kv_budget_per_bank);
+        }
+        for s in &r.aggregate.session_reports {
+            assert!(s.rejected || s.generated == s.gen);
+        }
+    }
+}

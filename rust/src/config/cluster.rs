@@ -1,0 +1,124 @@
+//! Cluster shape: how D HBM stacks compose into one serving machine.
+//!
+//! ARTEMIS's token dataflow shards one inference across the banks of a
+//! *single* stack; serving heavy traffic means scaling past it — the
+//! direction PIM-GPT (multi-channel DIMM scale-out) and Atleus (manycore
+//! transformer accelerators) take.  A [`ClusterConfig`] describes the
+//! scale-out shape consumed by [`cluster`](crate::cluster): the stack
+//! count, the placement scheme, and the stack-to-stack link parameters
+//! (the inter-stack analogue of the intra-bank ring, see
+//! DESIGN.md §Cluster-scale-out for the parameter provenance).
+
+/// How the D stacks split the serving work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Each stack is a full replica owning whole sessions (weights
+    /// duplicated, sessions routed at admission).
+    DataParallel,
+    /// The stacks form one pipeline: each owns a contiguous layer range
+    /// ([`stack_groups`](crate::dataflow::stack_groups)), activations
+    /// hop stack-to-stack between stages.
+    PipelineParallel,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dp" | "data-parallel" => Some(Placement::DataParallel),
+            "pp" | "pipeline-parallel" => Some(Placement::PipelineParallel),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::DataParallel => write!(f, "dp"),
+            Placement::PipelineParallel => write!(f, "pp"),
+        }
+    }
+}
+
+/// Stack-to-stack link parameters (interposer / package hop).
+///
+/// Defaults model a 512-bit 64 GB/s point-to-point link — a quarter of
+/// the intra-stack 256 GB/s aggregate (Section IV.C) — plus a fixed
+/// package-crossing latency per hop; energy per bit is ~3.4x the
+/// post-GSA on-module rate, the usual off-module escalation.  All four
+/// knobs are overridable; the substitution is recorded in DESIGN.md
+/// §Substitution-ledger.
+#[derive(Debug, Clone, Copy)]
+pub struct StackLinkParams {
+    /// Link width, bits per beat.
+    pub width_bits: u64,
+    /// One beat, ns.
+    pub beat_ns: f64,
+    /// Fixed per-hop latency (SerDes + package crossing), ns.
+    pub hop_ns: f64,
+    /// Energy per bit crossing a stack boundary, pJ.
+    pub e_pj_per_bit: f64,
+}
+
+impl Default for StackLinkParams {
+    fn default() -> Self {
+        Self { width_bits: 512, beat_ns: 1.0, hop_ns: 40.0, e_pj_per_bit: 4.0 }
+    }
+}
+
+/// The cluster shape consumed by [`cluster::run_cluster`](crate::cluster).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// Number of HBM stacks (D).
+    pub stacks: u64,
+    pub placement: Placement,
+    pub link: StackLinkParams,
+}
+
+impl ClusterConfig {
+    pub fn new(stacks: u64, placement: Placement) -> Self {
+        assert!(stacks > 0, "cluster needs at least one stack");
+        Self { stacks, placement, link: StackLinkParams::default() }
+    }
+
+    /// Short label, e.g. `dp x4`.
+    pub fn label(&self) -> String {
+        format!("{} x{}", self.placement, self.stacks)
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self::new(1, Placement::DataParallel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_parse_round_trip() {
+        for p in [Placement::DataParallel, Placement::PipelineParallel] {
+            assert_eq!(Placement::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Placement::parse("data-parallel"), Some(Placement::DataParallel));
+        assert_eq!(Placement::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_link_is_slower_than_intra_stack() {
+        // 512 bits / ns = 64 GB/s < the 256 GB/s intra-stack aggregate.
+        let l = StackLinkParams::default();
+        let gbps = l.width_bits as f64 / 8.0 / l.beat_ns;
+        assert!(gbps < 256.0);
+        assert!(l.hop_ns > 0.0);
+    }
+
+    #[test]
+    fn cluster_label() {
+        let c = ClusterConfig::new(4, Placement::PipelineParallel);
+        assert_eq!(c.label(), "pp x4");
+        assert_eq!(ClusterConfig::default().stacks, 1);
+    }
+}

@@ -6,10 +6,12 @@
 //! has no serde).
 
 mod circuits;
+mod cluster;
 mod hbm;
 mod models;
 
 pub use circuits::{CircuitOverheads, MomcapParams, SC_STREAM_LEN};
+pub use cluster::{ClusterConfig, Placement, StackLinkParams};
 pub use hbm::{EnergyParams, HbmConfig, TimingParams};
 pub use models::{Arch, ModelZoo, TransformerModel};
 

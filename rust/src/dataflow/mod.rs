@@ -1,13 +1,16 @@
 //! Dataflow and scheduling (Section III.D): token-based sharding, the
-//! ring+broadcast inter-bank network, and the intra-bank latch pipeline.
+//! ring+broadcast inter-bank network, and the intra-bank latch pipeline;
+//! plus the cluster-scale generalizations — pipeline-parallel
+//! [`stack_groups`] and the stack-to-stack [`StackLink`]
+//! (DESIGN.md §Cluster-scale-out).
 
 mod capacity;
 mod network;
 mod sharding;
 
 pub use capacity::{capacity_report, CapacityReport};
-pub use network::{allgather_cost, broadcast_cost, RingNetwork, TransferCost};
-pub use sharding::{layer_assignment, token_shards, Shard};
+pub use network::{allgather_cost, broadcast_cost, RingNetwork, StackLink, TransferCost};
+pub use sharding::{layer_assignment, stack_groups, token_shards, LayerRange, Shard};
 
 /// Which dataflow scheme maps the model onto the banks (Fig. 8 axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

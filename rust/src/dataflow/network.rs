@@ -8,7 +8,7 @@
 //! drives at a time — serializes everything; the layer-based dataflow is
 //! stuck with it for its bulk layer-to-layer transfers.
 
-use crate::config::HbmConfig;
+use crate::config::{HbmConfig, StackLinkParams};
 
 /// Cost of one collective.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -93,6 +93,52 @@ impl RingNetwork {
     }
 }
 
+/// Point-to-point stack-to-stack link — the cluster-scale analogue of
+/// the intra-stack ring (DESIGN.md §Cluster-scale-out).
+///
+/// Unlike the bank ring, stack hops cross the package: each hop pays a
+/// fixed SerDes/package latency on top of the serialization beats, and
+/// energy per bit is accounted separately from the on-module post-GSA
+/// rate (see [`StackLinkParams`] for the parameter provenance).
+#[derive(Debug, Clone, Copy)]
+pub struct StackLink {
+    params: StackLinkParams,
+}
+
+impl StackLink {
+    pub fn new(params: &StackLinkParams) -> Self {
+        Self { params: *params }
+    }
+
+    /// One hop of `bits` to the adjacent stack.
+    pub fn hop(&self, bits: u64) -> TransferCost {
+        if bits == 0 {
+            return TransferCost::ZERO;
+        }
+        let beats = bits.div_ceil(self.params.width_bits);
+        TransferCost {
+            latency_ns: self.params.hop_ns + beats as f64 * self.params.beat_ns,
+            bits_moved: bits,
+        }
+    }
+
+    /// Store-and-forward traversal of `hops` consecutive stack
+    /// boundaries (pipeline fill: the activations cross every boundary
+    /// once, serially).
+    pub fn traverse(&self, bits: u64, hops: u64) -> TransferCost {
+        if hops == 0 || bits == 0 {
+            return TransferCost::ZERO;
+        }
+        let one = self.hop(bits);
+        TransferCost { latency_ns: one.latency_ns * hops as f64, bits_moved: bits * hops }
+    }
+
+    /// Link energy for `bits_moved` boundary-crossing bits, pJ.
+    pub fn energy_pj(&self, bits_moved: u64) -> f64 {
+        bits_moved as f64 * self.params.e_pj_per_bit
+    }
+}
+
 /// Convenience: all-gather cost for per-bank shards of `shard_bits`.
 pub fn allgather_cost(hbm: &HbmConfig, shard_bits: u64) -> TransferCost {
     RingNetwork::new(hbm).allgather(shard_bits)
@@ -149,6 +195,27 @@ mod tests {
     fn zero_bits_free() {
         let net = RingNetwork::new(&hbm());
         assert_eq!(net.allgather(0), TransferCost::ZERO);
+    }
+
+    #[test]
+    fn stack_hop_pays_fixed_latency_plus_beats() {
+        let link = StackLink::new(&StackLinkParams::default());
+        let c = link.hop(512 * 10);
+        assert_eq!(c.latency_ns, 40.0 + 10.0);
+        assert_eq!(c.bits_moved, 5120);
+        assert_eq!(link.hop(0), TransferCost::ZERO);
+        // Energy at the off-module rate.
+        assert_eq!(link.energy_pj(100), 400.0);
+    }
+
+    #[test]
+    fn stack_traverse_serializes_hops() {
+        let link = StackLink::new(&StackLinkParams::default());
+        let one = link.hop(1024);
+        let three = link.traverse(1024, 3);
+        assert_eq!(three.latency_ns, 3.0 * one.latency_ns);
+        assert_eq!(three.bits_moved, 3 * 1024);
+        assert_eq!(link.traverse(1024, 0), TransferCost::ZERO);
     }
 
     #[test]

@@ -37,6 +37,47 @@ pub fn token_shards(n_tokens: u64, banks: u64) -> Vec<Shard> {
     shards
 }
 
+/// A contiguous range of transformer layers owned by one HBM stack
+/// (pipeline-parallel stack groups — the cluster-scale generalization
+/// of [`layer_assignment`], see DESIGN.md §Cluster-scale-out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerRange {
+    pub stack: u64,
+    pub start: u64,
+    /// One past the last layer (empty ranges allowed when L < D).
+    pub end: u64,
+}
+
+impl LayerRange {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Assign `layers` contiguous transformer layers to `stacks` pipeline
+/// stages: every layer is owned by exactly one stack, ranges are
+/// contiguous and in layer order, and sizes differ by at most 1 (the
+/// same balanced ceil/floor split as [`token_shards`]).  When
+/// `stacks > layers` the surplus stacks own empty ranges (they only
+/// forward activations).
+pub fn stack_groups(layers: u64, stacks: u64) -> Vec<LayerRange> {
+    assert!(stacks > 0, "no stacks");
+    let base = layers / stacks;
+    let extra = layers % stacks;
+    let mut groups = Vec::with_capacity(stacks as usize);
+    let mut start = 0;
+    for stack in 0..stacks {
+        let len = base + u64::from(stack < extra);
+        groups.push(LayerRange { stack, start, end: start + len });
+        start += len;
+    }
+    groups
+}
+
 /// Layer-based assignment: layer `l` of `layers` maps to a bank group;
 /// returns for each layer the set of banks computing it.  Groups are
 /// contiguous and balanced (the conventional PIM mapping ARTEMIS
@@ -100,6 +141,57 @@ mod tests {
     fn fewer_tokens_than_banks_leaves_empties() {
         let shards = token_shards(5, 8);
         assert_eq!(shards.iter().filter(|s| !s.is_empty()).count(), 5);
+    }
+
+    #[test]
+    fn single_bank_owns_everything() {
+        // K = 1: one shard covering all tokens, one bank per layer.
+        let shards = token_shards(100, 1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!((shards[0].start, shards[0].end), (0, 100));
+        let a = layer_assignment(12, 1);
+        assert!(a.iter().all(|g| g == &vec![0u64]));
+    }
+
+    #[test]
+    fn zero_tokens_all_shards_empty() {
+        // N = 0 < K: every shard exists but is empty.
+        let shards = token_shards(0, 4);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(Shard::is_empty));
+        assert_eq!(shards.iter().map(Shard::len).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn stack_groups_partition_layers_exactly_once() {
+        for (l, d) in [(12u64, 4u64), (12, 8), (24, 5), (2, 2), (7, 3), (12, 1)] {
+            let groups = stack_groups(l, d);
+            assert_eq!(groups.len(), d as usize);
+            // Contiguity + exact cover: every layer owned exactly once.
+            let mut next = 0;
+            for g in &groups {
+                assert_eq!(g.start, next, "l={l} d={d}");
+                assert!(g.end >= g.start);
+                next = g.end;
+            }
+            assert_eq!(next, l, "l={l} d={d}");
+            // Balance within one layer.
+            let min = groups.iter().map(LayerRange::len).min().unwrap();
+            let max = groups.iter().map(LayerRange::len).max().unwrap();
+            assert!(max - min <= 1, "l={l} d={d}");
+        }
+    }
+
+    #[test]
+    fn stack_groups_more_stacks_than_layers_leaves_empties() {
+        // D > L: surplus stacks own empty (forward-only) ranges.
+        let groups = stack_groups(3, 8);
+        assert_eq!(groups.iter().filter(|g| !g.is_empty()).count(), 3);
+        assert_eq!(groups.iter().map(LayerRange::len).sum::<u64>(), 3);
+        // The single-stack degenerate case owns all layers.
+        let one = stack_groups(12, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), 12);
     }
 
     #[test]

@@ -30,13 +30,17 @@
 //!   executor (default) or PJRT artifact loading (feature `pjrt`).
 //! * [`coordinator`] — request router, batcher, co-simulation driver.
 //! * [`serve`]     — continuous-batching generation server: simulated
-//!   clock, KV-residency admission, load generator, latency histograms.
+//!   clock, KV-residency admission, load generator, latency histograms,
+//!   cluster-aware session router.
+//! * [`cluster`]   — multi-stack scale-out: data-parallel replicas or
+//!   pipeline-parallel stack groups over the memoized cost cache.
 //! * [`report`]    — table/figure emitters for the paper's evaluation.
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod analog;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;

@@ -5,12 +5,15 @@
 //! (the offline build has no clap); `artemis help` lists everything.
 
 use anyhow::{anyhow, Result};
-use artemis::config::{ArtemisConfig, ModelZoo};
+use artemis::cluster::{run_chat_cluster, run_cluster};
+use artemis::config::{ArtemisConfig, ClusterConfig, ModelZoo, Placement};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
-use artemis::serve::{run_continuous, run_static, Policy, Scenario, SchedulerConfig};
+use artemis::serve::{
+    run_continuous, run_static, Policy, RoutePolicy, Scenario, SchedulerConfig,
+};
 use artemis::sim::SimOptions;
 use artemis::util::XorShift64;
 
@@ -49,9 +52,21 @@ Other commands:
            batched serving demo through the functional runtime
   serve-gen [--scenario chat|summarize|burst] [--seed N] [--sessions N]
            [--policy fifo|spf] [--batch B] [--model name]
+           [--stacks D] [--placement dp|pp] [--route rr|ll|kv]
+           [--no-cost-cache]
            continuous-batching generation server on the simulated clock:
            TTFT + per-token p50/p95/p99 (simulated ns), tokens/s, and the
-           comparison against the static pad-and-drop batcher
+           comparison against the static pad-and-drop batcher.  With
+           --stacks D the trace is served by a D-stack cluster (dp =
+           data-parallel replicas with session routing, pp = pipeline-
+           parallel stack groups) through the memoized cost cache;
+           per-stack and aggregate metrics plus the cache hit rate print
+  cluster-scale
+           scaling study: aggregate tokens/s and p99 latency for the
+           chat trace on D = 1/2/4/8 stacks, both placements
+  bench-serve [--out FILE] [--reps N]
+           seeded serve-gen wall-clock benchmark (CI perf gate): writes
+           {bench, wall_ms, sim_tokens_per_s} JSON to FILE
   config   print the default configuration as JSON
   help     this text
 
@@ -151,10 +166,83 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         None => Policy::Fifo,
         Some(p) => Policy::parse(&p).ok_or_else(|| anyhow!("unknown policy '{p}' (fifo|spf)"))?,
     };
-    let cfg = build_config(args)?;
 
     let trace = sc.generate(seed);
+    if trace.is_empty() {
+        println!(
+            "## serve-gen — scenario '{}' seed {}: empty trace (0 sessions), nothing to serve",
+            sc.name, seed
+        );
+        return Ok(());
+    }
     let sched = SchedulerConfig { max_batch: batch, policy };
+
+    // Cluster mode: any of the scale-out flags switches `--stacks` from
+    // "one bigger machine" (the fig12 meaning elsewhere) to "D cluster
+    // stacks, each a default/--config machine".
+    let stacks: Option<u64> = flag_value(args, "--stacks").map(|v| v.parse()).transpose()?;
+    let cluster_mode = stacks.is_some()
+        || args.iter().any(|a| a == "--placement" || a == "--route" || a == "--no-cost-cache");
+    if cluster_mode {
+        let stack_cfg = if let Some(path) = flag_value(args, "--config") {
+            ArtemisConfig::from_json(&std::fs::read_to_string(path)?)?
+        } else {
+            ArtemisConfig::default()
+        };
+        let d = stacks.unwrap_or(1);
+        if d == 0 {
+            return Err(anyhow!("--stacks must be positive"));
+        }
+        let placement = match flag_value(args, "--placement") {
+            None => Placement::DataParallel,
+            Some(p) => {
+                Placement::parse(&p).ok_or_else(|| anyhow!("unknown placement '{p}' (dp|pp)"))?
+            }
+        };
+        let route = match flag_value(args, "--route") {
+            None => RoutePolicy::LeastLoaded,
+            Some(r) => RoutePolicy::parse(&r)
+                .ok_or_else(|| anyhow!("unknown route policy '{r}' (rr|ll|kv)"))?,
+        };
+        let cached = !has_flag(args, "--no-cost-cache");
+        let cl = ClusterConfig::new(d, placement);
+        let r = run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached);
+
+        println!(
+            "## serve-gen cluster — scenario '{}' seed {} ({}, {} sessions, {} stacks {}, \
+             route {}, batch {}, policy {}, cost-cache {})",
+            sc.name,
+            seed,
+            sc.model.name,
+            trace.len(),
+            d,
+            placement,
+            route,
+            batch,
+            policy,
+            if cached { "on" } else { "off" }
+        );
+        let mut reports = r.per_stack.clone();
+        reports.push(r.aggregate.clone());
+        report::serving_comparison(&reports).print();
+        println!(
+            "aggregate: {:.0} tokens/s   makespan {:.3} ms   energy {:.3} mJ   rejected {}",
+            r.tokens_per_s(),
+            r.aggregate.makespan_ns * 1e-6,
+            r.aggregate.sim_energy_pj * 1e-9,
+            r.aggregate.rejected
+        );
+        println!(
+            "cost-cache: {} — hits {}  misses {}  hit-rate {:.1}%",
+            if cached { "on" } else { "off" },
+            r.cache.hits,
+            r.cache.misses,
+            r.cache.hit_rate() * 100.0
+        );
+        return Ok(());
+    }
+
+    let cfg = build_config(args)?;
     let cont = run_continuous(&cfg, &sc.model, &trace, &sched);
     let stat = run_static(&cfg, &sc.model, &trace, batch);
 
@@ -195,6 +283,40 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     }
     println!();
     report::serving_comparison(&[cont, stat]).print();
+    Ok(())
+}
+
+/// The CI perf gate: time a fixed seeded scale-out serve (chat trace,
+/// seed 1, 32 sessions, 4 data-parallel stacks, cost cache on) and
+/// write `{bench, wall_ms, sim_tokens_per_s}` JSON.  `wall_ms` is the
+/// best of `--reps` runs (noise floor); `sim_tokens_per_s` is
+/// trace-tokens simulated per wall-second — the throughput of the
+/// simulator itself, which the cost cache is meant to buy.
+fn run_bench_serve(args: &[String]) -> Result<()> {
+    let out = flag_value(args, "--out").unwrap_or_else(|| "BENCH_serve.json".into());
+    let reps: usize =
+        flag_value(args, "--reps").map(|v| v.parse()).transpose()?.unwrap_or(3).max(1);
+    let cfg = ArtemisConfig::default();
+    let mut best_ms = f64::INFINITY;
+    let mut tokens = 0u64;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let r = run_chat_cluster(&cfg, 4, Placement::DataParallel, 1, 32, true);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        tokens = r.aggregate.total_tokens;
+        best_ms = best_ms.min(ms);
+    }
+    let tok_per_wall_s = tokens as f64 / (best_ms.max(1e-9) * 1e-3);
+    let json = format!(
+        "{{\n  \"bench\": \"serve_gen_cluster_chat_s1_x4\",\n  \"wall_ms\": {best_ms:.3},\n  \
+         \"sim_tokens_per_s\": {tok_per_wall_s:.1}\n}}\n"
+    );
+    std::fs::write(&out, &json)?;
+    println!(
+        "bench serve_gen_cluster_chat_s1_x4: wall {best_ms:.3} ms (best of {reps}), \
+         {tokens} trace tokens, {tok_per_wall_s:.0} sim tokens per wall-second"
+    );
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -264,6 +386,7 @@ fn main() -> Result<()> {
                 ("ablation", report::ablation_deterministic_vs_lfsr()),
                 ("capacity", report::capacity_study()),
                 ("serving", report::serving_study(&cfg)),
+                ("cluster_scale", report::cluster_scale_study(&cfg)),
             ];
             for (name, t) in tables {
                 let path = format!("{outdir}/{name}.csv");
@@ -287,6 +410,7 @@ fn main() -> Result<()> {
             report::ablation_deterministic_vs_lfsr().print();
             report::capacity_study().print();
             report::serving_study(&cfg).print();
+            report::cluster_scale_study(&cfg).print();
             if let Err(e) = run_tab4() {
                 eprintln!("tab4 skipped (artifacts missing?): {e}");
             }
@@ -312,6 +436,8 @@ fn main() -> Result<()> {
         }
         "serve" => run_serve(&args)?,
         "serve-gen" => run_serve_gen(&args)?,
+        "cluster-scale" => report::cluster_scale_study(&cfg).print(),
+        "bench-serve" => run_bench_serve(&args)?,
         "config" => println!("{}", cfg.to_json()),
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {

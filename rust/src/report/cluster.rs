@@ -1,0 +1,88 @@
+//! Cluster scaling study: aggregate throughput and tail latency vs the
+//! stack count D, for both placements, on the standing chat trace.
+
+use super::table::TableBuilder;
+use crate::cluster::{run_chat_cluster, ClusterReport};
+use crate::config::{ArtemisConfig, Placement};
+
+fn us(ns: f64) -> String {
+    format!("{:.1}", ns * 1e-3)
+}
+
+fn row(r: &ClusterReport, base_tokens_per_s: f64) -> Vec<String> {
+    let a = &r.aggregate;
+    vec![
+        r.stacks.to_string(),
+        r.placement.to_string(),
+        r.route.to_string(),
+        format!("{:.0}", r.tokens_per_s()),
+        format!("{:.2}", r.tokens_per_s() / base_tokens_per_s.max(1e-9)),
+        us(a.ttft.p99),
+        us(a.per_token.p99),
+        format!("{:.3}", a.makespan_ns * 1e-6),
+        format!("{:.2}", a.pj_per_token() * 1e-9),
+        format!("{:.1}", r.cache.hit_rate() * 100.0),
+        a.rejected.to_string(),
+    ]
+}
+
+/// The standing scaling table: the `chat` trace (seed 1, 32 sessions)
+/// served by D = 1/2/4/8 stacks — data-parallel replicas with
+/// least-loaded routing, and pipeline-parallel groups — with the
+/// memoized cost cache on (hit rate logged per run).
+pub fn cluster_scale_study(cfg: &ArtemisConfig) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Cluster scale-out — chat trace (seed 1, 32 sessions) on D stacks; speedup is \
+         aggregate tokens/s vs D=1; latencies are simulated microseconds",
+        &[
+            "stacks",
+            "placement",
+            "route",
+            "tok/s",
+            "speedup",
+            "ttft p99(us)",
+            "tok p99(us)",
+            "makespan(ms)",
+            "mJ/tok",
+            "cache hit%",
+            "rejected",
+        ],
+    );
+    let base = run_chat_cluster(cfg, 1, Placement::DataParallel, 1, 32, true);
+    let base_tps = base.tokens_per_s();
+    t.row(row(&base, base_tps));
+    for d in [2u64, 4, 8] {
+        let r = run_chat_cluster(cfg, d, Placement::DataParallel, 1, 32, true);
+        t.row(row(&r, base_tps));
+    }
+    for d in [2u64, 4, 8] {
+        let r = run_chat_cluster(cfg, d, Placement::PipelineParallel, 1, 32, true);
+        t.row(row(&r, base_tps));
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_table_renders_and_dp_scales() {
+        let t = cluster_scale_study(&ArtemisConfig::default());
+        let csv = t.to_csv();
+        assert!(!t.is_empty());
+        assert!(!t.render().contains("NaN"));
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 7);
+        let tps = |row: &str| -> f64 { row.split(',').nth(3).unwrap().parse().unwrap() };
+        let speedup = |row: &str| -> f64 { row.split(',').nth(4).unwrap().parse().unwrap() };
+        // dp rows: D = 1, 2, 4, 8 — throughput strictly grows with D.
+        assert!(tps(rows[1]) > tps(rows[0]), "D=2 must beat D=1:\n{csv}");
+        assert!(tps(rows[2]) > tps(rows[1]), "D=4 must beat D=2:\n{csv}");
+        assert!(speedup(rows[2]) > 1.5, "D=4 speedup too small:\n{csv}");
+        // Nothing rejected on the default-capacity chat trace.
+        for r in &rows {
+            assert!(r.ends_with(",0"), "unexpected rejection: {r}");
+        }
+    }
+}

@@ -3,11 +3,13 @@
 //! harness (`rust/benches/paper_tables.rs`) both run through here so the
 //! numbers in EXPERIMENTS.md are regenerable from either entry point.
 
+mod cluster;
 mod experiments;
 mod extensions;
 mod serving;
 mod table;
 
+pub use cluster::cluster_scale_study;
 pub use experiments::*;
 pub use extensions::*;
 pub use serving::{serving_comparison, serving_study};

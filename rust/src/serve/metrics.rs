@@ -87,6 +87,22 @@ impl StreamingHistogram {
         self.max
     }
 
+    /// Fold another histogram's samples into this one (exact: buckets,
+    /// counts, sums and extrema all add) — used to aggregate per-stack
+    /// metrics into one cluster-wide summary.
+    pub fn merge(&mut self, other: &StreamingHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Snapshot the p50/p95/p99/mean/max summary.
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
@@ -170,6 +186,18 @@ impl OccupancyTimeline {
         &self.samples
     }
 
+    /// Fold another timeline's (already-decimated) samples into this
+    /// one, preserving both sides' exact peaks.  Aggregate peaks are
+    /// per-stack maxima: samples from different replicas describe
+    /// different machines, so they interleave rather than add.
+    pub fn absorb(&mut self, other: &OccupancyTimeline) {
+        for &s in other.samples() {
+            self.record(s);
+        }
+        self.peak_active = self.peak_active.max(other.peak_active);
+        self.peak_kv_per_bank = self.peak_kv_per_bank.max(other.peak_kv_per_bank);
+    }
+
     /// Exact peak of concurrent decoding sessions (pre-decimation).
     pub fn peak_active(&self) -> usize {
         self.peak_active
@@ -230,6 +258,43 @@ mod tests {
         h.record(0.5);
         assert_eq!(h.count(), 3);
         assert_eq!(h.quantile(0.5), 0.0); // min-clamped
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut a = StreamingHistogram::new();
+        let mut b = StreamingHistogram::new();
+        let mut all = StreamingHistogram::new();
+        for v in 1..=500u64 {
+            a.record(v as f64 * 100.0);
+            all.record(v as f64 * 100.0);
+        }
+        for v in 501..=1000u64 {
+            b.record(v as f64 * 100.0);
+            all.record(v as f64 * 100.0);
+        }
+        a.merge(&b);
+        let (m, w) = (a.summary(), all.summary());
+        assert_eq!(m.count, w.count);
+        assert_eq!(m.mean, w.mean);
+        assert_eq!(m.p50, w.p50);
+        assert_eq!(m.p99, w.p99);
+        assert_eq!(m.max, w.max);
+        // Merging an empty histogram is a no-op.
+        a.merge(&StreamingHistogram::new());
+        assert_eq!(a.summary().count, 1000);
+    }
+
+    #[test]
+    fn timeline_absorb_keeps_peaks() {
+        let mut a = OccupancyTimeline::new();
+        let mut b = OccupancyTimeline::new();
+        a.record(OccupancySample { t_ns: 1.0, active: 3, queued: 0, kv_per_bank_bytes: 10 });
+        b.record(OccupancySample { t_ns: 2.0, active: 7, queued: 1, kv_per_bank_bytes: 99 });
+        a.absorb(&b);
+        assert_eq!(a.samples().len(), 2);
+        assert_eq!(a.peak_active(), 7);
+        assert_eq!(a.peak_kv_per_bank(), 99);
     }
 
     #[test]

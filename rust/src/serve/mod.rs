@@ -18,20 +18,32 @@
 //!   burst arrivals, `chat` / `summarize` / `burst` presets).
 //! * [`metrics`](StreamingHistogram) — streaming latency histograms
 //!   (TTFT, per-token, inter-token gap) and occupancy timelines.
+//! * [`router`](Router) — cluster-aware session routing (round-robin /
+//!   least-loaded / KV-headroom) over live [`ReplicaLoad`] snapshots.
+//!
+//! The tick loop itself is packaged as [`ReplicaSim`] — one serving
+//! machine — which the cluster driver
+//! ([`cluster`](crate::cluster)) instantiates D times (data-parallel)
+//! or once per pipeline-parallel stack group.
 //!
 //! Driven by the `serve-gen` CLI subcommand and the
 //! [`report`](crate::report) serving-comparison table; the tick model
 //! and accounting rules are documented in DESIGN.md
-//! §Serving-scheduler.
+//! §Serving-scheduler and §Cluster-scale-out.
 
 mod loadgen;
 mod metrics;
+mod router;
 mod scheduler;
 mod session;
 
+pub(crate) use scheduler::aggregate_report;
+
 pub use loadgen::{ArrivalProcess, LengthDist, Scenario};
 pub use metrics::{LatencySummary, OccupancySample, OccupancyTimeline, StreamingHistogram};
+pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{
-    run_continuous, run_static, Policy, SchedulerConfig, ServeGenReport, SessionReport,
+    run_continuous, run_static, Coster, Policy, ReplicaSim, SchedulerConfig, ServeGenReport,
+    SessionReport,
 };
-pub use session::{kv_bytes, KvTracker, Session, SessionSpec, SessionState};
+pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};

@@ -1,0 +1,167 @@
+//! Cluster-aware session routing: which replica admits an arriving
+//! session.
+//!
+//! The cluster driver advances every replica to a session's arrival
+//! time, snapshots their live load ([`ReplicaLoad`]), and asks the
+//! [`Router`] to pick one.  All policies are deterministic (index
+//! tie-break), so a cluster run is reproducible for a fixed trace.
+
+use std::cmp::Reverse;
+
+/// Live load snapshot of one replica at routing time.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLoad {
+    /// Replica index within the cluster.
+    pub replica: usize,
+    /// Sessions currently decoding.
+    pub active: usize,
+    /// Sessions waiting for a slot / KV reservation.
+    pub queued: usize,
+    /// Decode tokens still owed to admitted + queued sessions.
+    pub outstanding_tokens: u64,
+    /// Reserved KV bytes on the fullest bank.
+    pub kv_reserved_per_bank: u64,
+    /// Per-bank KV budget.
+    pub kv_budget_per_bank: u64,
+}
+
+impl ReplicaLoad {
+    /// Sessions the replica is responsible for right now.
+    pub fn in_flight(&self) -> usize {
+        self.active + self.queued
+    }
+
+    /// Unreserved KV bytes per bank.
+    pub fn kv_headroom(&self) -> u64 {
+        self.kv_budget_per_bank.saturating_sub(self.kv_reserved_per_bank)
+    }
+}
+
+/// Replica-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in arrival order (load-oblivious).
+    RoundRobin,
+    /// Fewest in-flight sessions, then fewest outstanding decode
+    /// tokens — balances queue depth.
+    LeastLoaded,
+    /// Most per-bank KV headroom — balances memory pressure (the
+    /// binding resource for long-context traffic).
+    KvHeadroom,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            "kv" | "kv-headroom" => Some(RoutePolicy::KvHeadroom),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoutePolicy::RoundRobin => write!(f, "rr"),
+            RoutePolicy::LeastLoaded => write!(f, "least-loaded"),
+            RoutePolicy::KvHeadroom => write!(f, "kv-headroom"),
+        }
+    }
+}
+
+/// Stateful router (round-robin keeps a cursor; the live policies are
+/// pure functions of the load snapshots).
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the replica that admits the next session.
+    pub fn route(&mut self, loads: &[ReplicaLoad]) -> usize {
+        assert!(!loads.is_empty(), "no replicas to route to");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % loads.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                loads[i].replica
+            }
+            RoutePolicy::LeastLoaded => loads
+                .iter()
+                .min_by_key(|l| (l.in_flight(), l.outstanding_tokens, l.replica))
+                .unwrap()
+                .replica,
+            RoutePolicy::KvHeadroom => loads
+                .iter()
+                .min_by_key(|l| (Reverse(l.kv_headroom()), l.in_flight(), l.replica))
+                .unwrap()
+                .replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(replica: usize, in_flight: usize, outstanding: u64, headroom: u64) -> ReplicaLoad {
+        ReplicaLoad {
+            replica,
+            active: in_flight,
+            queued: 0,
+            outstanding_tokens: outstanding,
+            kv_reserved_per_bank: 0,
+            kv_budget_per_bank: headroom,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let loads = [load(0, 9, 9, 0), load(1, 0, 0, 0), load(2, 5, 5, 0)];
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_in_flight_then_tokens() {
+        let loads = [load(0, 2, 100, 0), load(1, 1, 500, 0), load(2, 1, 400, 0)];
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&loads), 2);
+        // Ties break on the lowest index.
+        let tied = [load(0, 1, 7, 0), load(1, 1, 7, 0)];
+        assert_eq!(r.route(&tied), 0);
+    }
+
+    #[test]
+    fn kv_headroom_picks_most_free_bytes() {
+        let loads = [load(0, 0, 0, 100), load(1, 0, 0, 900), load(2, 0, 0, 500)];
+        let mut r = Router::new(RoutePolicy::KvHeadroom);
+        assert_eq!(r.route(&loads), 1);
+        // Headroom ties break on in-flight, then index.
+        let tied = [load(0, 3, 0, 500), load(1, 1, 0, 500)];
+        assert_eq!(r.route(&tied), 1);
+    }
+
+    #[test]
+    fn policy_parse_round_trip() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::KvHeadroom] {
+            assert_eq!(RoutePolicy::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("ll"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("kv"), Some(RoutePolicy::KvHeadroom));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+}

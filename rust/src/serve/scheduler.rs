@@ -2,13 +2,20 @@
 //! plus the static pad-and-drop baseline it is compared against.
 //!
 //! The tick model (DESIGN.md §Serving-scheduler): each tick the
-//! scheduler (1) pulls arrived sessions into the wait queue, (2) admits
-//! sessions under the policy while batch slots and KV reservations
-//! allow, (3) advances every decoding session by one token via a single
-//! batched decode-step workload costed through [`simulate`], and (4)
-//! runs the prefill of the just-admitted sessions.  Decode runs before
+//! scheduler (1) admits waiting sessions under the policy while batch
+//! slots and KV reservations allow, (2) advances every decoding session
+//! by one token via a single batched decode-step workload, and (3) runs
+//! the prefill of the just-admitted sessions.  Decode runs before
 //! prefill, so in-flight sessions' inter-token gaps are not stalled by
 //! newcomers' prompts any longer than one prefill pass.
+//!
+//! The tick loop lives in [`ReplicaSim`] — one serving machine with its
+//! own clock, wait queue, continuous batch and KV tracker.  The
+//! single-machine entry point [`run_continuous`] drives one replica
+//! with legacy batched costing (one `sim::simulate` per tick);
+//! [`cluster::run_cluster`](crate::cluster::run_cluster) drives D of
+//! them (or one pipeline-parallel group) with the memoized decomposed
+//! costing ([`Coster::Stack`]).
 //!
 //! Reported metrics, all in simulated ARTEMIS nanoseconds:
 //! * **TTFT** — arrival to first emitted token (includes queueing,
@@ -21,9 +28,12 @@
 
 use super::loadgen::Scenario;
 use super::metrics::{LatencySummary, OccupancySample, OccupancyTimeline, StreamingHistogram};
-use super::session::{kv_bytes, KvTracker, Session, SessionSpec, SessionState};
+use super::router::ReplicaLoad;
+use super::session::{
+    kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState,
+};
 use crate::config::{ArtemisConfig, TransformerModel};
-use crate::sim::{simulate, SimOptions};
+use crate::sim::{simulate, CacheStats, SimOptions, StackCoster, TickCost};
 use crate::xfmr::{batched_decode_step_workload, batched_prefill_workload};
 
 /// Admission-order policy for the wait queue.
@@ -130,6 +140,7 @@ impl ServeGenReport {
     }
 }
 
+#[derive(Clone)]
 struct MetricsAcc {
     ttft: StreamingHistogram,
     per_token: StreamingHistogram,
@@ -154,6 +165,18 @@ impl MetricsAcc {
             decode_rows: 0,
         }
     }
+
+    /// Fold another replica's metrics in (cluster aggregation).
+    fn merge(&mut self, o: &MetricsAcc) {
+        self.ttft.merge(&o.ttft);
+        self.per_token.merge(&o.per_token);
+        self.itl.merge(&o.itl);
+        self.timeline.absorb(&o.timeline);
+        self.total_tokens += o.total_tokens;
+        self.energy_pj += o.energy_pj;
+        self.ticks += o.ticks;
+        self.decode_rows += o.decode_rows;
+    }
 }
 
 fn session_reports(sessions: &[Session]) -> Vec<SessionReport> {
@@ -177,12 +200,14 @@ fn session_reports(sessions: &[Session]) -> Vec<SessionReport> {
 fn finish_report(
     scheme: String,
     model: &TransformerModel,
-    sessions: Vec<Session>,
+    mut sessions: Vec<Session>,
     acc: MetricsAcc,
     makespan_ns: f64,
     peak_kv_per_bank: u64,
     kv_budget_per_bank: u64,
 ) -> ServeGenReport {
+    // Stable id order regardless of which replica served whom.
+    sessions.sort_by_key(|s| s.spec.id);
     let rejected = sessions.iter().filter(|s| s.state == SessionState::Rejected).count() as u64;
     ServeGenReport {
         scheme,
@@ -229,7 +254,306 @@ fn finish_session(s: &mut Session, clock: f64, acc: &mut MetricsAcc) {
     acc.per_token.record((clock - s.spec.arrival_ns) / s.spec.gen.max(1) as f64);
 }
 
-/// Serve `trace` with iteration-level continuous batching.
+/// How a replica costs its ticks.
+pub enum Coster<'a> {
+    /// Legacy batched costing: one [`simulate`] of the full batched
+    /// workload per tick — the single-machine `serve-gen` path, kept
+    /// so its numbers are comparable across releases.
+    Batched { cfg: &'a ArtemisConfig, model: &'a TransformerModel, opts: SimOptions },
+    /// Decomposed per-stage costing with optional memoization (the
+    /// cluster path; see `sim::TickCoster` for the cache invariants).
+    Stack(StackCoster<'a>),
+}
+
+impl Coster<'_> {
+    fn decode(&mut self, contexts: &[u64]) -> TickCost {
+        match self {
+            Coster::Batched { cfg, model, opts } => {
+                let w = batched_decode_step_workload(model, contexts);
+                let r = simulate(cfg, &w, *opts);
+                TickCost { ns: r.total_ns, energy_pj: r.total_energy_pj() }
+            }
+            Coster::Stack(s) => s.decode_tick(contexts),
+        }
+    }
+
+    fn prefill(&mut self, prompts: &[u64]) -> TickCost {
+        match self {
+            Coster::Batched { cfg, model, opts } => {
+                let w = batched_prefill_workload(model, prompts);
+                let r = simulate(cfg, &w, *opts);
+                TickCost { ns: r.total_ns, energy_pj: r.total_energy_pj() }
+            }
+            Coster::Stack(s) => s.prefill(prompts),
+        }
+    }
+
+    /// Stats of the attached cost cache (zeros for the legacy path).
+    pub fn cache_stats(&self) -> CacheStats {
+        match self {
+            Coster::Batched { .. } => CacheStats::default(),
+            Coster::Stack(s) => s.cache_stats(),
+        }
+    }
+}
+
+/// One serving machine: a simulated clock, a wait queue, a continuous
+/// batch, and a KV tracker — the building block both the single-machine
+/// [`run_continuous`] and the cluster driver compose.
+///
+/// Sessions are [`push`](Self::push)ed by an external driver once the
+/// replica clock has reached their arrival time
+/// ([`advance_to`](Self::advance_to) gets it there); the replica then
+/// serves them tick by tick.
+pub struct ReplicaSim<'a> {
+    model: &'a TransformerModel,
+    sched: SchedulerConfig,
+    coster: Coster<'a>,
+    kv: KvTracker,
+    /// K/V-resident layers on the binding stack (= `model.layers`
+    /// except for pipeline-parallel groups).
+    kv_layers: u64,
+    sessions: Vec<Session>,
+    waiting: Vec<usize>,
+    active: Vec<usize>,
+    acc: MetricsAcc,
+    clock: f64,
+}
+
+impl<'a> ReplicaSim<'a> {
+    pub fn new(
+        model: &'a TransformerModel,
+        sched: SchedulerConfig,
+        coster: Coster<'a>,
+        kv: KvTracker,
+        kv_layers: u64,
+    ) -> Self {
+        assert!(sched.max_batch > 0, "max_batch must be positive");
+        Self {
+            model,
+            sched,
+            coster,
+            kv,
+            kv_layers,
+            sessions: Vec::new(),
+            waiting: Vec::new(),
+            active: Vec::new(),
+            acc: MetricsAcc::new(),
+            clock: 0.0,
+        }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Whether any admitted or queued session still needs service.
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.waiting.is_empty()
+    }
+
+    /// Hand the replica a session (driver guarantees
+    /// `clock >= spec.arrival_ns`); it joins the wait queue.
+    pub fn push(&mut self, spec: SessionSpec) {
+        let idx = self.sessions.len();
+        self.sessions.push(Session::new(spec));
+        self.waiting.push(idx);
+    }
+
+    /// Run ticks until the clock reaches `t`; when idle, jump there.
+    pub fn advance_to(&mut self, t: f64) {
+        while self.clock < t {
+            if !self.has_work() {
+                self.clock = self.clock.max(t);
+                return;
+            }
+            self.tick();
+        }
+    }
+
+    /// Serve everything still queued or in flight.
+    pub fn run_to_completion(&mut self) {
+        while self.has_work() {
+            self.tick();
+        }
+    }
+
+    /// Live load snapshot for the cluster router.
+    pub fn load(&self, replica: usize) -> ReplicaLoad {
+        let outstanding: u64 = self
+            .waiting
+            .iter()
+            .map(|&i| self.sessions[i].spec.gen)
+            .chain(self.active.iter().map(|&i| {
+                self.sessions[i].spec.gen.saturating_sub(self.sessions[i].generated)
+            }))
+            .sum();
+        ReplicaLoad {
+            replica,
+            active: self.active.len(),
+            queued: self.waiting.len(),
+            outstanding_tokens: outstanding,
+            kv_reserved_per_bank: self.kv.reserved_per_bank(),
+            kv_budget_per_bank: self.kv.budget_per_bank(),
+        }
+    }
+
+    /// One scheduler tick: admission, one batched decode step for
+    /// every in-flight session, batched prefill of the admissions, and
+    /// an occupancy sample.  Always makes progress when there is work.
+    fn tick(&mut self) {
+        // (1) Admission under the policy, batch slots, and KV budget.
+        // `waiting` is in arrival order (the driver pushes arrivals in
+        // order and `still_waiting` preserves relative order), so FIFO
+        // needs no re-sort.
+        if self.sched.policy == Policy::ShortestPromptFirst {
+            let sessions = &self.sessions;
+            self.waiting.sort_by(|&a, &b| {
+                let (sa, sb) = (&sessions[a].spec, &sessions[b].spec);
+                sa.prompt.cmp(&sb.prompt).then(sa.id.cmp(&sb.id))
+            });
+        }
+        let mut admitted: Vec<usize> = Vec::new();
+        let mut still_waiting: Vec<usize> = Vec::new();
+        for idx in std::mem::take(&mut self.waiting) {
+            let max_kv = kv_bytes_for_layers(
+                self.model,
+                self.sessions[idx].max_context(),
+                self.kv_layers,
+            );
+            if !self.kv.fits_alone(max_kv) {
+                // Could never fit, even alone: reject rather than queue
+                // forever.
+                self.sessions[idx].state = SessionState::Rejected;
+                self.sessions[idx].finished_ns = self.clock;
+                continue;
+            }
+            if self.active.len() + admitted.len() < self.sched.max_batch
+                && self.kv.try_reserve(max_kv)
+            {
+                self.sessions[idx].state = SessionState::Prefill;
+                self.sessions[idx].admitted_ns = self.clock;
+                admitted.push(idx);
+            } else {
+                still_waiting.push(idx);
+            }
+        }
+        self.waiting = still_waiting;
+
+        // (2) One batched decode step for every in-flight session.
+        if !self.active.is_empty() {
+            let contexts: Vec<u64> =
+                self.active.iter().map(|&i| self.sessions[i].context()).collect();
+            let c = self.coster.decode(&contexts);
+            self.clock += c.ns;
+            self.acc.energy_pj += c.energy_pj;
+            self.acc.ticks += 1;
+            self.acc.decode_rows += self.active.len() as u64;
+            for &i in &self.active {
+                emit_token(&mut self.sessions[i], self.clock, &mut self.acc);
+            }
+            let mut active = std::mem::take(&mut self.active);
+            let (sessions, kv, acc) = (&mut self.sessions, &mut self.kv, &mut self.acc);
+            let (model, kv_layers, clock) = (self.model, self.kv_layers, self.clock);
+            active.retain(|&i| {
+                if sessions[i].generated >= sessions[i].spec.gen {
+                    finish_session(&mut sessions[i], clock, acc);
+                    kv.release(kv_bytes_for_layers(model, sessions[i].max_context(), kv_layers));
+                    false
+                } else {
+                    true
+                }
+            });
+            self.active = active;
+        }
+
+        // (3) Prefill the sessions admitted this tick (one batched
+        // pass; their first decode token comes next tick).
+        if !admitted.is_empty() {
+            let prompts: Vec<u64> =
+                admitted.iter().map(|&i| self.sessions[i].spec.prompt).collect();
+            let c = self.coster.prefill(&prompts);
+            self.clock += c.ns;
+            self.acc.energy_pj += c.energy_pj;
+            for idx in admitted {
+                self.sessions[idx].state = SessionState::Decoding;
+                // Degenerate zero-length generations finish at prefill.
+                if self.sessions[idx].spec.gen == 0 {
+                    finish_session(&mut self.sessions[idx], self.clock, &mut self.acc);
+                    self.kv.release(kv_bytes_for_layers(
+                        self.model,
+                        self.sessions[idx].max_context(),
+                        self.kv_layers,
+                    ));
+                } else {
+                    self.active.push(idx);
+                }
+            }
+        }
+
+        self.acc.timeline.record(OccupancySample {
+            t_ns: self.clock,
+            active: self.active.len(),
+            queued: self.waiting.len(),
+            kv_per_bank_bytes: self.kv.reserved_per_bank(),
+        });
+    }
+
+    /// Stats of the attached cost cache (zeros for the legacy coster).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.coster.cache_stats()
+    }
+
+    /// Snapshot this replica's outcome under `scheme`.
+    pub fn report(&self, scheme: String) -> ServeGenReport {
+        finish_report(
+            scheme,
+            self.model,
+            self.sessions.clone(),
+            self.acc.clone(),
+            self.clock,
+            self.kv.peak_per_bank(),
+            self.kv.budget_per_bank(),
+        )
+    }
+}
+
+/// Drive one replica through a trace: push each arrival once the
+/// replica clock reaches it, then serve out the tail.
+pub(crate) fn drive_replica(sim: &mut ReplicaSim<'_>, order: &[SessionSpec]) {
+    for spec in order {
+        sim.advance_to(spec.arrival_ns);
+        sim.push(*spec);
+    }
+    sim.run_to_completion();
+}
+
+/// Aggregate a cluster's replicas into one cluster-wide report:
+/// histograms merge exactly, tokens/energy/ticks sum, the makespan is
+/// the latest replica clock, and KV peaks/budgets are per-stack maxima.
+pub(crate) fn aggregate_report(
+    replicas: &[ReplicaSim<'_>],
+    scheme: String,
+    model: &TransformerModel,
+) -> ServeGenReport {
+    let mut acc = MetricsAcc::new();
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut makespan = 0.0f64;
+    let mut peak = 0u64;
+    let mut budget = 0u64;
+    for r in replicas {
+        acc.merge(&r.acc);
+        sessions.extend(r.sessions.iter().cloned());
+        makespan = makespan.max(r.clock);
+        peak = peak.max(r.kv.peak_per_bank());
+        budget = budget.max(r.kv.budget_per_bank());
+    }
+    finish_report(scheme, model, sessions, acc, makespan, peak, budget)
+}
+
+/// Serve `trace` with iteration-level continuous batching on a single
+/// machine (legacy batched costing — cluster serving goes through
+/// [`cluster::run_cluster`](crate::cluster::run_cluster)).
 ///
 /// Deterministic: same (cfg, model, trace, sched) → same report.
 pub fn run_continuous(
@@ -238,119 +562,18 @@ pub fn run_continuous(
     trace: &[SessionSpec],
     sched: &SchedulerConfig,
 ) -> ServeGenReport {
-    assert!(sched.max_batch > 0, "max_batch must be positive");
-    let opts = SimOptions::artemis();
-    let mut sessions: Vec<Session> = trace.iter().map(|&spec| Session::new(spec)).collect();
-    let mut order: Vec<usize> = (0..sessions.len()).collect();
-    order.sort_by(|&a, &b| cmp_arrival(&sessions[a].spec, &sessions[b].spec));
-
-    let mut kv = KvTracker::new(cfg, model);
-    let mut acc = MetricsAcc::new();
-    let mut clock = 0.0f64;
-    let mut next_arrival = 0usize; // index into `order`
-    let mut waiting: Vec<usize> = Vec::new();
-    let mut active: Vec<usize> = Vec::new();
-
-    loop {
-        // (1) Pull arrivals whose time has come.
-        while next_arrival < order.len()
-            && sessions[order[next_arrival]].spec.arrival_ns <= clock
-        {
-            waiting.push(order[next_arrival]);
-            next_arrival += 1;
-        }
-        if active.is_empty() && waiting.is_empty() {
-            if next_arrival == order.len() {
-                break; // all served (or rejected)
-            }
-            // Idle: jump the clock to the next arrival.
-            clock = clock.max(sessions[order[next_arrival]].spec.arrival_ns);
-            continue;
-        }
-
-        // (2) Admission under the policy, batch slots, and KV budget.
-        // `waiting` is already in arrival order (arrivals are pulled
-        // from the pre-sorted `order` and `still_waiting` preserves
-        // relative order), so FIFO needs no re-sort.
-        if sched.policy == Policy::ShortestPromptFirst {
-            waiting.sort_by(|&a, &b| {
-                let (sa, sb) = (&sessions[a].spec, &sessions[b].spec);
-                sa.prompt.cmp(&sb.prompt).then(sa.id.cmp(&sb.id))
-            });
-        }
-        let mut admitted: Vec<usize> = Vec::new();
-        let mut still_waiting: Vec<usize> = Vec::new();
-        for idx in waiting.drain(..) {
-            let max_kv = kv_bytes(model, sessions[idx].max_context());
-            if !kv.fits_alone(max_kv) {
-                // Could never fit, even alone: reject rather than queue
-                // forever.
-                sessions[idx].state = SessionState::Rejected;
-                sessions[idx].finished_ns = clock;
-                continue;
-            }
-            if active.len() + admitted.len() < sched.max_batch && kv.try_reserve(max_kv) {
-                sessions[idx].state = SessionState::Prefill;
-                sessions[idx].admitted_ns = clock;
-                admitted.push(idx);
-            } else {
-                still_waiting.push(idx);
-            }
-        }
-        waiting = still_waiting;
-
-        // (3) One batched decode step for every in-flight session.
-        if !active.is_empty() {
-            let contexts: Vec<u64> = active.iter().map(|&i| sessions[i].context()).collect();
-            let r = simulate(cfg, &batched_decode_step_workload(model, &contexts), opts);
-            clock += r.total_ns;
-            acc.energy_pj += r.total_energy_pj();
-            acc.ticks += 1;
-            acc.decode_rows += active.len() as u64;
-            for &i in &active {
-                emit_token(&mut sessions[i], clock, &mut acc);
-            }
-            active.retain(|&i| {
-                if sessions[i].generated >= sessions[i].spec.gen {
-                    finish_session(&mut sessions[i], clock, &mut acc);
-                    kv.release(kv_bytes(model, sessions[i].max_context()));
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-
-        // (4) Prefill the sessions admitted this tick (one batched
-        // pass; their first decode token comes next tick).
-        if !admitted.is_empty() {
-            let prompts: Vec<u64> = admitted.iter().map(|&i| sessions[i].spec.prompt).collect();
-            let r = simulate(cfg, &batched_prefill_workload(model, &prompts), opts);
-            clock += r.total_ns;
-            acc.energy_pj += r.total_energy_pj();
-            for idx in admitted {
-                sessions[idx].state = SessionState::Decoding;
-                // Degenerate zero-length generations finish at prefill.
-                if sessions[idx].spec.gen == 0 {
-                    finish_session(&mut sessions[idx], clock, &mut acc);
-                    kv.release(kv_bytes(model, sessions[idx].max_context()));
-                } else {
-                    active.push(idx);
-                }
-            }
-        }
-
-        acc.timeline.record(OccupancySample {
-            t_ns: clock,
-            active: active.len(),
-            queued: waiting.len(),
-            kv_per_bank_bytes: kv.reserved_per_bank(),
-        });
-    }
-
-    let scheme = format!("continuous({} b{})", sched.policy, sched.max_batch);
-    let (peak, budget) = (kv.peak_per_bank(), kv.budget_per_bank());
-    finish_report(scheme, model, sessions, acc, clock, peak, budget)
+    let mut order: Vec<SessionSpec> = trace.to_vec();
+    order.sort_by(cmp_arrival);
+    let coster = Coster::Batched { cfg, model, opts: SimOptions::artemis() };
+    let mut sim = ReplicaSim::new(
+        model,
+        sched.clone(),
+        coster,
+        KvTracker::new(cfg, model),
+        model.layers as u64,
+    );
+    drive_replica(&mut sim, &order);
+    sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch))
 }
 
 /// Serve `trace` with the static pad-and-drop batcher the repo's
@@ -573,5 +796,36 @@ mod tests {
         assert_eq!(r.rejected, trace.len() as u64);
         assert_eq!(r.total_tokens, 0);
         assert_eq!(r.kv_budget_per_bank, 0);
+    }
+
+    #[test]
+    fn replica_load_snapshot_tracks_outstanding_work() {
+        let (cfg, sc, trace) = chat_small(4);
+        let coster =
+            Coster::Batched { cfg: &cfg, model: &sc.model, opts: SimOptions::artemis() };
+        let mut sim = ReplicaSim::new(
+            &sc.model,
+            SchedulerConfig::default(),
+            coster,
+            KvTracker::new(&cfg, &sc.model),
+            sc.model.layers as u64,
+        );
+        let empty = sim.load(3);
+        assert_eq!(empty.replica, 3);
+        assert_eq!(empty.in_flight(), 0);
+        assert_eq!(empty.outstanding_tokens, 0);
+        for spec in &trace {
+            sim.advance_to(spec.arrival_ns);
+            sim.push(*spec);
+        }
+        let loaded = sim.load(0);
+        assert!(loaded.in_flight() > 0);
+        assert!(loaded.outstanding_tokens > 0);
+        sim.run_to_completion();
+        assert!(!sim.has_work());
+        let done = sim.load(0);
+        assert_eq!(done.in_flight(), 0);
+        assert_eq!(done.outstanding_tokens, 0);
+        assert_eq!(done.kv_reserved_per_bank, 0);
     }
 }

@@ -97,7 +97,14 @@ impl Session {
 /// Resident K/V bytes for `ctx` tokens of context: K and V, 8-bit, for
 /// every layer (the decode regime keeps all layers' shards resident).
 pub fn kv_bytes(model: &TransformerModel, ctx: u64) -> u64 {
-    2 * model.layers as u64 * ctx * model.d_model as u64
+    kv_bytes_for_layers(model, ctx, model.layers as u64)
+}
+
+/// [`kv_bytes`] restricted to `layers` resident layers — the footprint
+/// on one pipeline-parallel stack that owns only a contiguous layer
+/// range (DESIGN.md §Cluster-scale-out).
+pub fn kv_bytes_for_layers(model: &TransformerModel, ctx: u64, layers: u64) -> u64 {
+    2 * layers * ctx * model.d_model as u64
 }
 
 /// Per-bank KV-residency tracker with conservative admission control.
@@ -124,6 +131,30 @@ impl KvTracker {
         Self {
             banks: cfg.hbm.banks_total().max(1),
             budget_per_bank,
+            reserved_per_bank: 0,
+            peak_per_bank: 0,
+        }
+    }
+
+    /// Tracker for a pipeline-parallel stack owning `layers_owned` of
+    /// the model's layers: the bank's weight shard shrinks to the
+    /// owned-layer share, leaving more room for the (likewise
+    /// per-layer) K/V.  Sized for the *binding* stack — the one owning
+    /// the most layers — so the group-wide admission check is
+    /// conservative for every other stack.
+    pub fn for_layer_share(
+        cfg: &ArtemisConfig,
+        model: &TransformerModel,
+        layers_owned: u64,
+    ) -> Self {
+        let cap = capacity_report(cfg, model);
+        let total_layers = (model.layers as u64).max(1);
+        let owned = layers_owned.min(total_layers);
+        let weight_share =
+            (cap.weights_bytes_per_bank.saturating_mul(owned)).div_ceil(total_layers);
+        Self {
+            banks: cfg.hbm.banks_total().max(1),
+            budget_per_bank: cap.bank_capacity_bytes.saturating_sub(weight_share),
             reserved_per_bank: 0,
             peak_per_bank: 0,
         }
@@ -199,6 +230,21 @@ mod tests {
         s.generated = 5;
         assert_eq!(s.context(), 69);
         assert!(!s.is_done());
+    }
+
+    #[test]
+    fn layer_share_tracker_frees_weight_room() {
+        let cfg = ArtemisConfig::default();
+        let m = ModelZoo::opt_350(); // 12 layers
+        let full = KvTracker::new(&cfg, &m);
+        let half = KvTracker::for_layer_share(&cfg, &m, 6);
+        // Owning half the layers halves the weight shard: more KV room.
+        assert!(half.budget_per_bank() > full.budget_per_bank());
+        // Owning everything matches the plain tracker (up to div_ceil).
+        let all = KvTracker::for_layer_share(&cfg, &m, 12);
+        assert_eq!(all.budget_per_bank(), full.budget_per_bank());
+        // The per-stack KV footprint shrinks in the same proportion.
+        assert_eq!(kv_bytes_for_layers(&m, 100, 6) * 2, kv_bytes(&m, 100));
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Memoized workload costing for the serving tick loop.
+//!
+//! The continuous-batching scheduler re-costs structurally identical
+//! workloads through [`simulate`] on every tick; at cluster scale most
+//! of a trace's wall-clock goes to that redundant costing.  This module
+//! removes it:
+//!
+//! * [`TickCoster`] costs one decode tick / prefill pass through the
+//!   *decomposed* form `base(B) + Σ attn(ctx_i)` (the MAC-exact split
+//!   of `xfmr::batched_decode_step_workload`, see
+//!   `xfmr::decode_base_workload`), so each piece's cost depends only
+//!   on a tiny shape key — `(batch, layers)` or `(ctx, layers)` —
+//!   and structurally identical pieces recur constantly across ticks,
+//!   sessions, and replicas.
+//! * [`CostCache`] memoizes `simulate` on those shape keys.
+//!   `simulate` is a deterministic pure function of (config, workload,
+//!   options), so memoization is *bit-identical* to re-evaluation —
+//!   the invariant `tests/cluster_properties.rs` asserts — and a cache
+//!   can be shared across all replicas of a cluster run (one
+//!   `Rc<RefCell<_>>`, single-threaded simulated time).
+//! * [`StackCoster`] rolls per-stage costs up across pipeline-parallel
+//!   stack groups: steady-state decode ticks advance by the bottleneck
+//!   stage plus one inter-stack hop; prefill pays the full pipeline
+//!   fill (every stage plus every hop).
+//!
+//! Invariants (DESIGN.md §Cluster-scale-out): cache on/off changes no
+//! metric bit; keys never collide across kinds; hit/miss counts are
+//! exact and logged by `serve-gen`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::engine::{simulate, SimOptions};
+use crate::config::{ArtemisConfig, TransformerModel};
+use crate::dataflow::{LayerRange, StackLink};
+use crate::xfmr::{
+    decode_attn_workload, decode_base_workload, prefill_attn_workload, prefill_base_workload,
+};
+
+/// The latency/energy outcome of one costed piece or tick.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TickCost {
+    pub ns: f64,
+    pub energy_pj: f64,
+}
+
+impl TickCost {
+    pub const ZERO: Self = Self { ns: 0.0, energy_pj: 0.0 };
+
+    fn add(&mut self, other: TickCost) {
+        self.ns += other.ns;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+/// Shape key of one memoizable piece (model and config are fixed per
+/// cache — see [`TickCoster`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum CostKey {
+    /// Batch-wide decode ops: projections + FFN for `batch` rows.
+    DecodeBase { batch: u64, layers: u64 },
+    /// One session's decode attention over `ctx` tokens.
+    DecodeAttn { ctx: u64, layers: u64 },
+    /// Batch-wide prefill ops + K/V all-gathers for `rows` token rows.
+    PrefillBase { rows: u64, layers: u64 },
+    /// One prompt's prefill attention.
+    PrefillAttn { prompt: u64, layers: u64 },
+}
+
+/// Exact hit/miss counts of one cache over a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1] (0 when the cache was never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Memoization table for [`TickCoster`] pieces.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: HashMap<CostKey, TickCost>,
+    stats: CacheStats,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache handle shareable across the replicas of one cluster run.
+    pub fn shared() -> Rc<RefCell<CostCache>> {
+        Rc::new(RefCell::new(CostCache::new()))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn get_or_insert_with(&mut self, key: CostKey, eval: impl FnOnce() -> TickCost) -> TickCost {
+        if let Some(&c) = self.map.get(&key) {
+            self.stats.hits += 1;
+            return c;
+        }
+        self.stats.misses += 1;
+        let c = eval();
+        self.map.insert(key, c);
+        c
+    }
+}
+
+/// Costs decode ticks and prefill passes for one (config, model,
+/// options) triple, optionally memoized through a (shareable)
+/// [`CostCache`].
+#[derive(Debug)]
+pub struct TickCoster<'a> {
+    cfg: &'a ArtemisConfig,
+    model: &'a TransformerModel,
+    opts: SimOptions,
+    cache: Option<Rc<RefCell<CostCache>>>,
+}
+
+impl<'a> TickCoster<'a> {
+    pub fn new(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        opts: SimOptions,
+        cache: Option<Rc<RefCell<CostCache>>>,
+    ) -> Self {
+        Self { cfg, model, opts, cache }
+    }
+
+    /// Evaluate one piece through [`simulate`] (the cache-miss path).
+    fn eval(&self, key: CostKey) -> TickCost {
+        let w = match key {
+            CostKey::DecodeBase { batch, layers } => {
+                decode_base_workload(self.model, batch, layers)
+            }
+            CostKey::DecodeAttn { ctx, layers } => decode_attn_workload(self.model, ctx, layers),
+            CostKey::PrefillBase { rows, layers } => {
+                prefill_base_workload(self.model, rows, layers)
+            }
+            CostKey::PrefillAttn { prompt, layers } => {
+                prefill_attn_workload(self.model, prompt, layers)
+            }
+        };
+        let r = simulate(self.cfg, &w, self.opts);
+        TickCost { ns: r.total_ns, energy_pj: r.total_energy_pj() }
+    }
+
+    fn cost(&self, key: CostKey) -> TickCost {
+        match &self.cache {
+            Some(cache) => cache.borrow_mut().get_or_insert_with(key, || self.eval(key)),
+            None => self.eval(key),
+        }
+    }
+
+    /// One decode tick of `contexts.len()` sessions over a stage of
+    /// `layers` layers: `base(B) + Σ attn(ctx_i)`.
+    pub fn decode_stage(&self, contexts: &[u64], layers: u64) -> TickCost {
+        if contexts.is_empty() || layers == 0 {
+            return TickCost::ZERO;
+        }
+        let mut total = self.cost(CostKey::DecodeBase { batch: contexts.len() as u64, layers });
+        for &ctx in contexts {
+            total.add(self.cost(CostKey::DecodeAttn { ctx: ctx.max(1), layers }));
+        }
+        total
+    }
+
+    /// One batched prefill of `prompts` over a stage of `layers` layers.
+    pub fn prefill_stage(&self, prompts: &[u64], layers: u64) -> TickCost {
+        if prompts.is_empty() || layers == 0 {
+            return TickCost::ZERO;
+        }
+        let rows: u64 = prompts.iter().map(|&p| p.max(1)).sum();
+        let mut total = self.cost(CostKey::PrefillBase { rows, layers });
+        for &p in prompts {
+            total.add(self.cost(CostKey::PrefillAttn { prompt: p.max(1), layers }));
+        }
+        total
+    }
+
+    /// Stats of the attached cache (zeros when uncached).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.borrow().stats()).unwrap_or_default()
+    }
+}
+
+/// Per-replica tick costing across one stack — or one pipeline-parallel
+/// group of stacks, each owning a contiguous layer range.
+///
+/// * **Single stack** (`stage_layers = [L]`): the decomposed tick cost,
+///   no inter-stack movement.
+/// * **Pipelined group**: a steady-state decode tick advances by the
+///   *bottleneck* stage plus one inter-stack hop of the batch's
+///   activation rows (consecutive tokens overlap across stages — the
+///   stack-level analogue of Fig. 6's execution pipelining); energy
+///   sums every stage plus every boundary crossing.  A prefill pays
+///   the full pipeline *fill*: every stage and every hop, serially.
+#[derive(Debug)]
+pub struct StackCoster<'a> {
+    tick: TickCoster<'a>,
+    /// Layers owned by each pipeline stage (non-empty stages only).
+    stage_layers: Vec<u64>,
+    /// Boundary hops an activation set crosses end-to-end.
+    hops: u64,
+    link: StackLink,
+    d_model: u64,
+}
+
+impl<'a> StackCoster<'a> {
+    /// A whole-model single-stack coster (data-parallel replica).
+    pub fn single(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        opts: SimOptions,
+        cache: Option<Rc<RefCell<CostCache>>>,
+    ) -> Self {
+        let layers = model.layers as u64;
+        Self {
+            tick: TickCoster::new(cfg, model, opts, cache),
+            stage_layers: vec![layers],
+            hops: 0,
+            link: StackLink::new(&crate::config::StackLinkParams::default()),
+            d_model: model.d_model as u64,
+        }
+    }
+
+    /// A pipeline-parallel group coster over `groups`
+    /// ([`stack_groups`](crate::dataflow::stack_groups) output).
+    pub fn pipelined(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        opts: SimOptions,
+        cache: Option<Rc<RefCell<CostCache>>>,
+        groups: &[LayerRange],
+        link: StackLink,
+    ) -> Self {
+        assert!(!groups.is_empty(), "pipeline group needs at least one stack");
+        let stage_layers: Vec<u64> =
+            groups.iter().map(LayerRange::len).filter(|&l| l > 0).collect();
+        Self {
+            tick: TickCoster::new(cfg, model, opts, cache),
+            stage_layers,
+            hops: groups.len() as u64 - 1,
+            link,
+            d_model: model.d_model as u64,
+        }
+    }
+
+    fn activation_bits(&self, rows: u64) -> u64 {
+        rows * self.d_model * 8
+    }
+
+    /// One decode tick for `contexts.len()` in-flight sessions.
+    ///
+    /// Modeling note: with multiple stages, each stage's base piece
+    /// charges the batch rows' host-I/O staging through its own stack
+    /// interface (and, for prefill, its own intra-stack K/V
+    /// all-gathers) — a deliberate per-stage cost; the host-I/O part
+    /// is ~1e-5 of a tick's energy.
+    pub fn decode_tick(&self, contexts: &[u64]) -> TickCost {
+        if contexts.is_empty() {
+            return TickCost::ZERO;
+        }
+        let mut bottleneck = 0.0f64;
+        let mut energy = 0.0f64;
+        for &layers in &self.stage_layers {
+            let c = self.tick.decode_stage(contexts, layers);
+            bottleneck = bottleneck.max(c.ns);
+            energy += c.energy_pj;
+        }
+        let hop = self.link.hop(self.activation_bits(contexts.len() as u64));
+        let hop_ns = if self.hops > 0 { hop.latency_ns } else { 0.0 };
+        energy += self.link.energy_pj(hop.bits_moved * self.hops);
+        TickCost { ns: bottleneck + hop_ns, energy_pj: energy }
+    }
+
+    /// One batched prefill of `prompts` (pipeline fill: serial stages).
+    pub fn prefill(&self, prompts: &[u64]) -> TickCost {
+        if prompts.is_empty() {
+            return TickCost::ZERO;
+        }
+        let mut total = TickCost::ZERO;
+        for &layers in &self.stage_layers {
+            total.add(self.tick.prefill_stage(prompts, layers));
+        }
+        let rows: u64 = prompts.iter().map(|&p| p.max(1)).sum();
+        let t = self.link.traverse(self.activation_bits(rows), self.hops);
+        total.ns += t.latency_ns;
+        total.energy_pj += self.link.energy_pj(t.bits_moved);
+        total
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.tick.cache_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelZoo, StackLinkParams};
+    use crate::dataflow::stack_groups;
+
+    type SharedCache = Option<Rc<RefCell<CostCache>>>;
+
+    fn coster_pair(cached: bool) -> (ArtemisConfig, TransformerModel, SharedCache) {
+        (
+            ArtemisConfig::default(),
+            ModelZoo::transformer_base(),
+            cached.then(CostCache::shared),
+        )
+    }
+
+    #[test]
+    fn memoization_is_bit_identical_to_reevaluation() {
+        let (cfg, model, cache) = coster_pair(true);
+        let opts = SimOptions::artemis();
+        let cached = TickCoster::new(&cfg, &model, opts, cache);
+        let plain = TickCoster::new(&cfg, &model, opts, None);
+        let ctxs = [64u64, 100, 64, 257, 100, 64];
+        for _ in 0..3 {
+            let a = cached.decode_stage(&ctxs, model.layers as u64);
+            let b = plain.decode_stage(&ctxs, model.layers as u64);
+            assert_eq!(a.ns.to_bits(), b.ns.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        }
+        let s = cached.cache_stats();
+        // 3 rounds x (1 base + 6 attn) lookups; only 4 distinct keys.
+        assert_eq!(s.lookups(), 21);
+        assert_eq!(s.misses, 4);
+        assert!(s.hit_rate() > 0.8, "hit rate {}", s.hit_rate());
+        assert_eq!(plain.cache_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn prefill_memoizes_per_prompt_pieces() {
+        let (cfg, model, cache) = coster_pair(true);
+        let c = TickCoster::new(&cfg, &model, SimOptions::artemis(), cache);
+        let a = c.prefill_stage(&[32, 64, 32], model.layers as u64);
+        let b = c.prefill_stage(&[32, 64, 32], model.layers as u64);
+        assert_eq!(a, b);
+        assert!(a.ns > 0.0 && a.energy_pj > 0.0);
+        // Second call hits everywhere.
+        assert_eq!(c.cache_stats().misses, 3); // base + attn(32) + attn(64)
+        assert_eq!(c.cache_stats().hits, 5);
+    }
+
+    #[test]
+    fn empty_batches_cost_nothing() {
+        let (cfg, model, _) = coster_pair(false);
+        let c = TickCoster::new(&cfg, &model, SimOptions::artemis(), None);
+        assert_eq!(c.decode_stage(&[], 2), TickCost::ZERO);
+        assert_eq!(c.prefill_stage(&[], 2), TickCost::ZERO);
+        assert_eq!(c.decode_stage(&[64], 0), TickCost::ZERO);
+    }
+
+    #[test]
+    fn pipelined_tick_is_bottleneck_plus_hop() {
+        let (cfg, model, _) = coster_pair(false);
+        let opts = SimOptions::artemis();
+        let groups = stack_groups(model.layers as u64, 2);
+        let link = StackLink::new(&StackLinkParams::default());
+        let pp = StackCoster::pipelined(&cfg, &model, opts, None, &groups, link);
+        let single = StackCoster::single(&cfg, &model, opts, None);
+        let ctxs = [64u64, 128];
+        let p = pp.decode_tick(&ctxs);
+        let s = single.decode_tick(&ctxs);
+        // The bottleneck stage owns half the layers: a steady-state
+        // pipelined tick beats the whole-stack tick even after the hop.
+        assert!(p.ns < s.ns, "pp {} vs single {}", p.ns, s.ns);
+        // Energy still pays every stage (plus the boundary crossing).
+        assert!(p.energy_pj > 0.9 * s.energy_pj);
+        // Prefill pays the full fill: no cheaper than the bottleneck path.
+        let fp = pp.prefill(&[64, 32]);
+        let fs = single.prefill(&[64, 32]);
+        assert!(fp.ns > 0.0 && fs.ns > 0.0);
+    }
+
+    #[test]
+    fn surplus_stacks_forward_only() {
+        // More stacks than layers: empty stages are skipped, hops remain.
+        let (cfg, model, _) = coster_pair(false);
+        let groups = stack_groups(2, 4); // transformer_base has 2 layers
+        let link = StackLink::new(&StackLinkParams::default());
+        let pp = StackCoster::pipelined(
+            &cfg,
+            &model,
+            SimOptions::artemis(),
+            None,
+            &groups,
+            link,
+        );
+        let c = pp.decode_tick(&[64]);
+        assert!(c.ns > 0.0);
+        assert!(c.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn shared_cache_accumulates_across_costers() {
+        let (cfg, model, cache) = coster_pair(true);
+        let opts = SimOptions::artemis();
+        let a = StackCoster::single(&cfg, &model, opts, cache.clone());
+        let b = StackCoster::single(&cfg, &model, opts, cache.clone());
+        let first = a.decode_tick(&[77]);
+        let second = b.decode_tick(&[77]);
+        assert_eq!(first, second);
+        let stats = cache.unwrap().borrow().stats();
+        assert_eq!(stats.misses, 2); // base + attn, from the first coster
+        assert_eq!(stats.hits, 2); // the second coster hits both
+    }
+}

@@ -7,9 +7,15 @@
 //! windows from the MOMCAP model, NSC costs from Table III, movement from
 //! the ring-network model.  Modeling decisions that fill gaps the paper
 //! leaves open are documented in DESIGN.md §Modeling-decisions.
+//!
+//! The serving tick loop costs its workloads through the memoized
+//! [`TickCoster`]/[`CostCache`] layer (bit-identical to direct
+//! [`simulate`] calls — DESIGN.md §Cluster-scale-out).
 
+mod cache;
 mod engine;
 mod micro;
 
+pub use cache::{CacheStats, CostCache, StackCoster, TickCost, TickCoster};
 pub use engine::{simulate, PhaseBreakdown, SimOptions, SimReport};
 pub use micro::{micro_headlines, MicroHeadlines};

@@ -179,6 +179,145 @@ pub fn batched_prefill_workload(model: &TransformerModel, prompts: &[u64]) -> Wo
     Workload { model: m, layers }
 }
 
+/// The batch-wide half of one decode tick over `layers` layers: the
+/// projections, output projection, FFN and elementwise ops for `batch`
+/// rows — everything in [`batched_decode_step_workload`] except the
+/// per-session attention.  This is the unit the memoized cost cache
+/// keys on (`sim::TickCoster`): its cost depends only on `(batch,
+/// layers)`, so structurally identical ticks memoize (DESIGN.md
+/// §Cluster-scale-out).  `layers < model.layers` selects a
+/// pipeline-parallel stage's contiguous layer range (the per-layer ops
+/// are identical, so only the count matters).
+pub fn decode_base_workload(model: &TransformerModel, batch: u64, layers: u64) -> Workload {
+    let b = batch.max(1);
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+
+    let mut out = Vec::with_capacity(layers as usize);
+    for _ in 0..layers {
+        out.push(LayerOps {
+            ops: vec![
+                Op::Matmul { m: b, k: d, n: d, tag: "Wq" },
+                Op::Matmul { m: b, k: d, n: d, tag: "Wk" },
+                Op::Matmul { m: b, k: d, n: d, tag: "Wv" },
+                Op::Matmul { m: b, k: d, n: d, tag: "Wo" },
+                Op::Residual { elems: b * d },
+                Op::Norm { elems: b * d },
+                Op::Matmul { m: b, k: d, n: f, tag: "FF1" },
+                Op::Activation { elems: b * f, kind: act },
+                Op::Matmul { m: b, k: f, n: d, tag: "FF2" },
+                Op::Residual { elems: b * d },
+                Op::Norm { elems: b * d },
+            ],
+            attention_allgathers: 0,
+        });
+    }
+    let mut m = model.clone();
+    m.seq_len = b as u32;
+    // A stage's capacity/remap cost covers only its own weight shard
+    // (matches `serve::KvTracker::for_layer_share` accounting).
+    m.params_m = model.params_m * layers as f64 / (model.layers as f64).max(1.0);
+    m.name = format!("{}@decode-base[b{b}xL{layers}]", model.name);
+    Workload { model: m, layers: out }
+}
+
+/// One session's decode-step attention over `layers` layers: QK^T,
+/// softmax, SV against `ctx` tokens of context.  Together with
+/// [`decode_base_workload`] this decomposes
+/// [`batched_decode_step_workload`] MAC-exactly:
+/// `base(B) + Σ attn(ctx_i)`.  `seq_len` is zeroed so the host-I/O
+/// charge is paid once, by the base workload.
+pub fn decode_attn_workload(model: &TransformerModel, ctx: u64, layers: u64) -> Workload {
+    let ctx = ctx.max(1);
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+
+    let mut out = Vec::with_capacity(layers as usize);
+    for _ in 0..layers {
+        out.push(LayerOps {
+            ops: vec![
+                Op::Matmul { m: h, k: dh, n: ctx, tag: "QK^T" },
+                Op::Softmax { rows: h, width: ctx },
+                Op::Matmul { m: h, k: ctx, n: dh, tag: "SV" },
+            ],
+            attention_allgathers: 0,
+        });
+    }
+    let mut m = model.clone();
+    m.seq_len = 0;
+    // Attention pieces are ops *within* an already-mapped inference:
+    // the weight-mapping (capacity/remap) cost belongs to the base
+    // piece alone, so this clone carries no weights.
+    m.params_m = 0.0;
+    m.name = format!("{}@decode-attn[c{ctx}xL{layers}]", model.name);
+    Workload { model: m, layers: out }
+}
+
+/// The batch-wide half of a batched prefill over `layers` layers:
+/// projections/FFN for `total_rows` token rows plus the per-layer K/V
+/// all-gathers (whose volume depends only on the total row count).
+pub fn prefill_base_workload(model: &TransformerModel, total_rows: u64, layers: u64) -> Workload {
+    let total = total_rows.max(1);
+    let d = model.d_model as u64;
+    let f = model.d_ff as u64;
+    let act = if model.gelu { ActKind::Gelu } else { ActKind::Relu };
+
+    let mut out = Vec::with_capacity(layers as usize);
+    for _ in 0..layers {
+        out.push(LayerOps {
+            ops: vec![
+                Op::Matmul { m: total, k: d, n: d, tag: "Wq" },
+                Op::Matmul { m: total, k: d, n: d, tag: "Wk" },
+                Op::Matmul { m: total, k: d, n: d, tag: "Wv" },
+                Op::Matmul { m: total, k: d, n: d, tag: "Wo" },
+                Op::Residual { elems: total * d },
+                Op::Norm { elems: total * d },
+                Op::Matmul { m: total, k: d, n: f, tag: "FF1" },
+                Op::Activation { elems: total * f, kind: act },
+                Op::Matmul { m: total, k: f, n: d, tag: "FF2" },
+                Op::Residual { elems: total * d },
+                Op::Norm { elems: total * d },
+            ],
+            attention_allgathers: 2,
+        });
+    }
+    let mut m = model.clone();
+    m.seq_len = total as u32;
+    // Per-stage weight share, as in `decode_base_workload`.
+    m.params_m = model.params_m * layers as f64 / (model.layers as f64).max(1.0);
+    m.name = format!("{}@prefill-base[t{total}xL{layers}]", model.name);
+    Workload { model: m, layers: out }
+}
+
+/// One prompt's prefill attention over `layers` layers (causal for
+/// decoder-only models, matching [`batched_prefill_workload`]).
+pub fn prefill_attn_workload(model: &TransformerModel, prompt: u64, layers: u64) -> Workload {
+    let p = prompt.max(1);
+    let h = model.heads as u64;
+    let dh = model.d_head() as u64;
+    let causal = matches!(model.arch, Arch::DecoderOnly);
+    let score_n = if causal { p.div_ceil(2) } else { p };
+
+    let mut out = Vec::with_capacity(layers as usize);
+    for _ in 0..layers {
+        out.push(LayerOps {
+            ops: vec![
+                Op::Matmul { m: p * h, k: dh, n: score_n, tag: "QK^T" },
+                Op::Softmax { rows: p * h, width: score_n },
+                Op::Matmul { m: p * h, k: score_n, n: dh, tag: "SV" },
+            ],
+            attention_allgathers: 0,
+        });
+    }
+    let mut m = model.clone();
+    m.seq_len = 0;
+    // No weights: mapping cost lives in `prefill_base_workload`.
+    m.params_m = 0.0;
+    m.name = format!("{}@prefill-attn[p{p}xL{layers}]", model.name);
+    Workload { model: m, layers: out }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +435,50 @@ mod tests {
                 "n={n}"
             );
         }
+    }
+
+    #[test]
+    fn decomposed_decode_macs_match_batched() {
+        // base(B) + sum of attn(ctx_i) == the batched tick, MAC-exactly
+        // (the decomposition the memoized cost cache keys on).
+        for m in [ModelZoo::opt_350(), ModelZoo::transformer_base()] {
+            let l = m.layers as u64;
+            let ctxs = [33u64, 64, 100, 257];
+            let batched = batched_decode_step_workload(&m, &ctxs).total_macs();
+            let base = decode_base_workload(&m, ctxs.len() as u64, l).total_macs();
+            let attn: u64 =
+                ctxs.iter().map(|&c| decode_attn_workload(&m, c, l).total_macs()).sum();
+            assert_eq!(base + attn, batched, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn decomposed_prefill_macs_match_batched() {
+        for m in [ModelZoo::opt_350(), ModelZoo::bert_base()] {
+            let l = m.layers as u64;
+            let prompts = [16u64, 128, 77];
+            let total: u64 = prompts.iter().sum();
+            let batched = batched_prefill_workload(&m, &prompts).total_macs();
+            let base = prefill_base_workload(&m, total, l).total_macs();
+            let attn: u64 =
+                prompts.iter().map(|&p| prefill_attn_workload(&m, p, l).total_macs()).sum();
+            assert_eq!(base + attn, batched, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn decomposed_pieces_split_layers_proportionally() {
+        // A pipeline stage owning L/2 layers costs exactly half the MACs
+        // (decode layers are structurally identical).
+        let m = ModelZoo::opt_350();
+        let l = m.layers as u64;
+        assert_eq!(l % 2, 0);
+        let half = decode_base_workload(&m, 4, l / 2).total_macs();
+        let full = decode_base_workload(&m, 4, l).total_macs();
+        assert_eq!(2 * half, full);
+        // Attention pieces carry no host-I/O rows (seq_len = 0).
+        assert_eq!(decode_attn_workload(&m, 100, l).model.seq_len, 0);
+        assert_eq!(prefill_attn_workload(&m, 100, l).model.seq_len, 0);
     }
 
     #[test]

@@ -5,8 +5,9 @@ mod decode;
 mod ops;
 
 pub use decode::{
-    batched_decode_step_workload, batched_prefill_workload, decode_step_workload,
-    generation_workloads,
+    batched_decode_step_workload, batched_prefill_workload, decode_attn_workload,
+    decode_base_workload, decode_step_workload, generation_workloads, prefill_attn_workload,
+    prefill_base_workload,
 };
 pub use ops::{ActKind, LayerOps, Op, Workload};
 

@@ -19,7 +19,20 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_exits_zero_and_lists_commands() {
     let (ok, stdout, stderr) = run(&["help"]);
     assert!(ok, "help failed: {stderr}");
-    for cmd in ["fig2", "fig7", "tab4", "micro", "simulate", "serve", "serve-gen", "csv"] {
+    let cmds = [
+        "fig2",
+        "fig7",
+        "tab4",
+        "micro",
+        "simulate",
+        "serve",
+        "serve-gen",
+        "csv",
+        "cluster-scale",
+        "bench-serve",
+        "--placement dp|pp",
+    ];
+    for cmd in cmds {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
     }
 }
@@ -70,6 +83,75 @@ fn serve_gen_prints_percentiles_and_is_deterministic() {
     let (ok2, out2, _) = run(&args);
     assert!(ok2);
     assert_eq!(out1, out2, "serve-gen must be deterministic for a fixed seed");
+}
+
+#[test]
+fn serve_gen_cluster_prints_aggregate_and_cache_stats() {
+    // Small cluster run on the fast 2-layer model (debug binary).
+    let args = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "8",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--stacks",
+        "2",
+        "--placement",
+        "dp",
+        "--route",
+        "rr",
+    ];
+    let (ok, out1, stderr) = run(&args);
+    assert!(ok, "cluster serve-gen failed: {stderr}");
+    for needle in [
+        "serve-gen cluster",
+        "2 stacks dp",
+        "route rr",
+        "stack0(",
+        "stack1(",
+        "cluster(",
+        "aggregate:",
+        "tokens/s",
+        "cost-cache: on",
+        "hit-rate",
+    ] {
+        assert!(out1.contains(needle), "missing '{needle}':\n{out1}");
+    }
+    // Deterministic for a fixed seed, like the single-machine path.
+    let (ok2, out2, _) = run(&args);
+    assert!(ok2);
+    assert_eq!(out1, out2, "cluster serve-gen must be deterministic");
+}
+
+#[test]
+fn serve_gen_rejects_bad_cluster_flags() {
+    let (ok, _, stderr) = run(&["serve-gen", "--stacks", "2", "--placement", "sideways"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown placement"), "{stderr}");
+    let (ok, _, stderr) = run(&["serve-gen", "--stacks", "2", "--route", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown route policy"), "{stderr}");
+    let (ok, _, stderr) = run(&["serve-gen", "--stacks", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("--stacks must be positive"), "{stderr}");
+}
+
+#[test]
+fn serve_gen_zero_sessions_prints_empty_trace_report() {
+    // `--sessions 0` must cleanly report an empty trace, exit 0 —
+    // single-machine and cluster mode alike.
+    let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0"]);
+    assert!(ok, "empty serve-gen failed: {stderr}");
+    assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
+    let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0", "--stacks", "4"]);
+    assert!(ok, "empty cluster serve-gen failed: {stderr}");
+    assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
 }
 
 #[test]

@@ -1,0 +1,171 @@
+//! Property tests for the multi-stack cluster driver: conservation
+//! (every session served exactly once, by exactly one replica),
+//! KV-budget safety per stack, scale-out monotonicity, and the
+//! cost-cache bit-identicality invariant — over randomized traces,
+//! stack counts and routing policies (deterministic in-repo harness,
+//! `util::prop`).
+
+use artemis::cluster::run_cluster;
+use artemis::config::{ArtemisConfig, ClusterConfig, ModelZoo, Placement};
+use artemis::serve::{Policy, RoutePolicy, Scenario, SchedulerConfig};
+use artemis::util::prop::check;
+
+/// Small fast scenario: chat traffic shapes on the 2-layer
+/// Transformer-base so each property case simulates in milliseconds.
+fn fast_scenario(sessions: usize) -> Scenario {
+    let mut sc = Scenario::chat().with_sessions(sessions);
+    sc.model = ModelZoo::transformer_base();
+    sc
+}
+
+fn any_route(pick: usize) -> RoutePolicy {
+    [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::KvHeadroom][pick % 3]
+}
+
+#[test]
+fn every_session_is_served_once_by_one_replica() {
+    let cfg = ArtemisConfig::default();
+    check(6, 0xC1_0001, |g| {
+        let sc = fast_scenario(g.usize_in(4, 12));
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let stacks = [1u64, 2, 3, 4][g.usize_in(0, 3)];
+        let route = any_route(g.usize_in(0, 2));
+        let sched = SchedulerConfig { max_batch: g.usize_in(2, 6), policy: Policy::Fifo };
+        let cl = ClusterConfig::new(stacks, Placement::DataParallel);
+        let r = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, route, true);
+        // Conservation: the union of per-stack sessions is the trace.
+        let per_stack_total: usize = r.per_stack.iter().map(|s| s.sessions).sum();
+        assert_eq!(per_stack_total, trace.len());
+        assert_eq!(r.aggregate.sessions, trace.len());
+        let mut ids: Vec<u64> = r
+            .per_stack
+            .iter()
+            .flat_map(|s| s.session_reports.iter().map(|x| x.id))
+            .collect();
+        ids.sort_unstable();
+        let mut want: Vec<u64> = trace.iter().map(|s| s.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want, "stacks={stacks} route={route}");
+        // Everyone fully served on the default-capacity machine.
+        assert_eq!(r.aggregate.rejected, 0);
+        let tokens: u64 = trace.iter().map(|s| s.gen).sum();
+        assert_eq!(r.aggregate.total_tokens, tokens);
+    });
+}
+
+#[test]
+fn per_stack_kv_never_exceeds_budget() {
+    check(6, 0xC1_0002, |g| {
+        let mut cfg = ArtemisConfig::default();
+        // Shrink the banks so KV pressure (and rejection) is real.
+        cfg.hbm.subarrays_per_bank = [8, 16, 32][g.usize_in(0, 2)];
+        let mut sc = Scenario::summarize().with_sessions(g.usize_in(3, 8));
+        sc.model = ModelZoo::transformer_base();
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let stacks = [2u64, 3][g.usize_in(0, 1)];
+        let route = any_route(g.usize_in(0, 2));
+        let sched = SchedulerConfig { max_batch: g.usize_in(2, 8), policy: Policy::Fifo };
+        let cl = ClusterConfig::new(stacks, Placement::DataParallel);
+        let r = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, route, true);
+        for s in &r.per_stack {
+            assert!(
+                s.peak_kv_per_bank <= s.kv_budget_per_bank,
+                "KV overflow on {}: peak {} > budget {}",
+                s.scheme,
+                s.peak_kv_per_bank,
+                s.kv_budget_per_bank
+            );
+        }
+        for s in &r.aggregate.session_reports {
+            assert!(s.rejected || s.generated == s.gen, "session {} half-served", s.id);
+        }
+    });
+}
+
+#[test]
+fn adding_stacks_never_hurts_aggregate_throughput() {
+    let cfg = ArtemisConfig::default();
+    check(4, 0xC1_0003, |g| {
+        let sc = fast_scenario(g.usize_in(8, 14));
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let sched = SchedulerConfig { max_batch: g.usize_in(2, 4), policy: Policy::Fifo };
+        let route = RoutePolicy::LeastLoaded;
+        let mut last = 0.0f64;
+        for stacks in [1u64, 2, 4] {
+            let cl = ClusterConfig::new(stacks, Placement::DataParallel);
+            let r = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, route, true);
+            let tps = r.tokens_per_s();
+            // Splitting a backlogged trace over more replicas can only
+            // shrink the makespan (tiny slack for the final stack whose
+            // last session dominates either way).
+            assert!(
+                tps >= last * 0.999,
+                "stacks={stacks}: {tps} tok/s < previous {last}"
+            );
+            last = tps;
+        }
+    });
+}
+
+#[test]
+fn cost_cache_never_changes_a_metric_bit() {
+    let cfg = ArtemisConfig::default();
+    check(3, 0xC1_0004, |g| {
+        let sc = fast_scenario(g.usize_in(4, 10));
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let stacks = [1u64, 2][g.usize_in(0, 1)];
+        let placement =
+            if g.bool() { Placement::DataParallel } else { Placement::PipelineParallel };
+        let route = any_route(g.usize_in(0, 2));
+        let sched = SchedulerConfig { max_batch: g.usize_in(2, 6), policy: Policy::Fifo };
+        let cl = ClusterConfig::new(stacks, placement);
+        let hot = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, route, true);
+        let cold = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, route, false);
+        let (h, c) = (&hot.aggregate, &cold.aggregate);
+        assert_eq!(h.makespan_ns.to_bits(), c.makespan_ns.to_bits());
+        assert_eq!(h.sim_energy_pj.to_bits(), c.sim_energy_pj.to_bits());
+        assert_eq!(h.ttft.p99.to_bits(), c.ttft.p99.to_bits());
+        assert_eq!(h.per_token.mean.to_bits(), c.per_token.mean.to_bits());
+        assert_eq!(h.itl.p50.to_bits(), c.itl.p50.to_bits());
+        assert_eq!(h.total_tokens, c.total_tokens);
+        assert_eq!(h.ticks, c.ticks);
+        assert!(hot.cache.lookups() > 0);
+        assert_eq!(cold.cache.lookups(), 0);
+    });
+}
+
+#[test]
+fn pp_groups_scale_decode_throughput() {
+    // The bottleneck stage shrinks as the pipeline deepens: pp x2 and
+    // pp x4 must both beat the single stack on the same trace.
+    let cfg = ArtemisConfig::default();
+    let sc = fast_scenario(10);
+    let trace = sc.generate(7);
+    let sched = SchedulerConfig { max_batch: 4, policy: Policy::Fifo };
+    let route = RoutePolicy::LeastLoaded;
+    let single = run_cluster(
+        &cfg,
+        &sc.model,
+        &trace,
+        &ClusterConfig::new(1, Placement::DataParallel),
+        &sched,
+        route,
+        true,
+    );
+    let pp2 = run_cluster(
+        &cfg,
+        &sc.model,
+        &trace,
+        &ClusterConfig::new(2, Placement::PipelineParallel),
+        &sched,
+        route,
+        true,
+    );
+    assert_eq!(single.aggregate.total_tokens, pp2.aggregate.total_tokens);
+    assert!(
+        pp2.tokens_per_s() > single.tokens_per_s(),
+        "pp x2 {} vs single {}",
+        pp2.tokens_per_s(),
+        single.tokens_per_s()
+    );
+}

@@ -1,7 +1,9 @@
 //! Property tests over sharding and the inter-bank network.
 
-use artemis::config::HbmConfig;
-use artemis::dataflow::{layer_assignment, token_shards, RingNetwork, Shard};
+use artemis::config::{HbmConfig, StackLinkParams};
+use artemis::dataflow::{
+    layer_assignment, stack_groups, token_shards, LayerRange, RingNetwork, Shard, StackLink,
+};
 use artemis::util::prop::check;
 
 #[test]
@@ -45,6 +47,58 @@ fn prop_layer_assignment_total_banks_conserved() {
             let total: usize = a.iter().map(Vec::len).sum();
             assert_eq!(total as u64, banks);
         }
+    });
+}
+
+#[test]
+fn prop_token_shards_edge_cases() {
+    // N < K leaves exactly K - N empty shards; K = 1 owns everything.
+    check(300, 0x35, |g| {
+        let k = 2 + g.u64_below(64);
+        let n = g.u64_below(k); // strictly fewer tokens than banks
+        let shards = token_shards(n, k);
+        assert_eq!(shards.iter().filter(|s| !s.is_empty()).count() as u64, n);
+        assert_eq!(shards.iter().filter(|s| s.is_empty()).count() as u64, k - n);
+        let single = token_shards(n, 1);
+        assert_eq!(single.len(), 1);
+        assert_eq!(single[0].len(), n);
+    });
+}
+
+#[test]
+fn prop_stack_groups_partition_layers() {
+    // The stack-group generalization: every layer owned by exactly one
+    // stack, ranges contiguous and balanced, empties only when D > L.
+    check(300, 0x36, |g| {
+        let layers = 1 + g.u64_below(64);
+        let stacks = 1 + g.u64_below(16);
+        let groups = stack_groups(layers, stacks);
+        assert_eq!(groups.len(), stacks as usize);
+        let mut next = 0u64;
+        for grp in &groups {
+            assert_eq!(grp.start, next, "layers={layers} stacks={stacks}");
+            next = grp.end;
+        }
+        assert_eq!(next, layers);
+        let lens: Vec<u64> = groups.iter().map(LayerRange::len).collect();
+        let (min, max) = (*lens.iter().min().unwrap(), *lens.iter().max().unwrap());
+        assert!(max - min <= 1);
+        let empties = lens.iter().filter(|&&l| l == 0).count() as u64;
+        assert_eq!(empties, stacks.saturating_sub(layers));
+    });
+}
+
+#[test]
+fn prop_stack_link_latency_monotone_in_payload() {
+    let link = StackLink::new(&StackLinkParams::default());
+    check(200, 0x37, |g| {
+        let bits = 1 + g.u64_below(1_000_000);
+        let small = link.hop(bits);
+        let big = link.hop(2 * bits);
+        assert!(big.latency_ns >= small.latency_ns);
+        assert_eq!(big.bits_moved, 2 * small.bits_moved);
+        // Fixed hop cost dominates tiny payloads; beats dominate bulk.
+        assert!(small.latency_ns >= StackLinkParams::default().hop_ns);
     });
 }
 
