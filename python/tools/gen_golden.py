@@ -1,0 +1,676 @@
+#!/usr/bin/env python3
+"""Golden-vector generator for the Rust conformance suite.
+
+Emits deterministic JSON fixtures into ``rust/tests/golden/`` from a
+NumPy mirror of the reference semantics:
+
+* ``sc_matmul_len.json``  — SC matmuls at several stream lengths through
+  the integer/dyadic variable-length product (mirrors
+  ``rust/src/sc/varlen.rs`` bit-for-bit: only exactly-rounded IEEE ops).
+* ``ref_sc_matmul.json``  — the f32 ``sc_matmul`` artifact semantics of
+  ``runtime::ReferenceBackend`` (quantize → trunc-SC accumulate →
+  dequantize), mirrored op-for-op in float32.
+* ``nsc_softmax.json``    — LUT log-sum-exp softmax rows (f64) plus the
+  integer LUT codes (grid conformance is checked bit-exactly; the f64
+  outputs go through libm exp/log, see LIBM NOTE below).
+* ``q8_roundtrip.json``   — symmetric 8-bit quantization round trip in
+  f64 (codes are integers: bit-exact).
+* ``tiny_logits.json``    — the tiny-classifier ``q8sc`` logits through
+  a full float32 mirror of ``runtime::reference`` (weights, one-shot
+  calibration, encoder blocks, NSC softmax).
+* ``fidelity_model.json`` — sampled logit-RMS errors of the tiny model
+  at several stream lengths plus the measured margin statistics; the
+  Rust fidelity estimator's constants and analytic curve are validated
+  against these.
+
+LIBM NOTE: every value in the fixtures that passes through a
+transcendental (exp/log/cos, and expf for the f32 calibration softmax)
+calls the *system libm* — ``math.*`` for f64 and ``ctypes`` ``expf`` for
+f32 — which is the same library Rust's ``f64::exp``/``f32::exp`` bind
+to on linux-gnu, so the values agree bit-for-bit on the CI platform.
+Purely arithmetic fixtures (integer accumulators, quantization codes,
+dyadic rescales) are exact on any IEEE-754 platform.
+
+Deterministic: all randomness flows through a mirror of the simulator's
+``XorShift64``.  Run from the repo root:
+
+    python3 python/tools/gen_golden.py [--out rust/tests/golden]
+
+CI regenerates the fixtures and fails on drift
+(``git diff --exit-code rust/tests/golden/``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ctypes
+import ctypes.util
+import json
+import math
+import os
+
+import numpy as np
+
+f32 = np.float32
+
+# ---------------------------------------------------------------------------
+# libm expf (the f32 exp Rust std calls on linux-gnu)
+
+try:  # pragma: no cover - platform probe
+    _libm = ctypes.CDLL(ctypes.util.find_library("m") or "libm.so.6")
+    _libm.expf.restype = ctypes.c_float
+    _libm.expf.argtypes = [ctypes.c_float]
+
+    def expf(x) -> np.float32:
+        return f32(_libm.expf(ctypes.c_float(float(f32(x)))))
+
+except (OSError, AttributeError):  # pragma: no cover - non-glibc fallback
+
+    def expf(x) -> np.float32:
+        return f32(math.exp(float(f32(x))))
+
+
+# ---------------------------------------------------------------------------
+# XorShift64 mirror (rust/src/util/mod.rs)
+
+M64 = (1 << 64) - 1
+
+
+class XorShift64:
+    def __init__(self, seed: int):
+        self.s = ((seed * 0x9E3779B97F4A7C15) & M64) | 1
+
+    def next_u64(self) -> int:
+        x = self.s
+        x ^= x >> 12
+        x ^= (x << 25) & M64
+        x ^= x >> 27
+        self.s = x
+        return (x * 0x2545F4914F6CDD1D) & M64
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def unit(self) -> float:
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def code(self) -> int:
+        return int(self.below(255)) - 127
+
+    def normal(self) -> float:
+        u1 = max(self.unit(), 1e-12)
+        u2 = self.unit()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos((2.0 * math.pi) * u2)
+
+
+# ---------------------------------------------------------------------------
+# Variable-length SC product (mirror of rust/src/sc/varlen.rs — exact)
+
+
+def requantize_mag(m: int, length: int) -> int:
+    """round-half-to-even of m*length/128 in exact integer arithmetic."""
+    num = m * length
+    q, r = divmod(num, 128)
+    if r > 64 or (r == 64 and q % 2 == 1):
+        q += 1
+    return q
+
+
+def sc_product_len(qa: int, qb: int, length: int) -> float:
+    ma = requantize_mag(abs(qa), length)
+    mb = requantize_mag(abs(qb), length)
+    p = ma * mb // length
+    mag = (p * 128) / length
+    return -mag if (qa < 0) != (qb < 0) else mag
+
+
+def quant_scale_f64(x: np.ndarray) -> float:
+    return max(float(np.max(np.abs(x))), 1e-12) / 127.0
+
+
+def quantize_f64(x: np.ndarray, scale: float) -> np.ndarray:
+    # np.round is round-half-to-even, matching Rust round_ties_even.
+    return np.clip(np.round(x / scale), -127.0, 127.0).astype(np.int64)
+
+
+def sc_matmul_len(a: np.ndarray, b: np.ndarray, length: int):
+    m, k = a.shape
+    n = b.shape[1]
+    sa, sb = quant_scale_f64(a), quant_scale_f64(b)
+    qa, qb = quantize_f64(a, sa), quantize_f64(b, sb)
+    acc = np.zeros((m, n), np.float64)
+    for i in range(m):
+        for j in range(n):
+            s = 0.0
+            for kk in range(k):
+                s += sc_product_len(int(qa[i, kk]), int(qb[kk, j]), length)
+            acc[i, j] = s
+    scale = (sa * sb) * 128.0
+    return acc, acc * scale, sa, sb
+
+
+# ---------------------------------------------------------------------------
+# f32 reference-backend arithmetic (mirror of rust/src/runtime/reference.rs)
+
+
+def quant_scale32(x: np.ndarray) -> np.float32:
+    return f32(np.maximum(f32(np.max(np.abs(x))), f32(1e-12)) / f32(127.0))
+
+
+def quantize32(x: np.ndarray, s: np.float32) -> np.ndarray:
+    return np.clip(np.round(x / s), f32(-127.0), f32(127.0)).astype(np.float32)
+
+
+def sc_codes32(qa: np.ndarray, qb: np.ndarray) -> np.ndarray:
+    """sum_k trunc(qa*qb/128) over integer-valued f32 codes -> f32."""
+    a = qa.astype(np.int64)
+    b = qb.astype(np.int64)
+    p = a[:, :, None] * b[None, :, :]
+    trunc = np.sign(p) * (np.abs(p) // 128)
+    return trunc.sum(axis=1).astype(np.float32)
+
+
+def mm_sc32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    sa, sb = quant_scale32(a), quant_scale32(b)
+    qa, qb = quantize32(a, sa), quantize32(b, sb)
+    out = sc_codes32(qa, qb)
+    return out * f32(f32(sa * sb) * f32(128.0))
+
+
+def mm_fp32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-sequential f32 matmul, the exact accumulation order of
+    reference.rs::mm_fp32 (out[i,:] += a[i,kk] * b[kk,:], kk ascending)."""
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for kk in range(k):
+            out[i, :] = out[i, :] + a[i, kk] * b[kk, :]
+    return out
+
+
+def layer_norm32(x: np.ndarray) -> np.ndarray:
+    rows, cols = x.shape
+    out = np.zeros_like(x)
+    for r in range(rows):
+        s = f32(0.0)
+        for v in x[r]:
+            s = f32(s + v)
+        mean = f32(s / f32(cols))
+        vs = f32(0.0)
+        for v in x[r]:
+            t = f32(v - mean)
+            vs = f32(vs + f32(t * t))
+        var = f32(vs / f32(cols))
+        inv = f32(f32(1.0) / np.sqrt(f32(var + f32(1e-5))))
+        out[r] = (x[r] - mean) * inv
+    return out
+
+
+# --- NSC LUT softmax (f64; mirror of rust/src/nsc/{lut,softmax}.rs) --------
+
+LUT_SIZE = 256
+EXP_RANGE = 16.0
+EXP_TABLE = [math.exp(-EXP_RANGE + c * (EXP_RANGE / 255.0)) for c in range(LUT_SIZE)]
+
+
+def round_half_away_pos(x: float) -> int:
+    """f64::round for non-negative inputs (half away from zero), exact."""
+    fl = math.floor(x)
+    return int(fl) + 1 if x - fl >= 0.5 else int(fl)
+
+
+def exp_lut_code(x: float) -> int:
+    xc = min(max(x, -EXP_RANGE), 0.0)
+    return round_half_away_pos((xc + EXP_RANGE) * (255.0 / EXP_RANGE))
+
+
+def exp_lut(x: float) -> float:
+    return EXP_TABLE[exp_lut_code(x)]
+
+
+def ln_lut(x: float, max_in: float) -> float:
+    ln_max = math.log(max_in)
+    xc = min(max(x, 1.0), max_in)
+    code = round_half_away_pos(math.log(xc) * (255.0 / ln_max))
+    return (code * ln_max) / 255.0
+
+
+def nsc_softmax(y) -> list:
+    ymax = max(y)
+    s = 0.0
+    for v in y:
+        s = s + exp_lut(v - ymax)
+    ln_s = ln_lut(s, float(len(y)))
+    return [exp_lut(v - ymax - ln_s) for v in y]
+
+
+def softmax_rows32(x: np.ndarray, variant: str) -> np.ndarray:
+    out = x.copy()
+    for r in range(x.shape[0]):
+        row = out[r]
+        if variant == "fp32":
+            m = f32(np.max(row))
+            s = f32(0.0)
+            for i in range(len(row)):
+                row[i] = expf(f32(row[i] - m))
+                s = f32(s + row[i])
+            for i in range(len(row)):
+                row[i] = f32(row[i] / s)
+        else:  # q8 / q8sc -> NSC LUT softmax in f64, cast back
+            y = [float(v) for v in row]
+            for i, p in enumerate(nsc_softmax(y)):
+                row[i] = f32(p)
+    return out
+
+
+# --- tiny classifier (mirror of reference.rs tiny path) --------------------
+
+REF_WEIGHT_SEED = 0xA27E_3115
+CAL_SEED = 0xCA1B
+NOISE_W = 0.01
+NOISE_POS = 0.005
+NOISE_EMB = 0.01
+
+TINY = dict(
+    vocab=32, d_model=64, n_heads=4, d_ff=128, n_layers=2, seq_len=16, n_classes=2, batch=8
+)
+
+
+def noise_mat(rng: XorShift64, rows: int, cols: int, scale: float) -> np.ndarray:
+    vals = [f32(scale * rng.normal()) for _ in range(rows * cols)]
+    return np.array(vals, np.float32).reshape(rows, cols)
+
+
+def mm_var(a, b, variant):
+    return mm_fp32(a, b) if variant == "fp32" else mm_sc32(a, b)
+
+
+def mha32(x, blk, cfg, variant):
+    n, d, heads = cfg["seq_len"], cfg["d_model"], cfg["n_heads"]
+    dh = d // heads
+    q = mm_var(x, blk["wq"], variant)
+    k = mm_var(x, blk["wk"], variant)
+    val = mm_var(x, blk["wv"], variant)
+    concat = np.zeros((n, d), np.float32)
+    inv_sqrt = f32(f32(1.0) / np.sqrt(f32(dh)))
+    for h in range(heads):
+        qs = q[:, h * dh : (h + 1) * dh].copy()
+        ks = k[:, h * dh : (h + 1) * dh].copy()
+        vs = val[:, h * dh : (h + 1) * dh].copy()
+        ks_t = np.ascontiguousarray(ks.T)
+        if variant == "q8sc":
+            scores = mm_sc32(qs, ks_t)
+            scores = scores * inv_sqrt
+            scores = softmax_rows32(scores, variant)
+            qp = np.clip(np.round(scores * f32(127.0)), f32(0.0), f32(127.0)).astype(
+                np.float32
+            )
+            sp = f32(f32(1.0) / f32(127.0))
+            sv = quant_scale32(vs)
+            qv = quantize32(vs, sv)
+            acc = sc_codes32(qp, qv)
+            out = acc * f32(f32(sp * sv) * f32(128.0))
+        else:
+            scores = mm_var(qs, ks_t, variant)
+            scores = scores * inv_sqrt
+            scores = softmax_rows32(scores, variant)
+            out = mm_var(scores, vs, variant)
+        concat[:, h * dh : (h + 1) * dh] = out
+    return mm_var(concat, blk["wo"], variant)
+
+
+def encoder_block32(x, blk, cfg, variant):
+    attn = mha32(layer_norm32(x), blk, cfg, variant)
+    x1 = x + attn
+    h = mm_var(layer_norm32(x1), blk["w1"], variant)
+    h = np.maximum(h, f32(0.0))
+    ffn = mm_var(h, blk["w2"], variant)
+    return x1 + ffn
+
+
+def tiny_pooled(w, cfg, ids, variant):
+    n, d = cfg["seq_len"], cfg["d_model"]
+    x = np.zeros((n, d), np.float32)
+    for t, tok in enumerate(ids):
+        x[t] = w["embed"][tok] + w["pos"][t]
+    for blk in w["layers"]:
+        x = encoder_block32(x, blk, cfg, variant)
+    ln = layer_norm32(x)
+    pooled = np.zeros(d, np.float32)
+    for r in range(n):
+        pooled = pooled + ln[r]
+    return pooled / f32(n)
+
+
+def tiny_logits(w, cfg, ids, variant):
+    pooled = tiny_pooled(w, cfg, ids, variant)
+    c = cfg["n_classes"]
+    logits = np.zeros(c, np.float32)
+    for j in range(cfg["d_model"]):
+        for cl in range(c):
+            logits[cl] = f32(logits[cl] + f32(pooled[j] * w["head"][j, cl]))
+    return logits
+
+
+def reference_weights(cfg):
+    v, d, fdim, n, c = (
+        cfg["vocab"],
+        cfg["d_model"],
+        cfg["d_ff"],
+        cfg["seq_len"],
+        cfg["n_classes"],
+    )
+    rng = XorShift64(REF_WEIGHT_SEED)
+    embed = noise_mat(rng, v, d, NOISE_EMB)
+    embed[1, 0] = f32(embed[1, 0] + f32(1.0))
+    embed[2, 0] = f32(embed[2, 0] - f32(1.0))
+    for t in range(v):
+        embed[t, 1] = f32(embed[t, 1] + f32(0.25))
+    pos = noise_mat(rng, n, d, NOISE_POS)
+    layers = []
+    for _ in range(cfg["n_layers"]):
+        layers.append(
+            dict(
+                wq=noise_mat(rng, d, d, NOISE_W),
+                wk=noise_mat(rng, d, d, NOISE_W),
+                wv=noise_mat(rng, d, d, NOISE_W),
+                wo=noise_mat(rng, d, d, NOISE_W),
+                w1=noise_mat(rng, d, fdim, NOISE_W),
+                w2=noise_mat(rng, fdim, d, NOISE_W),
+            )
+        )
+    head = noise_mat(rng, d, c, NOISE_W)
+    head[0, 1] = f32(head[0, 1] + f32(1.0))
+    head[0, 0] = f32(head[0, 0] - f32(1.0))
+    w = dict(embed=embed, pos=pos, layers=layers, head=head)
+
+    crng = XorShift64(CAL_SEED)
+    cases = 16
+    margin_sum = 0.0
+    pooled1_sum = 0.0
+    for diff in range(2):
+        for _ in range(cases):
+            ids = [3 + int(crng.below(v - 3)) for _ in range(n)]
+            if diff == 1:
+                slot = int(crng.below(n))
+                ids[slot] = 1
+            pooled = tiny_pooled(w, cfg, ids, "fp32")
+            logit0 = f32(0.0)
+            logit1 = f32(0.0)
+            for j in range(d):
+                logit0 = f32(logit0 + f32(pooled[j] * head[j, 0]))
+                logit1 = f32(logit1 + f32(pooled[j] * head[j, 1]))
+            margin_sum += float(f32(logit1 - logit0))
+            pooled1_sum += float(pooled[1])
+    mid = margin_sum / (2.0 * float(cases))
+    pooled1 = pooled1_sum / (2.0 * float(cases))
+    delta = f32(mid / (2.0 * pooled1))
+    head[1, 0] = f32(head[1, 0] + delta)
+    head[1, 1] = f32(head[1, 1] - delta)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Loose f64 length-parameterized tiny forward (fidelity sampling only —
+# NOT mirrored in Rust; validates the analytic estimator's trend/scale)
+
+
+def sc_matmul_len_f64(a, b, length):
+    sa, sb = quant_scale_f64(a), quant_scale_f64(b)
+    qa, qb = quantize_f64(a, sa), quantize_f64(b, sb)
+    ma = np.vectorize(lambda q: requantize_mag(abs(int(q)), length))(qa)
+    mb = np.vectorize(lambda q: requantize_mag(abs(int(q)), length))(qb)
+    sign = np.sign(qa)[:, :, None] * np.sign(qb)[None, :, :]
+    p = (ma[:, :, None] * mb[None, :, :]) // length
+    acc = (sign * p * 128.0 / length).sum(axis=1)
+    return acc * (sa * sb * 128.0)
+
+
+def tiny_forward_f64(w, cfg, ids, length=None):
+    """f64 forward; length=None -> exact matmuls, else SC at `length`."""
+
+    def mm(a, b):
+        return a @ b if length is None else sc_matmul_len_f64(a, b, length)
+
+    def ln_rows(x):
+        mu = x.mean(axis=1, keepdims=True)
+        var = ((x - mu) ** 2).mean(axis=1, keepdims=True)
+        return (x - mu) / np.sqrt(var + 1e-5)
+
+    def softmax(x):
+        e = np.exp(x - x.max(axis=1, keepdims=True))
+        return e / e.sum(axis=1, keepdims=True)
+
+    n, d, heads = cfg["seq_len"], cfg["d_model"], cfg["n_heads"]
+    dh = d // heads
+    x = np.zeros((n, d))
+    for t, tok in enumerate(ids):
+        x[t] = w["embed"][tok].astype(np.float64) + w["pos"][t].astype(np.float64)
+    for blk in w["layers"]:
+        xn = ln_rows(x)
+        q = mm(xn, blk["wq"].astype(np.float64))
+        k = mm(xn, blk["wk"].astype(np.float64))
+        val = mm(xn, blk["wv"].astype(np.float64))
+        concat = np.zeros((n, d))
+        for h in range(heads):
+            qs, ks, vs = (
+                q[:, h * dh : (h + 1) * dh],
+                k[:, h * dh : (h + 1) * dh],
+                val[:, h * dh : (h + 1) * dh],
+            )
+            scores = softmax(mm(qs, ks.T.copy()) / math.sqrt(dh))
+            concat[:, h * dh : (h + 1) * dh] = mm(scores, vs)
+        x = x + mm(concat, blk["wo"].astype(np.float64))
+        x1n = ln_rows(x)
+        h1 = np.maximum(mm(x1n, blk["w1"].astype(np.float64)), 0.0)
+        x = x + mm(h1, blk["w2"].astype(np.float64))
+    pooled = ln_rows(x).mean(axis=0)
+    return pooled @ w["head"].astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Fixture emitters
+
+
+def emit(out_dir, name, obj):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as fh:
+        json.dump(obj, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {path}")
+
+
+def gen_sc_matmul_len(out_dir):
+    rng = XorShift64(0x601D_0001)
+    m, k, n = 8, 16, 8
+    a = np.array([rng.normal() for _ in range(m * k)]).reshape(m, k)
+    b = np.array([rng.normal() for _ in range(k * n)]).reshape(k, n)
+    cases = []
+    for length in [16, 32, 64, 128, 256]:
+        acc, out, sa, sb = sc_matmul_len(a, b, length)
+        cases.append(
+            dict(
+                stream_len=length,
+                acc=[float(v) for v in acc.ravel()],
+                out=[float(v) for v in out.ravel()],
+            )
+        )
+    emit(
+        out_dir,
+        "sc_matmul_len.json",
+        dict(
+            m=m,
+            k=k,
+            n=n,
+            a=[float(v) for v in a.ravel()],
+            b=[float(v) for v in b.ravel()],
+            s_a=quant_scale_f64(a),
+            s_b=quant_scale_f64(b),
+            cases=cases,
+        ),
+    )
+
+
+def gen_ref_sc_matmul(out_dir):
+    rng = XorShift64(0x601D_0002)
+    m, k, n = 8, 16, 8
+    a = np.array([f32(rng.normal()) for _ in range(m * k)], np.float32).reshape(m, k)
+    b = np.array([f32(rng.normal()) for _ in range(k * n)], np.float32).reshape(k, n)
+    out = mm_sc32(a, b)
+    emit(
+        out_dir,
+        "ref_sc_matmul.json",
+        dict(
+            artifact="sc_matmul_8x16x8",
+            m=m,
+            k=k,
+            n=n,
+            a=[float(v) for v in a.ravel()],
+            b=[float(v) for v in b.ravel()],
+            out=[float(v) for v in out.ravel()],
+        ),
+    )
+
+
+def gen_nsc_softmax(out_dir):
+    rng = XorShift64(0x601D_0003)
+    rows = []
+    for _ in range(6):
+        y = [rng.normal() * 4.0 for _ in range(16)]
+        ymax = max(y)
+        codes = [exp_lut_code(v - ymax) for v in y]
+        rows.append(dict(input=y, output=nsc_softmax(y), exp_codes=codes))
+    emit(out_dir, "nsc_softmax.json", dict(width=16, rows=rows))
+
+
+def gen_q8_roundtrip(out_dir):
+    rng = XorShift64(0x601D_0004)
+    x = [rng.normal() * 3.0 for _ in range(64)]
+    xs = np.array(x)
+    s = quant_scale_f64(xs)
+    q = quantize_f64(xs, s)
+    emit(
+        out_dir,
+        "q8_roundtrip.json",
+        dict(
+            x=x,
+            scale=s,
+            codes=[int(v) for v in q],
+            dequant=[float(int(v) * s) for v in q],
+        ),
+    )
+
+
+def gen_tiny_logits(out_dir, w):
+    cfg = TINY
+    rng = XorShift64(0x601D_0005)
+    tokens = []
+    logits = []
+    preds = []
+    for _ in range(cfg["batch"]):
+        ids = [int(rng.below(cfg["vocab"])) for _ in range(cfg["seq_len"])]
+        lg = tiny_logits(w, cfg, ids, "q8sc")
+        tokens.extend(float(t) for t in ids)
+        logits.extend(float(v) for v in lg)
+        preds.append(1 if lg[1] > lg[0] else 0)
+    emit(
+        out_dir,
+        "tiny_logits.json",
+        dict(
+            artifact="tiny_q8sc",
+            config=cfg,
+            tokens=tokens,
+            logits=logits,
+            predictions=preds,
+        ),
+    )
+
+
+def gen_fidelity_model(out_dir, w):
+    cfg = TINY
+    # Margin statistics of the reference task (f64 exact forward).
+    rng = XorShift64(0x601D_0006)
+    margins = []
+    for _ in range(48):
+        ids = [int(rng.below(cfg["vocab"])) for _ in range(cfg["seq_len"])]
+        ones = sum(1 for t in ids if t == 1)
+        twos = sum(1 for t in ids if t == 2)
+        label = 1 if ones > twos else 0
+        lg = tiny_forward_f64(w, cfg, ids)
+        margins.append(float(lg[label] - lg[1 - label]))
+    margin_mean = float(np.mean(margins))
+    margin_std = float(np.std(margins))
+
+    # Sampled logit RMS error vs the exact forward at each stream length.
+    lengths = [16, 32, 64, 128, 256]
+    seqs = []
+    rng2 = XorShift64(0x601D_0007)
+    for _ in range(12):
+        seqs.append([int(rng2.below(cfg["vocab"])) for _ in range(cfg["seq_len"])])
+    exact = [tiny_forward_f64(w, cfg, ids) for ids in seqs]
+    sampled = {}
+    for length in lengths:
+        errs = []
+        for ids, ex in zip(seqs, exact):
+            lg = tiny_forward_f64(w, cfg, ids, length=length)
+            errs.extend((lg - ex).tolist())
+        sampled[str(length)] = float(np.sqrt(np.mean(np.square(errs))))
+
+    # Analytic code-unit error for the tiny dims (mirror of
+    # sc::fidelity — shares weighted by per-layer MAC counts).
+    d, fdim, n, layers = cfg["d_model"], cfg["d_ff"], cfg["seq_len"], cfg["n_layers"]
+    proj, attn, ffn = 4.0 * d * d, 2.0 * n * d, 2.0 * d * fdim
+    tot = proj + attn + ffn
+    shares = (proj / tot, attn / tot, ffn / tot)
+    ks = (d, n, fdim)
+
+    def var_prod(length):
+        unit = 128.0 / length
+        v = unit * unit / 3.0
+        if length < 128:
+            v += 2.0 * (127.0 ** 2 / 3.0) / (12.0 * length * length)
+        return v
+
+    def eps_code(length):
+        k_eff = sum(s * k for s, k in zip(shares, ks))
+        return math.sqrt(layers * k_eff * var_prod(length))
+
+    # Fit the single code->logit constant over the sampled lengths.
+    ratios = [sampled[str(length)] / eps_code(length) for length in lengths]
+    code_to_logit = float(np.exp(np.mean(np.log(ratios))))
+
+    emit(
+        out_dir,
+        "fidelity_model.json",
+        dict(
+            margin_mean=margin_mean,
+            margin_std=margin_std,
+            code_to_logit=code_to_logit,
+            sampled_logit_rms=sampled,
+            fit_ratios={str(n_): r for n_, r in zip(lengths, ratios)},
+            dims=dict(d_model=d, d_ff=fdim, seq_len=n, layers=layers),
+        ),
+    )
+    return margin_mean, margin_std, code_to_logit
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="rust/tests/golden", help="fixture directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    gen_sc_matmul_len(args.out)
+    gen_ref_sc_matmul(args.out)
+    gen_nsc_softmax(args.out)
+    gen_q8_roundtrip(args.out)
+
+    w = reference_weights(TINY)
+    gen_tiny_logits(args.out, w)
+    mm, ms, c2l = gen_fidelity_model(args.out, w)
+    print(f"margin mean {mm:.6f} std {ms:.6f} code_to_logit {c2l:.3e}")
+
+
+if __name__ == "__main__":
+    main()

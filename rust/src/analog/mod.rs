@@ -6,5 +6,7 @@ mod momcap;
 mod sweep;
 
 pub use convert::{a_to_b, a_to_u_code, AtoBConfig, AtoBReport, calibrate_a_to_b};
-pub use momcap::{calibrate_accumulator, AccumReport, MomCap, ACC_NOISE_SIGMA_UNITS};
+pub use momcap::{
+    calibrate_accumulator, AccumNoise, AccumReport, MomCap, SeededMomCap, ACC_NOISE_SIGMA_UNITS,
+};
 pub use sweep::{fig7_capacitances, momcap_staircase, StaircasePoint, StaircaseSweep};

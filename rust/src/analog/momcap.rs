@@ -144,6 +144,117 @@ impl MomCap {
 /// in bit-line units (~3% of a full 128-line step).
 pub const ACC_NOISE_SIGMA_UNITS: f64 = 4.0;
 
+/// Seeded analog non-ideality model for the MOMCAP accumulator
+/// (fidelity-engine noise axis; DESIGN.md §Fidelity-engine).
+///
+/// Three mechanisms, all off at zero:
+///
+/// * `sigma_units` — per-step charge-injection / clock-feedthrough
+///   noise, std-dev in bit-line charge units (the Table V axis).
+/// * `mismatch_frac` — capacitor process mismatch: one multiplicative
+///   gain error per capacitor instance, drawn once at construction
+///   (`gain = 1 + mismatch_frac * N(0,1)`), modeling MOMCAP C spread.
+/// * `leak_per_step` — temporal leakage: fractional voltage decay per
+///   accumulation step (charge droop between step and readout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccumNoise {
+    pub sigma_units: f64,
+    pub mismatch_frac: f64,
+    pub leak_per_step: f64,
+}
+
+impl AccumNoise {
+    /// The exact (noise-free) operating point.
+    pub const NONE: AccumNoise =
+        AccumNoise { sigma_units: 0.0, mismatch_frac: 0.0, leak_per_step: 0.0 };
+
+    /// Charge-injection noise only (the Table V operating point when
+    /// `sigma_units = ACC_NOISE_SIGMA_UNITS`).
+    pub fn charge_injection(sigma_units: f64) -> Self {
+        Self { sigma_units, ..Self::NONE }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.sigma_units == 0.0 && self.mismatch_frac == 0.0 && self.leak_per_step == 0.0
+    }
+}
+
+/// A MOMCAP accumulator with a seeded [`AccumNoise`] model attached.
+///
+/// The zero-noise path is **bit-identical** to [`MomCap::accumulate`]:
+/// when every noise parameter is zero the perturbation code is skipped
+/// entirely (no multiply-by-one, no add-of-zero), so `sigma = 0`
+/// reproduces the exact accumulation voltages bit for bit — the
+/// invariant `tests/fidelity_properties.rs` asserts.
+#[derive(Debug, Clone)]
+pub struct SeededMomCap {
+    cap: MomCap,
+    noise: AccumNoise,
+    rng: crate::util::XorShift64,
+    /// Per-instance capacitor gain (1.0 exactly when mismatch is 0).
+    gain: f64,
+}
+
+impl SeededMomCap {
+    pub fn new(capacitance_pf: f64, noise: AccumNoise, seed: u64) -> Self {
+        let mut rng = crate::util::XorShift64::new(seed);
+        let gain = if noise.mismatch_frac == 0.0 {
+            1.0
+        } else {
+            1.0 + noise.mismatch_frac * rng.normal()
+        };
+        Self { cap: MomCap::new(capacitance_pf), noise, rng, gain }
+    }
+
+    /// The drawn capacitor gain (exactly 1.0 without mismatch).
+    pub fn gain(&self) -> f64 {
+        self.gain
+    }
+
+    /// Accumulate one product under the noise model.  Returns the
+    /// realized voltage increment (including perturbations).
+    pub fn accumulate(&mut self, popcount: u32) -> f64 {
+        if self.noise.is_none() {
+            return self.cap.accumulate(popcount);
+        }
+        // Leakage decays the standing charge before the new injection.
+        let before = self.cap.voltage;
+        if self.noise.leak_per_step != 0.0 {
+            self.cap.voltage *= 1.0 - self.noise.leak_per_step;
+        }
+        // Deterministic injection (with its saturation law), then the
+        // injected charge rescaled by the instance gain and the per-step
+        // noise added on top.
+        let dv = self.cap.accumulate(popcount);
+        let mut v = self.cap.voltage - dv + dv * self.gain;
+        if self.noise.sigma_units != 0.0 {
+            v += self.rng.normal() * self.noise.sigma_units * self.cap.unit_v();
+        }
+        self.cap.voltage = v.max(0.0);
+        self.cap.voltage - before
+    }
+
+    pub fn voltage(&self) -> f64 {
+        self.cap.voltage()
+    }
+
+    pub fn ideal_units(&self) -> u64 {
+        self.cap.ideal_units()
+    }
+
+    pub fn readout_units(&self) -> f64 {
+        self.cap.readout_units()
+    }
+
+    pub fn steps(&self) -> u32 {
+        self.cap.steps()
+    }
+
+    pub fn reset(&mut self) {
+        self.cap.reset();
+    }
+}
+
 /// Error report for the analog accumulation block (Table V row 2).
 #[derive(Debug, Clone)]
 pub struct AccumReport {
@@ -270,5 +381,68 @@ mod tests {
     #[should_panic]
     fn popcount_over_128_panics() {
         MomCap::new(8.0).accumulate(129);
+    }
+
+    #[test]
+    fn seeded_zero_noise_is_bit_identical_to_exact_path() {
+        let mut exact = MomCap::new(8.0);
+        let mut seeded = SeededMomCap::new(8.0, AccumNoise::NONE, 0xDEAD);
+        let mut rng = crate::util::XorShift64::new(0x11);
+        for _ in 0..64 {
+            let p = rng.below(129) as u32;
+            let a = exact.accumulate(p);
+            let b = seeded.accumulate(p);
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(exact.voltage().to_bits(), seeded.voltage().to_bits());
+        }
+        assert_eq!(seeded.gain().to_bits(), 1.0f64.to_bits());
+        assert_eq!(exact.ideal_units(), seeded.ideal_units());
+    }
+
+    #[test]
+    fn seeded_noise_is_deterministic_per_seed() {
+        let noise = AccumNoise { sigma_units: 4.0, mismatch_frac: 0.02, leak_per_step: 1e-4 };
+        let run = |seed: u64| -> f64 {
+            let mut c = SeededMomCap::new(8.0, noise, seed);
+            for p in [100u32, 64, 17, 128, 90, 5] {
+                c.accumulate(p);
+            }
+            c.voltage()
+        };
+        assert_eq!(run(7).to_bits(), run(7).to_bits());
+        assert_ne!(run(7).to_bits(), run(8).to_bits());
+    }
+
+    #[test]
+    fn mismatch_scales_and_leak_droops() {
+        // Pure mismatch: the staircase is rescaled by the drawn gain.
+        let noise = AccumNoise { sigma_units: 0.0, mismatch_frac: 0.05, leak_per_step: 0.0 };
+        let mut c = SeededMomCap::new(8.0, noise, 3);
+        let mut exact = MomCap::new(8.0);
+        for _ in 0..10 {
+            c.accumulate(128);
+            exact.accumulate(128);
+        }
+        let ratio = c.voltage() / exact.voltage();
+        assert!((ratio - c.gain()).abs() < 1e-12, "ratio {ratio} vs gain {}", c.gain());
+        assert!(c.gain() != 1.0);
+
+        // Pure leakage: strictly below the exact voltage, but close for
+        // a small per-step rate.
+        let leak = AccumNoise { sigma_units: 0.0, mismatch_frac: 0.0, leak_per_step: 1e-3 };
+        let mut l = SeededMomCap::new(8.0, leak, 3);
+        for _ in 0..10 {
+            l.accumulate(128);
+        }
+        assert!(l.voltage() < exact.voltage());
+        assert!(l.voltage() > 0.98 * exact.voltage());
+    }
+
+    #[test]
+    fn noise_none_detects_zero_params() {
+        assert!(AccumNoise::NONE.is_none());
+        assert!(!AccumNoise::charge_injection(4.0).is_none());
+        let leak_only = AccumNoise { sigma_units: 0.0, mismatch_frac: 0.0, leak_per_step: 0.1 };
+        assert!(!leak_only.is_none());
     }
 }

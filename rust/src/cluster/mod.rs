@@ -76,6 +76,7 @@ pub fn run_cluster(
     let cache = cached.then(CostCache::shared);
     let layers = model.layers as u64;
 
+    let fidelity = crate::fidelity::ServeFidelity::for_model(&cfg.fidelity, model);
     let mut replicas: Vec<ReplicaSim<'_>> = match cluster.placement {
         Placement::DataParallel => (0..cluster.stacks)
             .map(|_| {
@@ -87,6 +88,7 @@ pub fn run_cluster(
                     coster,
                     KvTracker::new(cfg, model),
                     layers,
+                    fidelity.clone(),
                 )
             })
             .collect(),
@@ -105,7 +107,7 @@ pub fn run_cluster(
             // and KV footprint gate admission for the whole group.
             let l_max = groups.iter().map(|g| g.len()).max().unwrap_or(layers).max(1);
             let kv = KvTracker::for_layer_share(cfg, model, l_max);
-            vec![ReplicaSim::new(model, sched.clone(), coster, kv, l_max)]
+            vec![ReplicaSim::new(model, sched.clone(), coster, kv, l_max, fidelity.clone())]
         }
     };
 

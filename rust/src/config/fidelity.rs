@@ -1,0 +1,62 @@
+//! Fidelity-engine configuration: how strongly the SC stream length
+//! scales a serving tick's latency and energy (DESIGN.md
+//! §Fidelity-engine).
+//!
+//! Under execution pipelining a tick is MAC-stream-bound, and the MAC,
+//! placement and conversion phases all scale ~linearly with the stream
+//! bit count, while the NSC/softmax/movement phases do not.  The two
+//! shares below say which fraction of the tick follows the stream
+//! length; the scaled factor for a policy with MAC-weighted mean length
+//! `m` is `(1 - share) + share * m/128`, which is exactly 1.0 at the
+//! 128-bit reference point.
+
+/// Stream-length scaling shares for the serving fidelity model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FidelityParams {
+    /// Fraction of a tick's *latency* that scales with stream length
+    /// (MAC + placement + conversion share of a pipelined tick).
+    pub alpha_time: f64,
+    /// Fraction of a tick's *energy* that scales with stream length
+    /// (activation + MOMCAP + conversion share of tick energy).
+    pub beta_energy: f64,
+}
+
+impl Default for FidelityParams {
+    fn default() -> Self {
+        Self { alpha_time: 0.8, beta_energy: 0.85 }
+    }
+}
+
+impl FidelityParams {
+    /// Latency factor of serving at MAC-weighted mean stream length
+    /// `mean_len` relative to the 128-bit reference (exactly 1.0 there).
+    pub fn time_factor(&self, mean_len: f64) -> f64 {
+        (1.0 - self.alpha_time) + self.alpha_time * mean_len / 128.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_point_is_exactly_one() {
+        let p = FidelityParams::default();
+        // 1-a is exact (Sterbenz), so (1-a)+a*1.0 reconstructs 1.0 with
+        // no rounding — the gold-tier bit-identity anchor.
+        assert_eq!(p.time_factor(128.0).to_bits(), 1.0f64.to_bits());
+        let ef = crate::energy::sc_stream_energy_factor(&p, 128.0);
+        assert_eq!(ef.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn shorter_streams_are_faster_and_cheaper() {
+        let p = FidelityParams::default();
+        assert!(p.time_factor(64.0) < 1.0);
+        assert!(p.time_factor(32.0) < p.time_factor(64.0));
+        assert!(p.time_factor(256.0) > 1.0);
+        assert!(crate::energy::sc_stream_energy_factor(&p, 64.0) < 1.0);
+        // The non-scaling share floors the factor above zero.
+        assert!(p.time_factor(8.0) > 1.0 - p.alpha_time);
+    }
+}

@@ -7,11 +7,13 @@
 
 mod circuits;
 mod cluster;
+mod fidelity;
 mod hbm;
 mod models;
 
 pub use circuits::{CircuitOverheads, MomcapParams, SC_STREAM_LEN};
 pub use cluster::{ClusterConfig, Placement, StackLinkParams};
+pub use fidelity::FidelityParams;
 pub use hbm::{EnergyParams, HbmConfig, TimingParams};
 pub use models::{Arch, ModelZoo, TransformerModel};
 
@@ -47,6 +49,8 @@ pub struct ArtemisConfig {
     pub static_power_w: f64,
     /// Model the positive/negative sign-split dual pass (Section III.C.1).
     pub sign_split_passes: bool,
+    /// Fidelity-engine stream-length scaling shares (§Fidelity-engine).
+    pub fidelity: FidelityParams,
 }
 
 impl Default for ArtemisConfig {
@@ -58,6 +62,7 @@ impl Default for ArtemisConfig {
             power_budget_w: 60.0,
             static_power_w: 12.0,
             sign_split_passes: true,
+            fidelity: FidelityParams::default(),
         }
     }
 }
@@ -104,6 +109,14 @@ impl ArtemisConfig {
         if let Some(v) = j.get("power_budget_w").and_then(|v| v.as_f64()) {
             c.power_budget_w = v;
         }
+        if let Some(f) = j.get("fidelity") {
+            if let Some(v) = f.get("alpha_time").and_then(|v| v.as_f64()) {
+                c.fidelity.alpha_time = v;
+            }
+            if let Some(v) = f.get("beta_energy").and_then(|v| v.as_f64()) {
+                c.fidelity.beta_energy = v;
+            }
+        }
         if let Some(v) = j.get("sign_split_passes").and_then(|v| v.as_bool()) {
             c.sign_split_passes = v;
         }
@@ -135,6 +148,13 @@ impl ArtemisConfig {
             ),
             ("power_budget_w", Json::Num(self.power_budget_w)),
             ("sign_split_passes", Json::Bool(self.sign_split_passes)),
+            (
+                "fidelity",
+                Json::obj(vec![
+                    ("alpha_time", Json::Num(self.fidelity.alpha_time)),
+                    ("beta_energy", Json::Num(self.fidelity.beta_energy)),
+                ]),
+            ),
         ])
         .pretty()
     }

@@ -5,7 +5,19 @@ mod account;
 
 pub use account::{EnergyAccount, EnergyBreakdown};
 
-use crate::config::ArtemisConfig;
+use crate::config::{ArtemisConfig, FidelityParams};
+
+/// Energy scale of running the SC substrate at MAC-weighted mean
+/// stream length `mean_len` relative to the 128-bit reference.
+///
+/// The activation, MOMCAP-charge and conversion energies all scale
+/// with the stream bit count (each bit position is one S/A toggle and
+/// one charge step); the NSC/movement/static energies do not.
+/// `beta_energy` is the scaling share — at `mean_len == 128` the factor
+/// is exactly 1.0 (see `config::FidelityParams`).
+pub fn sc_stream_energy_factor(p: &FidelityParams, mean_len: f64) -> f64 {
+    (1.0 - p.beta_energy) + p.beta_energy * mean_len / 128.0
+}
 
 /// Derived power-budget throttle.
 ///

@@ -1,0 +1,287 @@
+//! The fidelity engine: accuracy as a first-class simulated quantity.
+//!
+//! Composes the SC stream-length error model
+//! ([`crate::sc::product_error_var`] / [`crate::sc::FidelityPolicy`])
+//! and the analog accumulation noise model
+//! ([`crate::analog::AccumNoise`]) into an end-to-end **logit-error →
+//! task-accuracy estimator**, and maps serving QoS tiers onto fidelity
+//! policies so the scheduler can trade accuracy for throughput per
+//! request (DESIGN.md §Fidelity-engine).
+//!
+//! The estimator chain:
+//!
+//! 1. Per-product error variance at stream length `n` plus the per-step
+//!    analog charge noise `sigma_units^2`, in 128-scale code units
+//!    ([`sc::product_error_var`](crate::sc::product_error_var)).
+//! 2. Errors random-walk across a matmul's reduction dim and the
+//!    model's depth: `eps_code^2 = L * sum_class share_c * K_c *
+//!    (var(n_c) + sigma^2)` with MAC-share weights and per-class
+//!    reduction dims (projections `d`, attention `N`, FFN `d_ff`).
+//! 3. A single fitted constant [`CODE_TO_LOGIT`] converts code-unit
+//!    error into logit units (fitted against the NumPy reference's
+//!    sampled logit errors — `rust/tests/golden/fidelity_model.json`).
+//! 4. Task accuracy under a Gaussian margin model: a sample is decided
+//!    by two logits each perturbed by `eps`, so
+//!    `acc = Phi(margin_mean / sqrt(margin_std^2 + 2 eps^2))` with the
+//!    margin statistics measured from the NumPy reference classifier.
+//!
+//! The constants below are *measured by* `python/tools/gen_golden.py`
+//! and pinned by the golden conformance suite: regenerating fixtures
+//! that drift from these values fails CI, keeping estimator and NumPy
+//! reference in lock-step.
+
+use crate::config::{FidelityParams, TransformerModel};
+use crate::energy::sc_stream_energy_factor;
+use crate::sc::{product_error_var, FidelityPolicy, MacShares, OpClass};
+
+/// Mean decision margin of the reference synthetic task (logit units),
+/// measured over seeded sequences by `gen_golden.py`.
+pub const MARGIN_MEAN: f64 = 0.938244634652215;
+/// Std-dev of the decision margin across task samples.
+pub const MARGIN_STD: f64 = 0.6794424502757063;
+/// Fitted code-unit → logit-unit error scale (geometric-mean fit over
+/// the sampled stream lengths, `fidelity_model.json::code_to_logit`).
+pub const CODE_TO_LOGIT: f64 = 0.002093997029668827;
+
+/// Abramowitz & Stegun 7.1.26 error-function approximation
+/// (|error| < 1.5e-7) — `std` has no `erf`, and 7 digits is far below
+/// the estimator's own model error.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let p4 = -1.453152027 + t * 1.061405429;
+    let p3 = 1.421413741 + t * p4;
+    let p2 = -0.284496736 + t * p3;
+    let poly = t * (0.254829592 + t * p2);
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF.
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// End-to-end estimate for one (model, policy, noise) operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct FidelityEstimate {
+    /// Estimated RMS logit error, logit units.
+    pub logit_rms: f64,
+    /// Estimated task accuracy on the reference synthetic task.
+    pub accuracy: f64,
+}
+
+/// Estimated RMS logit error for serving `model` under `policy` with
+/// per-step analog charge noise `sigma_units` (step 2+3 of the chain).
+pub fn logit_rms_error(model: &TransformerModel, policy: &FidelityPolicy, sigma_units: f64) -> f64 {
+    let shares = MacShares::for_model(model);
+    let dims = [
+        (OpClass::Projection, shares.projection, model.d_model as f64),
+        (OpClass::Attention, shares.attention, model.seq_len as f64),
+        (OpClass::Ffn, shares.ffn, model.d_ff as f64),
+    ];
+    let layers = (model.layers as usize).max(1);
+    let mut var_code = 0.0;
+    for layer in 0..layers {
+        for (class, share, k) in dims {
+            let n = policy.stream_len(layer, class);
+            var_code += share * k * (product_error_var(n) + sigma_units * sigma_units);
+        }
+    }
+    CODE_TO_LOGIT * var_code.sqrt()
+}
+
+/// Task accuracy under the Gaussian margin model (step 4 of the chain).
+pub fn task_accuracy(logit_rms: f64) -> f64 {
+    phi(MARGIN_MEAN / (MARGIN_STD * MARGIN_STD + 2.0 * logit_rms * logit_rms).sqrt())
+}
+
+/// Full estimate for one operating point.
+pub fn estimate(
+    model: &TransformerModel,
+    policy: &FidelityPolicy,
+    sigma_units: f64,
+) -> FidelityEstimate {
+    let logit_rms = logit_rms_error(model, policy, sigma_units);
+    FidelityEstimate { logit_rms, accuracy: task_accuracy(logit_rms) }
+}
+
+// ---------------------------------------------------------------------------
+// QoS tiers
+
+/// Per-session serving quality-of-service tier, mapping to a fidelity
+/// policy + analog noise operating point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosTier {
+    /// Full fidelity: the paper's 128-bit streams, noise-free
+    /// functional path — bit-identical to the pre-QoS scheduler.
+    Gold,
+    /// Uniform 64-bit streams, mild charge noise.
+    Silver,
+    /// Aggressive per-op-class policy (16-bit attention streams),
+    /// higher charge noise — the throughput tier.
+    Bronze,
+}
+
+impl QosTier {
+    pub const ALL: [QosTier; 3] = [QosTier::Gold, QosTier::Silver, QosTier::Bronze];
+
+    /// Dense index (array slot) of the tier.
+    pub fn idx(self) -> usize {
+        match self {
+            QosTier::Gold => 0,
+            QosTier::Silver => 1,
+            QosTier::Bronze => 2,
+        }
+    }
+
+    /// The stream-length policy the tier serves at.
+    pub fn policy(self) -> FidelityPolicy {
+        match self {
+            QosTier::Gold => FidelityPolicy::REFERENCE,
+            QosTier::Silver => FidelityPolicy::Uniform(64),
+            QosTier::Bronze => {
+                FidelityPolicy::PerOpClass { projection: 32, attention: 16, ffn: 32 }
+            }
+        }
+    }
+
+    /// Per-step analog charge-noise operating point, bit-line units.
+    pub fn sigma_units(self) -> f64 {
+        match self {
+            QosTier::Gold => 0.0,
+            QosTier::Silver => 1.0,
+            QosTier::Bronze => 2.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QosTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "gold" => Some(QosTier::Gold),
+            "silver" => Some(QosTier::Silver),
+            "bronze" => Some(QosTier::Bronze),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QosTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QosTier::Gold => write!(f, "gold"),
+            QosTier::Silver => write!(f, "silver"),
+            QosTier::Bronze => write!(f, "bronze"),
+        }
+    }
+}
+
+/// Precomputed per-tier serving factors for one (params, model) pair:
+/// what the scheduler consults every tick.  Gold is exactly
+/// `(1.0, 1.0, ..)` so gold-only traces reproduce the pre-QoS
+/// scheduler bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct ServeFidelity {
+    /// Tick latency factor per tier (indexed by [`QosTier::idx`]).
+    pub time_factor: [f64; 3],
+    /// Tick energy factor per tier.
+    pub energy_factor: [f64; 3],
+    /// Estimated task accuracy per tier.
+    pub accuracy: [f64; 3],
+}
+
+impl ServeFidelity {
+    pub fn for_model(params: &FidelityParams, model: &TransformerModel) -> Self {
+        let mut time_factor = [1.0; 3];
+        let mut energy_factor = [1.0; 3];
+        let mut accuracy = [1.0; 3];
+        for tier in QosTier::ALL {
+            let policy = tier.policy();
+            let mean = policy.mac_weighted_mean_len(model);
+            let i = tier.idx();
+            time_factor[i] = params.time_factor(mean);
+            energy_factor[i] = sc_stream_energy_factor(params, mean);
+            accuracy[i] = estimate(model, &policy, tier.sigma_units()).accuracy;
+        }
+        Self { time_factor, energy_factor, accuracy }
+    }
+
+    pub fn time(&self, tier: QosTier) -> f64 {
+        self.time_factor[tier.idx()]
+    }
+
+    pub fn energy(&self, tier: QosTier) -> f64 {
+        self.energy_factor[tier.idx()]
+    }
+
+    pub fn accuracy(&self, tier: QosTier) -> f64 {
+        self.accuracy[tier.idx()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    #[test]
+    fn erf_matches_known_values() {
+        // erf(0)=0, erf(1)=0.8427008, erf(-1)=-erf(1), erf(inf)->1.
+        assert_eq!(erf(0.0), 0.0);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1e-6);
+        assert!((erf(-1.0) + erf(1.0)).abs() < 1e-12);
+        assert!((erf(4.0) - 1.0).abs() < 1e-6);
+        assert!((phi(0.0) - 0.5).abs() < 1e-12);
+        assert!((phi(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn accuracy_is_monotone_in_stream_length() {
+        let m = ModelZoo::opt_350();
+        let mut prev = 0.0;
+        for n in [16u32, 32, 64, 128, 256, 512] {
+            let e = estimate(&m, &FidelityPolicy::Uniform(n), 0.0);
+            assert!(e.accuracy > prev, "n={n}: {} !> {prev}", e.accuracy);
+            assert!((0.0..=1.0).contains(&e.accuracy));
+            prev = e.accuracy;
+        }
+    }
+
+    #[test]
+    fn noise_only_hurts() {
+        let m = ModelZoo::opt_350();
+        let p = FidelityPolicy::REFERENCE;
+        let clean = estimate(&m, &p, 0.0);
+        let noisy = estimate(&m, &p, 4.0);
+        assert!(noisy.logit_rms > clean.logit_rms);
+        assert!(noisy.accuracy < clean.accuracy);
+    }
+
+    #[test]
+    fn tier_order_is_gold_over_silver_over_bronze() {
+        for model in [ModelZoo::opt_350(), ModelZoo::transformer_base()] {
+            let f = ServeFidelity::for_model(&FidelityParams::default(), &model);
+            assert!(f.accuracy(QosTier::Gold) > f.accuracy(QosTier::Silver), "{}", model.name);
+            assert!(f.accuracy(QosTier::Silver) > f.accuracy(QosTier::Bronze), "{}", model.name);
+            // Lower tiers are faster and cheaper.
+            assert!(f.time(QosTier::Bronze) < f.time(QosTier::Silver));
+            assert!(f.time(QosTier::Silver) < f.time(QosTier::Gold));
+            assert!(f.energy(QosTier::Bronze) < f.energy(QosTier::Gold));
+        }
+    }
+
+    #[test]
+    fn gold_factors_are_exactly_one() {
+        let f = ServeFidelity::for_model(&FidelityParams::default(), &ModelZoo::opt_350());
+        assert_eq!(f.time(QosTier::Gold).to_bits(), 1.0f64.to_bits());
+        assert_eq!(f.energy(QosTier::Gold).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn tier_parse_round_trips_and_rejects_unknown() {
+        for t in QosTier::ALL {
+            assert_eq!(QosTier::parse(&t.to_string()), Some(t));
+        }
+        assert_eq!(QosTier::parse("GOLD"), Some(QosTier::Gold));
+        assert_eq!(QosTier::parse("platinum"), None);
+    }
+}

@@ -12,7 +12,10 @@
 //!
 //! * [`config`]    — Table I/II/III parameters, architecture + model zoo.
 //! * [`sc`]        — bit-exact stochastic-computing substrate (TCU streams,
-//!   deterministic multiply, LFSR baseline, calibration analysis).
+//!   deterministic multiply, LFSR baseline, calibration analysis,
+//!   variable-length streams + fidelity policies).
+//! * [`fidelity`]  — the fidelity engine: logit-error → task-accuracy
+//!   estimator and the serving QoS tiers built on it.
 //! * [`analog`]    — MOMCAP charge model, S_to_A / A_to_U / U_to_B
 //!   conversion circuits (Fig. 7, Table V).
 //! * [`dram`]      — bit-level DRAM hierarchy: tiles, subarrays, banks,
@@ -46,6 +49,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod dram;
 pub mod energy;
+pub mod fidelity;
 pub mod nsc;
 pub mod report;
 pub mod runtime;

@@ -12,7 +12,7 @@ use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
 use artemis::serve::{
-    run_continuous, run_static, Policy, RoutePolicy, Scenario, SchedulerConfig,
+    run_continuous, run_static, Policy, QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
 };
 use artemis::sim::SimOptions;
 use artemis::util::XorShift64;
@@ -42,6 +42,10 @@ Extension studies (beyond the paper's evaluation):
   noise     analog charge-noise sensitivity sweep
   ablation  deterministic (TCU) vs conventional LFSR stochastic multiply
   capacity  per-bank storage demand vs capacity, mapping rounds
+  fidelity-sweep
+            stream-length x analog-noise Pareto table: per-product and
+            logit error (analytic SC model), estimated task accuracy,
+            serving time/energy factors; plus the QoS serving comparison
   csv       write every table/figure as CSV into --outdir (default results/)
 
 Other commands:
@@ -52,15 +56,20 @@ Other commands:
            batched serving demo through the functional runtime
   serve-gen [--scenario chat|summarize|burst] [--seed N] [--sessions N]
            [--policy fifo|spf] [--batch B] [--model name]
+           [--qos gold|silver|bronze|mix]
            [--stacks D] [--placement dp|pp] [--route rr|ll|kv]
            [--no-cost-cache]
            continuous-batching generation server on the simulated clock:
-           TTFT + per-token p50/p95/p99 (simulated ns), tokens/s, and the
-           comparison against the static pad-and-drop batcher.  With
-           --stacks D the trace is served by a D-stack cluster (dp =
-           data-parallel replicas with session routing, pp = pipeline-
-           parallel stack groups) through the memoized cost cache;
-           per-stack and aggregate metrics plus the cache hit rate print
+           TTFT + per-token p50/p95/p99 (simulated ns), tokens/s,
+           estimated-accuracy percentiles, and the comparison against
+           the static pad-and-drop batcher.  --qos serves every session
+           at one fidelity tier (or a deterministic per-session mix):
+           lower tiers run shorter SC streams — faster and cheaper per
+           tick, lower estimated accuracy.  With --stacks D the trace is
+           served by a D-stack cluster (dp = data-parallel replicas with
+           session routing, pp = pipeline-parallel stack groups) through
+           the memoized cost cache; per-stack and aggregate metrics plus
+           the cache hit rate print
   cluster-scale
            scaling study: aggregate tokens/s and p99 latency for the
            chat trace on D = 1/2/4/8 stacks, both placements
@@ -166,6 +175,12 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         None => Policy::Fifo,
         Some(p) => Policy::parse(&p).ok_or_else(|| anyhow!("unknown policy '{p}' (fifo|spf)"))?,
     };
+    if let Some(q) = flag_value(args, "--qos") {
+        sc = sc.with_qos(
+            QosAssignment::parse(&q)
+                .ok_or_else(|| anyhow!("unknown QoS tier '{q}' (gold|silver|bronze|mix)"))?,
+        );
+    }
 
     let trace = sc.generate(seed);
     if trace.is_empty() {
@@ -210,7 +225,7 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
 
         println!(
             "## serve-gen cluster — scenario '{}' seed {} ({}, {} sessions, {} stacks {}, \
-             route {}, batch {}, policy {}, cost-cache {})",
+             route {}, batch {}, policy {}, qos {}, cost-cache {})",
             sc.name,
             seed,
             sc.model.name,
@@ -220,6 +235,7 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
             route,
             batch,
             policy,
+            sc.qos,
             if cached { "on" } else { "off" }
         );
         let mut reports = r.per_stack.clone();
@@ -247,13 +263,14 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     let stat = run_static(&cfg, &sc.model, &trace, batch);
 
     println!(
-        "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {})",
+        "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {}, qos {})",
         sc.name,
         seed,
         sc.model.name,
         trace.len(),
         batch,
-        policy
+        policy,
+        sc.qos
     );
     for r in [&cont, &stat] {
         println!("{}:", r.scheme);
@@ -268,6 +285,10 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         println!(
             "  inter-token gap p50 {:>12.0} ns  p95 {:>12.0} ns  p99 {:>12.0} ns",
             r.itl.p50, r.itl.p95, r.itl.p99
+        );
+        println!(
+            "  est accuracy    p50 {:>12.4}     p10 {:>12.4}     min {:>12.4}    mean {:.4}",
+            r.accuracy.p50, r.accuracy.p10, r.accuracy.min, r.accuracy.mean
         );
         println!(
             "  tokens/s {:.0}   makespan {:.3} ms   energy {:.3} mJ   \
@@ -367,6 +388,10 @@ fn main() -> Result<()> {
         "noise" => report::noise_study().print(),
         "ablation" => report::ablation_deterministic_vs_lfsr().print(),
         "capacity" => report::capacity_study().print(),
+        "fidelity-sweep" => {
+            report::fidelity_pareto(&cfg).print();
+            report::qos_serving_study(&cfg).print();
+        }
         "csv" => {
             let outdir = flag_value(&args, "--outdir").unwrap_or_else(|| "results".into());
             std::fs::create_dir_all(&outdir)?;
@@ -385,6 +410,8 @@ fn main() -> Result<()> {
                 ("noise", report::noise_study()),
                 ("ablation", report::ablation_deterministic_vs_lfsr()),
                 ("capacity", report::capacity_study()),
+                ("fidelity", report::fidelity_pareto(&cfg)),
+                ("serving_qos", report::qos_serving_study(&cfg)),
                 ("serving", report::serving_study(&cfg)),
                 ("cluster_scale", report::cluster_scale_study(&cfg)),
             ];
@@ -409,6 +436,8 @@ fn main() -> Result<()> {
             report::noise_study().print();
             report::ablation_deterministic_vs_lfsr().print();
             report::capacity_study().print();
+            report::fidelity_pareto(&cfg).print();
+            report::qos_serving_study(&cfg).print();
             report::serving_study(&cfg).print();
             report::cluster_scale_study(&cfg).print();
             if let Err(e) = run_tab4() {

@@ -1,0 +1,175 @@
+//! Fidelity studies: the stream-length × noise × accuracy × energy
+//! Pareto table (`fidelity-sweep`) and the QoS-tiered serving
+//! comparison (DESIGN.md §Fidelity-engine, EXPERIMENTS.md §Fidelity).
+
+use super::table::TableBuilder;
+use crate::config::{ArtemisConfig, ModelZoo};
+use crate::energy::sc_stream_energy_factor;
+use crate::fidelity::{estimate, QosTier};
+use crate::sc::{product_rms_error, FidelityPolicy};
+use crate::serve::{run_continuous, Policy, QosAssignment, Scenario, SchedulerConfig};
+
+/// The fidelity Pareto front: stream length × analog charge noise →
+/// per-product error, estimated logit error / task accuracy, and the
+/// serving latency/energy factors.  At `sigma = 0` the logit error
+/// strictly decreases as the stream length doubles — the SC trend the
+/// acceptance gate checks.
+pub fn fidelity_pareto(cfg: &ArtemisConfig) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Fidelity Pareto — stream length x analog noise: accuracy vs serving cost \
+         (OPT-350; logit RMS from the analytic SC error model, accuracy on the \
+         reference synthetic task; factors relative to 128-bit noise-free serving)",
+        &[
+            "stream len",
+            "sigma(units)",
+            "prod RMS(code)",
+            "logit RMS(est)",
+            "est accuracy",
+            "time factor",
+            "energy factor",
+        ],
+    );
+    let model = ModelZoo::opt_350();
+    for len in [16u32, 32, 64, 128, 256] {
+        let policy = FidelityPolicy::Uniform(len);
+        let mean = policy.mac_weighted_mean_len(&model);
+        for sigma in [0.0f64, 1.0, 4.0] {
+            let e = estimate(&model, &policy, sigma);
+            t.row(vec![
+                len.to_string(),
+                format!("{sigma:.0}"),
+                format!("{:.3}", product_rms_error(len)),
+                format!("{:.4}", e.logit_rms),
+                format!("{:.4}", e.accuracy),
+                format!("{:.3}", cfg.fidelity.time_factor(mean)),
+                format!("{:.3}", sc_stream_energy_factor(&cfg.fidelity, mean)),
+            ]);
+        }
+    }
+    t
+}
+
+/// QoS-tiered serving comparison: the chat trace served uniformly at
+/// each tier and with the mixed per-session assignment, continuous
+/// batching, same slot count — what `serve-gen --qos` trades.
+pub fn qos_serving_study(cfg: &ArtemisConfig) -> TableBuilder {
+    let base = Scenario::chat().with_sessions(12);
+    let sched = SchedulerConfig::for_scenario(&base, Policy::Fifo);
+    let assignments = [
+        QosAssignment::Uniform(QosTier::Gold),
+        QosAssignment::Uniform(QosTier::Silver),
+        QosAssignment::Uniform(QosTier::Bronze),
+        QosAssignment::Mixed,
+    ];
+    let reports: Vec<_> = assignments
+        .iter()
+        .map(|&qos| {
+            let sc = base.clone().with_qos(qos);
+            let trace = sc.generate(1);
+            run_continuous(cfg, &sc.model, &trace, &sched)
+        })
+        .collect();
+    let mut t = TableBuilder::new(
+        "QoS-tiered serving — chat trace (seed 1, 12 sessions) at each tier and \
+         mixed per-session assignment (per-token = request latency / generated \
+         tokens; acc = estimated task accuracy)",
+        &[
+            "qos",
+            "ttft p50(us)",
+            "ttft p99(us)",
+            "tok mean(us)",
+            "tok p50(us)",
+            "tok p99(us)",
+            "itl p50(us)",
+            "tok/s",
+            "mJ/tok",
+            "peak KV/bank(MB)",
+            "rejected",
+            "acc mean",
+            "acc p10",
+        ],
+    );
+    for (a, r) in assignments.iter().zip(&reports) {
+        let us = |ns: f64| format!("{:.1}", ns * 1e-3);
+        t.row(vec![
+            a.to_string(),
+            us(r.ttft.p50),
+            us(r.ttft.p99),
+            us(r.per_token.mean),
+            us(r.per_token.p50),
+            us(r.per_token.p99),
+            us(r.itl.p50),
+            format!("{:.0}", r.tokens_per_s()),
+            format!("{:.2}", r.pj_per_token() * 1e-9),
+            format!("{:.2}", r.peak_kv_per_bank as f64 * 1e-6),
+            r.rejected.to_string(),
+            format!("{:.4}", r.accuracy.mean),
+            format!("{:.4}", r.accuracy.p10),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_logit_error_strictly_decreases_with_doubling_at_sigma_zero() {
+        // The acceptance-gate trend: sigma=0 rows, 16 -> 256.
+        let t = fidelity_pareto(&ArtemisConfig::default());
+        let csv = t.to_csv();
+        let sigma0: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .filter(|l| l.split(',').nth(1) == Some("0"))
+            .map(|l| l.split(',').nth(3).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(sigma0.len(), 5, "expected 5 sigma=0 rows:\n{csv}");
+        for w in sigma0.windows(2) {
+            assert!(w[1] < w[0], "logit error not strictly decreasing: {sigma0:?}");
+        }
+        // Accuracy and factors are well-formed everywhere.
+        for line in csv.lines().skip(1) {
+            let acc: f64 = line.split(',').nth(4).unwrap().parse().unwrap();
+            let tf: f64 = line.split(',').nth(5).unwrap().parse().unwrap();
+            assert!((0.0..=1.0).contains(&acc), "{line}");
+            assert!(tf > 0.0, "{line}");
+        }
+    }
+
+    #[test]
+    fn pareto_noise_axis_only_hurts_accuracy() {
+        let t = fidelity_pareto(&ArtemisConfig::default());
+        let csv = t.to_csv();
+        // Within each stream length, accuracy is non-increasing in sigma.
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        for chunk in rows.chunks(3) {
+            let accs: Vec<f64> = chunk.iter().map(|r| r[4].parse().unwrap()).collect();
+            assert!(accs[0] > accs[1] && accs[1] > accs[2], "{accs:?}");
+        }
+    }
+
+    #[test]
+    fn qos_study_orders_tiers_on_accuracy_and_latency() {
+        let t = qos_serving_study(&ArtemisConfig::default());
+        let csv = t.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 4);
+        let col = |row: &str, i: usize| -> f64 { row.split(',').nth(i).unwrap().parse().unwrap() };
+        // gold, silver, bronze, mix — accuracy strictly ordered.
+        let (gold, silver, bronze, mix) = (rows[0], rows[1], rows[2], rows[3]);
+        assert!(gold.starts_with("gold") && bronze.starts_with("bronze"));
+        assert!(col(gold, 11) > col(silver, 11));
+        assert!(col(silver, 11) > col(bronze, 11));
+        // Bronze trades that accuracy for lower mean per-token latency.
+        assert!(col(bronze, 3) < col(gold, 3), "\n{csv}");
+        // The mixed assignment sits between the uniform extremes.
+        assert!(col(mix, 11) < col(gold, 11) && col(mix, 11) > col(bronze, 11));
+        assert!(!t.render().contains("NaN"));
+    }
+}

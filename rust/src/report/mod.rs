@@ -6,11 +6,13 @@
 mod cluster;
 mod experiments;
 mod extensions;
+mod fidelity;
 mod serving;
 mod table;
 
 pub use cluster::cluster_scale_study;
 pub use experiments::*;
 pub use extensions::*;
+pub use fidelity::{fidelity_pareto, qos_serving_study};
 pub use serving::{serving_comparison, serving_study};
 pub use table::TableBuilder;

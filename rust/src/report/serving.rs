@@ -29,6 +29,8 @@ pub fn serving_comparison(reports: &[ServeGenReport]) -> TableBuilder {
             "mJ/tok",
             "peak KV/bank(MB)",
             "rejected",
+            "acc mean",
+            "acc p10",
         ],
     );
     for r in reports {
@@ -44,6 +46,8 @@ pub fn serving_comparison(reports: &[ServeGenReport]) -> TableBuilder {
             format!("{:.2}", r.pj_per_token() * 1e-9),
             format!("{:.2}", r.peak_kv_per_bank as f64 * 1e-6),
             r.rejected.to_string(),
+            format!("{:.4}", r.accuracy.mean),
+            format!("{:.4}", r.accuracy.p10),
         ]);
     }
     t

@@ -71,6 +71,45 @@ mod tests {
     }
 
     #[test]
+    fn shipped_taps_walk_the_full_maximal_period() {
+        // Regression for the shipped tap set: a maximal
+        // 16-bit LFSR visits every nonzero state exactly once in a
+        // 2^16-1 cycle.  The analytic fidelity error model assumes the
+        // per-bit samples of a stream are (pseudo)independent, which
+        // this maximality guarantees within any window << the period.
+        let mut l = Lfsr16::new(0xACE1);
+        let start = l.next();
+        let mut seen = vec![false; 1 << 16];
+        let mut state = start;
+        let mut count = 0u32;
+        loop {
+            assert_ne!(state, 0, "LFSR fell into the all-zero fixed point");
+            assert!(!seen[state as usize], "state {state:#06x} repeated after {count} steps");
+            seen[state as usize] = true;
+            count += 1;
+            state = l.next();
+            if state == start {
+                break;
+            }
+        }
+        assert_eq!(count, (1u32 << 16) - 1, "period must be 2^16-1 for maximal taps");
+    }
+
+    #[test]
+    fn stream_draws_distinct_states_within_one_stream() {
+        // The 128 samples of one stream come from 128 distinct LFSR
+        // states (period >> stream length): no within-stream repetition,
+        // for several seeds including the degenerate 0 -> 0xACE1 remap.
+        for seed in [0u16, 1, 77, 0xACE1, u16::MAX] {
+            let mut l = Lfsr16::new(seed);
+            let mut states = std::collections::HashSet::new();
+            for i in 0..STREAM_LEN {
+                assert!(states.insert(l.next()), "seed {seed}: repeat at sample {i}");
+            }
+        }
+    }
+
+    #[test]
     fn extremes_are_exact() {
         assert_eq!(lfsr_stream(0, 3).popcount(), 0);
         assert_eq!(lfsr_stream(128, 3).popcount(), 128);

@@ -11,9 +11,11 @@
 mod calibration;
 mod convert;
 mod encoder;
+mod fidelity;
 mod lfsr;
 mod multiply;
 mod stream;
+mod varlen;
 
 pub use calibration::{
     calibrate_multiplier, calibrate_random_multiplier, multiplier_error_stats,
@@ -21,6 +23,14 @@ pub use calibration::{
 };
 pub use convert::{s_to_b_popcount, u_to_b_priority, ConversionError};
 pub use encoder::{correlation_encode, tcu_encode};
+pub use fidelity::{
+    dot_rms_error, product_error_var, product_rms_error, FidelityPolicy, MacShares, OpClass,
+};
 pub use lfsr::{lfsr_stream, Lfsr16};
 pub use multiply::{sc_multiply, sc_multiply_random, sc_multiply_signed, SignedCode};
 pub use stream::{BitStream, STREAM_LEN};
+pub use varlen::{
+    correlation_encode_len, lfsr_stream_len, quant_scale_f64, quantize_f64, requantize_mag,
+    sc_matmul_len, sc_multiply_len, sc_product_len, tcu_encode_len, VarStream, MAX_STREAM_LEN,
+    MIN_STREAM_LEN,
+};

@@ -1,0 +1,377 @@
+//! Variable-length stochastic streams — the stream-length fidelity dial.
+//!
+//! ARTEMIS fixes the stream length at 128 bits (`stream.rs`), but the
+//! accuracy/efficiency trade the paper leans on is really a *family* of
+//! design points: shorter streams multiply faster and cheaper at the
+//! price of coarser products, longer streams do the opposite.  This
+//! module generalizes the bit-exact substrate to arbitrary lengths in
+//! `[MIN_STREAM_LEN, MAX_STREAM_LEN]` so the fidelity engine
+//! ([`crate::fidelity`]) can model that dial, cross-checked against the
+//! same construction the fixed-length machinery uses:
+//!
+//! * [`VarStream`] — a length-`n` bit stream over `Vec<u64>` words.
+//! * [`tcu_encode_len`] / [`correlation_encode_len`] — the B_to_TCU and
+//!   bit-position-correlation encoders at length `n` (same Bresenham
+//!   pattern as `encoder.rs`, so the telescoping prefix identity and
+//!   with it the deterministic multiply carry over verbatim).
+//! * [`sc_multiply_len`] — bit-level deterministic multiply; equals
+//!   `floor(a*b/n)` for magnitudes `a, b <= n` (asserted exhaustively).
+//! * [`lfsr_stream_len`] — the conventional LFSR baseline at length
+//!   `n`, for the error-model cross-checks.
+//! * [`sc_product_len`] — the *functional* signed product of 8-bit
+//!   codes executed on length-`n` streams, in 128-scale code units (the
+//!   units `runtime`'s `sc_codes` accumulates), pure integer + dyadic
+//!   arithmetic so Rust and the NumPy golden generator agree bit-wise.
+
+use super::lfsr::Lfsr16;
+use super::stream::STREAM_LEN;
+
+/// Shortest stream length the fidelity dial exposes.
+pub const MIN_STREAM_LEN: u32 = 8;
+/// Longest stream length the fidelity dial exposes.
+pub const MAX_STREAM_LEN: u32 = 1024;
+
+/// A bit stream of arbitrary length `len` (bit `i` is bit `i % 64` of
+/// word `i / 64`, exactly like [`super::BitStream`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VarStream {
+    len: u32,
+    words: Vec<u64>,
+}
+
+impl VarStream {
+    pub fn zero(len: u32) -> Self {
+        assert!(
+            (MIN_STREAM_LEN..=MAX_STREAM_LEN).contains(&len),
+            "stream length {len} outside [{MIN_STREAM_LEN}, {MAX_STREAM_LEN}]"
+        );
+        Self { len, words: vec![0; len.div_ceil(64) as usize] }
+    }
+
+    pub fn len(&self) -> u32 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: u32) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[(i / 64) as usize] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: u32, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[(i / 64) as usize];
+        if v {
+            *w |= 1u64 << (i % 64);
+        } else {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Number of ones — the value the stream carries.
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Bitwise AND (the ROC diode-row operation), length-checked.
+    pub fn and(&self, other: &Self) -> Self {
+        assert_eq!(self.len, other.len, "stream length mismatch");
+        Self {
+            len: self.len,
+            words: self.words.iter().zip(&other.words).map(|(a, b)| a & b).collect(),
+        }
+    }
+}
+
+/// B_to_TCU at length `n`: magnitude `m` (`0..=n`) -> `m` leading ones.
+pub fn tcu_encode_len(m: u32, len: u32) -> VarStream {
+    let mut s = VarStream::zero(len);
+    assert!(m <= len, "magnitude {m} exceeds stream length {len}");
+    for i in 0..m {
+        s.set(i, true);
+    }
+    s
+}
+
+/// Bit-position correlation encoder at length `n`: bit `i` is set iff
+/// `floor((i+1)*m/n) - floor(i*m/n) == 1` — the same Bresenham pattern
+/// as the 128-bit ROM, so any prefix of length `b` holds exactly
+/// `floor(m*b/n)` ones.
+pub fn correlation_encode_len(m: u32, len: u32) -> VarStream {
+    let mut s = VarStream::zero(len);
+    assert!(m <= len, "magnitude {m} exceeds stream length {len}");
+    let (m, l) = (m as u64, len as u64);
+    let mut prev = 0u64;
+    for i in 0..l {
+        let cur = (i + 1) * m / l;
+        if cur != prev {
+            s.set(i as u32, true);
+        }
+        prev = cur;
+    }
+    s
+}
+
+/// Deterministic stochastic multiply at stream length `n`: AND the
+/// correlation-encoded first operand with the TCU second operand and
+/// popcount.  Returns exactly `floor(a*b/n)` (prefix identity).
+pub fn sc_multiply_len(a: u32, b: u32, len: u32) -> u32 {
+    correlation_encode_len(a, len).and(&tcu_encode_len(b, len)).popcount()
+}
+
+/// Conventional LFSR-random stream at length `n` for magnitude `m`
+/// (`0..=n`): bit `i` is 1 iff the next LFSR sample (mod `n`) is below
+/// `m`.  The baseline the deterministic encoders beat, generalized for
+/// the error-model cross-checks.
+pub fn lfsr_stream_len(m: u32, len: u32, seed: u16) -> VarStream {
+    let mut s = VarStream::zero(len);
+    assert!(m <= len, "magnitude {m} exceeds stream length {len}");
+    let mut lfsr = Lfsr16::new(seed);
+    for i in 0..len {
+        let sample = (lfsr.next() as u32) % len;
+        if sample < m {
+            s.set(i, true);
+        }
+    }
+    s
+}
+
+/// Re-quantize an 8-bit magnitude (`0..=127`) onto the `0..=n` grid of a
+/// length-`n` stream: round-half-to-even of `m*n/128`, in exact integer
+/// arithmetic (mirrored verbatim by `python/tools/gen_golden.py`).
+pub fn requantize_mag(m: u32, len: u32) -> u32 {
+    debug_assert!(m <= 127, "magnitude {m} out of 8-bit range");
+    let num = (m as u64) * (len as u64);
+    let (q, r) = (num / 128, num % 128);
+    let up = match r.cmp(&64) {
+        std::cmp::Ordering::Greater => 1,
+        std::cmp::Ordering::Equal => q % 2, // ties to even
+        std::cmp::Ordering::Less => 0,
+    };
+    (q + up) as u32
+}
+
+/// Signed deterministic SC product of two 8-bit codes executed on
+/// length-`n` streams, expressed in **128-scale code units** (the units
+/// `sum_k trunc(qa*qb/128)` accumulates): re-quantize both magnitudes
+/// to the `n` grid, multiply on the streams (`floor(ma*mb/n)`), sign by
+/// the operand signs, and rescale the popcount by `128/n`.
+///
+/// At `n == 128` this is exactly `trunc(qa*qb/128)`.  Arithmetic is
+/// integer + one exactly-rounded f64 division, so the NumPy reference
+/// reproduces it bit-for-bit (golden fixtures assert this).
+pub fn sc_product_len(qa: i32, qb: i32, len: u32) -> f64 {
+    assert!(qa.unsigned_abs() <= 127 && qb.unsigned_abs() <= 127, "codes out of range");
+    let ma = requantize_mag(qa.unsigned_abs(), len) as u64;
+    let mb = requantize_mag(qb.unsigned_abs(), len) as u64;
+    let p = ma * mb / len as u64;
+    let mag = (p * STREAM_LEN as u64) as f64 / len as f64;
+    if (qa < 0) != (qb < 0) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Symmetric per-tensor 8-bit quantization scale in f64 (the golden
+/// fixtures' quantizer; the f32 twin lives in `runtime::reference`).
+pub fn quant_scale_f64(x: &[f64]) -> f64 {
+    x.iter().fold(0f64, |a, v| a.max(v.abs())).max(1e-12) / 127.0
+}
+
+/// Quantize to signed 8-bit codes (round-half-to-even, clamped).
+pub fn quantize_f64(x: &[f64], scale: f64) -> Vec<i32> {
+    x.iter().map(|v| (v / scale).round_ties_even().clamp(-127.0, 127.0) as i32).collect()
+}
+
+/// Full length-`n` SC matmul over f64 inputs (row-major `m x k` times
+/// `k x n_cols`): quantize, accumulate [`sc_product_len`] code units,
+/// and return `(accumulators, dequantized, s_a, s_b)`.  The golden
+/// conformance suite replays this bit-exactly against the NumPy
+/// generator.
+pub fn sc_matmul_len(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n_cols: usize,
+    len: u32,
+) -> (Vec<f64>, Vec<f64>, f64, f64) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n_cols);
+    let (sa, sb) = (quant_scale_f64(a), quant_scale_f64(b));
+    let (qa, qb) = (quantize_f64(a, sa), quantize_f64(b, sb));
+    let mut acc = vec![0f64; m * n_cols];
+    for i in 0..m {
+        for j in 0..n_cols {
+            let mut s = 0f64;
+            for kk in 0..k {
+                s += sc_product_len(qa[i * k + kk], qb[kk * n_cols + j], len);
+            }
+            acc[i * n_cols + j] = s;
+        }
+    }
+    let scale = sa * sb * STREAM_LEN as f64;
+    let out: Vec<f64> = acc.iter().map(|&c| c * scale).collect();
+    (acc, out, sa, sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::{sc_multiply, sc_multiply_signed, SignedCode};
+
+    #[test]
+    fn varlen_multiply_is_exact_floor_across_lengths() {
+        // The prefix identity holds at every length, not just 128.
+        for len in [16u32, 64, 96, 128, 256] {
+            for a in (0..=len).step_by(3) {
+                for b in (0..=len).step_by(5) {
+                    let got = sc_multiply_len(a, b, len);
+                    let want = (a as u64 * b as u64 / len as u64) as u32;
+                    assert_eq!(got, want, "len={len} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn length_128_matches_fixed_machinery() {
+        // The generic construction reproduces the shipped 128-bit path.
+        for a in (0..=128u32).step_by(7) {
+            for b in (0..=128u32).step_by(11) {
+                assert_eq!(sc_multiply_len(a, b, 128), sc_multiply(a, b), "a={a} b={b}");
+            }
+        }
+        // And the encoders produce the same bit patterns.
+        for m in 0..=128u32 {
+            let gen = correlation_encode_len(m, 128);
+            let fixed = crate::sc::correlation_encode(m);
+            for i in 0..128 {
+                assert_eq!(gen.get(i), fixed.get(i), "m={m} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn correlation_prefix_property_generalizes() {
+        for len in [16u32, 48, 128, 512] {
+            for m in (0..=len).step_by(7) {
+                let s = correlation_encode_len(m, len);
+                assert_eq!(s.popcount(), m, "len={len} m={m}");
+                let mut count = 0u64;
+                for b in 1..=len {
+                    if s.get(b - 1) {
+                        count += 1;
+                    }
+                    assert_eq!(count, m as u64 * b as u64 / len as u64, "len={len} m={m} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_is_identity_at_128_and_scales() {
+        for m in 0..=127u32 {
+            assert_eq!(requantize_mag(m, 128), m);
+            assert_eq!(requantize_mag(m, 256), 2 * m);
+            assert!(requantize_mag(m, 64) <= 64);
+            assert!(requantize_mag(m, 16) <= 16);
+        }
+        // Ties go to even: 1*64/128 = 0.5 -> 0, 3*64/128 = 1.5 -> 2.
+        assert_eq!(requantize_mag(1, 64), 0);
+        assert_eq!(requantize_mag(3, 64), 2);
+    }
+
+    #[test]
+    fn product_len_128_equals_signed_trunc() {
+        for qa in (-127i32..=127).step_by(3) {
+            for qb in [-127i32, -90, -13, -1, 0, 1, 17, 64, 127] {
+                let got = sc_product_len(qa, qb, 128);
+                let want =
+                    sc_multiply_signed(SignedCode::from_i32(qa), SignedCode::from_i32(qb)) as f64;
+                assert_eq!(got, want, "qa={qa} qb={qb}");
+            }
+        }
+    }
+
+    #[test]
+    fn product_len_error_shrinks_with_length() {
+        // Mean |error| vs the exact real product must improve as the
+        // stream doubles — the fidelity dial's defining trend.
+        let mut rng = crate::util::XorShift64::new(0xFEED);
+        let pairs: Vec<(i32, i32)> = (0..400).map(|_| (rng.code(), rng.code())).collect();
+        let mae = |len: u32| -> f64 {
+            pairs
+                .iter()
+                .map(|&(a, b)| {
+                    let exact = a as f64 * b as f64 / 128.0;
+                    (sc_product_len(a, b, len) - exact).abs()
+                })
+                .sum::<f64>()
+                / pairs.len() as f64
+        };
+        let errs: Vec<f64> = [16u32, 32, 64, 128, 256].iter().map(|&n| mae(n)).collect();
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0], "error not shrinking: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn lfsr_stream_len_tracks_magnitude() {
+        for len in [32u32, 128, 256] {
+            let m = len / 4;
+            assert_eq!(lfsr_stream_len(0, len, 9).popcount(), 0);
+            assert_eq!(lfsr_stream_len(len, len, 9).popcount(), len);
+            let mean: f64 = (1..60u16)
+                .map(|s| lfsr_stream_len(m, len, s).popcount() as f64)
+                .sum::<f64>()
+                / 59.0;
+            assert!((mean - m as f64).abs() < 0.15 * len as f64, "len={len} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn quantizer_roundtrip_is_bounded() {
+        let mut rng = crate::util::XorShift64::new(0x51);
+        let x: Vec<f64> = (0..512).map(|_| rng.normal() * 3.0).collect();
+        let s = quant_scale_f64(&x);
+        let q = quantize_f64(&x, s);
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+        for (&xi, &qi) in x.iter().zip(&q) {
+            assert!((qi as f64 * s - xi).abs() <= s / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_len_dequant_tracks_float() {
+        let mut rng = crate::util::XorShift64::new(0x77);
+        let (m, k, n) = (6usize, 24usize, 5usize);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let (_, out, _, _) = sc_matmul_len(&a, &b, m, k, n, 128);
+        for i in 0..m {
+            for j in 0..n {
+                let exact: f64 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert!((out[i * n + j] - exact).abs() < 0.5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn magnitude_over_length_panics() {
+        tcu_encode_len(65, 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_out_of_range_panics() {
+        VarStream::zero(4);
+    }
+}

@@ -8,7 +8,43 @@
 
 use super::session::SessionSpec;
 use crate::config::{ModelZoo, TransformerModel};
+use crate::fidelity::QosTier;
 use crate::util::XorShift64;
+
+/// How sessions of a trace are assigned serving QoS tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosAssignment {
+    /// Every session at the same tier.
+    Uniform(QosTier),
+    /// Deterministic gold/silver/bronze rotation by session id.
+    Mixed,
+}
+
+impl QosAssignment {
+    pub fn tier_for(self, id: u64) -> QosTier {
+        match self {
+            QosAssignment::Uniform(t) => t,
+            QosAssignment::Mixed => QosTier::ALL[(id % 3) as usize],
+        }
+    }
+
+    /// Parse `gold|silver|bronze|mix`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mix" | "mixed" => Some(QosAssignment::Mixed),
+            t => QosTier::parse(t).map(QosAssignment::Uniform),
+        }
+    }
+}
+
+impl std::fmt::Display for QosAssignment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QosAssignment::Uniform(t) => write!(f, "{t}"),
+            QosAssignment::Mixed => write!(f, "mix"),
+        }
+    }
+}
 
 /// Token-length distribution for prompts / generation lengths.
 #[derive(Debug, Clone, Copy)]
@@ -61,6 +97,9 @@ pub struct Scenario {
     /// Default continuous-batch slot count (= the static baseline's
     /// fixed batch size, so comparisons are apples-to-apples).
     pub max_batch: usize,
+    /// QoS tier assignment for generated sessions (default: all gold —
+    /// the full-fidelity path every pre-QoS number was measured at).
+    pub qos: QosAssignment,
 }
 
 impl Scenario {
@@ -75,6 +114,7 @@ impl Scenario {
             prompt: LengthDist::Uniform { lo: 16, hi: 256 },
             gen: LengthDist::Uniform { lo: 16, hi: 96 },
             max_batch: 8,
+            qos: QosAssignment::Uniform(QosTier::Gold),
         }
     }
 
@@ -89,6 +129,7 @@ impl Scenario {
             prompt: LengthDist::Uniform { lo: 512, hi: 1536 },
             gen: LengthDist::Uniform { lo: 8, hi: 32 },
             max_batch: 4,
+            qos: QosAssignment::Uniform(QosTier::Gold),
         }
     }
 
@@ -103,6 +144,7 @@ impl Scenario {
             prompt: LengthDist::Uniform { lo: 32, hi: 128 },
             gen: LengthDist::Uniform { lo: 8, hi: 64 },
             max_batch: 8,
+            qos: QosAssignment::Uniform(QosTier::Gold),
         }
     }
 
@@ -122,6 +164,12 @@ impl Scenario {
     /// Same scenario with a different session count.
     pub fn with_sessions(mut self, n: usize) -> Self {
         self.sessions = n;
+        self
+    }
+
+    /// Same scenario with a different QoS tier assignment.
+    pub fn with_qos(mut self, qos: QosAssignment) -> Self {
+        self.qos = qos;
         self
     }
 
@@ -147,6 +195,7 @@ impl Scenario {
                 arrival_ns: t,
                 prompt: self.prompt.sample(&mut rng),
                 gen: self.gen.sample(&mut rng),
+                tier: self.qos.tier_for(id),
             });
         }
         trace
@@ -206,6 +255,36 @@ mod tests {
     fn with_sessions_overrides_count() {
         let sc = Scenario::chat().with_sessions(5);
         assert_eq!(sc.generate(1).len(), 5);
+    }
+
+    #[test]
+    fn qos_assignment_is_deterministic_and_does_not_move_the_trace() {
+        use crate::fidelity::QosTier;
+        // Defaults are all-gold; mixed rotates by id; neither perturbs
+        // the RNG stream (arrivals/lengths identical across qos).
+        let sc = Scenario::chat().with_sessions(9);
+        let gold = sc.generate(4);
+        assert!(gold.iter().all(|s| s.tier == QosTier::Gold));
+        let mixed = sc.clone().with_qos(QosAssignment::Mixed).generate(4);
+        for (g, m) in gold.iter().zip(&mixed) {
+            assert_eq!(g.arrival_ns, m.arrival_ns);
+            assert_eq!(g.prompt, m.prompt);
+            assert_eq!(g.gen, m.gen);
+            assert_eq!(m.tier, QosTier::ALL[(m.id % 3) as usize]);
+        }
+        let bronze = sc.with_qos(QosAssignment::Uniform(QosTier::Bronze)).generate(4);
+        assert!(bronze.iter().all(|s| s.tier == QosTier::Bronze));
+    }
+
+    #[test]
+    fn qos_parse_accepts_tiers_and_mix() {
+        use crate::fidelity::QosTier;
+        assert_eq!(QosAssignment::parse("gold"), Some(QosAssignment::Uniform(QosTier::Gold)));
+        assert_eq!(QosAssignment::parse("Bronze"), Some(QosAssignment::Uniform(QosTier::Bronze)));
+        assert_eq!(QosAssignment::parse("mix"), Some(QosAssignment::Mixed));
+        assert_eq!(QosAssignment::parse("platinum"), None);
+        assert_eq!(QosAssignment::Mixed.to_string(), "mix");
+        assert_eq!(QosAssignment::Uniform(QosTier::Silver).to_string(), "silver");
     }
 
     #[test]

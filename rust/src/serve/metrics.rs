@@ -133,6 +133,42 @@ pub struct LatencySummary {
     pub count: u64,
 }
 
+/// Per-session estimated-accuracy percentiles for one serving run.
+///
+/// Accuracy is a *quality floor* metric, so the interesting tails are
+/// the low ones: p10/min say what the worst-served sessions got (the
+/// QoS analogue of p99 latency).  Computed exactly (nearest-rank over
+/// the per-session samples) — session counts are small, no histogram
+/// needed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccuracySummary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p10: f64,
+    pub min: f64,
+    pub count: u64,
+}
+
+/// Exact nearest-rank summary of per-session accuracy samples.
+pub fn accuracy_summary(samples: &[f64]) -> AccuracySummary {
+    if samples.is_empty() {
+        return AccuracySummary::default();
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let rank = |q: f64| -> f64 {
+        let idx = (q * (s.len() as f64 - 1.0)).round() as usize;
+        s[idx.min(s.len() - 1)]
+    };
+    AccuracySummary {
+        mean: s.iter().sum::<f64>() / s.len() as f64,
+        p50: rank(0.50),
+        p10: rank(0.10),
+        min: s[0],
+        count: s.len() as u64,
+    }
+}
+
 /// One occupancy observation at the end of a scheduler tick.
 #[derive(Debug, Clone, Copy)]
 pub struct OccupancySample {
@@ -283,6 +319,23 @@ mod tests {
         // Merging an empty histogram is a no-op.
         a.merge(&StreamingHistogram::new());
         assert_eq!(a.summary().count, 1000);
+    }
+
+    #[test]
+    fn accuracy_summary_is_exact_and_ordered() {
+        let s = accuracy_summary(&[0.9, 0.7, 1.0, 0.8, 0.6]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 0.6);
+        assert_eq!(s.p50, 0.8);
+        assert!(s.p10 <= s.p50 && s.p50 <= 1.0);
+        assert!((s.mean - 0.8).abs() < 1e-12);
+        // Empty input is all-zero, not NaN.
+        let e = accuracy_summary(&[]);
+        assert_eq!(e.count, 0);
+        assert_eq!(e.mean, 0.0);
+        // Single sample pins every field.
+        let one = accuracy_summary(&[0.93]);
+        assert_eq!((one.p50, one.p10, one.min, one.count), (0.93, 0.93, 0.93, 1));
     }
 
     #[test]

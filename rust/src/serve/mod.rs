@@ -21,6 +21,15 @@
 //! * [`router`](Router) — cluster-aware session routing (round-robin /
 //!   least-loaded / KV-headroom) over live [`ReplicaLoad`] snapshots.
 //!
+//! Sessions carry a per-request QoS tier ([`QosTier`], assigned by the
+//! load generator's [`QosAssignment`]) mapping to a stream-length
+//! fidelity policy: the tick loop scales each batched step by the
+//! batch's tier factors and reports per-session estimated task
+//! accuracy ([`AccuracySummary`]) alongside the latency percentiles
+//! (DESIGN.md §Fidelity-engine).  Gold — the default — is the
+//! full-fidelity path and reproduces the pre-QoS scheduler
+//! bit-for-bit.
+//!
 //! The tick loop itself is packaged as [`ReplicaSim`] — one serving
 //! machine — which the cluster driver
 //! ([`cluster`](crate::cluster)) instantiates D times (data-parallel)
@@ -39,11 +48,16 @@ mod session;
 
 pub(crate) use scheduler::aggregate_report;
 
-pub use loadgen::{ArrivalProcess, LengthDist, Scenario};
-pub use metrics::{LatencySummary, OccupancySample, OccupancyTimeline, StreamingHistogram};
+pub use loadgen::{ArrivalProcess, LengthDist, QosAssignment, Scenario};
+pub use metrics::{
+    accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
+    StreamingHistogram,
+};
 pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{
     run_continuous, run_static, Coster, Policy, ReplicaSim, SchedulerConfig, ServeGenReport,
     SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
+
+pub use crate::fidelity::QosTier;

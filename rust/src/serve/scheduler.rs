@@ -27,12 +27,16 @@
 //!   one session.
 
 use super::loadgen::Scenario;
-use super::metrics::{LatencySummary, OccupancySample, OccupancyTimeline, StreamingHistogram};
+use super::metrics::{
+    accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
+    StreamingHistogram,
+};
 use super::router::ReplicaLoad;
 use super::session::{
     kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState,
 };
-use crate::config::{ArtemisConfig, TransformerModel};
+use crate::config::{ArtemisConfig, FidelityParams, TransformerModel};
+use crate::fidelity::{QosTier, ServeFidelity};
 use crate::sim::{simulate, CacheStats, SimOptions, StackCoster, TickCost};
 use crate::xfmr::{batched_decode_step_workload, batched_prefill_workload};
 
@@ -98,6 +102,11 @@ pub struct SessionReport {
     pub arrival_ns: f64,
     pub ttft_ns: f64,
     pub finished_ns: f64,
+    /// Serving QoS tier the session ran at.
+    pub tier: QosTier,
+    /// Estimated task accuracy at the tier's fidelity (0.0 if rejected
+    /// — the session was never served).
+    pub est_accuracy: f64,
 }
 
 /// Aggregate result of serving one trace under one scheme.
@@ -122,6 +131,9 @@ pub struct ServeGenReport {
     pub per_token: LatencySummary,
     /// Inter-token emission gaps.
     pub itl: LatencySummary,
+    /// Per-session estimated task accuracy (fidelity engine; served
+    /// sessions only — rejected ones contribute no sample).
+    pub accuracy: AccuracySummary,
     pub peak_kv_per_bank: u64,
     pub kv_budget_per_bank: u64,
     pub timeline: OccupancyTimeline,
@@ -146,6 +158,8 @@ struct MetricsAcc {
     per_token: StreamingHistogram,
     itl: StreamingHistogram,
     timeline: OccupancyTimeline,
+    /// One estimated-accuracy sample per finished session.
+    accuracy: Vec<f64>,
     total_tokens: u64,
     energy_pj: f64,
     ticks: u64,
@@ -159,6 +173,7 @@ impl MetricsAcc {
             per_token: StreamingHistogram::new(),
             itl: StreamingHistogram::new(),
             timeline: OccupancyTimeline::new(),
+            accuracy: Vec::new(),
             total_tokens: 0,
             energy_pj: 0.0,
             ticks: 0,
@@ -172,6 +187,7 @@ impl MetricsAcc {
         self.per_token.merge(&o.per_token);
         self.itl.merge(&o.itl);
         self.timeline.absorb(&o.timeline);
+        self.accuracy.extend_from_slice(&o.accuracy);
         self.total_tokens += o.total_tokens;
         self.energy_pj += o.energy_pj;
         self.ticks += o.ticks;
@@ -179,24 +195,30 @@ impl MetricsAcc {
     }
 }
 
-fn session_reports(sessions: &[Session]) -> Vec<SessionReport> {
+fn session_reports(sessions: &[Session], fid: &ServeFidelity) -> Vec<SessionReport> {
     sessions
         .iter()
-        .map(|s| SessionReport {
-            id: s.spec.id,
-            prompt: s.spec.prompt,
-            gen: s.spec.gen,
-            generated: s.generated,
-            rejected: s.state == SessionState::Rejected,
-            arrival_ns: s.spec.arrival_ns,
-            // Only meaningful once a token was emitted (0.0 for
-            // rejected or zero-length sessions).
-            ttft_ns: if s.generated > 0 { s.first_token_ns - s.spec.arrival_ns } else { 0.0 },
-            finished_ns: s.finished_ns,
+        .map(|s| {
+            let rejected = s.state == SessionState::Rejected;
+            SessionReport {
+                id: s.spec.id,
+                prompt: s.spec.prompt,
+                gen: s.spec.gen,
+                generated: s.generated,
+                rejected,
+                arrival_ns: s.spec.arrival_ns,
+                // Only meaningful once a token was emitted (0.0 for
+                // rejected or zero-length sessions).
+                ttft_ns: if s.generated > 0 { s.first_token_ns - s.spec.arrival_ns } else { 0.0 },
+                finished_ns: s.finished_ns,
+                tier: s.spec.tier,
+                est_accuracy: if rejected { 0.0 } else { fid.accuracy(s.spec.tier) },
+            }
         })
         .collect()
 }
 
+#[allow(clippy::too_many_arguments)] // internal roll-up of one run's outputs
 fn finish_report(
     scheme: String,
     model: &TransformerModel,
@@ -205,6 +227,7 @@ fn finish_report(
     makespan_ns: f64,
     peak_kv_per_bank: u64,
     kv_budget_per_bank: u64,
+    fid: &ServeFidelity,
 ) -> ServeGenReport {
     // Stable id order regardless of which replica served whom.
     sessions.sort_by_key(|s| s.spec.id);
@@ -222,10 +245,11 @@ fn finish_report(
         ttft: acc.ttft.summary(),
         per_token: acc.per_token.summary(),
         itl: acc.itl.summary(),
+        accuracy: accuracy_summary(&acc.accuracy),
         peak_kv_per_bank,
         kv_budget_per_bank,
         timeline: acc.timeline,
-        session_reports: session_reports(&sessions),
+        session_reports: session_reports(&sessions, fid),
     }
 }
 
@@ -247,11 +271,13 @@ fn emit_token(s: &mut Session, clock: f64, acc: &mut MetricsAcc) {
     acc.total_tokens += 1;
 }
 
-/// Mark a session finished and fold its normalized latency in.
-fn finish_session(s: &mut Session, clock: f64, acc: &mut MetricsAcc) {
+/// Mark a session finished and fold its normalized latency and
+/// tier-estimated accuracy in.
+fn finish_session(s: &mut Session, clock: f64, acc: &mut MetricsAcc, est_accuracy: f64) {
     s.state = SessionState::Done;
     s.finished_ns = clock;
     acc.per_token.record((clock - s.spec.arrival_ns) / s.spec.gen.max(1) as f64);
+    acc.accuracy.push(est_accuracy);
 }
 
 /// How a replica costs its ticks.
@@ -313,6 +339,10 @@ pub struct ReplicaSim<'a> {
     /// K/V-resident layers on the binding stack (= `model.layers`
     /// except for pipeline-parallel groups).
     kv_layers: u64,
+    /// Per-tier fidelity factors (QoS serving).  Gold's factors are
+    /// exactly 1.0, so gold-only traces are bit-identical to the
+    /// pre-QoS scheduler.
+    fidelity: ServeFidelity,
     sessions: Vec<Session>,
     waiting: Vec<usize>,
     active: Vec<usize>,
@@ -327,6 +357,7 @@ impl<'a> ReplicaSim<'a> {
         coster: Coster<'a>,
         kv: KvTracker,
         kv_layers: u64,
+        fidelity: ServeFidelity,
     ) -> Self {
         assert!(sched.max_batch > 0, "max_batch must be positive");
         Self {
@@ -335,12 +366,27 @@ impl<'a> ReplicaSim<'a> {
             coster,
             kv,
             kv_layers,
+            fidelity,
             sessions: Vec::new(),
             waiting: Vec::new(),
             active: Vec::new(),
             acc: MetricsAcc::new(),
             clock: 0.0,
         }
+    }
+
+    /// Tick factors of a session group: the *slowest* (highest-
+    /// fidelity) member paces the batched step, energy averages over
+    /// the rows.  All-gold groups return exactly (1.0, 1.0).
+    fn batch_factors(&self, idxs: &[usize]) -> (f64, f64) {
+        let mut tf = 0.0f64;
+        let mut ef_sum = 0.0f64;
+        for &i in idxs {
+            let tier = self.sessions[i].spec.tier;
+            tf = tf.max(self.fidelity.time(tier));
+            ef_sum += self.fidelity.energy(tier);
+        }
+        (tf, ef_sum / idxs.len() as f64)
     }
 
     pub fn clock(&self) -> f64 {
@@ -440,13 +486,15 @@ impl<'a> ReplicaSim<'a> {
         }
         self.waiting = still_waiting;
 
-        // (2) One batched decode step for every in-flight session.
+        // (2) One batched decode step for every in-flight session,
+        // scaled by the batch's fidelity factors (QoS tiers).
         if !self.active.is_empty() {
             let contexts: Vec<u64> =
                 self.active.iter().map(|&i| self.sessions[i].context()).collect();
             let c = self.coster.decode(&contexts);
-            self.clock += c.ns;
-            self.acc.energy_pj += c.energy_pj;
+            let (tf, ef) = self.batch_factors(&self.active);
+            self.clock += c.ns * tf;
+            self.acc.energy_pj += c.energy_pj * ef;
             self.acc.ticks += 1;
             self.acc.decode_rows += self.active.len() as u64;
             for &i in &self.active {
@@ -455,9 +503,11 @@ impl<'a> ReplicaSim<'a> {
             let mut active = std::mem::take(&mut self.active);
             let (sessions, kv, acc) = (&mut self.sessions, &mut self.kv, &mut self.acc);
             let (model, kv_layers, clock) = (self.model, self.kv_layers, self.clock);
+            let fid = &self.fidelity;
             active.retain(|&i| {
                 if sessions[i].generated >= sessions[i].spec.gen {
-                    finish_session(&mut sessions[i], clock, acc);
+                    let est = fid.accuracy(sessions[i].spec.tier);
+                    finish_session(&mut sessions[i], clock, acc, est);
                     kv.release(kv_bytes_for_layers(model, sessions[i].max_context(), kv_layers));
                     false
                 } else {
@@ -473,13 +523,15 @@ impl<'a> ReplicaSim<'a> {
             let prompts: Vec<u64> =
                 admitted.iter().map(|&i| self.sessions[i].spec.prompt).collect();
             let c = self.coster.prefill(&prompts);
-            self.clock += c.ns;
-            self.acc.energy_pj += c.energy_pj;
+            let (tf, ef) = self.batch_factors(&admitted);
+            self.clock += c.ns * tf;
+            self.acc.energy_pj += c.energy_pj * ef;
             for idx in admitted {
                 self.sessions[idx].state = SessionState::Decoding;
                 // Degenerate zero-length generations finish at prefill.
                 if self.sessions[idx].spec.gen == 0 {
-                    finish_session(&mut self.sessions[idx], self.clock, &mut self.acc);
+                    let est = self.fidelity.accuracy(self.sessions[idx].spec.tier);
+                    finish_session(&mut self.sessions[idx], self.clock, &mut self.acc, est);
                     self.kv.release(kv_bytes_for_layers(
                         self.model,
                         self.sessions[idx].max_context(),
@@ -514,6 +566,7 @@ impl<'a> ReplicaSim<'a> {
             self.clock,
             self.kv.peak_per_bank(),
             self.kv.budget_per_bank(),
+            &self.fidelity,
         )
     }
 }
@@ -548,7 +601,13 @@ pub(crate) fn aggregate_report(
         peak = peak.max(r.kv.peak_per_bank());
         budget = budget.max(r.kv.budget_per_bank());
     }
-    finish_report(scheme, model, sessions, acc, makespan, peak, budget)
+    // Tier accuracies do not depend on the replica shape, so any
+    // replica's table works for the aggregate's per-session rows.
+    let fid = replicas
+        .first()
+        .map(|r| r.fidelity.clone())
+        .unwrap_or_else(|| ServeFidelity::for_model(&FidelityParams::default(), model));
+    finish_report(scheme, model, sessions, acc, makespan, peak, budget, &fid)
 }
 
 /// Serve `trace` with iteration-level continuous batching on a single
@@ -571,6 +630,7 @@ pub fn run_continuous(
         coster,
         KvTracker::new(cfg, model),
         model.layers as u64,
+        ServeFidelity::for_model(&cfg.fidelity, model),
     );
     drive_replica(&mut sim, &order);
     sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch))
@@ -590,6 +650,7 @@ pub fn run_static(
 ) -> ServeGenReport {
     assert!(batch > 0, "batch must be positive");
     let opts = SimOptions::artemis();
+    let fid = ServeFidelity::for_model(&cfg.fidelity, model);
     let mut sessions: Vec<Session> = trace.iter().map(|&spec| Session::new(spec)).collect();
     sessions.sort_by(|a, b| cmp_arrival(&a.spec, &b.spec));
 
@@ -615,6 +676,19 @@ pub fn run_static(
         let max_prompt = sessions[group.clone()].iter().map(|s| s.spec.prompt).max().unwrap_or(1);
         let max_gen = sessions[group.clone()].iter().map(|s| s.spec.gen).max().unwrap_or(0);
 
+        // Fidelity factors of the group: the static batcher runs the
+        // whole padded batch at its slowest member's pace (gold-only
+        // traces give exactly 1.0 — the pre-QoS numbers).
+        let (tf, ef) = {
+            let mut tf = 0.0f64;
+            let mut ef_sum = 0.0f64;
+            for s in &sessions[group.clone()] {
+                tf = tf.max(fid.time(s.spec.tier));
+                ef_sum += fid.energy(s.spec.tier);
+            }
+            (tf, ef_sum / (end - start) as f64)
+        };
+
         // Pad-and-drop prefill: every row padded to the batch's maximum
         // prompt, short tail batches padded to the full batch size.
         for s in &mut sessions[group.clone()] {
@@ -623,8 +697,8 @@ pub fn run_static(
         }
         let prompts = vec![max_prompt; batch];
         let r = simulate(cfg, &batched_prefill_workload(model, &prompts), opts);
-        clock += r.total_ns;
-        acc.energy_pj += r.total_energy_pj();
+        clock += r.total_ns * tf;
+        acc.energy_pj += r.total_energy_pj() * ef;
 
         // Resident KV for reporting: every row at the padded maximum
         // context, held until the batch drains (per-session per-bank
@@ -639,21 +713,23 @@ pub fn run_static(
             // Degenerate zero-length generations finish at prefill,
             // matching the continuous scheduler's semantics.
             if s.spec.gen == 0 {
-                finish_session(s, clock, &mut acc);
+                let est = fid.accuracy(s.spec.tier);
+                finish_session(s, clock, &mut acc, est);
             }
         }
         for t in 0..max_gen {
             let ctxs = vec![max_prompt + t; batch];
             let r = simulate(cfg, &batched_decode_step_workload(model, &ctxs), opts);
-            clock += r.total_ns;
-            acc.energy_pj += r.total_energy_pj();
+            clock += r.total_ns * tf;
+            acc.energy_pj += r.total_energy_pj() * ef;
             acc.ticks += 1;
             acc.decode_rows += batch as u64;
             for s in &mut sessions[group.clone()] {
                 if s.generated < s.spec.gen {
                     emit_token(s, clock, &mut acc);
                     if s.generated == s.spec.gen {
-                        finish_session(s, clock, &mut acc);
+                        let est = fid.accuracy(s.spec.tier);
+                        finish_session(s, clock, &mut acc, est);
                     }
                 }
             }
@@ -675,7 +751,7 @@ pub fn run_static(
     }
 
     let scheme = format!("static(b{batch})");
-    finish_report(scheme, model, sessions, acc, clock, peak_kv, kv_budget)
+    finish_report(scheme, model, sessions, acc, clock, peak_kv, kv_budget, &fid)
 }
 
 #[cfg(test)]
@@ -799,6 +875,61 @@ mod tests {
     }
 
     #[test]
+    fn gold_trace_reports_full_fidelity_accuracy_summary() {
+        let (cfg, sc, trace) = chat_small(6);
+        let r = run_continuous(&cfg, &sc.model, &trace, &SchedulerConfig::default());
+        // Default traces are all-gold: one accuracy sample per session,
+        // all equal to the gold-tier estimate, max-fidelity tier tag.
+        assert_eq!(r.accuracy.count, 6);
+        assert_eq!(r.accuracy.min, r.accuracy.p50);
+        let gold = ServeFidelity::for_model(&cfg.fidelity, &sc.model).accuracy(QosTier::Gold);
+        assert_eq!(r.accuracy.p50, gold);
+        for s in &r.session_reports {
+            assert_eq!(s.tier, QosTier::Gold);
+            assert_eq!(s.est_accuracy, gold);
+        }
+    }
+
+    #[test]
+    fn bronze_trace_is_faster_and_less_accurate_than_gold() {
+        use crate::fidelity::QosTier;
+        use crate::serve::QosAssignment;
+        let cfg = ArtemisConfig::default();
+        let sc = Scenario::chat().with_sessions(8);
+        let gold = sc.generate(3);
+        let bronze =
+            Scenario::chat().with_sessions(8).with_qos(QosAssignment::Uniform(QosTier::Bronze));
+        let bronze_trace = bronze.generate(3);
+        let sched = SchedulerConfig::default();
+        let rg = run_continuous(&cfg, &sc.model, &gold, &sched);
+        let rb = run_continuous(&cfg, &sc.model, &bronze_trace, &sched);
+        assert_eq!(rg.total_tokens, rb.total_tokens);
+        // Bronze streams are shorter: the same trace finishes sooner,
+        // spends less energy, and reports lower estimated accuracy.
+        assert!(rb.makespan_ns < rg.makespan_ns, "{} vs {}", rb.makespan_ns, rg.makespan_ns);
+        assert!(rb.sim_energy_pj < rg.sim_energy_pj);
+        assert!(rb.accuracy.p50 < rg.accuracy.p50);
+        assert!(rb.accuracy.min > 0.0);
+    }
+
+    #[test]
+    fn static_batcher_applies_fidelity_factors_too() {
+        use crate::fidelity::QosTier;
+        use crate::serve::QosAssignment;
+        let cfg = ArtemisConfig::default();
+        let gold = Scenario::chat().with_sessions(6).generate(5);
+        let bronze = Scenario::chat()
+            .with_sessions(6)
+            .with_qos(QosAssignment::Uniform(QosTier::Bronze))
+            .generate(5);
+        let rg = run_static(&cfg, &Scenario::chat().model, &gold, 3);
+        let rb = run_static(&cfg, &Scenario::chat().model, &bronze, 3);
+        assert!(rb.makespan_ns < rg.makespan_ns);
+        assert!(rb.accuracy.p50 < rg.accuracy.p50);
+        assert_eq!(rb.accuracy.count, 6);
+    }
+
+    #[test]
     fn replica_load_snapshot_tracks_outstanding_work() {
         let (cfg, sc, trace) = chat_small(4);
         let coster =
@@ -809,6 +940,7 @@ mod tests {
             coster,
             KvTracker::new(&cfg, &sc.model),
             sc.model.layers as u64,
+            ServeFidelity::for_model(&cfg.fidelity, &sc.model),
         );
         let empty = sim.load(3);
         assert_eq!(empty.replica, 3);

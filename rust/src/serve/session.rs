@@ -18,6 +18,7 @@
 
 use crate::config::{ArtemisConfig, TransformerModel};
 use crate::dataflow::capacity_report;
+use crate::fidelity::QosTier;
 
 /// Immutable description of one generation request.
 #[derive(Debug, Clone, Copy)]
@@ -29,6 +30,9 @@ pub struct SessionSpec {
     pub prompt: u64,
     /// Requested generation length, tokens (= decode steps).
     pub gen: u64,
+    /// Serving QoS tier: which fidelity policy the session's ticks run
+    /// at (gold = the pre-QoS full-fidelity path).
+    pub tier: QosTier,
 }
 
 /// Lifecycle state of a generation session.
@@ -212,7 +216,7 @@ mod tests {
     use crate::config::ModelZoo;
 
     fn spec(prompt: u64, gen: u64) -> SessionSpec {
-        SessionSpec { id: 0, arrival_ns: 0.0, prompt, gen }
+        SessionSpec { id: 0, arrival_ns: 0.0, prompt, gen, tier: QosTier::Gold }
     }
 
     #[test]

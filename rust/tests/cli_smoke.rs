@@ -30,7 +30,9 @@ fn help_exits_zero_and_lists_commands() {
         "csv",
         "cluster-scale",
         "bench-serve",
+        "fidelity-sweep",
         "--placement dp|pp",
+        "--qos gold|silver|bronze|mix",
     ];
     for cmd in cmds {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
@@ -152,6 +154,78 @@ fn serve_gen_zero_sessions_prints_empty_trace_report() {
     let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0", "--stacks", "4"]);
     assert!(ok, "empty cluster serve-gen failed: {stderr}");
     assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
+}
+
+#[test]
+fn fidelity_sweep_prints_pareto_and_is_deterministic() {
+    let (ok, out1, stderr) = run(&["fidelity-sweep"]);
+    assert!(ok, "fidelity-sweep failed: {stderr}");
+    for needle in [
+        "Fidelity Pareto",
+        "stream len",
+        "sigma(units)",
+        "logit RMS(est)",
+        "est accuracy",
+        "time factor",
+        "QoS-tiered serving",
+        "acc p10",
+    ] {
+        assert!(out1.contains(needle), "missing '{needle}':\n{out1}");
+    }
+    // Both the 16 and 256 design points appear (the acceptance sweep
+    // range), and nothing degenerates.
+    assert!(out1.lines().any(|l| l.trim_start().starts_with("16 ")), "no 16-bit row:\n{out1}");
+    assert!(out1.lines().any(|l| l.trim_start().starts_with("256 ")), "no 256-bit row:\n{out1}");
+    assert!(!out1.contains("NaN"));
+    // Pure analytic + seeded serving: byte-identical across runs.
+    let (ok2, out2, _) = run(&["fidelity-sweep"]);
+    assert!(ok2);
+    assert_eq!(out1, out2, "fidelity-sweep must be deterministic");
+}
+
+#[test]
+fn serve_gen_qos_prints_accuracy_and_is_deterministic() {
+    let args = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "6",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--qos",
+        "bronze",
+    ];
+    let (ok, out1, stderr) = run(&args);
+    assert!(ok, "serve-gen --qos failed: {stderr}");
+    for needle in ["qos bronze", "est accuracy", "p10", "acc p10"] {
+        assert!(out1.contains(needle), "missing '{needle}':\n{out1}");
+    }
+    let (ok2, out2, _) = run(&args);
+    assert!(ok2);
+    assert_eq!(out1, out2, "serve-gen --qos must be deterministic");
+
+    // The mixed assignment is accepted too and labels the header.
+    let (ok, out, stderr) = run(&[
+        "serve-gen", "--sessions", "6", "--batch", "4", "--model", "Transformer-base", "--qos",
+        "mix",
+    ]);
+    assert!(ok, "mix failed: {stderr}");
+    assert!(out.contains("qos mix"), "{out}");
+}
+
+#[test]
+fn serve_gen_rejects_unknown_qos_tier() {
+    let (ok, _, stderr) = run(&["serve-gen", "--qos", "platinum"]);
+    assert!(!ok);
+    assert!(
+        stderr.contains("unknown QoS tier 'platinum' (gold|silver|bronze|mix)"),
+        "{stderr}"
+    );
 }
 
 #[test]
