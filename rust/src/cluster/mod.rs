@@ -18,20 +18,26 @@
 //!
 //! All replicas share one memoized [`CostCache`]: the decomposed tick
 //! costing makes structurally identical sub-workloads recur across
-//! ticks, sessions and stacks, so the cache removes most `simulate`
-//! calls from the hot loop while staying bit-identical to uncached
-//! costing (DESIGN.md §Cluster-scale-out).
+//! ticks, sessions and stacks, so the sharded cache removes most
+//! `simulate` calls from the hot loop while staying bit-identical to
+//! uncached costing (DESIGN.md §Cluster-scale-out).
 //!
 //! The driver interleaves the replicas on the shared simulated
 //! timeline: before routing an arrival every replica is advanced to
 //! the arrival time, so routing decisions see live load — and the
-//! whole run stays deterministic for a fixed (trace, shape).
+//! whole run stays deterministic for a fixed (trace, shape).  With
+//! `ClusterConfig::threads != 1` the advances run on a scoped worker
+//! pool (`parallel.rs`) — replicas are independent between routing
+//! points, so every thread count produces bit-identical reports
+//! (DESIGN.md §Performance-engineering).
+
+mod parallel;
 
 use crate::config::{ArtemisConfig, ClusterConfig, Placement, TransformerModel};
 use crate::dataflow::{stack_groups, StackLink};
 use crate::serve::{
-    aggregate_report, Coster, KvTracker, ReplicaSim, RoutePolicy, Router, SchedulerConfig,
-    ServeGenReport, SessionSpec,
+    aggregate_report, Coster, KvTracker, Policy, ReplicaSim, RoutePolicy, Router, Scenario,
+    SchedulerConfig, ServeGenReport, SessionSpec,
 };
 use crate::sim::{CacheStats, CostCache, SimOptions, StackCoster};
 
@@ -44,9 +50,20 @@ pub struct ClusterReport {
     pub route: RoutePolicy,
     /// Whether the memoized cost cache was enabled.
     pub cached: bool,
+    /// Driver threads actually used (after auto-resolution).
+    pub threads: usize,
     pub per_stack: Vec<ServeGenReport>,
     pub aggregate: ServeGenReport,
+    /// Cost-cache lookup stats aggregated over *every* replica's
+    /// coster (local dense tables + shared consults): the one accurate
+    /// run-wide hit-rate line.  Deterministic for a fixed run shape,
+    /// including across thread counts.
     pub cache: CacheStats,
+    /// Per-replica lookup attribution.  Under a multi-threaded driver
+    /// the *attribution* of a first-touch miss between two replicas
+    /// racing on the same key is scheduling-dependent; only the
+    /// aggregate above is deterministic.
+    pub cache_per_stack: Vec<CacheStats>,
 }
 
 impl ClusterReport {
@@ -112,20 +129,27 @@ pub fn run_cluster(
     };
 
     // Interleave the replicas on the shared timeline: advance everyone
-    // to each arrival, route it against live load, hand it over.
+    // to each arrival, route it against live load, hand it over.  The
+    // serial loop and the worker pool execute the same per-replica
+    // call sequence, so both are bit-identical (tests/perf_properties).
     let mut order: Vec<SessionSpec> = trace.to_vec();
     order.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
     let mut router = Router::new(route);
-    for spec in &order {
-        for r in replicas.iter_mut() {
-            r.advance_to(spec.arrival_ns);
+    let threads = resolve_threads(cluster.threads, replicas.len());
+    if threads <= 1 {
+        for spec in &order {
+            for r in replicas.iter_mut() {
+                r.advance_to(spec.arrival_ns);
+            }
+            let loads: Vec<_> = replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
+            let pick = router.route(&loads);
+            replicas[pick].push(*spec);
         }
-        let loads: Vec<_> = replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
-        let pick = router.route(&loads);
-        replicas[pick].push(*spec);
-    }
-    for r in replicas.iter_mut() {
-        r.run_to_completion();
+        for r in replicas.iter_mut() {
+            r.run_to_completion();
+        }
+    } else {
+        replicas = parallel::drive_parallel(replicas, &order, &mut router, threads);
     }
 
     let label = format!(
@@ -141,18 +165,55 @@ pub fn run_cluster(
         .map(|(i, r)| r.report(format!("stack{i}({label})")))
         .collect();
     let aggregate = aggregate_report(&replicas, format!("cluster({label})"), model);
+    // The run-wide hit-rate line aggregates every replica's coster
+    // counters (local dense tables *and* shared consults) — the
+    // per-replica/reset-between-runs stats bug the PR 5 satellite
+    // fixed.  The shared handle's own stats only cover shared
+    // consults, so they are not the number to report.
+    let cache_per_stack: Vec<CacheStats> = replicas.iter().map(|r| r.cache_stats()).collect();
     let cache_stats =
-        cache.map(|c| c.borrow().stats()).unwrap_or_default();
+        cache_per_stack.iter().fold(CacheStats::default(), |acc, &s| acc.merged(s));
+    drop(cache);
 
     ClusterReport {
         stacks: cluster.stacks,
         placement: cluster.placement,
         route,
         cached,
+        threads,
         per_stack,
         aggregate,
         cache: cache_stats,
+        cache_per_stack,
     }
+}
+
+/// Resolve the driver-thread request: `0` = one thread per replica,
+/// capped by the machine's available parallelism; always in
+/// `[1, replicas]`.
+fn resolve_threads(requested: usize, replicas: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { auto } else { requested };
+    t.clamp(1, replicas.max(1))
+}
+
+/// Run one named-scenario cluster point: seeded trace, FIFO admission,
+/// least-loaded routing — the shape the `cluster-scale` report and the
+/// `bench-serve` suite sweep.  `threads = 0` auto-sizes the driver
+/// pool; the thread count never moves a reported bit.
+pub fn run_scenario_cluster(
+    cfg: &ArtemisConfig,
+    scenario: &Scenario,
+    stacks: u64,
+    placement: Placement,
+    seed: u64,
+    cached: bool,
+    threads: usize,
+) -> ClusterReport {
+    let trace = scenario.generate(seed);
+    let sched = SchedulerConfig::for_scenario(scenario, Policy::Fifo);
+    let cluster = ClusterConfig::new(stacks, placement).with_threads(threads);
+    run_cluster(cfg, &scenario.model, &trace, &cluster, &sched, RoutePolicy::LeastLoaded, cached)
 }
 
 /// Convenience: run the chat-trace scaling point used by the
@@ -165,11 +226,8 @@ pub fn run_chat_cluster(
     sessions: usize,
     cached: bool,
 ) -> ClusterReport {
-    let sc = crate::serve::Scenario::chat().with_sessions(sessions);
-    let trace = sc.generate(seed);
-    let sched = SchedulerConfig::for_scenario(&sc, crate::serve::Policy::Fifo);
-    let cluster = ClusterConfig::new(stacks, placement);
-    run_cluster(cfg, &sc.model, &trace, &cluster, &sched, RoutePolicy::LeastLoaded, cached)
+    let sc = Scenario::chat().with_sessions(sessions);
+    run_scenario_cluster(cfg, &sc, stacks, placement, seed, cached, 0)
 }
 
 #[cfg(test)]
@@ -187,6 +245,30 @@ mod tests {
 
     fn sched(batch: usize) -> SchedulerConfig {
         SchedulerConfig { max_batch: batch, policy: Policy::Fifo }
+    }
+
+    #[test]
+    fn thread_resolution_is_bounded() {
+        assert_eq!(resolve_threads(1, 4), 1, "explicit serial stays serial");
+        assert_eq!(resolve_threads(8, 4), 4, "never more workers than replicas");
+        assert_eq!(resolve_threads(3, 1), 1, "pp groups are one logical replica");
+        assert_eq!(resolve_threads(5, 0), 1, "degenerate empty cluster");
+        let auto = resolve_threads(0, 4);
+        assert!((1..=4).contains(&auto), "auto out of range: {auto}");
+    }
+
+    #[test]
+    fn reports_carry_resolved_threads_and_per_stack_stats() {
+        let (cfg, model, trace) = fast_trace(8);
+        let cl = ClusterConfig::new(2, Placement::DataParallel).with_threads(2);
+        let r = run_cluster(&cfg, &model, &trace, &cl, &sched(4), RoutePolicy::RoundRobin, true);
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.cache_per_stack.len(), 2);
+        let summed = r
+            .cache_per_stack
+            .iter()
+            .fold(CacheStats::default(), |acc, &s| acc.merged(s));
+        assert_eq!(summed, r.cache);
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Scoped-thread replica pool for the cluster driver.
+//!
+//! Data-parallel replicas are independent between routing decisions:
+//! each owns its sessions, clock, KV tracker and metrics, and the only
+//! shared state is the cost cache (value-deterministic — see
+//! [`sim::CostCache`](crate::sim::CostCache)).  The driver therefore
+//! advances all replicas to each arrival time concurrently and only
+//! serializes the routing decision itself.
+//!
+//! ## Protocol
+//!
+//! Workers are spawned once per run (no per-arrival thread spawns) and
+//! own a static strided partition of the replicas.  Each *epoch*:
+//!
+//! 1. main publishes a command word (the f64 bits of the target time,
+//!    `∞` for "run to completion", or a shutdown sentinel),
+//! 2. the start barrier releases the workers,
+//! 3. every worker advances its replicas to the target,
+//! 4. the end barrier hands control back to main, which reads the live
+//!    load snapshots **in replica-index order** and routes the arrival.
+//!
+//! A panic inside a worker's replica work is caught so the worker
+//! still reaches the end barrier (otherwise main would park on a
+//! `Barrier` that can never be satisfied — a silent hang instead of a
+//! diagnostic); main detects it right after the epoch, shuts the pool
+//! down, and resumes the unwind with the original payload.
+//!
+//! ## Determinism argument (DESIGN.md §Performance-engineering)
+//!
+//! Bit-identity with the serial driver holds because (a) each replica
+//! executes exactly the same `advance_to`/`push`/`run_to_completion`
+//! call sequence as in the serial loop — the partition only changes
+//! *who* makes the calls, not their per-replica order; (b) replicas
+//! share no mutable state except the cost cache, whose entries are a
+//! pure function of the key; (c) the router runs on the main thread
+//! only, after the end barrier, over loads gathered in index order;
+//! (d) the final merge ([`aggregate_report`](crate::serve)) walks
+//! replicas in index order.  Thread scheduling can therefore reorder
+//! only *wall-clock* work, never a simulated number.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex, PoisonError};
+
+use crate::serve::{ReplicaSim, Router, SessionSpec};
+
+/// Command sentinel: all-ones is a quiet-NaN bit pattern that
+/// `f64::to_bits` never produces for a (non-negative, finite or `∞`)
+/// simulated timestamp.
+const SHUTDOWN: u64 = u64::MAX;
+
+/// Drive `replicas` through `order` with `threads` workers; returns the
+/// replicas (in their original index order) after every session has
+/// been served.  `threads` must be >= 2 — the caller keeps the plain
+/// serial loop for the single-threaded path.
+pub(crate) fn drive_parallel<'a>(
+    replicas: Vec<ReplicaSim<'a>>,
+    order: &[SessionSpec],
+    router: &mut Router,
+    threads: usize,
+) -> Vec<ReplicaSim<'a>> {
+    let n = replicas.len();
+    debug_assert!(threads >= 2, "serial driving belongs to the caller");
+    let workers = threads.min(n).max(1);
+    let cells: Vec<Mutex<ReplicaSim<'a>>> = replicas.into_iter().map(Mutex::new).collect();
+    let start = Barrier::new(workers + 1);
+    let end = Barrier::new(workers + 1);
+    let command = AtomicU64::new(0);
+    // First worker panic of the run (payload kept for re-throwing).
+    let panicked: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let (cells, start, end, command, panicked) =
+                (&cells, &start, &end, &command, &panicked);
+            s.spawn(move || loop {
+                start.wait();
+                let cmd = command.load(Ordering::SeqCst);
+                if cmd == SHUTDOWN {
+                    break;
+                }
+                let t = f64::from_bits(cmd);
+                // Catch panics so this worker still reaches the end
+                // barrier; main re-throws after the epoch.  Poisoned
+                // locks (a sibling panicked mid-epoch) are recovered —
+                // the run is aborting anyway.
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    for cell in cells.iter().skip(w).step_by(workers) {
+                        let mut r = cell.lock().unwrap_or_else(PoisonError::into_inner);
+                        if t.is_infinite() {
+                            r.run_to_completion();
+                        } else {
+                            r.advance_to(t);
+                        }
+                    }
+                }));
+                if let Err(payload) = outcome {
+                    let mut slot = panicked.lock().unwrap_or_else(PoisonError::into_inner);
+                    slot.get_or_insert(payload);
+                }
+                end.wait();
+            });
+        }
+
+        // One epoch: publish the target, run the pool, then re-throw
+        // any worker panic with its original payload (after releasing
+        // the workers to exit, so the scope can join them).
+        let epoch = |t_bits: u64| {
+            command.store(t_bits, Ordering::SeqCst);
+            start.wait();
+            end.wait();
+            let payload =
+                panicked.lock().unwrap_or_else(PoisonError::into_inner).take();
+            if let Some(payload) = payload {
+                command.store(SHUTDOWN, Ordering::SeqCst);
+                start.wait();
+                resume_unwind(payload);
+            }
+        };
+        for spec in order {
+            epoch(spec.arrival_ns.to_bits());
+            // Route against live load, gathered in index order.
+            let loads: Vec<_> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| c.lock().expect("replica lock").load(i))
+                .collect();
+            let pick = router.route(&loads);
+            cells[pick].lock().expect("replica lock").push(*spec);
+        }
+        // Drain epoch: everyone serves out their tail concurrently.
+        epoch(f64::INFINITY.to_bits());
+        // Shutdown: workers exit right after the start barrier.
+        command.store(SHUTDOWN, Ordering::SeqCst);
+        start.wait();
+    });
+
+    cells.into_iter().map(|c| c.into_inner().expect("replica lock")).collect()
+}

@@ -73,12 +73,24 @@ pub struct ClusterConfig {
     pub stacks: u64,
     pub placement: Placement,
     pub link: StackLinkParams,
+    /// Driver threads for advancing independent replicas in parallel
+    /// (`0` = auto: one per replica, capped at the machine's available
+    /// parallelism).  Purely a wall-clock knob: every thread count —
+    /// including `1`, the serial path — produces bit-identical reports
+    /// (DESIGN.md §Performance-engineering).
+    pub threads: usize,
 }
 
 impl ClusterConfig {
     pub fn new(stacks: u64, placement: Placement) -> Self {
         assert!(stacks > 0, "cluster needs at least one stack");
-        Self { stacks, placement, link: StackLinkParams::default() }
+        Self { stacks, placement, link: StackLinkParams::default(), threads: 0 }
+    }
+
+    /// Same shape with an explicit driver-thread count (`0` = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Short label, e.g. `dp x4`.
@@ -120,5 +132,13 @@ mod tests {
         let c = ClusterConfig::new(4, Placement::PipelineParallel);
         assert_eq!(c.label(), "pp x4");
         assert_eq!(ClusterConfig::default().stacks, 1);
+    }
+
+    #[test]
+    fn threads_default_to_auto_and_are_overridable() {
+        assert_eq!(ClusterConfig::default().threads, 0, "0 = auto-size the driver pool");
+        let c = ClusterConfig::new(4, Placement::DataParallel).with_threads(2);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.stacks, 4, "with_threads must not touch the shape");
     }
 }

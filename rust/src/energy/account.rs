@@ -49,15 +49,21 @@ impl EnergyBreakdown {
 }
 
 /// Running energy account bound to a configuration.
+///
+/// Borrows its configuration: accounts are created once per
+/// [`simulate`](crate::sim::simulate) call, which sits on the serving
+/// hot path — cloning the whole `ArtemisConfig` per call was one of the
+/// per-tick allocations the cost profile flagged
+/// (DESIGN.md §Performance-engineering).
 #[derive(Debug, Clone)]
-pub struct EnergyAccount {
-    cfg: ArtemisConfig,
+pub struct EnergyAccount<'a> {
+    cfg: &'a ArtemisConfig,
     pub breakdown: EnergyBreakdown,
 }
 
-impl EnergyAccount {
-    pub fn new(cfg: &ArtemisConfig) -> Self {
-        Self { cfg: cfg.clone(), breakdown: EnergyBreakdown::default() }
+impl<'a> EnergyAccount<'a> {
+    pub fn new(cfg: &'a ArtemisConfig) -> Self {
+        Self { cfg, breakdown: EnergyBreakdown::default() }
     }
 
     /// Charge a batch of DRAM commands.

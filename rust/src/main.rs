@@ -5,7 +5,7 @@
 //! (the offline build has no clap); `artemis help` lists everything.
 
 use anyhow::{anyhow, Result};
-use artemis::cluster::{run_chat_cluster, run_cluster};
+use artemis::cluster::{run_cluster, run_scenario_cluster};
 use artemis::config::{ArtemisConfig, ClusterConfig, ModelZoo, Placement};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::dataflow::{Dataflow, Pipelining};
@@ -15,6 +15,7 @@ use artemis::serve::{
     run_continuous, run_static, Policy, QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
 };
 use artemis::sim::SimOptions;
+use artemis::util::json::Json;
 use artemis::util::XorShift64;
 
 const HELP: &str = "\
@@ -69,13 +70,18 @@ Other commands:
            served by a D-stack cluster (dp = data-parallel replicas with
            session routing, pp = pipeline-parallel stack groups) through
            the memoized cost cache; per-stack and aggregate metrics plus
-           the cache hit rate print
+           the aggregated cache hit rate print.  --threads N picks the
+           parallel driver's thread count (0 = auto, 1 = serial);
+           every thread count reports bit-identical numbers
   cluster-scale
            scaling study: aggregate tokens/s and p99 latency for the
            chat trace on D = 1/2/4/8 stacks, both placements
-  bench-serve [--out FILE] [--reps N]
-           seeded serve-gen wall-clock benchmark (CI perf gate): writes
-           {bench, wall_ms, sim_tokens_per_s} JSON to FILE
+  bench-serve [--out FILE] [--reps N] [--threads N]
+           seeded serve-gen wall-clock suite (CI perf gate): every
+           scenario (chat/summarize/burst) x placement (dp/pp) x cost
+           cache (on/off) on 4 stacks; writes one consolidated JSON
+           ({suite, threads, benches: [{bench, wall_ms,
+           sim_tokens_per_s}]}) to FILE
   config   print the default configuration as JSON
   help     this text
 
@@ -197,7 +203,9 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     // stacks, each a default/--config machine".
     let stacks: Option<u64> = flag_value(args, "--stacks").map(|v| v.parse()).transpose()?;
     let cluster_mode = stacks.is_some()
-        || args.iter().any(|a| a == "--placement" || a == "--route" || a == "--no-cost-cache");
+        || args.iter().any(|a| {
+            a == "--placement" || a == "--route" || a == "--no-cost-cache" || a == "--threads"
+        });
     if cluster_mode {
         let stack_cfg = if let Some(path) = flag_value(args, "--config") {
             ArtemisConfig::from_json(&std::fs::read_to_string(path)?)?
@@ -220,7 +228,9 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown route policy '{r}' (rr|ll|kv)"))?,
         };
         let cached = !has_flag(args, "--no-cost-cache");
-        let cl = ClusterConfig::new(d, placement);
+        let threads: usize =
+            flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
+        let cl = ClusterConfig::new(d, placement).with_threads(threads);
         let r = run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached);
 
         println!(
@@ -307,37 +317,70 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The CI perf gate: time a fixed seeded scale-out serve (chat trace,
-/// seed 1, 32 sessions, 4 data-parallel stacks, cost cache on) and
-/// write `{bench, wall_ms, sim_tokens_per_s}` JSON.  `wall_ms` is the
-/// best of `--reps` runs (noise floor); `sim_tokens_per_s` is
-/// trace-tokens simulated per wall-second — the throughput of the
-/// simulator itself, which the cost cache is meant to buy.
+/// The CI perf gate: time the seeded scale-out serve suite — every
+/// scenario (chat/summarize/burst) x placement (dp/pp) x cost cache
+/// (on/off), each at seed 1 on 4 stacks with the scenario's default
+/// session count — and write one consolidated JSON artifact.
+/// `wall_ms` is the best of `--reps` runs (noise floor);
+/// `sim_tokens_per_s` is trace-tokens simulated per wall-second — the
+/// throughput of the *simulator*, which the sharded cache, the
+/// parallel driver and the allocation-lean tick loop are meant to buy.
+/// `--threads` pins the driver pool (0 = auto, 1 = the serial
+/// reference path CI also records); simulated outputs are identical
+/// either way, only wall-clock moves.
 fn run_bench_serve(args: &[String]) -> Result<()> {
     let out = flag_value(args, "--out").unwrap_or_else(|| "BENCH_serve.json".into());
     let reps: usize =
         flag_value(args, "--reps").map(|v| v.parse()).transpose()?.unwrap_or(3).max(1);
+    let threads: usize =
+        flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let cfg = ArtemisConfig::default();
-    let mut best_ms = f64::INFINITY;
-    let mut tokens = 0u64;
-    for _ in 0..reps {
-        let t0 = std::time::Instant::now();
-        let r = run_chat_cluster(&cfg, 4, Placement::DataParallel, 1, 32, true);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        tokens = r.aggregate.total_tokens;
-        best_ms = best_ms.min(ms);
+    let seed = 1u64;
+    let stacks = 4u64;
+
+    let mut benches: Vec<Json> = Vec::new();
+    for scenario in ["chat", "summarize", "burst"] {
+        for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+            for cached in [true, false] {
+                let sc = Scenario::by_name(scenario).expect("built-in scenario");
+                let name = format!(
+                    "{scenario}_{placement}_{}",
+                    if cached { "cache" } else { "nocache" }
+                );
+                let mut best_ms = f64::INFINITY;
+                let mut tokens = 0u64;
+                for _ in 0..reps {
+                    let t0 = std::time::Instant::now();
+                    let r =
+                        run_scenario_cluster(&cfg, &sc, stacks, placement, seed, cached, threads);
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    tokens = r.aggregate.total_tokens;
+                    best_ms = best_ms.min(ms);
+                }
+                let tok_per_wall_s = tokens as f64 / (best_ms.max(1e-9) * 1e-3);
+                println!(
+                    "bench {name}: wall {best_ms:.3} ms (best of {reps}), {tokens} trace \
+                     tokens, {tok_per_wall_s:.0} sim tokens per wall-second"
+                );
+                benches.push(Json::obj(vec![
+                    ("bench", Json::Str(name)),
+                    ("wall_ms", Json::Num((best_ms * 1e3).round() / 1e3)),
+                    ("sim_tokens_per_s", Json::Num((tok_per_wall_s * 10.0).round() / 10.0)),
+                ]));
+            }
+        }
     }
-    let tok_per_wall_s = tokens as f64 / (best_ms.max(1e-9) * 1e-3);
-    let json = format!(
-        "{{\n  \"bench\": \"serve_gen_cluster_chat_s1_x4\",\n  \"wall_ms\": {best_ms:.3},\n  \
-         \"sim_tokens_per_s\": {tok_per_wall_s:.1}\n}}\n"
-    );
-    std::fs::write(&out, &json)?;
-    println!(
-        "bench serve_gen_cluster_chat_s1_x4: wall {best_ms:.3} ms (best of {reps}), \
-         {tokens} trace tokens, {tok_per_wall_s:.0} sim tokens per wall-second"
-    );
-    println!("wrote {out}");
+    // `threads` records the *request* (0 = auto): dp points resolve it
+    // to min(stacks, machine parallelism), pp points to 1 (one logical
+    // replica) — simulated outputs are identical regardless.
+    let n_benches = benches.len();
+    let doc = Json::obj(vec![
+        ("suite", Json::Str("serve_gen_cluster_x4_seed1".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("benches", Json::Arr(benches)),
+    ]);
+    std::fs::write(&out, doc.pretty() + "\n")?;
+    println!("wrote {out} ({n_benches} benches, requested threads {threads} [0=auto])");
     Ok(())
 }
 

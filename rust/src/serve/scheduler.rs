@@ -348,6 +348,14 @@ pub struct ReplicaSim<'a> {
     active: Vec<usize>,
     acc: MetricsAcc,
     clock: f64,
+    // Reusable per-tick scratch buffers: the tick loop is the
+    // simulator's hot path, and a `Vec` allocation per tick (contexts,
+    // prompts, admission lists) was measurable at cluster scale
+    // (DESIGN.md §Performance-engineering).  Cleared, never shrunk.
+    scratch_ctx: Vec<u64>,
+    scratch_prompts: Vec<u64>,
+    scratch_admitted: Vec<usize>,
+    scratch_waiting: Vec<usize>,
 }
 
 impl<'a> ReplicaSim<'a> {
@@ -372,6 +380,10 @@ impl<'a> ReplicaSim<'a> {
             active: Vec::new(),
             acc: MetricsAcc::new(),
             clock: 0.0,
+            scratch_ctx: Vec::new(),
+            scratch_prompts: Vec::new(),
+            scratch_admitted: Vec::new(),
+            scratch_waiting: Vec::new(),
         }
     }
 
@@ -447,11 +459,15 @@ impl<'a> ReplicaSim<'a> {
     /// One scheduler tick: admission, one batched decode step for
     /// every in-flight session, batched prefill of the admissions, and
     /// an occupancy sample.  Always makes progress when there is work.
+    ///
+    /// Allocation-free in the steady state: the per-tick lists live in
+    /// reusable scratch buffers (the wait queue and its drain buffer
+    /// ping-pong between ticks, retaining capacity).
     fn tick(&mut self) {
         // (1) Admission under the policy, batch slots, and KV budget.
         // `waiting` is in arrival order (the driver pushes arrivals in
-        // order and `still_waiting` preserves relative order), so FIFO
-        // needs no re-sort.
+        // order and the still-waiting drain preserves relative order),
+        // so FIFO needs no re-sort.
         if self.sched.policy == Policy::ShortestPromptFirst {
             let sessions = &self.sessions;
             self.waiting.sort_by(|&a, &b| {
@@ -459,9 +475,12 @@ impl<'a> ReplicaSim<'a> {
                 sa.prompt.cmp(&sb.prompt).then(sa.id.cmp(&sb.id))
             });
         }
-        let mut admitted: Vec<usize> = Vec::new();
-        let mut still_waiting: Vec<usize> = Vec::new();
-        for idx in std::mem::take(&mut self.waiting) {
+        let mut waiting = std::mem::take(&mut self.waiting);
+        let mut admitted = std::mem::take(&mut self.scratch_admitted);
+        let mut still_waiting = std::mem::take(&mut self.scratch_waiting);
+        admitted.clear();
+        still_waiting.clear();
+        for idx in waiting.drain(..) {
             let max_kv = kv_bytes_for_layers(
                 self.model,
                 self.sessions[idx].max_context(),
@@ -484,14 +503,17 @@ impl<'a> ReplicaSim<'a> {
                 still_waiting.push(idx);
             }
         }
+        self.scratch_waiting = waiting; // drained; keeps its capacity
         self.waiting = still_waiting;
 
         // (2) One batched decode step for every in-flight session,
         // scaled by the batch's fidelity factors (QoS tiers).
         if !self.active.is_empty() {
-            let contexts: Vec<u64> =
-                self.active.iter().map(|&i| self.sessions[i].context()).collect();
+            let mut contexts = std::mem::take(&mut self.scratch_ctx);
+            contexts.clear();
+            contexts.extend(self.active.iter().map(|&i| self.sessions[i].context()));
             let c = self.coster.decode(&contexts);
+            self.scratch_ctx = contexts;
             let (tf, ef) = self.batch_factors(&self.active);
             self.clock += c.ns * tf;
             self.acc.energy_pj += c.energy_pj * ef;
@@ -520,13 +542,15 @@ impl<'a> ReplicaSim<'a> {
         // (3) Prefill the sessions admitted this tick (one batched
         // pass; their first decode token comes next tick).
         if !admitted.is_empty() {
-            let prompts: Vec<u64> =
-                admitted.iter().map(|&i| self.sessions[i].spec.prompt).collect();
+            let mut prompts = std::mem::take(&mut self.scratch_prompts);
+            prompts.clear();
+            prompts.extend(admitted.iter().map(|&i| self.sessions[i].spec.prompt));
             let c = self.coster.prefill(&prompts);
+            self.scratch_prompts = prompts;
             let (tf, ef) = self.batch_factors(&admitted);
             self.clock += c.ns * tf;
             self.acc.energy_pj += c.energy_pj * ef;
-            for idx in admitted {
+            for &idx in &admitted {
                 self.sessions[idx].state = SessionState::Decoding;
                 // Degenerate zero-length generations finish at prefill.
                 if self.sessions[idx].spec.gen == 0 {
@@ -542,6 +566,7 @@ impl<'a> ReplicaSim<'a> {
                 }
             }
         }
+        self.scratch_admitted = admitted;
 
         self.acc.timeline.record(OccupancySample {
             t_ns: self.clock,

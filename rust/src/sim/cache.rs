@@ -1,9 +1,10 @@
-//! Memoized workload costing for the serving tick loop.
+//! Memoized workload costing for the serving tick loop — sharded,
+//! concurrent, and allocation-lean.
 //!
 //! The continuous-batching scheduler re-costs structurally identical
 //! workloads through [`simulate`] on every tick; at cluster scale most
 //! of a trace's wall-clock goes to that redundant costing.  This module
-//! removes it:
+//! removes it, in three tiers:
 //!
 //! * [`TickCoster`] costs one decode tick / prefill pass through the
 //!   *decomposed* form `base(B) + Σ attn(ctx_i)` (the MAC-exact split
@@ -12,28 +13,47 @@
 //!   on a tiny shape key — `(batch, layers)` or `(ctx, layers)` —
 //!   and structurally identical pieces recur constantly across ticks,
 //!   sessions, and replicas.
-//! * [`CostCache`] memoizes `simulate` on those shape keys.
-//!   `simulate` is a deterministic pure function of (config, workload,
-//!   options), so memoization is *bit-identical* to re-evaluation —
-//!   the invariant `tests/cluster_properties.rs` asserts — and a cache
-//!   can be shared across all replicas of a cluster run (one
-//!   `Rc<RefCell<_>>`, single-threaded simulated time).
-//! * [`StackCoster`] rolls per-stage costs up across pipeline-parallel
-//!   stack groups: steady-state decode ticks advance by the bottleneck
-//!   stage plus one inter-stack hop; prefill pays the full pipeline
-//!   fill (every stage plus every hop).
+//! * Each coster keeps **dense per-stage tables** (lock-free, indexed
+//!   directly by batch/ctx/rows/prompt) as a first level: in the steady
+//!   state a tick costs `B` array reads and float adds — no hashing, no
+//!   locks, no allocation.  New shapes appear only at the context
+//!   frontier, so `simulate` runs O(Δ new shapes) per tick.
+//! * [`CostCache`] is the second level: one `Arc`-shared, mutex-sharded
+//!   table keyed by **packed `u64` shape keys** ([`CostKey::pack`]),
+//!   shared across every replica and stack of a cluster run — and
+//!   across the threads of the parallel driver
+//!   ([`cluster::run_cluster`](crate::cluster::run_cluster)).  A shard
+//!   holds its lock across the miss evaluation, so every key is
+//!   simulated exactly once per run and the aggregate hit/miss counts
+//!   are deterministic even under concurrency.
 //!
-//! Invariants (DESIGN.md §Cluster-scale-out): cache on/off changes no
-//! metric bit; keys never collide across kinds; hit/miss counts are
-//! exact and logged by `serve-gen`.
+//! `simulate` is a deterministic pure function of (config, workload,
+//! options), so memoization at either level is *bit-identical* to
+//! re-evaluation — the invariant `tests/cluster_properties.rs` and
+//! `tests/perf_properties.rs` assert.  The per-tick summation order
+//! (`base`, then each session's `attn` in batch order) is identical on
+//! every path; a literal prefix-sum shortcut over the attention table
+//! was deliberately rejected because it would re-associate the float
+//! sum (DESIGN.md §Performance-engineering).
+//!
+//! [`StackCoster`] rolls per-stage costs up across pipeline-parallel
+//! stack groups: steady-state decode ticks advance by the bottleneck
+//! stage plus one inter-stack hop; prefill pays the full pipeline fill.
+//!
+//! Invariants (DESIGN.md §Performance-engineering): cache on/off and
+//! serial/parallel change no metric bit; packed keys never collide
+//! across kinds; aggregate hit/miss counts are exact, deterministic,
+//! and logged by `serve-gen`.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::{Arc, Mutex};
 
 use super::engine::{simulate, SimOptions};
 use crate::config::{ArtemisConfig, TransformerModel};
 use crate::dataflow::{LayerRange, StackLink};
+use crate::util::InlineVec;
 use crate::xfmr::{
     decode_attn_workload, decode_base_workload, prefill_attn_workload, prefill_base_workload,
 };
@@ -68,7 +88,46 @@ enum CostKey {
     PrefillAttn { prompt: u64, layers: u64 },
 }
 
-/// Exact hit/miss counts of one cache over a run.
+/// Packed-key layout: `[kind:2][layers:14][value:48]`.
+const KEY_VALUE_BITS: u32 = 48;
+const KEY_LAYER_BITS: u32 = 14;
+
+impl CostKey {
+    /// The key's `(kind, layers, value)` triple.
+    fn parts(self) -> (u64, u64, u64) {
+        match self {
+            CostKey::DecodeBase { batch, layers } => (0, layers, batch),
+            CostKey::DecodeAttn { ctx, layers } => (1, layers, ctx),
+            CostKey::PrefillBase { rows, layers } => (2, layers, rows),
+            CostKey::PrefillAttn { prompt, layers } => (3, layers, prompt),
+        }
+    }
+
+    /// Whether this kind belongs in the dense local tables.  Dense
+    /// tables are indexed directly by the shape value, so they only
+    /// pay off for small, dense, recurring values: batch sizes
+    /// (≤ max_batch), per-session contexts and prompts.  `PrefillBase`
+    /// keys are the *sum* of a batch's prompt lengths — large, sparse,
+    /// and rarely repeated — so densifying them would allocate
+    /// O(max rows) mostly-empty entries per replica for almost no
+    /// hits; they go straight to the shared hashed cache instead.
+    fn dense_local(self) -> bool {
+        !matches!(self, CostKey::PrefillBase { .. })
+    }
+
+    /// Pack into one `u64`: 2 kind bits, 14 layer bits, 48 value bits.
+    /// Collision-free by construction within the asserted ranges (a
+    /// 2^14-layer model or a 2^48-token batch is far beyond anything
+    /// the simulator can represent, so the bounds cost nothing).
+    fn pack(self) -> u64 {
+        let (kind, layers, value) = self.parts();
+        assert!(layers < (1 << KEY_LAYER_BITS), "layer count {layers} overflows the packed key");
+        assert!(value < (1 << KEY_VALUE_BITS), "shape value {value} overflows the packed key");
+        (kind << (KEY_LAYER_BITS + KEY_VALUE_BITS)) | (layers << KEY_VALUE_BITS) | value
+    }
+}
+
+/// Exact hit/miss counts of one cache (or coster) over a run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -88,58 +147,162 @@ impl CacheStats {
             self.hits as f64 / self.lookups() as f64
         }
     }
+
+    /// Fold another counter in (cross-replica / cross-shard roll-up).
+    pub fn merged(self, o: CacheStats) -> CacheStats {
+        CacheStats { hits: self.hits + o.hits, misses: self.misses + o.misses }
+    }
 }
 
-/// Memoization table for [`TickCoster`] pieces.
+/// Trivial multiply hasher for already-packed `u64` keys: the shape
+/// key is compact and collision-free, so SipHashing it again on every
+/// tick lookup is pure overhead.
 #[derive(Debug, Default)]
+struct PackedKeyHasher(u64);
+
+impl Hasher for PackedKeyHasher {
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("packed cost keys hash via write_u64 only");
+    }
+
+    fn write_u64(&mut self, x: u64) {
+        // Fibonacci multiply spreads the low-entropy shape bits across
+        // the word; the map then uses the high bits for its buckets.
+        self.0 = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Shard count of the concurrent cache: comfortably above the replica
+/// thread counts the driver uses (≤ stack count, typically ≤ 8), so
+/// two threads rarely contend on one mutex.
+const SHARD_COUNT: usize = 16;
+
+fn shard_of(packed: u64) -> usize {
+    // Top 4 bits of the Fibonacci-multiplied key (same spread as the
+    // in-shard hasher, different bits).
+    (packed.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 60) as usize
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    map: HashMap<u64, TickCost, BuildHasherDefault<PackedKeyHasher>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// The shared, sharded memoization table (level 2 of the costing
+/// hierarchy — see the module docs).  `Arc`-shareable across replicas,
+/// stacks, and driver threads.
+#[derive(Debug)]
 pub struct CostCache {
-    map: HashMap<CostKey, TickCost>,
-    stats: CacheStats,
+    shards: Vec<Mutex<Shard>>,
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl CostCache {
     pub fn new() -> Self {
-        Self::default()
+        Self { shards: (0..SHARD_COUNT).map(|_| Mutex::new(Shard::default())).collect() }
     }
 
-    /// A cache handle shareable across the replicas of one cluster run.
-    pub fn shared() -> Rc<RefCell<CostCache>> {
-        Rc::new(RefCell::new(CostCache::new()))
+    /// A cache handle shareable across the replicas (and threads) of
+    /// one cluster run.
+    pub fn shared() -> Arc<CostCache> {
+        Arc::new(CostCache::new())
     }
 
+    /// Look up `packed`, evaluating on miss *while holding the shard
+    /// lock* — every key is evaluated exactly once per cache, which
+    /// keeps the aggregate stats deterministic under concurrency.
+    /// Returns `(cost, was_hit)`.
+    fn get_or_insert_with(
+        &self,
+        packed: u64,
+        eval: impl FnOnce() -> TickCost,
+    ) -> (TickCost, bool) {
+        let mut shard = self.shards[shard_of(packed)].lock().unwrap();
+        if let Some(&c) = shard.map.get(&packed) {
+            shard.hits += 1;
+            return (c, true);
+        }
+        shard.misses += 1;
+        let c = eval();
+        shard.map.insert(packed, c);
+        (c, false)
+    }
+
+    /// Aggregate hit/miss counts over all shards.  `misses` equals the
+    /// number of distinct keys ever evaluated (exactly-once property).
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        self.shards.iter().fold(CacheStats::default(), |acc, s| {
+            let s = s.lock().unwrap();
+            acc.merged(CacheStats { hits: s.hits, misses: s.misses })
+        })
     }
 
+    /// Distinct keys resident across all shards.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
+    }
+}
+
+/// Level-1 dense tables of one coster for one `layers` value: direct
+/// indexing by the key's shape value, no locks, no hashing.
+#[derive(Debug)]
+struct StageTables {
+    layers: u64,
+    /// Indexed by key kind (see [`CostKey::parts`]), then shape value.
+    by_kind: [Vec<Option<TickCost>>; 4],
+}
+
+impl StageTables {
+    fn new(layers: u64) -> Self {
+        Self { layers, by_kind: [Vec::new(), Vec::new(), Vec::new(), Vec::new()] }
     }
 
-    fn get_or_insert_with(&mut self, key: CostKey, eval: impl FnOnce() -> TickCost) -> TickCost {
-        if let Some(&c) = self.map.get(&key) {
-            self.stats.hits += 1;
-            return c;
+    fn get(&self, kind: u64, value: u64) -> Option<TickCost> {
+        self.by_kind[kind as usize].get(value as usize).copied().flatten()
+    }
+
+    fn put(&mut self, kind: u64, value: u64, cost: TickCost) {
+        let t = &mut self.by_kind[kind as usize];
+        let idx = value as usize;
+        if t.len() <= idx {
+            t.resize(idx + 1, None);
         }
-        self.stats.misses += 1;
-        let c = eval();
-        self.map.insert(key, c);
-        c
+        t[idx] = Some(cost);
     }
 }
 
 /// Costs decode ticks and prefill passes for one (config, model,
-/// options) triple, optionally memoized through a (shareable)
-/// [`CostCache`].
+/// options) triple, optionally memoized through dense local tables
+/// backed by a (shareable, sharded) [`CostCache`].
 #[derive(Debug)]
 pub struct TickCoster<'a> {
     cfg: &'a ArtemisConfig,
     model: &'a TransformerModel,
     opts: SimOptions,
-    cache: Option<Rc<RefCell<CostCache>>>,
+    cache: Option<Arc<CostCache>>,
+    /// Level-1 dense tables, one entry per distinct `layers` value
+    /// (1 for dp replicas, one per stage for pp groups).
+    local: RefCell<Vec<StageTables>>,
+    /// This coster's lookup counters: a hit is either local-table or
+    /// shared-cache; a miss means `simulate` ran on this coster's
+    /// behalf.  Summed across replicas for the run-wide line.
+    hits: Cell<u64>,
+    misses: Cell<u64>,
 }
 
 impl<'a> TickCoster<'a> {
@@ -147,9 +310,17 @@ impl<'a> TickCoster<'a> {
         cfg: &'a ArtemisConfig,
         model: &'a TransformerModel,
         opts: SimOptions,
-        cache: Option<Rc<RefCell<CostCache>>>,
+        cache: Option<Arc<CostCache>>,
     ) -> Self {
-        Self { cfg, model, opts, cache }
+        Self {
+            cfg,
+            model,
+            opts,
+            cache,
+            local: RefCell::new(Vec::new()),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
     }
 
     /// Evaluate one piece through [`simulate`] (the cache-miss path).
@@ -171,14 +342,46 @@ impl<'a> TickCoster<'a> {
     }
 
     fn cost(&self, key: CostKey) -> TickCost {
-        match &self.cache {
-            Some(cache) => cache.borrow_mut().get_or_insert_with(key, || self.eval(key)),
-            None => self.eval(key),
+        let Some(cache) = self.cache.as_ref() else {
+            // Cache disabled: evaluate every piece, count nothing — the
+            // uncached run is the measurement baseline.
+            return self.eval(key);
+        };
+        let (kind, layers, value) = key.parts();
+        let dense = key.dense_local();
+        if dense {
+            if let Some(st) = self.local.borrow().iter().find(|s| s.layers == layers) {
+                if let Some(c) = st.get(kind, value) {
+                    self.hits.set(self.hits.get() + 1);
+                    return c;
+                }
+            }
         }
+        // Local miss (or sparse kind): consult — and on miss fill —
+        // the shared cache.
+        let (c, was_hit) = cache.get_or_insert_with(key.pack(), || self.eval(key));
+        if was_hit {
+            self.hits.set(self.hits.get() + 1);
+        } else {
+            self.misses.set(self.misses.get() + 1);
+        }
+        if dense {
+            let mut local = self.local.borrow_mut();
+            let pos = match local.iter().position(|s| s.layers == layers) {
+                Some(p) => p,
+                None => {
+                    local.push(StageTables::new(layers));
+                    local.len() - 1
+                }
+            };
+            local[pos].put(kind, value, c);
+        }
+        c
     }
 
     /// One decode tick of `contexts.len()` sessions over a stage of
-    /// `layers` layers: `base(B) + Σ attn(ctx_i)`.
+    /// `layers` layers: `base(B) + Σ attn(ctx_i)` — the summation order
+    /// every costing path preserves (bit-identity).
     pub fn decode_stage(&self, contexts: &[u64], layers: u64) -> TickCost {
         if contexts.is_empty() || layers == 0 {
             return TickCost::ZERO;
@@ -203,9 +406,9 @@ impl<'a> TickCoster<'a> {
         total
     }
 
-    /// Stats of the attached cache (zeros when uncached).
+    /// This coster's lookup stats (zeros when uncached).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.as_ref().map(|c| c.borrow().stats()).unwrap_or_default()
+        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
     }
 }
 
@@ -223,8 +426,9 @@ impl<'a> TickCoster<'a> {
 #[derive(Debug)]
 pub struct StackCoster<'a> {
     tick: TickCoster<'a>,
-    /// Layers owned by each pipeline stage (non-empty stages only).
-    stage_layers: Vec<u64>,
+    /// Layers owned by each pipeline stage (non-empty stages only) —
+    /// inline up to 8 stages, the deepest pipeline the reports sweep.
+    stage_layers: InlineVec<u64, 8>,
     /// Boundary hops an activation set crosses end-to-end.
     hops: u64,
     link: StackLink,
@@ -237,12 +441,12 @@ impl<'a> StackCoster<'a> {
         cfg: &'a ArtemisConfig,
         model: &'a TransformerModel,
         opts: SimOptions,
-        cache: Option<Rc<RefCell<CostCache>>>,
+        cache: Option<Arc<CostCache>>,
     ) -> Self {
         let layers = model.layers as u64;
         Self {
             tick: TickCoster::new(cfg, model, opts, cache),
-            stage_layers: vec![layers],
+            stage_layers: InlineVec::from_slice(&[layers]),
             hops: 0,
             link: StackLink::new(&crate::config::StackLinkParams::default()),
             d_model: model.d_model as u64,
@@ -255,13 +459,15 @@ impl<'a> StackCoster<'a> {
         cfg: &'a ArtemisConfig,
         model: &'a TransformerModel,
         opts: SimOptions,
-        cache: Option<Rc<RefCell<CostCache>>>,
+        cache: Option<Arc<CostCache>>,
         groups: &[LayerRange],
         link: StackLink,
     ) -> Self {
         assert!(!groups.is_empty(), "pipeline group needs at least one stack");
-        let stage_layers: Vec<u64> =
-            groups.iter().map(LayerRange::len).filter(|&l| l > 0).collect();
+        let mut stage_layers = InlineVec::new();
+        for l in groups.iter().map(LayerRange::len).filter(|&l| l > 0) {
+            stage_layers.push(l);
+        }
         Self {
             tick: TickCoster::new(cfg, model, opts, cache),
             stage_layers,
@@ -326,7 +532,7 @@ mod tests {
     use crate::config::{ModelZoo, StackLinkParams};
     use crate::dataflow::stack_groups;
 
-    type SharedCache = Option<Rc<RefCell<CostCache>>>;
+    type SharedCache = Option<Arc<CostCache>>;
 
     fn coster_pair(cached: bool) -> (ArtemisConfig, TransformerModel, SharedCache) {
         (
@@ -334,6 +540,38 @@ mod tests {
             ModelZoo::transformer_base(),
             cached.then(CostCache::shared),
         )
+    }
+
+    #[test]
+    fn packed_keys_round_trip_and_never_collide() {
+        let layers = [1u64, 2, 24, 100];
+        let values = [1u64, 2, 8, 257, 4096, (1 << 20) + 3];
+        let mut seen = std::collections::HashSet::new();
+        for &l in &layers {
+            for &v in &values {
+                for key in [
+                    CostKey::DecodeBase { batch: v, layers: l },
+                    CostKey::DecodeAttn { ctx: v, layers: l },
+                    CostKey::PrefillBase { rows: v, layers: l },
+                    CostKey::PrefillAttn { prompt: v, layers: l },
+                ] {
+                    let packed = key.pack();
+                    assert!(seen.insert(packed), "collision on {key:?} -> {packed:#x}");
+                    // The pack is invertible: parts survive the layout.
+                    let (kind, kl, kv) = key.parts();
+                    assert_eq!(packed >> (KEY_LAYER_BITS + KEY_VALUE_BITS), kind);
+                    assert_eq!((packed >> KEY_VALUE_BITS) & ((1 << KEY_LAYER_BITS) - 1), kl);
+                    assert_eq!(packed & ((1 << KEY_VALUE_BITS) - 1), kv);
+                }
+            }
+        }
+        assert_eq!(seen.len(), layers.len() * values.len() * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the packed key")]
+    fn oversized_shape_values_are_rejected_loudly() {
+        CostKey::DecodeAttn { ctx: 1 << KEY_VALUE_BITS, layers: 1 }.pack();
     }
 
     #[test]
@@ -429,8 +667,77 @@ mod tests {
         let first = a.decode_tick(&[77]);
         let second = b.decode_tick(&[77]);
         assert_eq!(first, second);
-        let stats = cache.unwrap().borrow().stats();
+        // The *shared* table sees one consult per coster per key: the
+        // first coster misses both pieces, the second hits both (its
+        // own dense tables were still cold).
+        let stats = cache.as_ref().unwrap().stats();
         assert_eq!(stats.misses, 2); // base + attn, from the first coster
         assert_eq!(stats.hits, 2); // the second coster hits both
+        assert_eq!(cache.unwrap().len(), 2);
+        // Coster-local counters attribute the same events.
+        assert_eq!(a.cache_stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(b.cache_stats(), CacheStats { hits: 2, misses: 0 });
+    }
+
+    #[test]
+    fn local_tables_absorb_repeat_lookups_without_shared_consults() {
+        let (cfg, model, cache) = coster_pair(true);
+        let c = TickCoster::new(&cfg, &model, SimOptions::artemis(), cache.clone());
+        let l = model.layers as u64;
+        let a = c.decode_stage(&[64, 64, 64], l);
+        let b = c.decode_stage(&[64, 64, 64], l);
+        assert_eq!(a.ns.to_bits(), b.ns.to_bits());
+        // Coster counters: 8 lookups, 2 distinct keys.
+        assert_eq!(c.cache_stats(), CacheStats { hits: 6, misses: 2 });
+        // The shared cache was consulted exactly once per distinct key:
+        // every repeat was served by the dense local tables.
+        assert_eq!(cache.unwrap().stats(), CacheStats { hits: 0, misses: 2 });
+    }
+
+    #[test]
+    fn sharded_cache_is_deterministic_under_threads() {
+        // N threads hammer one shared cache with overlapping shape
+        // streams: every thread sees bit-identical costs, and the
+        // summed stats equal the serial expectation (lock-held-eval
+        // gives the exactly-once miss property).
+        let (cfg, model, _) = coster_pair(false);
+        let serial_cache = CostCache::shared();
+        let serial = TickCoster::new(&cfg, &model, SimOptions::artemis(), Some(serial_cache));
+        let ctxs: Vec<u64> = (0..32).map(|i| 16 + (i % 8) * 10).collect();
+        let l = model.layers as u64;
+        let want = serial.decode_stage(&ctxs, l);
+
+        let shared = CostCache::shared();
+        let results: Vec<TickCost> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let cache = shared.clone();
+                    let (cfg, model, ctxs) = (&cfg, &model, &ctxs);
+                    s.spawn(move || {
+                        let c = TickCoster::new(cfg, model, SimOptions::artemis(), Some(cache));
+                        c.decode_stage(ctxs, l)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        for r in &results {
+            assert_eq!(r.ns.to_bits(), want.ns.to_bits());
+            assert_eq!(r.energy_pj.to_bits(), want.energy_pj.to_bits());
+        }
+        // Distinct keys: 1 base + 8 attn = 9, evaluated exactly once
+        // across all threads; every other shared consult hit.
+        let stats = shared.stats();
+        assert_eq!(stats.misses, 9);
+        assert_eq!(stats.lookups(), 4 * 9); // each coster consults each key once
+        assert_eq!(shared.len(), 9);
+    }
+
+    #[test]
+    fn uncached_coster_counts_nothing() {
+        let (cfg, model, _) = coster_pair(false);
+        let c = TickCoster::new(&cfg, &model, SimOptions::artemis(), None);
+        c.decode_stage(&[64, 100], model.layers as u64);
+        assert_eq!(c.cache_stats(), CacheStats::default());
     }
 }

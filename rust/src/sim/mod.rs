@@ -9,8 +9,13 @@
 //! leaves open are documented in DESIGN.md §Modeling-decisions.
 //!
 //! The serving tick loop costs its workloads through the memoized
-//! [`TickCoster`]/[`CostCache`] layer (bit-identical to direct
-//! [`simulate`] calls — DESIGN.md §Cluster-scale-out).
+//! [`TickCoster`]/[`CostCache`] layer — per-coster dense tables over an
+//! `Arc`-shared, mutex-sharded map keyed by packed `u64` shape keys,
+//! bit-identical to direct [`simulate`] calls and safe to share across
+//! the parallel cluster driver's threads (DESIGN.md
+//! §Performance-engineering).  [`simulate`] itself replays identical
+//! consecutive layers from a recorded charge sequence instead of
+//! recomputing them — also bit-identical by construction.
 
 mod cache;
 mod engine;

@@ -159,3 +159,6 @@ mod tests {
 pub mod bench;
 pub mod json;
 pub mod prop;
+pub mod smallvec;
+
+pub use smallvec::InlineVec;

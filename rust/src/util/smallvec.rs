@@ -1,0 +1,140 @@
+//! A SmallVec-style inline vector for tiny hot-path sequences.
+//!
+//! The serving hot loop keeps per-stage layer counts ([`crate::sim::StackCoster`])
+//! in collections of at most a handful of elements; a heap `Vec` there
+//! costs an allocation per replica and a pointer chase per tick.
+//! [`InlineVec`] stores up to `N` elements inline on the stack and
+//! spills to a heap `Vec` only beyond that — the usual small-vector
+//! trade, implemented in-repo because the offline build carries no
+//! external crates (DESIGN.md §Performance-engineering).
+
+/// A vector of `T` that stores up to `N` elements inline.
+///
+/// Only the tiny API surface the simulator needs: push, len, slice
+/// access, and iteration.  `T: Copy + Default` keeps the inline buffer
+/// trivially initializable.
+#[derive(Debug, Clone)]
+pub struct InlineVec<T: Copy + Default, const N: usize> {
+    len: usize,
+    inline: [T; N],
+    /// Heap spill, used only once `len > N` (then it holds *all*
+    /// elements, so `as_slice` is always one contiguous slice).
+    spill: Vec<T>,
+}
+
+impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
+    pub fn new() -> Self {
+        Self { len: 0, inline: [T::default(); N], spill: Vec::new() }
+    }
+
+    pub fn from_slice(xs: &[T]) -> Self {
+        let mut v = Self::new();
+        for &x in xs {
+            v.push(x);
+        }
+        v
+    }
+
+    pub fn push(&mut self, x: T) {
+        if self.spill.is_empty() && self.len < N {
+            self.inline[self.len] = x;
+            self.len += 1;
+            return;
+        }
+        if self.spill.is_empty() {
+            // First spill: move the inline prefix to the heap.
+            self.spill.reserve(self.len + 1);
+            self.spill.extend_from_slice(&self.inline[..self.len]);
+        }
+        self.spill.push(x);
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the elements still live in the inline buffer.
+    pub fn is_inline(&self) -> bool {
+        self.spill.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        if self.spill.is_empty() {
+            &self.inline[..self.len]
+        } else {
+            &self.spill
+        }
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a, T: Copy + Default, const N: usize> IntoIterator for &'a InlineVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_inline_up_to_capacity() {
+        let mut v: InlineVec<u64, 4> = InlineVec::new();
+        assert!(v.is_empty());
+        for i in 0..4 {
+            v.push(i);
+        }
+        assert_eq!(v.len(), 4);
+        assert!(v.is_inline());
+        assert_eq!(v.as_slice(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn spills_past_capacity_and_keeps_order() {
+        let mut v: InlineVec<u64, 2> = InlineVec::new();
+        for i in 0..7 {
+            v.push(10 * i);
+        }
+        assert_eq!(v.len(), 7);
+        assert!(!v.is_inline());
+        assert_eq!(v.as_slice(), &[0, 10, 20, 30, 40, 50, 60]);
+        // Pushing after the spill keeps appending to the heap.
+        v.push(70);
+        assert_eq!(v.as_slice().last(), Some(&70));
+    }
+
+    #[test]
+    fn from_slice_round_trips() {
+        let xs = [3u64, 1, 4, 1, 5, 9, 2, 6];
+        for cut in 0..xs.len() {
+            let v: InlineVec<u64, 4> = InlineVec::from_slice(&xs[..cut]);
+            assert_eq!(v.as_slice(), &xs[..cut]);
+            assert_eq!(v.iter().count(), cut);
+        }
+    }
+
+    #[test]
+    fn iterates_by_reference() {
+        let v: InlineVec<u64, 3> = InlineVec::from_slice(&[5, 6, 7]);
+        let sum: u64 = (&v).into_iter().sum();
+        assert_eq!(sum, 18);
+    }
+}

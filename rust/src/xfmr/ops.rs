@@ -49,7 +49,12 @@ impl Op {
 }
 
 /// One transformer layer's ops plus its inter-bank collective count.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is load-bearing: the simulation engine detects runs of
+/// structurally identical layers by comparing consecutive `LayerOps`
+/// and replays the first layer's recorded cost instead of recomputing
+/// it (bit-identically — see `sim::simulate`).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerOps {
     pub ops: Vec<Op>,
     /// All-gathers of sharded K/V matrices needed by the attention under

@@ -132,6 +132,88 @@ fn serve_gen_cluster_prints_aggregate_and_cache_stats() {
 }
 
 #[test]
+fn serve_gen_cluster_logs_one_accurate_aggregated_hit_rate() {
+    // The cost-cache line aggregates every replica's lookup counters;
+    // the printed percentage must match the printed hits/misses
+    // exactly (regression test for the per-replica/reset stats bug).
+    let args = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "2",
+        "--sessions",
+        "10",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--stacks",
+        "3",
+    ];
+    let (ok, out, stderr) = run(&args);
+    assert!(ok, "cluster serve-gen failed: {stderr}");
+    let line = out
+        .lines()
+        .find(|l| l.starts_with("cost-cache: on"))
+        .unwrap_or_else(|| panic!("no cost-cache line:\n{out}"));
+    let grab = |tag: &str| -> f64 {
+        let rest = &line[line.find(tag).unwrap_or_else(|| panic!("no '{tag}': {line}"))
+            + tag.len()..];
+        rest.trim_start()
+            .split(|c: char| !(c.is_ascii_digit() || c == '.'))
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap_or_else(|e| panic!("bad number after '{tag}' ({e}): {line}"))
+    };
+    let (hits, misses, rate) = (grab("hits"), grab("misses"), grab("hit-rate"));
+    assert!(hits + misses > 0.0, "cache never consulted: {line}");
+    let expect = 100.0 * hits / (hits + misses);
+    assert!(
+        (rate - expect).abs() < 0.05 + 1e-9,
+        "logged hit-rate {rate}% vs recomputed {expect:.3}% ({line})"
+    );
+    // A multi-replica chat trace memoizes most lookups.
+    assert!(expect > 50.0, "implausibly low aggregated hit rate: {line}");
+}
+
+#[test]
+fn serve_gen_threads_flag_never_moves_a_number() {
+    // --threads is a wall-clock knob only: serial and parallel drivers
+    // must print byte-identical reports (the perf PR's core invariant).
+    let base = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "8",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--stacks",
+        "2",
+    ];
+    let mut serial = base.to_vec();
+    serial.extend(["--threads", "1"]);
+    let mut parallel = base.to_vec();
+    parallel.extend(["--threads", "2"]);
+    let (ok1, out1, stderr) = run(&serial);
+    assert!(ok1, "serial serve-gen failed: {stderr}");
+    let (ok2, out2, stderr) = run(&parallel);
+    assert!(ok2, "parallel serve-gen failed: {stderr}");
+    assert_eq!(out1, out2, "--threads 1 vs --threads 2 output drifted");
+    // --threads alone (without --stacks) selects cluster mode too.
+    let (ok3, out3, stderr) = run(&["serve-gen", "--sessions", "4", "--model",
+        "Transformer-base", "--threads", "1"]);
+    assert!(ok3, "threads-only serve-gen failed: {stderr}");
+    assert!(out3.contains("serve-gen cluster"), "{out3}");
+}
+
+#[test]
 fn serve_gen_rejects_bad_cluster_flags() {
     let (ok, _, stderr) = run(&["serve-gen", "--stacks", "2", "--placement", "sideways"]);
     assert!(!ok);

@@ -1,0 +1,204 @@
+//! Property tests for the parallel, allocation-lean simulator core
+//! (PR 5): the driver-thread count, the sharded cost cache, and the
+//! incremental tick costing are pure wall-clock knobs — none of them
+//! may move a single bit of any reported metric, for dp and pp
+//! placements, mixed QoS tiers, and randomized traces.  The aggregated
+//! cache hit-rate counters must also be deterministic across thread
+//! counts (deterministic in-repo harness, `util::prop`).
+
+use artemis::cluster::{run_cluster, ClusterReport};
+use artemis::config::{ArtemisConfig, ClusterConfig, ModelZoo, Placement};
+use artemis::serve::{Policy, QosAssignment, RoutePolicy, Scenario, SchedulerConfig};
+use artemis::sim::CacheStats;
+use artemis::util::prop::check;
+
+/// Small fast scenario on the 2-layer Transformer-base so each
+/// property case simulates in milliseconds.
+fn fast_scenario(sessions: usize) -> Scenario {
+    let mut sc = Scenario::chat().with_sessions(sessions);
+    sc.model = ModelZoo::transformer_base();
+    sc
+}
+
+fn sched(batch: usize) -> SchedulerConfig {
+    SchedulerConfig { max_batch: batch, policy: Policy::Fifo }
+}
+
+/// Every simulated number of two cluster reports, compared bitwise.
+fn assert_bit_identical(a: &ClusterReport, b: &ClusterReport, what: &str) {
+    let pairs = [(&a.aggregate, &b.aggregate)];
+    assert_eq!(a.per_stack.len(), b.per_stack.len(), "{what}: stack count");
+    let stacks = a.per_stack.iter().zip(&b.per_stack);
+    for (x, y) in pairs.into_iter().chain(stacks) {
+        assert_eq!(x.sessions, y.sessions, "{what}: sessions");
+        assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+        assert_eq!(x.total_tokens, y.total_tokens, "{what}: tokens");
+        assert_eq!(x.ticks, y.ticks, "{what}: ticks");
+        assert_eq!(x.makespan_ns.to_bits(), y.makespan_ns.to_bits(), "{what}: makespan");
+        assert_eq!(x.sim_energy_pj.to_bits(), y.sim_energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(x.mean_batch.to_bits(), y.mean_batch.to_bits(), "{what}: mean batch");
+        assert_eq!(x.ttft.p50.to_bits(), y.ttft.p50.to_bits(), "{what}: ttft p50");
+        assert_eq!(x.ttft.p99.to_bits(), y.ttft.p99.to_bits(), "{what}: ttft p99");
+        assert_eq!(x.per_token.mean.to_bits(), y.per_token.mean.to_bits(), "{what}: tok mean");
+        assert_eq!(x.per_token.p99.to_bits(), y.per_token.p99.to_bits(), "{what}: tok p99");
+        assert_eq!(x.itl.p50.to_bits(), y.itl.p50.to_bits(), "{what}: itl p50");
+        assert_eq!(x.accuracy.p50.to_bits(), y.accuracy.p50.to_bits(), "{what}: acc p50");
+        assert_eq!(x.accuracy.min.to_bits(), y.accuracy.min.to_bits(), "{what}: acc min");
+        assert_eq!(x.peak_kv_per_bank, y.peak_kv_per_bank, "{what}: peak kv");
+        assert_eq!(x.session_reports.len(), y.session_reports.len(), "{what}: report len");
+        for (sa, sb) in x.session_reports.iter().zip(&y.session_reports) {
+            assert_eq!(sa.id, sb.id, "{what}: session order");
+            assert_eq!(sa.generated, sb.generated, "{what}: generated");
+            assert_eq!(sa.rejected, sb.rejected, "{what}: rejected flag");
+            assert_eq!(sa.ttft_ns.to_bits(), sb.ttft_ns.to_bits(), "{what}: session ttft");
+            assert_eq!(
+                sa.finished_ns.to_bits(),
+                sb.finished_ns.to_bits(),
+                "{what}: session finish"
+            );
+            assert_eq!(sa.tier, sb.tier, "{what}: tier");
+            assert_eq!(
+                sa.est_accuracy.to_bits(),
+                sb.est_accuracy.to_bits(),
+                "{what}: session accuracy"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_driver_is_bit_identical_to_serial_dp() {
+    let cfg = ArtemisConfig::default();
+    check(5, 0x9E_0001, |g| {
+        let mut sc = fast_scenario(g.usize_in(6, 14));
+        if g.bool() {
+            sc = sc.with_qos(QosAssignment::Mixed); // mixed tiers in flight
+        }
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let stacks = [2u64, 3, 4][g.usize_in(0, 2)];
+        let route = [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::KvHeadroom]
+            [g.usize_in(0, 2)];
+        let s = sched(g.usize_in(2, 6));
+        let cl = ClusterConfig::new(stacks, Placement::DataParallel);
+        let serial = run_cluster(
+            &cfg,
+            &sc.model,
+            &trace,
+            &cl.with_threads(1),
+            &s,
+            route,
+            true,
+        );
+        for threads in [2usize, 4] {
+            let parallel = run_cluster(
+                &cfg,
+                &sc.model,
+                &trace,
+                &cl.with_threads(threads),
+                &s,
+                route,
+                true,
+            );
+            assert!(parallel.threads <= stacks as usize);
+            assert_bit_identical(&serial, &parallel, &format!("dp t{threads}"));
+            // The aggregated cache counters are part of the contract:
+            // same lookups, same exactly-once misses, any schedule.
+            assert_eq!(serial.cache, parallel.cache, "cache stats t{threads}");
+        }
+    });
+}
+
+#[test]
+fn parallel_driver_is_bit_identical_to_serial_pp() {
+    let cfg = ArtemisConfig::default();
+    check(3, 0x9E_0002, |g| {
+        let mut sc = fast_scenario(g.usize_in(5, 10));
+        if g.bool() {
+            sc = sc.with_qos(QosAssignment::Mixed);
+        }
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let cl = ClusterConfig::new(2, Placement::PipelineParallel);
+        let s = sched(g.usize_in(2, 5));
+        let route = RoutePolicy::LeastLoaded;
+        let serial = run_cluster(&cfg, &sc.model, &trace, &cl.with_threads(1), &s, route, true);
+        let auto = run_cluster(&cfg, &sc.model, &trace, &cl.with_threads(0), &s, route, true);
+        // A pp group is one logical replica: the pool resolves to one
+        // worker, and the numbers must still match the serial path.
+        assert_eq!(auto.threads, 1);
+        assert_bit_identical(&serial, &auto, "pp auto");
+        assert_eq!(serial.cache, auto.cache, "pp cache stats");
+    });
+}
+
+#[test]
+fn sharded_cache_on_off_is_bit_identical_under_the_parallel_driver() {
+    let cfg = ArtemisConfig::default();
+    check(3, 0x9E_0003, |g| {
+        let sc = fast_scenario(g.usize_in(6, 12)).with_qos(QosAssignment::Mixed);
+        let trace = sc.generate(g.u64_below(1 << 20) + 1);
+        let cl = ClusterConfig::new(4, Placement::DataParallel).with_threads(4);
+        let s = sched(g.usize_in(2, 6));
+        let hot = run_cluster(&cfg, &sc.model, &trace, &cl, &s, RoutePolicy::LeastLoaded, true);
+        let cold = run_cluster(&cfg, &sc.model, &trace, &cl, &s, RoutePolicy::LeastLoaded, false);
+        assert_bit_identical(&hot, &cold, "cache on/off");
+        assert!(hot.cache.lookups() > 0, "cached run must consult the cache");
+        assert_eq!(cold.cache, CacheStats::default(), "uncached run must count nothing");
+    });
+}
+
+#[test]
+fn aggregated_cache_stats_sum_replicas_and_hold_across_thread_counts() {
+    let cfg = ArtemisConfig::default();
+    let sc = fast_scenario(16);
+    let trace = sc.generate(11);
+    let s = sched(4);
+    let cl = ClusterConfig::new(4, Placement::DataParallel);
+    let mut seen: Option<CacheStats> = None;
+    for threads in [1usize, 2, 4] {
+        let r = run_cluster(
+            &cfg,
+            &sc.model,
+            &trace,
+            &cl.with_threads(threads),
+            &s,
+            RoutePolicy::RoundRobin,
+            true,
+        );
+        // The run-wide line is the exact sum of the per-replica
+        // counters (the satellite fix: no per-replica resets, no
+        // shared-consults-only undercount).
+        let summed = r
+            .cache_per_stack
+            .iter()
+            .fold(CacheStats::default(), |acc, &x| acc.merged(x));
+        assert_eq!(summed, r.cache);
+        assert_eq!(r.cache_per_stack.len(), 4);
+        assert!(r.cache.lookups() > 0);
+        assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
+        // And the aggregate is schedule-independent.
+        match seen {
+            None => seen = Some(r.cache),
+            Some(prev) => assert_eq!(prev, r.cache, "threads={threads}"),
+        }
+    }
+}
+
+#[test]
+fn thread_knob_survives_kv_pressure_and_rejections() {
+    // Tiny banks + long sessions: admission control and rejections in
+    // play; the parallel driver must still match the serial one.
+    let mut cfg = ArtemisConfig::default();
+    cfg.hbm.subarrays_per_bank = 16;
+    let mut sc = Scenario::summarize().with_sessions(10);
+    sc.model = ModelZoo::transformer_base();
+    let trace = sc.generate(3);
+    let s = sched(6);
+    let cl = ClusterConfig::new(3, Placement::DataParallel);
+    let route = RoutePolicy::KvHeadroom;
+    let serial = run_cluster(&cfg, &sc.model, &trace, &cl.with_threads(1), &s, route, true);
+    let parallel = run_cluster(&cfg, &sc.model, &trace, &cl.with_threads(3), &s, route, true);
+    assert_bit_identical(&serial, &parallel, "kv pressure");
+    for rep in &parallel.per_stack {
+        assert!(rep.peak_kv_per_bank <= rep.kv_budget_per_bank);
+    }
+}
