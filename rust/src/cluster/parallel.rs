@@ -43,7 +43,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex, PoisonError};
 
-use crate::serve::{ReplicaSim, Router, SessionSpec};
+use crate::serve::{Phase, PhaseProfile, PhaseTimer, ReplicaSim, Router, SessionSpec};
 
 /// Command sentinel: all-ones is a quiet-NaN bit pattern that
 /// `f64::to_bits` never produces for a (non-negative, finite or `∞`)
@@ -53,12 +53,15 @@ const SHUTDOWN: u64 = u64::MAX;
 /// Drive `replicas` through `order` with `threads` workers; returns the
 /// replicas (in their original index order) after every session has
 /// been served.  `threads` must be >= 2 — the caller keeps the plain
-/// serial loop for the single-threaded path.
+/// serial loop for the single-threaded path.  The main-thread routing
+/// sections (load gather + route decision) are charged to
+/// `routing_profile` under `--features profiling`.
 pub(crate) fn drive_parallel<'a>(
     replicas: Vec<ReplicaSim<'a>>,
     order: &[SessionSpec],
     router: &mut Router,
     threads: usize,
+    routing_profile: &mut PhaseProfile,
 ) -> Vec<ReplicaSim<'a>> {
     let n = replicas.len();
     debug_assert!(threads >= 2, "serial driving belongs to the caller");
@@ -121,12 +124,14 @@ pub(crate) fn drive_parallel<'a>(
         for spec in order {
             epoch(spec.arrival_ns.to_bits());
             // Route against live load, gathered in index order.
+            let timer = PhaseTimer::start();
             let loads: Vec<_> = cells
                 .iter()
                 .enumerate()
                 .map(|(i, c)| c.lock().expect("replica lock").load(i))
                 .collect();
             let pick = router.route(&loads);
+            timer.stop(routing_profile, Phase::Routing);
             cells[pick].lock().expect("replica lock").push(*spec);
         }
         // Drain epoch: everyone serves out their tail concurrently.

@@ -40,6 +40,44 @@ impl std::fmt::Display for Placement {
     }
 }
 
+/// How a replica advances its simulated clock (`serve-gen --engine`).
+///
+/// Purely a wall-clock knob: both strategies run the *same* tick
+/// sequence with the same costing, so every reported number — and the
+/// run's state hash — is bit-identical between them (DESIGN.md
+/// §Event-engine; enforced by `tests/engine_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineStrategy {
+    /// The reference driver: per-arrival `advance_to` loop, with a
+    /// full admission scan on every tick.
+    #[default]
+    Tick,
+    /// Next-event time advance: arrivals and tick boundaries merge
+    /// through a heap, admission scans run only when an arrival or a
+    /// capacity release could change their outcome, and
+    /// batch-invariant decode cost pieces carry over between ticks.
+    Event,
+}
+
+impl EngineStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tick" => Some(EngineStrategy::Tick),
+            "event" => Some(EngineStrategy::Event),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EngineStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineStrategy::Tick => write!(f, "tick"),
+            EngineStrategy::Event => write!(f, "event"),
+        }
+    }
+}
+
 /// Stack-to-stack link parameters (interposer / package hop).
 ///
 /// Defaults model a 512-bit 64 GB/s point-to-point link — a quarter of
@@ -79,17 +117,32 @@ pub struct ClusterConfig {
     /// including `1`, the serial path — produces bit-identical reports
     /// (DESIGN.md §Performance-engineering).
     pub threads: usize,
+    /// Clock-advance strategy for every replica of the run — another
+    /// pure wall-clock knob (DESIGN.md §Event-engine).
+    pub engine: EngineStrategy,
 }
 
 impl ClusterConfig {
     pub fn new(stacks: u64, placement: Placement) -> Self {
         assert!(stacks > 0, "cluster needs at least one stack");
-        Self { stacks, placement, link: StackLinkParams::default(), threads: 0 }
+        Self {
+            stacks,
+            placement,
+            link: StackLinkParams::default(),
+            threads: 0,
+            engine: EngineStrategy::Tick,
+        }
     }
 
     /// Same shape with an explicit driver-thread count (`0` = auto).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Same shape with an explicit clock-advance strategy.
+    pub fn with_engine(mut self, engine: EngineStrategy) -> Self {
+        self.engine = engine;
         self
     }
 
@@ -140,5 +193,19 @@ mod tests {
         let c = ClusterConfig::new(4, Placement::DataParallel).with_threads(2);
         assert_eq!(c.threads, 2);
         assert_eq!(c.stacks, 4, "with_threads must not touch the shape");
+    }
+
+    #[test]
+    fn engine_parse_round_trip_and_default() {
+        assert_eq!(ClusterConfig::default().engine, EngineStrategy::Tick);
+        for e in [EngineStrategy::Tick, EngineStrategy::Event] {
+            assert_eq!(EngineStrategy::parse(&e.to_string()), Some(e));
+        }
+        assert_eq!(EngineStrategy::parse("EVENT"), Some(EngineStrategy::Event));
+        assert_eq!(EngineStrategy::parse("sideways"), None);
+        let c = ClusterConfig::new(2, Placement::DataParallel)
+            .with_engine(EngineStrategy::Event);
+        assert_eq!(c.engine, EngineStrategy::Event);
+        assert_eq!(c.stacks, 2, "with_engine must not touch the shape");
     }
 }

@@ -12,7 +12,7 @@ mod hbm;
 mod models;
 
 pub use circuits::{CircuitOverheads, MomcapParams, SC_STREAM_LEN};
-pub use cluster::{ClusterConfig, Placement, StackLinkParams};
+pub use cluster::{ClusterConfig, EngineStrategy, Placement, StackLinkParams};
 pub use fidelity::FidelityParams;
 pub use hbm::{EnergyParams, HbmConfig, TimingParams};
 pub use models::{Arch, ModelZoo, TransformerModel};

@@ -6,13 +6,14 @@
 
 use anyhow::{anyhow, Result};
 use artemis::cluster::{run_cluster, run_scenario_cluster};
-use artemis::config::{ArtemisConfig, ClusterConfig, ModelZoo, Placement};
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
 use artemis::serve::{
-    run_continuous, run_static, Policy, QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
+    run_continuous_engine, run_static, PhaseProfile, Policy, QosAssignment, RoutePolicy,
+    Scenario, SchedulerConfig,
 };
 use artemis::sim::SimOptions;
 use artemis::util::json::Json;
@@ -55,9 +56,9 @@ Other commands:
            detailed simulation report for one model
   serve    [--requests N] [--variant fp32|q8|q8sc]
            batched serving demo through the functional runtime
-  serve-gen [--scenario chat|summarize|burst] [--seed N] [--sessions N]
-           [--policy fifo|spf] [--batch B] [--model name]
-           [--qos gold|silver|bronze|mix]
+  serve-gen [--scenario chat|summarize|burst|long_itl] [--seed N]
+           [--sessions N] [--policy fifo|spf] [--batch B] [--model name]
+           [--qos gold|silver|bronze|mix] [--engine tick|event]
            [--stacks D] [--placement dp|pp] [--route rr|ll|kv]
            [--no-cost-cache]
            continuous-batching generation server on the simulated clock:
@@ -72,16 +73,23 @@ Other commands:
            the memoized cost cache; per-stack and aggregate metrics plus
            the aggregated cache hit rate print.  --threads N picks the
            parallel driver's thread count (0 = auto, 1 = serial);
-           every thread count reports bit-identical numbers
+           every thread count reports bit-identical numbers.
+           --engine picks the clock-advance strategy (tick = reference
+           per-arrival loop, event = next-event heap with scan
+           skipping); both report bit-identical numbers, attested by
+           the printed state-hash line (one u64 over the whole run)
   cluster-scale
            scaling study: aggregate tokens/s and p99 latency for the
            chat trace on D = 1/2/4/8 stacks, both placements
   bench-serve [--out FILE] [--reps N] [--threads N]
            seeded serve-gen wall-clock suite (CI perf gate): every
            scenario (chat/summarize/burst) x placement (dp/pp) x cost
-           cache (on/off) on 4 stacks; writes one consolidated JSON
-           ({suite, threads, benches: [{bench, wall_ms,
-           sim_tokens_per_s}]}) to FILE
+           cache (on/off) on 4 stacks, plus the idle-heavy long_itl
+           point under both engines (tick vs event; state hashes are
+           asserted equal); writes one consolidated JSON ({suite,
+           threads, benches: [{bench, wall_ms, sim_tokens_per_s}]})
+           to FILE.  Built with --features profiling it also embeds
+           the per-phase ns/tick profile of the long_itl event run
   config   print the default configuration as JSON
   help     this text
 
@@ -162,8 +170,9 @@ fn run_serve(args: &[String]) -> Result<()> {
 
 fn run_serve_gen(args: &[String]) -> Result<()> {
     let scenario = flag_value(args, "--scenario").unwrap_or_else(|| "chat".into());
-    let mut sc = Scenario::by_name(&scenario)
-        .ok_or_else(|| anyhow!("unknown scenario '{scenario}' (chat|summarize|burst)"))?;
+    let mut sc = Scenario::by_name(&scenario).ok_or_else(|| {
+        anyhow!("unknown scenario '{scenario}' (chat|summarize|burst|long_itl)")
+    })?;
     let seed: u64 = flag_value(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
     if let Some(n) = flag_value(args, "--sessions") {
         sc = sc.with_sessions(n.parse()?);
@@ -180,6 +189,11 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     let policy = match flag_value(args, "--policy") {
         None => Policy::Fifo,
         Some(p) => Policy::parse(&p).ok_or_else(|| anyhow!("unknown policy '{p}' (fifo|spf)"))?,
+    };
+    let engine = match flag_value(args, "--engine") {
+        None => EngineStrategy::Tick,
+        Some(e) => EngineStrategy::parse(&e)
+            .ok_or_else(|| anyhow!("unknown engine '{e}' (tick|event)"))?,
     };
     if let Some(q) = flag_value(args, "--qos") {
         sc = sc.with_qos(
@@ -230,12 +244,12 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         let cached = !has_flag(args, "--no-cost-cache");
         let threads: usize =
             flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
-        let cl = ClusterConfig::new(d, placement).with_threads(threads);
+        let cl = ClusterConfig::new(d, placement).with_threads(threads).with_engine(engine);
         let r = run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached);
 
         println!(
             "## serve-gen cluster — scenario '{}' seed {} ({}, {} sessions, {} stacks {}, \
-             route {}, batch {}, policy {}, qos {}, cost-cache {})",
+             route {}, batch {}, policy {}, qos {}, engine {}, cost-cache {})",
             sc.name,
             seed,
             sc.model.name,
@@ -246,6 +260,7 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
             batch,
             policy,
             sc.qos,
+            engine,
             if cached { "on" } else { "off" }
         );
         let mut reports = r.per_stack.clone();
@@ -265,22 +280,27 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
             r.cache.misses,
             r.cache.hit_rate() * 100.0
         );
+        // One u64 over the whole simulated outcome: equal across
+        // engines, thread counts, and cache on/off by construction.
+        println!("state-hash {:#018x}", r.state_hash());
         return Ok(());
     }
 
     let cfg = build_config(args)?;
-    let cont = run_continuous(&cfg, &sc.model, &trace, &sched);
+    let cont = run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine);
     let stat = run_static(&cfg, &sc.model, &trace, batch);
 
     println!(
-        "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {}, qos {})",
+        "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {}, qos {}, \
+         engine {})",
         sc.name,
         seed,
         sc.model.name,
         trace.len(),
         batch,
         policy,
-        sc.qos
+        sc.qos,
+        engine
     );
     for r in [&cont, &stat] {
         println!("{}:", r.scheme);
@@ -311,6 +331,7 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
             r.kv_budget_per_bank as f64 * 1e-6,
             r.rejected
         );
+        println!("  state-hash {:#018x}", r.state_hash());
     }
     println!();
     report::serving_comparison(&[cont, stat]).print();
@@ -320,7 +341,8 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
 /// The CI perf gate: time the seeded scale-out serve suite — every
 /// scenario (chat/summarize/burst) x placement (dp/pp) x cost cache
 /// (on/off), each at seed 1 on 4 stacks with the scenario's default
-/// session count — and write one consolidated JSON artifact.
+/// session count, plus the idle-heavy `long_itl` point under both
+/// clock-advance engines — and write one consolidated JSON artifact.
 /// `wall_ms` is the best of `--reps` runs (noise floor);
 /// `sim_tokens_per_s` is trace-tokens simulated per wall-second — the
 /// throughput of the *simulator*, which the sharded cache, the
@@ -370,15 +392,113 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
             }
         }
     }
+
+    // Idle-heavy long-ITL point, tick vs event engine: a deep SPF wait
+    // queue with a tiny batch is the regime the event engine's
+    // scan-skip targets, and the bench pair is CI's record of that win
+    // (the gate script asserts event is >= 3x faster).  Same trace,
+    // same shape — the state hashes must match bit-for-bit.
+    let lsc = Scenario::long_itl();
+    let ltrace = lsc.generate(seed);
+    let lsched =
+        SchedulerConfig { max_batch: lsc.max_batch, policy: Policy::ShortestPromptFirst };
+    let mut hashes: Vec<u64> = Vec::new();
+    let mut profile = PhaseProfile::default();
+    for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
+        let name = format!("long_itl_{engine}");
+        let cl = ClusterConfig::new(1, Placement::DataParallel)
+            .with_threads(threads)
+            .with_engine(engine);
+        let mut best_ms = f64::INFINITY;
+        let mut tokens = 0u64;
+        let mut hash = 0u64;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let r = run_cluster(
+                &cfg,
+                &lsc.model,
+                &ltrace,
+                &cl,
+                &lsched,
+                RoutePolicy::LeastLoaded,
+                true,
+            );
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            tokens = r.aggregate.total_tokens;
+            hash = r.state_hash();
+            if engine == EngineStrategy::Event {
+                profile = r.profile;
+            }
+            best_ms = best_ms.min(ms);
+        }
+        hashes.push(hash);
+        let tok_per_wall_s = tokens as f64 / (best_ms.max(1e-9) * 1e-3);
+        println!(
+            "bench {name}: wall {best_ms:.3} ms (best of {reps}), {tokens} trace \
+             tokens, {tok_per_wall_s:.0} sim tokens per wall-second, \
+             state-hash {hash:#018x}"
+        );
+        benches.push(Json::obj(vec![
+            ("bench", Json::Str(name)),
+            ("wall_ms", Json::Num((best_ms * 1e3).round() / 1e3)),
+            ("sim_tokens_per_s", Json::Num((tok_per_wall_s * 10.0).round() / 10.0)),
+        ]));
+    }
+    if hashes[0] != hashes[1] {
+        return Err(anyhow!(
+            "engine divergence: tick state-hash {:#018x} != event {:#018x}",
+            hashes[0],
+            hashes[1]
+        ));
+    }
+
     // `threads` records the *request* (0 = auto): dp points resolve it
     // to min(stacks, machine parallelism), pp points to 1 (one logical
     // replica) — simulated outputs are identical regardless.
     let n_benches = benches.len();
-    let doc = Json::obj(vec![
+    let mut fields = vec![
         ("suite", Json::Str("serve_gen_cluster_x4_seed1".into())),
         ("threads", Json::Num(threads as f64)),
         ("benches", Json::Arr(benches)),
-    ]);
+    ];
+    // Per-phase wall-time profile of the long_itl event run, against
+    // the stated scheduler-overhead budget.  All-zero (and omitted)
+    // unless built with `--features profiling`.
+    if cfg!(feature = "profiling") {
+        let per_tick = |i: usize| {
+            if profile.ticks == 0 {
+                0.0
+            } else {
+                ((profile.ns[i] as f64 / profile.ticks as f64) * 10.0).round() / 10.0
+            }
+        };
+        fields.push((
+            "profile",
+            Json::obj(vec![
+                ("bench", Json::Str("long_itl_event".into())),
+                ("ticks", Json::Num(profile.ticks as f64)),
+                (
+                    "budget_ns_per_tick",
+                    Json::Num(PhaseProfile::BUDGET_NS_PER_TICK as f64),
+                ),
+                (
+                    "overhead_ns_per_tick",
+                    Json::Num((profile.overhead_ns_per_tick() * 10.0).round() / 10.0),
+                ),
+                (
+                    "phases_ns_per_tick",
+                    Json::obj(
+                        PhaseProfile::PHASE_NAMES
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &n)| (n, Json::Num(per_tick(i))))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    let doc = Json::obj(fields);
     std::fs::write(&out, doc.pretty() + "\n")?;
     println!("wrote {out} ({n_benches} benches, requested threads {threads} [0=auto])");
     Ok(())

@@ -148,8 +148,31 @@ impl Scenario {
         }
     }
 
+    /// Idle-heavy long-inter-token-latency stress: huge bursts of
+    /// long-generation sessions, tiny batch slots, long gaps — the
+    /// wait queue stays ~full-trace deep for almost the entire run
+    /// while only `max_batch` sessions decode.  The tick engine pays a
+    /// full admission scan (plus the SPF sort `bench-serve` selects)
+    /// over that deep queue on *every* tick; the event engine's
+    /// scan-skip makes this the regime where it wins wall-clock
+    /// hardest (EXPERIMENTS.md §Perf, the `long_itl_*` benches).
+    /// Narrow length ranges keep the distinct cost-key population —
+    /// and so the shared-cache miss work both engines pay — small.
+    pub fn long_itl() -> Self {
+        Self {
+            name: "long_itl",
+            model: ModelZoo::transformer_base(),
+            sessions: 768,
+            arrivals: ArrivalProcess::Burst { size: 96, gap_ns: 2e8 },
+            prompt: LengthDist::Uniform { lo: 192, hi: 320 },
+            gen: LengthDist::Uniform { lo: 192, hi: 256 },
+            max_batch: 2,
+            qos: QosAssignment::Uniform(QosTier::Gold),
+        }
+    }
+
     pub fn names() -> &'static [&'static str] {
-        &["chat", "summarize", "burst"]
+        &["chat", "summarize", "burst", "long_itl"]
     }
 
     pub fn by_name(name: &str) -> Option<Self> {
@@ -157,6 +180,7 @@ impl Scenario {
             "chat" => Some(Self::chat()),
             "summarize" => Some(Self::summarize()),
             "burst" => Some(Self::burst()),
+            "long_itl" | "long-itl" => Some(Self::long_itl()),
             _ => None,
         }
     }
@@ -249,6 +273,18 @@ mod tests {
     fn unknown_scenario_is_none() {
         assert!(Scenario::by_name("nope").is_none());
         assert!(Scenario::by_name("CHAT").is_some());
+        assert!(Scenario::by_name("long-itl").is_some(), "hyphen alias");
+    }
+
+    #[test]
+    fn long_itl_is_idle_heavy_by_construction() {
+        let sc = Scenario::long_itl();
+        assert!(sc.sessions / sc.max_batch >= 100, "queue must dwarf the batch");
+        let trace = sc.generate(1);
+        assert_eq!(trace.len(), sc.sessions);
+        // Burst arrivals: a whole burst shares one timestamp.
+        assert_eq!(trace[0].arrival_ns, trace[95].arrival_ns);
+        assert!(trace[96].arrival_ns > trace[95].arrival_ns);
     }
 
     #[test]

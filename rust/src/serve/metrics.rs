@@ -133,6 +133,20 @@ pub struct LatencySummary {
     pub count: u64,
 }
 
+impl LatencySummary {
+    /// Fold every field into a run state hash (f64s by bit pattern).
+    /// Summaries, not raw buckets, are what the hash covers — see
+    /// DESIGN.md §Event-engine for why that is the right granularity.
+    pub fn fold_into(&self, h: &mut crate::sim::StateHash) {
+        h.write_f64(self.p50);
+        h.write_f64(self.p95);
+        h.write_f64(self.p99);
+        h.write_f64(self.mean);
+        h.write_f64(self.max);
+        h.write_u64(self.count);
+    }
+}
+
 /// Per-session estimated-accuracy percentiles for one serving run.
 ///
 /// Accuracy is a *quality floor* metric, so the interesting tails are
@@ -147,6 +161,17 @@ pub struct AccuracySummary {
     pub p10: f64,
     pub min: f64,
     pub count: u64,
+}
+
+impl AccuracySummary {
+    /// Fold every field into a run state hash (f64s by bit pattern).
+    pub fn fold_into(&self, h: &mut crate::sim::StateHash) {
+        h.write_f64(self.mean);
+        h.write_f64(self.p50);
+        h.write_f64(self.p10);
+        h.write_f64(self.min);
+        h.write_u64(self.count);
+    }
 }
 
 /// Exact nearest-rank summary of per-session accuracy samples.
@@ -243,6 +268,25 @@ impl OccupancyTimeline {
     pub fn peak_kv_per_bank(&self) -> u64 {
         self.peak_kv_per_bank
     }
+
+    /// Fold the retained samples, decimation state, and exact peaks
+    /// into a run state hash.  Because the tick grid is identical
+    /// across engines, the decimated sample set is too — making this
+    /// the part of the hash that would catch an engine "optimizing
+    /// away" ticks it must not skip.
+    pub fn fold_into(&self, h: &mut crate::sim::StateHash) {
+        h.write_usize(self.samples.len());
+        for s in &self.samples {
+            h.write_f64(s.t_ns);
+            h.write_usize(s.active);
+            h.write_usize(s.queued);
+            h.write_u64(s.kv_per_bank_bytes);
+        }
+        h.write_u64(self.stride);
+        h.write_u64(self.seen);
+        h.write_usize(self.peak_active);
+        h.write_u64(self.peak_kv_per_bank);
+    }
 }
 
 impl Default for OccupancyTimeline {
@@ -336,6 +380,31 @@ mod tests {
         // Single sample pins every field.
         let one = accuracy_summary(&[0.93]);
         assert_eq!((one.p50, one.p10, one.min, one.count), (0.93, 0.93, 0.93, 1));
+    }
+
+    #[test]
+    fn fold_into_is_deterministic_and_field_sensitive() {
+        use crate::sim::StateHash;
+        let hash_of = |s: &LatencySummary| {
+            let mut h = StateHash::new();
+            s.fold_into(&mut h);
+            h.finish()
+        };
+        let a = LatencySummary { p50: 1.0, p95: 2.0, p99: 3.0, mean: 1.5, max: 3.0, count: 9 };
+        assert_eq!(hash_of(&a), hash_of(&a));
+        let mut b = a;
+        b.p99 = 3.000000001;
+        assert_ne!(hash_of(&a), hash_of(&b), "sub-epsilon drift must change the hash");
+
+        let mut t = OccupancyTimeline::new();
+        t.record(OccupancySample { t_ns: 5.0, active: 2, queued: 1, kv_per_bank_bytes: 64 });
+        let mut h1 = StateHash::new();
+        t.fold_into(&mut h1);
+        let mut t2 = t.clone();
+        t2.record(OccupancySample { t_ns: 6.0, active: 2, queued: 1, kv_per_bank_bytes: 64 });
+        let mut h2 = StateHash::new();
+        t2.fold_into(&mut h2);
+        assert_ne!(h1.finish(), h2.finish(), "an extra tick sample must change the hash");
     }
 
     #[test]

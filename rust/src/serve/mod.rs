@@ -33,7 +33,13 @@
 //! The tick loop itself is packaged as [`ReplicaSim`] — one serving
 //! machine — which the cluster driver
 //! ([`cluster`](crate::cluster)) instantiates D times (data-parallel)
-//! or once per pipeline-parallel stack group.
+//! or once per pipeline-parallel stack group.  A replica's clock can
+//! advance per-arrival (the reference tick driver) or through the
+//! next-event heap ([`EngineStrategy`](crate::config::EngineStrategy),
+//! `serve-gen --engine`); both produce bit-identical reports, and the
+//! one-`u64` [`ServeGenReport::state_hash`] makes that equivalence
+//! cheap to assert (DESIGN.md §Event-engine).  [`PhaseProfile`] carries
+//! per-phase wall time when built with `--features profiling`.
 //!
 //! Driven by the `serve-gen` CLI subcommand and the
 //! [`report`](crate::report) serving-comparison table; the tick model
@@ -42,6 +48,7 @@
 
 mod loadgen;
 mod metrics;
+mod profile;
 mod router;
 mod scheduler;
 mod session;
@@ -53,10 +60,11 @@ pub use metrics::{
     accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
     StreamingHistogram,
 };
+pub use profile::{Phase, PhaseProfile, PhaseTimer};
 pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{
-    run_continuous, run_static, Coster, Policy, ReplicaSim, SchedulerConfig, ServeGenReport,
-    SessionReport,
+    run_continuous, run_continuous_engine, run_static, Coster, Policy, ReplicaSim,
+    SchedulerConfig, ServeGenReport, SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
 

@@ -1,0 +1,151 @@
+//! Per-phase wall-clock profiling of the serving tick loop.
+//!
+//! Gated behind the non-default `profiling` cargo feature: the types
+//! and accumulators are always present (so reports and benches carry
+//! them unconditionally), but the `Instant` reads compile to nothing
+//! in a default build — the hot loop pays zero timing overhead unless
+//! explicitly asked to measure itself.
+//!
+//! Phases partition a tick's wall time where it is actually spent:
+//! **admission** (wait-queue scan + policy sort), **costing** (the
+//! decode/prefill cost lookups, incl. cache misses that run
+//! `simulate`), **decode** and **prefill** (post-costing bookkeeping:
+//! clock/energy/token accounting, KV release), and **routing** (the
+//! cluster driver's load-gather + route decision).  The stated budget
+//! is [`PhaseProfile::BUDGET_NS_PER_TICK`] nanoseconds of scheduler
+//! overhead per tick — everything except `costing`, whose cache-miss
+//! `simulate` calls are real model work, not overhead.  `bench-serve`
+//! reports the measured per-phase ns/tick next to the budget in
+//! `BENCH_serve.json`; the budget is advisory (CI's wall-clock gate is
+//! `bench/baseline.json`), but drifting past it is the early-warning
+//! sign ROADMAP item 1 asks the profile to give.
+
+/// One profiled phase of the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Admission = 0,
+    Decode = 1,
+    Prefill = 2,
+    Costing = 3,
+    Routing = 4,
+}
+
+/// Accumulated per-phase wall time over a run (all zeros unless built
+/// with `--features profiling`) plus the tick count, which is always
+/// maintained so ns/tick is well-defined whenever the times are.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    /// Wall nanoseconds per phase, indexed by [`Phase`].
+    pub ns: [u64; 5],
+    /// `tick()` invocations profiled (decode *and* admission-only
+    /// ticks — unlike a report's `ticks`, which counts decode steps).
+    pub ticks: u64,
+}
+
+impl PhaseProfile {
+    /// Display names, indexed like [`PhaseProfile::ns`].
+    pub const PHASE_NAMES: [&'static str; 5] =
+        ["admission", "decode", "prefill", "costing", "routing"];
+
+    /// Stated scheduler-overhead budget: every phase except `costing`,
+    /// summed, should stay under this per tick (release build).
+    pub const BUDGET_NS_PER_TICK: u64 = 2_000;
+
+    /// Fold another profile in (cross-replica roll-up).
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (a, b) in self.ns.iter_mut().zip(other.ns) {
+            *a += b;
+        }
+        self.ticks += other.ticks;
+    }
+
+    /// Mean wall ns/tick of one phase (0 when nothing was profiled).
+    pub fn ns_per_tick(&self, phase: Phase) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.ns[phase as usize] as f64 / self.ticks as f64
+        }
+    }
+
+    /// Scheduler overhead per tick: every phase except `costing`.
+    pub fn overhead_ns_per_tick(&self) -> f64 {
+        if self.ticks == 0 {
+            return 0.0;
+        }
+        let costing = self.ns[Phase::Costing as usize];
+        let total: u64 = self.ns.iter().sum();
+        (total - costing) as f64 / self.ticks as f64
+    }
+}
+
+/// A started phase measurement.  Zero-sized (and zero-cost) unless the
+/// `profiling` feature is on.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    #[cfg(feature = "profiling")]
+    start: std::time::Instant,
+}
+
+impl PhaseTimer {
+    #[inline]
+    pub fn start() -> Self {
+        #[cfg(feature = "profiling")]
+        {
+            Self { start: std::time::Instant::now() }
+        }
+        #[cfg(not(feature = "profiling"))]
+        {
+            Self {}
+        }
+    }
+
+    /// Charge the elapsed time since [`start`](Self::start) to `phase`.
+    #[inline]
+    pub fn stop(self, profile: &mut PhaseProfile, phase: Phase) {
+        #[cfg(feature = "profiling")]
+        {
+            profile.ns[phase as usize] += self.start.elapsed().as_nanos() as u64;
+        }
+        #[cfg(not(feature = "profiling"))]
+        {
+            let _ = (profile, phase);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_phases_and_ticks() {
+        let mut a = PhaseProfile { ns: [1, 2, 3, 4, 5], ticks: 10 };
+        let b = PhaseProfile { ns: [10, 20, 30, 40, 50], ticks: 5 };
+        a.merge(&b);
+        assert_eq!(a.ns, [11, 22, 33, 44, 55]);
+        assert_eq!(a.ticks, 15);
+    }
+
+    #[test]
+    fn per_tick_rates_exclude_costing_from_overhead() {
+        let p = PhaseProfile { ns: [100, 200, 300, 4000, 400], ticks: 10 };
+        assert_eq!(p.ns_per_tick(Phase::Costing), 400.0);
+        assert_eq!(p.overhead_ns_per_tick(), 100.0);
+        assert_eq!(PhaseProfile::default().overhead_ns_per_tick(), 0.0);
+    }
+
+    #[test]
+    fn timer_is_a_no_op_or_monotone_depending_on_the_feature() {
+        let mut p = PhaseProfile::default();
+        let t = PhaseTimer::start();
+        t.stop(&mut p, Phase::Admission);
+        if cfg!(feature = "profiling") {
+            // Can't assert > 0 (the clock may not tick between calls),
+            // but the accumulator must at least be written to.
+            assert_eq!(p.ns[1..], [0, 0, 0, 0]);
+        } else {
+            assert_eq!(p, PhaseProfile::default());
+        }
+    }
+}

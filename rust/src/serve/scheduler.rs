@@ -17,6 +17,20 @@
 //! them (or one pipeline-parallel group) with the memoized decomposed
 //! costing ([`Coster::Stack`]).
 //!
+//! A replica advances its clock under one of two
+//! [`EngineStrategy`]s (DESIGN.md §Event-engine).  `Tick` is the
+//! reference: the driver's `advance_to`/`push` loop, a full admission
+//! scan every tick.  `Event` merges arrivals and tick boundaries
+//! through a totally-ordered heap ([`sim::EventQueue`](crate::sim::EventQueue)),
+//! skips admission scans that provably cannot change anything (no new
+//! arrival, no batch slot or KV reservation released since the last
+//! scan), and carries batch-invariant decode cost pieces across ticks
+//! ([`sim::DecodeBaseCache`](crate::sim::DecodeBaseCache)).  Both
+//! strategies execute the *same* tick sequence with the same float
+//! summation order, so every reported number is bit-identical — the
+//! invariant [`ServeGenReport::state_hash`] compresses to one `u64`
+//! and `tests/engine_equivalence.rs` enforces.
+//!
 //! Reported metrics, all in simulated ARTEMIS nanoseconds:
 //! * **TTFT** — arrival to first emitted token (includes queueing,
 //!   prefill, and the first decode step).
@@ -31,13 +45,17 @@ use super::metrics::{
     accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
     StreamingHistogram,
 };
+use super::profile::{Phase, PhaseProfile, PhaseTimer};
 use super::router::ReplicaLoad;
 use super::session::{
     kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState,
 };
-use crate::config::{ArtemisConfig, FidelityParams, TransformerModel};
+use crate::config::{ArtemisConfig, EngineStrategy, FidelityParams, TransformerModel};
 use crate::fidelity::{QosTier, ServeFidelity};
-use crate::sim::{simulate, CacheStats, SimOptions, StackCoster, TickCost};
+use crate::sim::{
+    simulate, CacheStats, DecodeBaseCache, Event, EventKind, EventQueue, SimOptions, StackCoster,
+    StateHash, TickCost,
+};
 use crate::xfmr::{batched_decode_step_workload, batched_prefill_workload};
 
 /// Admission-order policy for the wait queue.
@@ -149,6 +167,52 @@ impl ServeGenReport {
     /// Simulated energy per generated token, pJ.
     pub fn pj_per_token(&self) -> f64 {
         self.sim_energy_pj / self.total_tokens.max(1) as f64
+    }
+
+    /// Deterministic digest of this run's entire simulated outcome:
+    /// session terminal states, energy/tick accumulators, every
+    /// latency/accuracy summary field at bit level, and the KV
+    /// occupancy timeline (DESIGN.md §Event-engine).
+    ///
+    /// Deliberately **excluded**: the scheme label (a display string),
+    /// cache statistics, thread counts and phase profiles (wall-clock
+    /// facts) — so engine strategy, driver threads and cost-cache mode
+    /// must all map runs of the same trace onto the same hash.  Known
+    /// limit: latency histograms fold in through their summaries
+    /// (p50/p95/p99/mean/max/count), not raw buckets — the summaries
+    /// are what the report exposes, and every bucket-moving change the
+    /// suite has ever seen moves a summary bit too.
+    pub fn state_hash(&self) -> u64 {
+        let mut h = StateHash::new();
+        h.write_str(&self.model);
+        h.write_usize(self.sessions);
+        h.write_u64(self.rejected);
+        h.write_u64(self.total_tokens);
+        h.write_f64(self.makespan_ns);
+        h.write_f64(self.sim_energy_pj);
+        h.write_u64(self.ticks);
+        h.write_f64(self.mean_batch);
+        self.ttft.fold_into(&mut h);
+        self.per_token.fold_into(&mut h);
+        self.itl.fold_into(&mut h);
+        self.accuracy.fold_into(&mut h);
+        h.write_u64(self.peak_kv_per_bank);
+        h.write_u64(self.kv_budget_per_bank);
+        self.timeline.fold_into(&mut h);
+        h.write_usize(self.session_reports.len());
+        for s in &self.session_reports {
+            h.write_u64(s.id);
+            h.write_u64(s.prompt);
+            h.write_u64(s.gen);
+            h.write_u64(s.generated);
+            h.write_bool(s.rejected);
+            h.write_f64(s.arrival_ns);
+            h.write_f64(s.ttft_ns);
+            h.write_f64(s.finished_ns);
+            h.write_u64(s.tier as u64);
+            h.write_f64(s.est_accuracy);
+        }
+        h.finish()
     }
 }
 
@@ -303,6 +367,17 @@ impl Coster<'_> {
         }
     }
 
+    /// [`decode`](Self::decode) with cross-tick reuse of the
+    /// batch-size-dependent cost pieces (bit-identical; event engine
+    /// only).  The legacy batched coster has no per-piece structure to
+    /// reuse, so it falls through to the plain path.
+    fn decode_reused(&mut self, contexts: &[u64], reuse: &mut DecodeBaseCache) -> TickCost {
+        match self {
+            Coster::Batched { .. } => self.decode(contexts),
+            Coster::Stack(s) => s.decode_tick_reused(contexts, reuse),
+        }
+    }
+
     fn prefill(&mut self, prompts: &[u64]) -> TickCost {
         match self {
             Coster::Batched { cfg, model, opts } => {
@@ -348,6 +423,23 @@ pub struct ReplicaSim<'a> {
     active: Vec<usize>,
     acc: MetricsAcc,
     clock: f64,
+    /// Clock-advance strategy (pure wall-clock knob — see the module
+    /// docs and DESIGN.md §Event-engine).
+    engine: EngineStrategy,
+    /// A session joined `waiting` since the last admission scan.
+    admission_dirty: bool,
+    /// A batch slot or KV reservation was released since the last
+    /// admission scan.
+    capacity_freed: bool,
+    /// Event-engine state: the arrival/boundary merge heap plus the
+    /// "one boundary queued" latch ([`run_scheduled`](Self::run_scheduled)).
+    events: EventQueue<Option<SessionSpec>>,
+    tick_pending: bool,
+    /// Cross-tick reuse of batch-invariant decode cost pieces (event
+    /// engine only — the tick engine stays on the reference path).
+    base_reuse: DecodeBaseCache,
+    /// Per-phase wall time (all zeros unless built with `profiling`).
+    profile: PhaseProfile,
     // Reusable per-tick scratch buffers: the tick loop is the
     // simulator's hot path, and a `Vec` allocation per tick (contexts,
     // prompts, admission lists) was measurable at cluster scale
@@ -359,6 +451,7 @@ pub struct ReplicaSim<'a> {
 }
 
 impl<'a> ReplicaSim<'a> {
+    #[allow(clippy::too_many_arguments)] // one knob per replica concern
     pub fn new(
         model: &'a TransformerModel,
         sched: SchedulerConfig,
@@ -366,6 +459,7 @@ impl<'a> ReplicaSim<'a> {
         kv: KvTracker,
         kv_layers: u64,
         fidelity: ServeFidelity,
+        engine: EngineStrategy,
     ) -> Self {
         assert!(sched.max_batch > 0, "max_batch must be positive");
         Self {
@@ -380,6 +474,13 @@ impl<'a> ReplicaSim<'a> {
             active: Vec::new(),
             acc: MetricsAcc::new(),
             clock: 0.0,
+            engine,
+            admission_dirty: false,
+            capacity_freed: false,
+            events: EventQueue::new(),
+            tick_pending: false,
+            base_reuse: DecodeBaseCache::default(),
+            profile: PhaseProfile::default(),
             scratch_ctx: Vec::new(),
             scratch_prompts: Vec::new(),
             scratch_admitted: Vec::new(),
@@ -416,6 +517,7 @@ impl<'a> ReplicaSim<'a> {
         let idx = self.sessions.len();
         self.sessions.push(Session::new(spec));
         self.waiting.push(idx);
+        self.admission_dirty = true;
     }
 
     /// Run ticks until the clock reaches `t`; when idle, jump there.
@@ -433,6 +535,72 @@ impl<'a> ReplicaSim<'a> {
     pub fn run_to_completion(&mut self) {
         while self.has_work() {
             self.tick();
+        }
+    }
+
+    /// Queue a future arrival on the event heap (event-engine driving;
+    /// the counterpart of the tick driver's `advance_to` + [`push`](Self::push)).
+    /// Insertion order is irrelevant: the heap pops in the total
+    /// `(time, kind, id)` order (DESIGN.md §Event-engine).
+    pub fn schedule(&mut self, spec: SessionSpec) {
+        self.events.push(Event {
+            t_ns: spec.arrival_ns,
+            kind: EventKind::Arrival,
+            id: spec.id,
+            payload: Some(spec),
+        });
+    }
+
+    /// Ensure exactly one tick-boundary event is queued at the current
+    /// clock (at most one is ever outstanding — each tick reschedules
+    /// the next from its own end time).
+    fn schedule_boundary(&mut self) {
+        if !self.tick_pending {
+            self.events.push(Event {
+                t_ns: self.clock,
+                kind: EventKind::TickBoundary,
+                id: u64::MAX,
+                payload: None,
+            });
+            self.tick_pending = true;
+        }
+    }
+
+    /// Drain the event heap: next-event time advance over the
+    /// [`schedule`](Self::schedule)d arrivals.
+    ///
+    /// Equivalent to `drive_replica` on the arrival-sorted trace, tick
+    /// for tick: an arrival event sets `clock = max(clock, t)` and
+    /// [`push`](Self::push)es (idle gaps jump exactly like
+    /// `advance_to`); a boundary event runs one [`tick`](Self::tick)
+    /// and schedules the next boundary at the tick's end time.  The
+    /// heap's tie-break (arrivals before the boundary at equal time,
+    /// by session id) reproduces the tick driver's push-before-tick
+    /// order, so the wait queue contents at every scan are identical.
+    pub fn run_scheduled(&mut self) {
+        // A boundary may be owed to work push()ed before this call
+        // (mixed driving), never to an empty replica.
+        if self.has_work() {
+            self.schedule_boundary();
+        }
+        while let Some(ev) = self.events.pop() {
+            match ev.kind {
+                EventKind::Arrival => {
+                    self.clock = self.clock.max(ev.t_ns);
+                    let spec = ev.payload.expect("arrival events carry their spec");
+                    self.push(spec);
+                    self.schedule_boundary();
+                }
+                EventKind::TickBoundary => {
+                    self.tick_pending = false;
+                    if self.has_work() {
+                        self.tick();
+                        if self.has_work() {
+                            self.schedule_boundary();
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -464,47 +632,70 @@ impl<'a> ReplicaSim<'a> {
     /// reusable scratch buffers (the wait queue and its drain buffer
     /// ping-pong between ticks, retaining capacity).
     fn tick(&mut self) {
+        self.profile.ticks += 1;
         // (1) Admission under the policy, batch slots, and KV budget.
         // `waiting` is in arrival order (the driver pushes arrivals in
         // order and the still-waiting drain preserves relative order),
         // so FIFO needs no re-sort.
-        if self.sched.policy == Policy::ShortestPromptFirst {
-            let sessions = &self.sessions;
-            self.waiting.sort_by(|&a, &b| {
-                let (sa, sb) = (&sessions[a].spec, &sessions[b].spec);
-                sa.prompt.cmp(&sb.prompt).then(sa.id.cmp(&sb.id))
-            });
-        }
-        let mut waiting = std::mem::take(&mut self.waiting);
+        //
+        // The event engine skips scans that provably cannot change
+        // anything: no arrival joined the queue and no batch slot or
+        // KV reservation was released since the last scan, so every
+        // waiting session is blocked for exactly the reason it was
+        // blocked then (never-fit rejections happen at the first scan
+        // after the push — `admission_dirty` forces that one).  The
+        // `active.is_empty()` term is a progress guarantee, not a
+        // correctness need: an empty batch admits or rejects every
+        // scanned candidate, so such scans are never no-ops.
+        let timer = PhaseTimer::start();
+        let scan = match self.engine {
+            EngineStrategy::Tick => true,
+            EngineStrategy::Event => {
+                self.admission_dirty || self.capacity_freed || self.active.is_empty()
+            }
+        };
         let mut admitted = std::mem::take(&mut self.scratch_admitted);
-        let mut still_waiting = std::mem::take(&mut self.scratch_waiting);
         admitted.clear();
-        still_waiting.clear();
-        for idx in waiting.drain(..) {
-            let max_kv = kv_bytes_for_layers(
-                self.model,
-                self.sessions[idx].max_context(),
-                self.kv_layers,
-            );
-            if !self.kv.fits_alone(max_kv) {
-                // Could never fit, even alone: reject rather than queue
-                // forever.
-                self.sessions[idx].state = SessionState::Rejected;
-                self.sessions[idx].finished_ns = self.clock;
-                continue;
+        if scan {
+            if self.sched.policy == Policy::ShortestPromptFirst {
+                let sessions = &self.sessions;
+                self.waiting.sort_by(|&a, &b| {
+                    let (sa, sb) = (&sessions[a].spec, &sessions[b].spec);
+                    sa.prompt.cmp(&sb.prompt).then(sa.id.cmp(&sb.id))
+                });
             }
-            if self.active.len() + admitted.len() < self.sched.max_batch
-                && self.kv.try_reserve(max_kv)
-            {
-                self.sessions[idx].state = SessionState::Prefill;
-                self.sessions[idx].admitted_ns = self.clock;
-                admitted.push(idx);
-            } else {
-                still_waiting.push(idx);
+            let mut waiting = std::mem::take(&mut self.waiting);
+            let mut still_waiting = std::mem::take(&mut self.scratch_waiting);
+            still_waiting.clear();
+            for idx in waiting.drain(..) {
+                let max_kv = kv_bytes_for_layers(
+                    self.model,
+                    self.sessions[idx].max_context(),
+                    self.kv_layers,
+                );
+                if !self.kv.fits_alone(max_kv) {
+                    // Could never fit, even alone: reject rather than
+                    // queue forever.
+                    self.sessions[idx].state = SessionState::Rejected;
+                    self.sessions[idx].finished_ns = self.clock;
+                    continue;
+                }
+                if self.active.len() + admitted.len() < self.sched.max_batch
+                    && self.kv.try_reserve(max_kv)
+                {
+                    self.sessions[idx].state = SessionState::Prefill;
+                    self.sessions[idx].admitted_ns = self.clock;
+                    admitted.push(idx);
+                } else {
+                    still_waiting.push(idx);
+                }
             }
+            self.scratch_waiting = waiting; // drained; keeps its capacity
+            self.waiting = still_waiting;
+            self.admission_dirty = false;
+            self.capacity_freed = false;
         }
-        self.scratch_waiting = waiting; // drained; keeps its capacity
-        self.waiting = still_waiting;
+        timer.stop(&mut self.profile, Phase::Admission);
 
         // (2) One batched decode step for every in-flight session,
         // scaled by the batch's fidelity factors (QoS tiers).
@@ -512,7 +703,17 @@ impl<'a> ReplicaSim<'a> {
             let mut contexts = std::mem::take(&mut self.scratch_ctx);
             contexts.clear();
             contexts.extend(self.active.iter().map(|&i| self.sessions[i].context()));
-            let c = self.coster.decode(&contexts);
+            let timer = PhaseTimer::start();
+            let c = match self.engine {
+                EngineStrategy::Tick => self.coster.decode(&contexts),
+                // Bit-identical reuse of the batch-size-dependent cost
+                // pieces across same-batch ticks (sim::DecodeBaseCache).
+                EngineStrategy::Event => {
+                    self.coster.decode_reused(&contexts, &mut self.base_reuse)
+                }
+            };
+            timer.stop(&mut self.profile, Phase::Costing);
+            let timer = PhaseTimer::start();
             self.scratch_ctx = contexts;
             let (tf, ef) = self.batch_factors(&self.active);
             self.clock += c.ns * tf;
@@ -523,6 +724,7 @@ impl<'a> ReplicaSim<'a> {
                 emit_token(&mut self.sessions[i], self.clock, &mut self.acc);
             }
             let mut active = std::mem::take(&mut self.active);
+            let mut any_finished = false;
             let (sessions, kv, acc) = (&mut self.sessions, &mut self.kv, &mut self.acc);
             let (model, kv_layers, clock) = (self.model, self.kv_layers, self.clock);
             let fid = &self.fidelity;
@@ -531,12 +733,17 @@ impl<'a> ReplicaSim<'a> {
                     let est = fid.accuracy(sessions[i].spec.tier);
                     finish_session(&mut sessions[i], clock, acc, est);
                     kv.release(kv_bytes_for_layers(model, sessions[i].max_context(), kv_layers));
+                    any_finished = true;
                     false
                 } else {
                     true
                 }
             });
             self.active = active;
+            if any_finished {
+                self.capacity_freed = true;
+            }
+            timer.stop(&mut self.profile, Phase::Decode);
         }
 
         // (3) Prefill the sessions admitted this tick (one batched
@@ -545,7 +752,10 @@ impl<'a> ReplicaSim<'a> {
             let mut prompts = std::mem::take(&mut self.scratch_prompts);
             prompts.clear();
             prompts.extend(admitted.iter().map(|&i| self.sessions[i].spec.prompt));
+            let timer = PhaseTimer::start();
             let c = self.coster.prefill(&prompts);
+            timer.stop(&mut self.profile, Phase::Costing);
+            let timer = PhaseTimer::start();
             self.scratch_prompts = prompts;
             let (tf, ef) = self.batch_factors(&admitted);
             self.clock += c.ns * tf;
@@ -561,10 +771,12 @@ impl<'a> ReplicaSim<'a> {
                         self.sessions[idx].max_context(),
                         self.kv_layers,
                     ));
+                    self.capacity_freed = true;
                 } else {
                     self.active.push(idx);
                 }
             }
+            timer.stop(&mut self.profile, Phase::Prefill);
         }
         self.scratch_admitted = admitted;
 
@@ -579,6 +791,12 @@ impl<'a> ReplicaSim<'a> {
     /// Stats of the attached cost cache (zeros for the legacy coster).
     pub fn cache_stats(&self) -> CacheStats {
         self.coster.cache_stats()
+    }
+
+    /// Per-phase wall-time accumulators for this replica (all zeros
+    /// unless built with `--features profiling`).
+    pub fn profile(&self) -> &PhaseProfile {
+        &self.profile
     }
 
     /// Snapshot this replica's outcome under `scheme`.
@@ -646,6 +864,20 @@ pub fn run_continuous(
     trace: &[SessionSpec],
     sched: &SchedulerConfig,
 ) -> ServeGenReport {
+    run_continuous_engine(cfg, model, trace, sched, EngineStrategy::Tick)
+}
+
+/// [`run_continuous`] with an explicit clock-advance strategy.  The
+/// scheme label is engine-independent on purpose: both engines must
+/// produce the *same* report (the engine is echoed by the CLI header
+/// only), so equality checks need no label fix-ups.
+pub fn run_continuous_engine(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    sched: &SchedulerConfig,
+    engine: EngineStrategy,
+) -> ServeGenReport {
     let mut order: Vec<SessionSpec> = trace.to_vec();
     order.sort_by(cmp_arrival);
     let coster = Coster::Batched { cfg, model, opts: SimOptions::artemis() };
@@ -656,8 +888,17 @@ pub fn run_continuous(
         KvTracker::new(cfg, model),
         model.layers as u64,
         ServeFidelity::for_model(&cfg.fidelity, model),
+        engine,
     );
-    drive_replica(&mut sim, &order);
+    match engine {
+        EngineStrategy::Tick => drive_replica(&mut sim, &order),
+        EngineStrategy::Event => {
+            for spec in &order {
+                sim.schedule(*spec);
+            }
+            sim.run_scheduled();
+        }
+    }
     sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch))
 }
 
@@ -955,6 +1196,19 @@ mod tests {
     }
 
     #[test]
+    fn event_engine_matches_tick_engine_bit_for_bit() {
+        let (cfg, sc, trace) = chat_small(7);
+        let sched = SchedulerConfig::default();
+        let tick = run_continuous(&cfg, &sc.model, &trace, &sched);
+        let event =
+            run_continuous_engine(&cfg, &sc.model, &trace, &sched, EngineStrategy::Event);
+        assert_eq!(tick.state_hash(), event.state_hash());
+        assert_eq!(tick.makespan_ns.to_bits(), event.makespan_ns.to_bits());
+        assert_eq!(tick.ticks, event.ticks);
+        assert_eq!(tick.scheme, event.scheme, "labels are engine-independent");
+    }
+
+    #[test]
     fn replica_load_snapshot_tracks_outstanding_work() {
         let (cfg, sc, trace) = chat_small(4);
         let coster =
@@ -966,6 +1220,7 @@ mod tests {
             KvTracker::new(&cfg, &sc.model),
             sc.model.layers as u64,
             ServeFidelity::for_model(&cfg.fidelity, &sc.model),
+            EngineStrategy::Tick,
         );
         let empty = sim.load(3);
         assert_eq!(empty.replica, 3);

@@ -393,6 +393,21 @@ impl<'a> TickCoster<'a> {
         total
     }
 
+    /// [`decode_stage`](Self::decode_stage) with the `DecodeBase`
+    /// piece supplied by the caller (the event engine's cross-tick
+    /// base reuse).  Same start value, same per-session summation
+    /// order — bit-identical to looking the base up again.
+    fn decode_stage_from(&self, base: TickCost, contexts: &[u64], layers: u64) -> TickCost {
+        if contexts.is_empty() || layers == 0 {
+            return TickCost::ZERO;
+        }
+        let mut total = base;
+        for &ctx in contexts {
+            total.add(self.cost(CostKey::DecodeAttn { ctx: ctx.max(1), layers }));
+        }
+        total
+    }
+
     /// One batched prefill of `prompts` over a stage of `layers` layers.
     pub fn prefill_stage(&self, prompts: &[u64], layers: u64) -> TickCost {
         if prompts.is_empty() || layers == 0 {
@@ -410,6 +425,26 @@ impl<'a> TickCoster<'a> {
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats { hits: self.hits.get(), misses: self.misses.get() }
     }
+}
+
+/// Cross-tick reuse of the batch-size-dependent decode pieces (the
+/// event engine's steady-state fast path).
+///
+/// A decode tick's cost is `base(B) + Σ attn(ctx_i)` per stage: the
+/// `DecodeBase` pieces depend only on the batch size, which is stable
+/// across long decode stretches (it only moves when a session finishes
+/// or is admitted).  Carrying them over between same-batch ticks skips
+/// one cost lookup per stage per tick.  Pure value reuse of memoized
+/// lookups — `cost` is a pure function of the key — so the resulting
+/// tick cost is bit-identical to re-looking the bases up; only the
+/// lookup *counters* shrink, which is exactly the "strictly fewer
+/// costing calls" property `tests/engine_equivalence.rs` asserts.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeBaseCache {
+    /// Batch size the cached bases were computed for (0 = empty).
+    batch: u64,
+    /// One cached `DecodeBase` cost per pipeline stage.
+    per_stage: InlineVec<TickCost, 8>,
 }
 
 /// Per-replica tick costing across one stack — or one pipeline-parallel
@@ -500,6 +535,40 @@ impl<'a> StackCoster<'a> {
             energy += c.energy_pj;
         }
         let hop = self.link.hop(self.activation_bits(contexts.len() as u64));
+        let hop_ns = if self.hops > 0 { hop.latency_ns } else { 0.0 };
+        energy += self.link.energy_pj(hop.bits_moved * self.hops);
+        TickCost { ns: bottleneck + hop_ns, energy_pj: energy }
+    }
+
+    /// [`decode_tick`](Self::decode_tick) with the batch-dependent
+    /// `DecodeBase` pieces carried over from the previous tick when
+    /// the batch size is unchanged (see [`DecodeBaseCache`]).
+    pub fn decode_tick_reused(&self, contexts: &[u64], reuse: &mut DecodeBaseCache) -> TickCost {
+        if contexts.is_empty() {
+            return TickCost::ZERO;
+        }
+        let batch = contexts.len() as u64;
+        if reuse.batch != batch || reuse.per_stage.len() != self.stage_layers.len() {
+            reuse.per_stage.clear();
+            for &layers in &self.stage_layers {
+                let base = if layers == 0 {
+                    TickCost::ZERO
+                } else {
+                    self.tick.cost(CostKey::DecodeBase { batch, layers })
+                };
+                reuse.per_stage.push(base);
+            }
+            reuse.batch = batch;
+        }
+        let mut bottleneck = 0.0f64;
+        let mut energy = 0.0f64;
+        let bases = reuse.per_stage.as_slice();
+        for (i, &layers) in self.stage_layers.iter().enumerate() {
+            let c = self.tick.decode_stage_from(bases[i], contexts, layers);
+            bottleneck = bottleneck.max(c.ns);
+            energy += c.energy_pj;
+        }
+        let hop = self.link.hop(self.activation_bits(batch));
         let hop_ns = if self.hops > 0 { hop.latency_ns } else { 0.0 };
         energy += self.link.energy_pj(hop.bits_moved * self.hops);
         TickCost { ns: bottleneck + hop_ns, energy_pj: energy }
@@ -739,5 +808,45 @@ mod tests {
         let c = TickCoster::new(&cfg, &model, SimOptions::artemis(), None);
         c.decode_stage(&[64, 100], model.layers as u64);
         assert_eq!(c.cache_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn decode_base_reuse_is_bit_identical_and_saves_lookups() {
+        let (cfg, model, cache) = coster_pair(true);
+        let opts = SimOptions::artemis();
+        let plain = StackCoster::single(&cfg, &model, opts, cache.clone());
+        let reusing = StackCoster::single(&cfg, &model, opts, cache);
+        let mut reuse = DecodeBaseCache::default();
+        // Steady batch of 2 for several ticks, then a batch change.
+        let rounds: [&[u64]; 5] = [&[64, 100], &[65, 101], &[66, 102], &[67], &[68]];
+        for ctxs in rounds {
+            let a = plain.decode_tick(ctxs);
+            let b = reusing.decode_tick_reused(ctxs, &mut reuse);
+            assert_eq!(a.ns.to_bits(), b.ns.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        }
+        // Plain: 1 base + B attn per tick = 5 bases + 8 attn.  Reusing:
+        // bases only on the two batch changes (2 -> at tick 1, 1 -> at
+        // tick 4) = 2 bases + 8 attn.
+        assert_eq!(plain.cache_stats().lookups(), 13);
+        assert_eq!(reusing.cache_stats().lookups(), 10);
+    }
+
+    #[test]
+    fn decode_base_reuse_handles_empty_and_stage_shape_changes() {
+        let (cfg, model, _) = coster_pair(false);
+        let opts = SimOptions::artemis();
+        let single = StackCoster::single(&cfg, &model, opts, None);
+        let groups = stack_groups(model.layers as u64, 2);
+        let link = StackLink::new(&StackLinkParams::default());
+        let pp = StackCoster::pipelined(&cfg, &model, opts, None, &groups, link);
+        let mut reuse = DecodeBaseCache::default();
+        assert_eq!(single.decode_tick_reused(&[], &mut reuse), TickCost::ZERO);
+        // The same reuse cell fed to costers with different stage
+        // shapes must refill, not index stale bases.
+        let a = single.decode_tick_reused(&[64], &mut reuse);
+        assert_eq!(a.ns.to_bits(), single.decode_tick(&[64]).ns.to_bits());
+        let b = pp.decode_tick_reused(&[64], &mut reuse);
+        assert_eq!(b.ns.to_bits(), pp.decode_tick(&[64]).ns.to_bits());
     }
 }

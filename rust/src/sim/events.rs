@@ -1,0 +1,187 @@
+//! Heap-ordered event queue for the event-driven serving engine.
+//!
+//! The event engine ([`ReplicaSim::run_scheduled`](crate::serve::ReplicaSim))
+//! replaces the tick driver's per-arrival `advance_to`/`push` loop
+//! with a next-event merge of two event kinds: session **arrivals**
+//! and **tick boundaries** (the instant a batched decode/prefill step
+//! completes and the scheduler runs again).  Reported numbers must be
+//! bit-identical to the tick engine, so the pop order has to be a
+//! *total* order, independent of insertion order and of any heap
+//! internals:
+//!
+//! * primary: event time, compared with [`f64::total_cmp`] (the same
+//!   total order the drivers sort arrivals by),
+//! * tie-break 1: event kind — [`EventKind::Arrival`] before
+//!   [`EventKind::TickBoundary`], matching the tick driver, where an
+//!   arrival at exactly a tick boundary is pushed *before* the next
+//!   tick runs (and is therefore visible to that tick's admission
+//!   scan),
+//! * tie-break 2: session id — simultaneous arrivals (burst traffic)
+//!   join the wait queue in id order, exactly the order the drivers'
+//!   `(arrival, id)` sort produces.
+//!
+//! Payloads never participate in the ordering.  The regression suite
+//! (`tests/engine_equivalence.rs`) asserts that permuting the
+//! insertion order never changes a run's state hash; the unit tests
+//! below pin the pop order itself.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens at an event's timestamp.  The discriminant order *is*
+/// the same-time tie-break rule (DESIGN.md §Event-engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A session reaches the machine and joins the wait queue.
+    Arrival = 0,
+    /// A batched step completes: run admission + decode + prefill once.
+    TickBoundary = 1,
+}
+
+/// One scheduled event.  `id` is the session id for arrivals and a
+/// fixed sentinel for tick boundaries (at most one boundary is ever
+/// queued, so its id never decides an ordering).
+#[derive(Debug, Clone, Copy)]
+pub struct Event<P> {
+    pub t_ns: f64,
+    pub kind: EventKind,
+    pub id: u64,
+    pub payload: P,
+}
+
+impl<P> Event<P> {
+    /// The `(time, kind, id)` total order.  Payloads are opaque.
+    fn order(&self, other: &Self) -> Ordering {
+        self.t_ns
+            .total_cmp(&other.t_ns)
+            .then(self.kind.cmp(&other.kind))
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+impl<P> PartialEq for Event<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.order(other) == Ordering::Equal
+    }
+}
+
+impl<P> Eq for Event<P> {}
+
+impl<P> PartialOrd for Event<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Event<P> {
+    // Reversed so the max-heap underneath pops the *earliest* event.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.order(self)
+    }
+}
+
+/// Min-queue over [`Event`]s in `(time, kind, id)` order.
+#[derive(Debug)]
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Event<P>>,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, ev: Event<P>) {
+        self.heap.push(ev);
+    }
+
+    /// The earliest event under the total order (ties broken by kind,
+    /// then id — never by insertion order).
+    pub fn pop(&mut self) -> Option<Event<P>> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_ns: f64, kind: EventKind, id: u64) -> Event<()> {
+        Event { t_ns, kind, id, payload: () }
+    }
+
+    #[test]
+    fn pops_in_time_order_regardless_of_insertion_order() {
+        let evs = [
+            ev(5.0, EventKind::Arrival, 0),
+            ev(1.0, EventKind::TickBoundary, u64::MAX),
+            ev(3.0, EventKind::Arrival, 7),
+            ev(2.0, EventKind::Arrival, 1),
+        ];
+        // Every rotation of the insertion order pops identically.
+        for rot in 0..evs.len() {
+            let mut q = EventQueue::new();
+            for i in 0..evs.len() {
+                q.push(evs[(i + rot) % evs.len()]);
+            }
+            let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t_ns).collect();
+            assert_eq!(times, vec![1.0, 2.0, 3.0, 5.0], "rotation {rot}");
+        }
+    }
+
+    #[test]
+    fn same_time_arrival_pops_before_tick_boundary() {
+        // The tie-break rule: an arrival landing exactly on a tick
+        // boundary is admitted-visible to that tick, matching the tick
+        // driver's push-then-tick order.
+        for flip in [false, true] {
+            let mut q = EventQueue::new();
+            let a = ev(10.0, EventKind::Arrival, 3);
+            let b = ev(10.0, EventKind::TickBoundary, u64::MAX);
+            if flip {
+                q.push(b);
+                q.push(a);
+            } else {
+                q.push(a);
+                q.push(b);
+            }
+            assert_eq!(q.pop().unwrap().kind, EventKind::Arrival, "flip={flip}");
+            assert_eq!(q.pop().unwrap().kind, EventKind::TickBoundary, "flip={flip}");
+        }
+    }
+
+    #[test]
+    fn simultaneous_arrivals_pop_in_session_id_order() {
+        let mut q = EventQueue::new();
+        for id in [9u64, 2, 5, 0] {
+            q.push(ev(42.0, EventKind::Arrival, id));
+        }
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 2, 5, 9]);
+    }
+
+    #[test]
+    fn time_comparison_is_total_cmp() {
+        // -0.0 sorts before +0.0 under total_cmp: the order is total
+        // and deterministic even at the bit level.
+        let mut q = EventQueue::new();
+        q.push(ev(0.0, EventKind::Arrival, 1));
+        q.push(ev(-0.0, EventKind::Arrival, 2));
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Deterministic end-of-run state hashing.
+//!
+//! The serving stack carries a family of bit-identity invariants: the
+//! engine strategy (tick vs event), the driver-thread count, and the
+//! cost cache (on/off, sharding) are all pure wall-clock knobs that
+//! must never move a reported number (DESIGN.md
+//! §Performance-engineering, §Event-engine).  Asserting that invariant
+//! used to mean field-by-field struct or string comparisons scattered
+//! across the test suite; [`StateHash`] collapses each run's entire
+//! observable outcome into a single `u64`, so every equivalence claim
+//! becomes one integer comparison — cheap enough to embed in every
+//! test, bench, and CLI run.
+//!
+//! The digest is FNV-1a over a canonical byte serialization:
+//!
+//! * integers little-endian, floats via [`f64::to_bits`] (bit-level,
+//!   not approximate — `-0.0 != 0.0` and NaN payloads count),
+//! * strings framed by their length (no concatenation ambiguity),
+//! * sequences framed by their element count.
+//!
+//! What folds in is decided by the report types themselves
+//! ([`ServeGenReport::state_hash`](crate::serve::ServeGenReport),
+//! [`ClusterReport::state_hash`](crate::cluster::ClusterReport)): the
+//! simulated outcome — session terminal states, KV occupancy timeline,
+//! energy/tick accumulators, latency/accuracy summaries.  Wall-clock
+//! data (cache hit counters, thread counts, phase profiles) and
+//! display labels are deliberately excluded, so runs that must be
+//! equivalent hash equal.  FNV-1a is not collision-resistant against
+//! an adversary; it is a regression tripwire, and the differential
+//! suite (`tests/engine_equivalence.rs`) keeps one full-report
+//! comparison as the hash's own oracle.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// An FNV-1a fold in progress.  Build with [`StateHash::new`], feed
+/// fields in a fixed documented order, and read out with
+/// [`finish`](StateHash::finish).
+#[derive(Debug, Clone)]
+pub struct StateHash {
+    h: u64,
+}
+
+impl Default for StateHash {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateHash {
+    pub fn new() -> Self {
+        Self { h: FNV_OFFSET }
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.h ^= b as u64;
+        self.h = self.h.wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(v as u8);
+    }
+
+    /// Bit-level: distinguishes `-0.0` from `0.0` and NaN payloads —
+    /// exactly the resolution the bit-identity invariants are stated at.
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-framed, so `("ab","c")` and `("a","bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hash_of(f: impl FnOnce(&mut StateHash)) -> u64 {
+        let mut h = StateHash::new();
+        f(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn empty_fold_is_the_fnv_offset_basis() {
+        assert_eq!(StateHash::new().finish(), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn fold_is_order_sensitive() {
+        let ab = hash_of(|h| {
+            h.write_u64(1);
+            h.write_u64(2);
+        });
+        let ba = hash_of(|h| {
+            h.write_u64(2);
+            h.write_u64(1);
+        });
+        assert_ne!(ab, ba);
+    }
+
+    #[test]
+    fn floats_hash_at_bit_level() {
+        assert_ne!(hash_of(|h| h.write_f64(0.0)), hash_of(|h| h.write_f64(-0.0)));
+        assert_eq!(hash_of(|h| h.write_f64(1.5)), hash_of(|h| h.write_f64(1.5)));
+    }
+
+    #[test]
+    fn strings_are_length_framed() {
+        let split_ab = hash_of(|h| {
+            h.write_str("ab");
+            h.write_str("c");
+        });
+        let split_a = hash_of(|h| {
+            h.write_str("a");
+            h.write_str("bc");
+        });
+        assert_ne!(split_ab, split_a);
+    }
+
+    #[test]
+    fn single_byte_matches_reference_fnv1a() {
+        // FNV-1a of the single byte 'a' — the published test vector.
+        assert_eq!(hash_of(|h| h.write_u8(b'a')), 0xaf63_dc4c_8601_ec8c);
+    }
+}

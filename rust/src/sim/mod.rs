@@ -16,11 +16,21 @@
 //! §Performance-engineering).  [`simulate`] itself replays identical
 //! consecutive layers from a recorded charge sequence instead of
 //! recomputing them — also bit-identical by construction.
+//!
+//! Two serving-support modules live here too: [`EventQueue`], the
+//! totally-ordered event heap behind the event-driven engine, and
+//! [`StateHash`], the FNV-1a fold that collapses a run's observable
+//! outcome into one `u64` for the bit-identity test suite (DESIGN.md
+//! §Event-engine).
 
 mod cache;
 mod engine;
+mod events;
+mod hash;
 mod micro;
 
-pub use cache::{CacheStats, CostCache, StackCoster, TickCost, TickCoster};
+pub use cache::{CacheStats, CostCache, DecodeBaseCache, StackCoster, TickCost, TickCoster};
 pub use engine::{simulate, PhaseBreakdown, SimOptions, SimReport};
+pub use events::{Event, EventKind, EventQueue};
+pub use hash::StateHash;
 pub use micro::{micro_headlines, MicroHeadlines};

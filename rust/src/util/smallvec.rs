@@ -50,6 +50,13 @@ impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
         self.len += 1;
     }
 
+    /// Drop every element (and any heap spill), keeping the inline
+    /// capacity — the reuse idiom for per-tick scratch.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.spill.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -129,6 +136,17 @@ mod tests {
             assert_eq!(v.as_slice(), &xs[..cut]);
             assert_eq!(v.iter().count(), cut);
         }
+    }
+
+    #[test]
+    fn clear_resets_inline_and_spilled_states() {
+        let mut v: InlineVec<u64, 2> = InlineVec::from_slice(&[1, 2, 3, 4]);
+        assert!(!v.is_inline());
+        v.clear();
+        assert!(v.is_empty());
+        assert!(v.is_inline(), "cleared vector must take the inline path again");
+        v.push(9);
+        assert_eq!(v.as_slice(), &[9]);
     }
 
     #[test]

@@ -15,6 +15,12 @@ fn run(args: &[&str]) -> (bool, String, String) {
     )
 }
 
+/// The `state-hash 0x...` lines serve-gen prints: one u64 per report,
+/// covering the run's whole simulated outcome.
+fn state_hashes(out: &str) -> Vec<&str> {
+    out.lines().filter(|l| l.trim_start().starts_with("state-hash ")).collect()
+}
+
 #[test]
 fn help_exits_zero_and_lists_commands() {
     let (ok, stdout, stderr) = run(&["help"]);
@@ -33,6 +39,8 @@ fn help_exits_zero_and_lists_commands() {
         "fidelity-sweep",
         "--placement dp|pp",
         "--qos gold|silver|bronze|mix",
+        "--engine tick|event",
+        "long_itl",
     ];
     for cmd in cmds {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
@@ -205,6 +213,14 @@ fn serve_gen_threads_flag_never_moves_a_number() {
     assert!(ok1, "serial serve-gen failed: {stderr}");
     let (ok2, out2, stderr) = run(&parallel);
     assert!(ok2, "parallel serve-gen failed: {stderr}");
+    // The one-u64 digest is the invariant the suite leans on...
+    assert_eq!(
+        state_hashes(&out1),
+        state_hashes(&out2),
+        "--threads 1 vs --threads 2 state hash drifted"
+    );
+    // ... and byte-identical output is the CLI-level oracle backing it
+    // (nothing else in the output may drift either).
     assert_eq!(out1, out2, "--threads 1 vs --threads 2 output drifted");
     // --threads alone (without --stacks) selects cluster mode too.
     let (ok3, out3, stderr) = run(&["serve-gen", "--sessions", "4", "--model",
@@ -229,13 +245,97 @@ fn serve_gen_rejects_bad_cluster_flags() {
 #[test]
 fn serve_gen_zero_sessions_prints_empty_trace_report() {
     // `--sessions 0` must cleanly report an empty trace, exit 0 —
-    // single-machine and cluster mode alike.
+    // single-machine and cluster mode, either engine.
     let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0"]);
     assert!(ok, "empty serve-gen failed: {stderr}");
     assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
     let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0", "--stacks", "4"]);
     assert!(ok, "empty cluster serve-gen failed: {stderr}");
     assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
+    let (ok, stdout, stderr) = run(&["serve-gen", "--sessions", "0", "--engine", "event"]);
+    assert!(ok, "empty event-engine serve-gen failed: {stderr}");
+    assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
+    let (ok, stdout, stderr) =
+        run(&["serve-gen", "--sessions", "0", "--stacks", "2", "--engine", "event"]);
+    assert!(ok, "empty event-engine cluster serve-gen failed: {stderr}");
+    assert!(stdout.contains("empty trace (0 sessions)"), "{stdout}");
+}
+
+#[test]
+fn serve_gen_engine_flag_never_moves_a_number() {
+    // Single machine: apart from the `##` header (which echoes the
+    // engine), every line — all percentiles, the comparison table, and
+    // the state-hash digests — must be byte-identical across engines.
+    let base = [
+        "serve-gen",
+        "--scenario",
+        "burst",
+        "--seed",
+        "3",
+        "--sessions",
+        "8",
+        "--batch",
+        "3",
+        "--model",
+        "Transformer-base",
+    ];
+    let mut tick = base.to_vec();
+    tick.extend(["--engine", "tick"]);
+    let mut event = base.to_vec();
+    event.extend(["--engine", "event"]);
+    let (ok1, out1, stderr) = run(&tick);
+    assert!(ok1, "tick serve-gen failed: {stderr}");
+    let (ok2, out2, stderr) = run(&event);
+    assert!(ok2, "event serve-gen failed: {stderr}");
+    assert!(out1.contains("engine tick") && out2.contains("engine event"));
+    let hashes1 = state_hashes(&out1);
+    assert!(!hashes1.is_empty(), "no state-hash lines:\n{out1}");
+    assert_eq!(hashes1, state_hashes(&out2), "engine moved a state hash");
+    let body = |o: &str| -> Vec<String> {
+        o.lines().filter(|l| !l.starts_with("##")).map(str::to_owned).collect()
+    };
+    assert_eq!(body(&out1), body(&out2), "engine moved a printed number");
+
+    // Cluster mode: the cost-cache line legitimately differs (the
+    // event engine takes fewer lookups), so the equality claim is the
+    // state hash plus the aggregate metrics line.
+    let cbase = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "8",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--stacks",
+        "2",
+    ];
+    let mut ctick = cbase.to_vec();
+    ctick.extend(["--engine", "tick"]);
+    let mut cevent = cbase.to_vec();
+    cevent.extend(["--engine", "event"]);
+    let (ok1, out1, stderr) = run(&ctick);
+    assert!(ok1, "tick cluster failed: {stderr}");
+    let (ok2, out2, stderr) = run(&cevent);
+    assert!(ok2, "event cluster failed: {stderr}");
+    let hashes1 = state_hashes(&out1);
+    assert!(!hashes1.is_empty(), "no state-hash line:\n{out1}");
+    assert_eq!(hashes1, state_hashes(&out2), "engine moved the cluster state hash");
+    let agg = |o: &str| -> String {
+        o.lines().find(|l| l.starts_with("aggregate:")).unwrap_or_default().to_owned()
+    };
+    assert_eq!(agg(&out1), agg(&out2), "engine moved an aggregate number");
+}
+
+#[test]
+fn serve_gen_rejects_unknown_engine() {
+    let (ok, _, stderr) = run(&["serve-gen", "--engine", "sideways"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown engine 'sideways' (tick|event)"), "{stderr}");
 }
 
 #[test]

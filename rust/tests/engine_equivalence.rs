@@ -1,0 +1,281 @@
+//! Differential conformance harness for the clock-advance engines
+//! (DESIGN.md §Event-engine).
+//!
+//! The event-driven engine (`EngineStrategy::Event`) must be
+//! *observably indistinguishable* from the reference tick engine: same
+//! sessions served, same per-session outcomes, same latency summaries,
+//! same occupancy timeline, same energy — bit for bit.  Most tests
+//! assert that through the one-u64 `state_hash` digest; this file also
+//! keeps the field-by-field oracle proving the hash actually stands in
+//! for full report equality (the other suites lean on that).
+//!
+//! What may legitimately differ between engines: wall-clock time and
+//! cost-cache lookup counts (the event engine reuses batch-invariant
+//! decode cost pieces) — and the idle-heavy test pins down that the
+//! saving is real.
+
+use artemis::cluster::run_cluster;
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement};
+use artemis::fidelity::ServeFidelity;
+use artemis::serve::{
+    run_continuous, run_continuous_engine, Coster, KvTracker, Policy, QosAssignment, QosTier,
+    ReplicaSim, RoutePolicy, Scenario, SchedulerConfig, ServeGenReport, SessionSpec,
+};
+use artemis::sim::SimOptions;
+
+/// Small fast scenario on the 2-layer Transformer-base with mixed QoS
+/// tiers in flight, so every fidelity path is exercised cheaply.
+fn fast_scenario(name: &str, sessions: usize) -> Scenario {
+    let mut sc = Scenario::by_name(name).expect("built-in scenario").with_sessions(sessions);
+    sc.model = ModelZoo::transformer_base();
+    sc.with_qos(QosAssignment::Mixed)
+}
+
+/// The field-by-field oracle: every simulated number of two serve
+/// reports compared bitwise, including the occupancy timeline and the
+/// per-session rows.  Everything asserted here is folded into
+/// `state_hash`, which is why the other suites may compare one u64.
+fn assert_reports_equal(x: &ServeGenReport, y: &ServeGenReport, what: &str) {
+    assert_eq!(x.sessions, y.sessions, "{what}: sessions");
+    assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+    assert_eq!(x.total_tokens, y.total_tokens, "{what}: tokens");
+    assert_eq!(x.ticks, y.ticks, "{what}: ticks");
+    assert_eq!(x.makespan_ns.to_bits(), y.makespan_ns.to_bits(), "{what}: makespan");
+    assert_eq!(x.sim_energy_pj.to_bits(), y.sim_energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(x.mean_batch.to_bits(), y.mean_batch.to_bits(), "{what}: mean batch");
+    assert_eq!(x.ttft.p50.to_bits(), y.ttft.p50.to_bits(), "{what}: ttft p50");
+    assert_eq!(x.ttft.p95.to_bits(), y.ttft.p95.to_bits(), "{what}: ttft p95");
+    assert_eq!(x.ttft.p99.to_bits(), y.ttft.p99.to_bits(), "{what}: ttft p99");
+    assert_eq!(x.per_token.mean.to_bits(), y.per_token.mean.to_bits(), "{what}: tok mean");
+    assert_eq!(x.per_token.p99.to_bits(), y.per_token.p99.to_bits(), "{what}: tok p99");
+    assert_eq!(x.itl.p50.to_bits(), y.itl.p50.to_bits(), "{what}: itl p50");
+    assert_eq!(x.itl.p99.to_bits(), y.itl.p99.to_bits(), "{what}: itl p99");
+    assert_eq!(x.accuracy.p50.to_bits(), y.accuracy.p50.to_bits(), "{what}: acc p50");
+    assert_eq!(x.accuracy.p10.to_bits(), y.accuracy.p10.to_bits(), "{what}: acc p10");
+    assert_eq!(x.accuracy.min.to_bits(), y.accuracy.min.to_bits(), "{what}: acc min");
+    assert_eq!(x.peak_kv_per_bank, y.peak_kv_per_bank, "{what}: peak kv");
+    assert_eq!(x.kv_budget_per_bank, y.kv_budget_per_bank, "{what}: kv budget");
+    let (ta, tb) = (x.timeline.samples(), y.timeline.samples());
+    assert_eq!(ta.len(), tb.len(), "{what}: timeline length");
+    for (a, b) in ta.iter().zip(tb) {
+        assert_eq!(a.t_ns.to_bits(), b.t_ns.to_bits(), "{what}: sample time");
+        assert_eq!(a.active, b.active, "{what}: sample active");
+        assert_eq!(a.queued, b.queued, "{what}: sample queued");
+        assert_eq!(a.kv_per_bank_bytes, b.kv_per_bank_bytes, "{what}: sample kv");
+    }
+    assert_eq!(x.session_reports.len(), y.session_reports.len(), "{what}: report len");
+    for (sa, sb) in x.session_reports.iter().zip(&y.session_reports) {
+        assert_eq!(sa.id, sb.id, "{what}: session order");
+        assert_eq!(sa.prompt, sb.prompt, "{what}: prompt");
+        assert_eq!(sa.gen, sb.gen, "{what}: gen");
+        assert_eq!(sa.generated, sb.generated, "{what}: generated");
+        assert_eq!(sa.rejected, sb.rejected, "{what}: rejected flag");
+        assert_eq!(sa.arrival_ns.to_bits(), sb.arrival_ns.to_bits(), "{what}: arrival");
+        assert_eq!(sa.ttft_ns.to_bits(), sb.ttft_ns.to_bits(), "{what}: session ttft");
+        assert_eq!(sa.finished_ns.to_bits(), sb.finished_ns.to_bits(), "{what}: finish");
+        assert_eq!(sa.tier, sb.tier, "{what}: tier");
+        assert_eq!(sa.est_accuracy.to_bits(), sb.est_accuracy.to_bits(), "{what}: accuracy");
+    }
+}
+
+/// The full differential matrix the PR's acceptance names: every
+/// scenario x placement x cache x thread-count x 4 seeds, tick vs
+/// event, one state-hash comparison each.  On a mismatch the
+/// field-by-field diff runs so the failure names the drifting metric.
+#[test]
+fn event_engine_matches_tick_on_the_full_differential_matrix() {
+    let cfg = ArtemisConfig::default();
+    for seed in 1..=4u64 {
+        for name in ["chat", "summarize", "burst"] {
+            let sc = fast_scenario(name, 5);
+            let trace = sc.generate(seed);
+            let sched = SchedulerConfig { max_batch: 3, policy: Policy::Fifo };
+            for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+                for cached in [true, false] {
+                    for threads in [1usize, 0] {
+                        let what = format!(
+                            "{name} seed {seed} {placement} cached={cached} threads={threads}"
+                        );
+                        let base = ClusterConfig::new(2, placement).with_threads(threads);
+                        let tick = run_cluster(
+                            &cfg,
+                            &sc.model,
+                            &trace,
+                            &base,
+                            &sched,
+                            RoutePolicy::LeastLoaded,
+                            cached,
+                        );
+                        let event = run_cluster(
+                            &cfg,
+                            &sc.model,
+                            &trace,
+                            &base.with_engine(EngineStrategy::Event),
+                            &sched,
+                            RoutePolicy::LeastLoaded,
+                            cached,
+                        );
+                        if tick.state_hash() != event.state_hash() {
+                            assert_reports_equal(&tick.aggregate, &event.aggregate, &what);
+                            for (a, b) in tick.per_stack.iter().zip(&event.per_stack) {
+                                assert_reports_equal(a, b, &what);
+                            }
+                            panic!(
+                                "{what}: reports field-equal but state hashes differ — \
+                                 hash coverage bug"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The hash's oracle: a run pair that is hash-equal is also full-report
+/// equal, and different simulated outcomes get different hashes.
+#[test]
+fn state_hash_is_a_faithful_stand_in_for_full_report_equality() {
+    let cfg = ArtemisConfig::default();
+    let sc = fast_scenario("chat", 8);
+    let sched = SchedulerConfig { max_batch: 4, policy: Policy::ShortestPromptFirst };
+    let trace = sc.generate(1);
+    let tick = run_continuous_engine(&cfg, &sc.model, &trace, &sched, EngineStrategy::Tick);
+    let event = run_continuous_engine(&cfg, &sc.model, &trace, &sched, EngineStrategy::Event);
+    assert_reports_equal(&tick, &event, "oracle");
+    assert_eq!(tick.state_hash(), event.state_hash(), "equal reports, equal hashes");
+    // Sensitivity: a different seed is a different simulated outcome
+    // and must not collide (for these traces, not just probabilistically).
+    let other = run_continuous(&cfg, &sc.model, &sc.generate(2), &sched);
+    assert_ne!(tick.state_hash(), other.state_hash(), "different runs must differ");
+}
+
+/// The wall-clock claim behind the event engine, in counter form: on
+/// an idle-heavy deep-queue trace it must reach the *same* state hash
+/// while performing strictly fewer costing lookups (DecodeBase reuse:
+/// roughly one saved lookup per decode tick on a single-stage stack).
+#[test]
+fn event_engine_takes_fewer_costing_lookups_when_idle_heavy() {
+    let cfg = ArtemisConfig::default();
+    let sc = Scenario::long_itl().with_sessions(48);
+    let trace = sc.generate(1);
+    let sched =
+        SchedulerConfig { max_batch: sc.max_batch, policy: Policy::ShortestPromptFirst };
+    let run = |engine: EngineStrategy| {
+        let cl = ClusterConfig::new(1, Placement::DataParallel).with_engine(engine);
+        run_cluster(&cfg, &sc.model, &trace, &cl, &sched, RoutePolicy::LeastLoaded, true)
+    };
+    let tick = run(EngineStrategy::Tick);
+    let event = run(EngineStrategy::Event);
+    assert_eq!(tick.state_hash(), event.state_hash(), "engines diverged");
+    let (lt, le) = (tick.cache.lookups(), event.cache.lookups());
+    assert!(le < lt, "event engine took {le} lookups vs tick {lt} — no reuse happened");
+    let saved = lt - le;
+    assert!(
+        saved >= tick.aggregate.ticks / 2,
+        "saved only {saved} lookups over {} decode ticks — reuse barely engaged",
+        tick.aggregate.ticks
+    );
+}
+
+/// Deterministic event ordering: the heap's (time, kind, session-id)
+/// total order re-serializes *any* insertion order of the same
+/// arrivals — including the simultaneous ones a burst trace is full
+/// of — to the same run, verified against the tick-engine reference.
+#[test]
+fn event_insertion_order_never_changes_the_state_hash() {
+    let cfg = ArtemisConfig::default();
+    let sc = fast_scenario("burst", 12);
+    let sched = SchedulerConfig { max_batch: 3, policy: Policy::Fifo };
+    let trace = sc.generate(9);
+    let want = run_continuous(&cfg, &sc.model, &trace, &sched).state_hash();
+
+    let run_permuted = |order: &[SessionSpec]| -> u64 {
+        let coster =
+            Coster::Batched { cfg: &cfg, model: &sc.model, opts: SimOptions::artemis() };
+        let mut sim = ReplicaSim::new(
+            &sc.model,
+            sched.clone(),
+            coster,
+            KvTracker::new(&cfg, &sc.model),
+            sc.model.layers as u64,
+            ServeFidelity::for_model(&cfg.fidelity, &sc.model),
+            EngineStrategy::Event,
+        );
+        for spec in order {
+            sim.schedule(*spec);
+        }
+        sim.run_scheduled();
+        // The scheme label is excluded from the hash by design, so a
+        // hand-driven replica hashes comparably to run_continuous.
+        sim.report("permuted".into()).state_hash()
+    };
+
+    let mut reversed = trace.clone();
+    reversed.reverse();
+    let mut rotated = trace.clone();
+    rotated.rotate_left(5);
+    let half = trace.len() / 2;
+    let mut interleaved: Vec<SessionSpec> = Vec::new();
+    for i in 0..half {
+        interleaved.push(trace[i + half]);
+        interleaved.push(trace[i]);
+    }
+    interleaved.extend_from_slice(&trace[2 * half..]);
+    for (label, order) in [
+        ("sorted", &trace),
+        ("reversed", &reversed),
+        ("rotated", &rotated),
+        ("interleaved", &interleaved),
+    ] {
+        assert_eq!(run_permuted(order), want, "{label} insertion order diverged");
+    }
+}
+
+/// Degenerate traces: empty, single-session, and a hand-built
+/// zero-generation-length session (the load generator clamps lengths
+/// to >= 1, so the gen == 0 edge needs a literal spec) — identical on
+/// both engines, single-machine and cluster paths alike.
+#[test]
+fn degenerate_traces_hold_on_both_engines() {
+    let cfg = ArtemisConfig::default();
+    let model = ModelZoo::transformer_base();
+    let sched = SchedulerConfig { max_batch: 2, policy: Policy::Fifo };
+
+    for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
+        let r = run_continuous_engine(&cfg, &model, &[], &sched, engine);
+        assert_eq!(r.sessions, 0, "{engine}");
+        assert_eq!(r.total_tokens, 0, "{engine}");
+        assert_eq!(r.makespan_ns.to_bits(), 0f64.to_bits(), "{engine}");
+        let cl = ClusterConfig::new(2, Placement::DataParallel).with_engine(engine);
+        let c = run_cluster(&cfg, &model, &[], &cl, &sched, RoutePolicy::LeastLoaded, true);
+        assert_eq!(c.aggregate.sessions, 0, "{engine} cluster");
+        assert_eq!(c.aggregate.ticks, 0, "{engine} cluster");
+    }
+    let empty_tick = run_continuous_engine(&cfg, &model, &[], &sched, EngineStrategy::Tick);
+    let empty_event = run_continuous_engine(&cfg, &model, &[], &sched, EngineStrategy::Event);
+    assert_eq!(empty_tick.state_hash(), empty_event.state_hash(), "empty trace");
+
+    let one =
+        vec![SessionSpec { id: 0, arrival_ns: 0.0, prompt: 16, gen: 4, tier: QosTier::Gold }];
+    let t = run_continuous_engine(&cfg, &model, &one, &sched, EngineStrategy::Tick);
+    let e = run_continuous_engine(&cfg, &model, &one, &sched, EngineStrategy::Event);
+    assert_reports_equal(&t, &e, "single session");
+    assert_eq!(t.state_hash(), e.state_hash(), "single session");
+    assert_eq!(t.total_tokens, 4);
+
+    let zero = vec![
+        SessionSpec { id: 0, arrival_ns: 0.0, prompt: 16, gen: 0, tier: QosTier::Gold },
+        SessionSpec { id: 1, arrival_ns: 1000.0, prompt: 8, gen: 3, tier: QosTier::Silver },
+    ];
+    let t = run_continuous_engine(&cfg, &model, &zero, &sched, EngineStrategy::Tick);
+    let e = run_continuous_engine(&cfg, &model, &zero, &sched, EngineStrategy::Event);
+    assert_reports_equal(&t, &e, "zero-gen session");
+    assert_eq!(t.state_hash(), e.state_hash(), "zero-gen session");
+    assert_eq!(t.total_tokens, 3, "only the non-degenerate session generates");
+    assert_eq!(t.session_reports[0].generated, 0, "gen == 0 finishes at prefill");
+    assert!(!t.session_reports[0].rejected, "gen == 0 is served, not rejected");
+    let zc = ClusterConfig::new(2, Placement::DataParallel).with_engine(EngineStrategy::Event);
+    let c = run_cluster(&cfg, &model, &zero, &zc, &sched, RoutePolicy::LeastLoaded, true);
+    assert_eq!(c.aggregate.total_tokens, 3, "zero-gen session on the cluster path");
+}
