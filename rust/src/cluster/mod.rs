@@ -40,6 +40,7 @@ use crate::serve::{
     RoutePolicy, Router, Scenario, SchedulerConfig, ServeGenReport, SessionSpec,
 };
 use crate::sim::{CacheStats, CostCache, SimOptions, StackCoster, StateHash};
+use crate::telemetry::{build_trace, Trace, TraceConfig, TraceMeta};
 
 /// Outcome of one cluster run: per-stack reports plus the exact
 /// aggregate (merged histograms, summed tokens/energy, max makespan).
@@ -108,6 +109,43 @@ pub fn run_cluster(
     route: RoutePolicy,
     cached: bool,
 ) -> ClusterReport {
+    run_cluster_inner(cfg, model, trace, cluster, sched, route, cached, None).0
+}
+
+/// [`run_cluster`] with telemetry enabled on every replica: also
+/// returns the run's structured trace, merged across replicas in
+/// replica-index order (the same deterministic order the parallel
+/// driver collects results in, so `--threads` never moves a trace
+/// byte).  The report — and its state hash — is bit-identical to the
+/// untraced run's.
+#[allow(clippy::too_many_arguments)] // run_cluster's knobs + the trace pair
+pub fn run_cluster_traced(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+    tc: &TraceConfig,
+    meta: &TraceMeta,
+) -> (ClusterReport, Trace) {
+    let (report, doc) =
+        run_cluster_inner(cfg, model, trace, cluster, sched, route, cached, Some((tc, meta)));
+    (report, doc.expect("telemetry was enabled"))
+}
+
+#[allow(clippy::too_many_arguments)] // internal: the union of both entry points
+fn run_cluster_inner(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+    tracing: Option<(&TraceConfig, &TraceMeta)>,
+) -> (ClusterReport, Option<Trace>) {
     assert!(cluster.stacks > 0, "cluster needs at least one stack");
     let opts = SimOptions::artemis();
     let cache = cached.then(CostCache::shared);
@@ -156,6 +194,11 @@ pub fn run_cluster(
             )]
         }
     };
+    if let Some((tc, _)) = tracing {
+        for r in replicas.iter_mut() {
+            r.enable_telemetry(tc);
+        }
+    }
 
     // Interleave the replicas on the shared timeline: advance everyone
     // to each arrival, route it against live load, hand it over.  The
@@ -212,9 +255,21 @@ pub fn run_cluster(
     for r in &replicas {
         profile.merge(r.profile());
     }
+    // Drain telemetry in replica-index order — the merge order, like
+    // the report order, is independent of the driver thread count.
+    let doc = tracing.map(|(tc, meta)| {
+        let parts = replicas
+            .iter_mut()
+            .enumerate()
+            .map(|(i, r)| r.drain_telemetry(i).expect("telemetry was enabled"))
+            .collect();
+        let mut t = build_trace(parts, tc, meta);
+        t.attach_profile(&profile);
+        t
+    });
     drop(cache);
 
-    ClusterReport {
+    let report = ClusterReport {
         stacks: cluster.stacks,
         placement: cluster.placement,
         route,
@@ -225,7 +280,8 @@ pub fn run_cluster(
         cache: cache_stats,
         cache_per_stack,
         profile,
-    }
+    };
+    (report, doc)
 }
 
 /// Resolve the driver-thread request: `0` = one thread per replica,

@@ -10,12 +10,14 @@ mod cluster;
 mod fidelity;
 mod hbm;
 mod models;
+mod slo;
 
 pub use circuits::{CircuitOverheads, MomcapParams, SC_STREAM_LEN};
 pub use cluster::{ClusterConfig, EngineStrategy, Placement, StackLinkParams};
 pub use fidelity::FidelityParams;
 pub use hbm::{EnergyParams, HbmConfig, TimingParams};
 pub use models::{Arch, ModelZoo, TransformerModel};
+pub use slo::{SloSpec, SloTarget};
 
 /// Top-level ARTEMIS configuration: architecture + circuits + policy.
 ///

@@ -1,0 +1,208 @@
+//! Declarative per-tier serving SLOs: TTFT and ITL p99 targets.
+//!
+//! The telemetry layer (see `telemetry`) counts violations against these
+//! targets exactly at sample time, so per-window error-budget burn needs
+//! no bucket approximation, and renders a final pass/fail verdict per
+//! QoS tier.  Targets are simulated-clock nanoseconds; the defaults are
+//! calibrated to the single-stack chat scale documented in
+//! EXPERIMENTS.md §Serving (TTFT p50 ≈ 112 ms, p99 ≈ 321 ms), tight
+//! enough that a congested cluster run burns visible budget.
+
+use crate::fidelity::QosTier;
+use crate::util::json::Json;
+use std::fmt;
+
+/// p99 latency targets for one QoS tier, simulated nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Time-to-first-token p99 target.
+    pub ttft_p99_ns: f64,
+    /// Inter-token latency p99 target.
+    pub itl_p99_ns: f64,
+}
+
+/// Per-tier SLO targets, indexed by [`QosTier::idx`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    targets: [SloTarget; 3],
+}
+
+const MS: f64 = 1e6;
+
+impl Default for SloSpec {
+    /// Gold 250 ms / 25 ms, silver 500 ms / 50 ms, bronze 1 s / 100 ms
+    /// (TTFT / ITL p99).
+    fn default() -> Self {
+        let mut targets = [SloTarget {
+            ttft_p99_ns: 0.0,
+            itl_p99_ns: 0.0,
+        }; 3];
+        targets[QosTier::Gold.idx()] = SloTarget {
+            ttft_p99_ns: 250.0 * MS,
+            itl_p99_ns: 25.0 * MS,
+        };
+        targets[QosTier::Silver.idx()] = SloTarget {
+            ttft_p99_ns: 500.0 * MS,
+            itl_p99_ns: 50.0 * MS,
+        };
+        targets[QosTier::Bronze.idx()] = SloTarget {
+            ttft_p99_ns: 1000.0 * MS,
+            itl_p99_ns: 100.0 * MS,
+        };
+        Self { targets }
+    }
+}
+
+/// Parse a duration like `250ms`, `10us`, `1.5s`, or `1200ns`
+/// (bare numbers are nanoseconds) into nanoseconds.
+fn parse_dur_ns(s: &str) -> Option<f64> {
+    let s = s.trim();
+    let (num, scale) = if let Some(n) = s.strip_suffix("ns") {
+        (n, 1.0)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1e3)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1e6)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1e9)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v.is_finite() && v > 0.0 {
+        Some(v * scale)
+    } else {
+        None
+    }
+}
+
+/// Render nanoseconds with the largest exact unit (`ms`/`us`/`ns`) so
+/// `Display` round-trips through [`SloSpec::parse`].
+fn fmt_dur_ns(ns: f64) -> String {
+    if ns % 1e6 == 0.0 {
+        format!("{}ms", ns / 1e6)
+    } else if ns % 1e3 == 0.0 {
+        format!("{}us", ns / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+impl SloSpec {
+    /// Target for one tier.
+    pub fn target(&self, tier: QosTier) -> SloTarget {
+        self.targets[tier.idx()]
+    }
+
+    /// Parse a `--slo` spec: `default`, or `;`-separated per-tier
+    /// overrides like `gold:ttft=100ms,itl=10ms;bronze:ttft=2s` on top
+    /// of the defaults.  Unmentioned tiers and metrics keep defaults.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let mut out = Self::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "default" {
+            return Some(out);
+        }
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (tier_s, fields) = part.split_once(':')?;
+            let tier = QosTier::parse(tier_s.trim())?;
+            let t = &mut out.targets[tier.idx()];
+            for field in fields.split(',') {
+                let (k, v) = field.split_once('=')?;
+                let ns = parse_dur_ns(v)?;
+                match k.trim() {
+                    "ttft" => t.ttft_p99_ns = ns,
+                    "itl" => t.itl_p99_ns = ns,
+                    _ => return None,
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// JSON form embedded in trace headers (keys sort, values in ns).
+    pub fn to_json(&self) -> Json {
+        Json::obj(
+            QosTier::ALL
+                .iter()
+                .map(|&tier| {
+                    let t = self.target(tier);
+                    (
+                        match tier {
+                            QosTier::Gold => "gold",
+                            QosTier::Silver => "silver",
+                            QosTier::Bronze => "bronze",
+                        },
+                        Json::obj(vec![
+                            ("ttft_p99_ns", Json::Num(t.ttft_p99_ns)),
+                            ("itl_p99_ns", Json::Num(t.itl_p99_ns)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+impl fmt::Display for SloSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, &tier) in QosTier::ALL.iter().enumerate() {
+            let t = self.target(tier);
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(
+                f,
+                "{tier}:ttft={},itl={}",
+                fmt_dur_ns(t.ttft_p99_ns),
+                fmt_dur_ns(t.itl_p99_ns)
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_targets_are_tiered() {
+        let s = SloSpec::default();
+        assert!(s.target(QosTier::Gold).ttft_p99_ns < s.target(QosTier::Silver).ttft_p99_ns);
+        assert!(s.target(QosTier::Silver).itl_p99_ns < s.target(QosTier::Bronze).itl_p99_ns);
+    }
+
+    #[test]
+    fn parse_overrides_subset() {
+        let s = SloSpec::parse("gold:ttft=100ms,itl=10ms;bronze:ttft=2s").unwrap();
+        assert_eq!(s.target(QosTier::Gold).ttft_p99_ns, 100.0 * MS);
+        assert_eq!(s.target(QosTier::Gold).itl_p99_ns, 10.0 * MS);
+        assert_eq!(s.target(QosTier::Bronze).ttft_p99_ns, 2000.0 * MS);
+        // Untouched metric/tier keeps the default.
+        assert_eq!(
+            s.target(QosTier::Bronze).itl_p99_ns,
+            SloSpec::default().target(QosTier::Bronze).itl_p99_ns
+        );
+        assert_eq!(s.target(QosTier::Silver), SloSpec::default().target(QosTier::Silver));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(SloSpec::parse("gold:ttft=").is_none());
+        assert!(SloSpec::parse("platinum:ttft=1ms").is_none());
+        assert!(SloSpec::parse("gold:latency=1ms").is_none());
+        assert!(SloSpec::parse("gold:ttft=-5ms").is_none());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let s = SloSpec::parse("gold:ttft=123us,itl=7ns").unwrap();
+        let round = SloSpec::parse(&s.to_string()).unwrap();
+        assert_eq!(s, round);
+    }
+}

@@ -37,6 +37,8 @@
 //!   cluster-aware session router.
 //! * [`cluster`]   — multi-stack scale-out: data-parallel replicas or
 //!   pipeline-parallel stack groups over the memoized cost cache.
+//! * [`telemetry`] — deterministic JSONL serve traces: session spans,
+//!   windowed snapshots, per-tier SLO tracking, pluggable sinks.
 //! * [`report`]    — table/figure emitters for the paper's evaluation.
 
 #![deny(rustdoc::broken_intra_doc_links)]
@@ -56,6 +58,7 @@ pub mod runtime;
 pub mod sc;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod timing;
 pub mod util;
 pub mod xfmr;

@@ -5,17 +5,20 @@
 //! (the offline build has no clap); `artemis help` lists everything.
 
 use anyhow::{anyhow, Result};
-use artemis::cluster::{run_cluster, run_scenario_cluster};
-use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement};
+use artemis::cluster::{run_cluster, run_cluster_traced, run_scenario_cluster};
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement, SloSpec};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
 use artemis::serve::{
-    run_continuous_engine, run_static, PhaseProfile, Policy, QosAssignment, RoutePolicy,
-    Scenario, SchedulerConfig,
+    run_continuous_engine, run_continuous_traced, run_static, PhaseProfile, Policy,
+    QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
 };
 use artemis::sim::SimOptions;
+use artemis::telemetry::{
+    build_trace, parse_trace, FileSink, NullSink, Trace, TraceConfig, TraceMeta, SCHEMA_VERSION,
+};
 use artemis::util::json::Json;
 use artemis::util::XorShift64;
 
@@ -60,7 +63,8 @@ Other commands:
            [--sessions N] [--policy fifo|spf] [--batch B] [--model name]
            [--qos gold|silver|bronze|mix] [--engine tick|event]
            [--stacks D] [--placement dp|pp] [--route rr|ll|kv]
-           [--no-cost-cache]
+           [--no-cost-cache] [--trace FILE] [--slo SPEC]
+           [--trace-window MS]
            continuous-batching generation server on the simulated clock:
            TTFT + per-token p50/p95/p99 (simulated ns), tokens/s,
            estimated-accuracy percentiles, and the comparison against
@@ -77,7 +81,18 @@ Other commands:
            --engine picks the clock-advance strategy (tick = reference
            per-arrival loop, event = next-event heap with scan
            skipping); both report bit-identical numbers, attested by
-           the printed state-hash line (one u64 over the whole run)
+           the printed state-hash line (one u64 over the whole run).
+           --trace FILE streams the run's structured telemetry as
+           versioned JSONL (session spans, windowed snapshots, per-tier
+           SLO verdicts) — byte-identical across engines, thread
+           counts, and cache modes, and the report's state hash never
+           moves.  --slo sets per-tier p99 targets ('default' or e.g.
+           'gold:ttft=100ms,itl=10ms;bronze:ttft=2s'); --trace-window
+           sets the snapshot window in simulated ms (default 100)
+  trace-report <trace.jsonl> [--top K]
+           replay a --trace file into human-readable tables: run
+           summary, per-tier SLO verdicts, top-K worst sessions,
+           highest-burn windows, energy attribution by tier and phase
   cluster-scale
            scaling study: aggregate tokens/s and p99 latency for the
            chat trace on D = 1/2/4/8 stacks, both placements
@@ -89,7 +104,10 @@ Other commands:
            asserted equal); writes one consolidated JSON ({suite,
            threads, benches: [{bench, wall_ms, sim_tokens_per_s}]})
            to FILE.  Built with --features profiling it also embeds
-           the per-phase ns/tick profile of the long_itl event run
+           the per-phase ns/tick profile of the long_itl event run.
+           Also re-times the long_itl event point with telemetry
+           enabled into a null sink and records the overhead ratio
+           under a top-level \"telemetry\" field
   config   print the default configuration as JSON
   help     this text
 
@@ -202,12 +220,42 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         );
     }
 
+    // Telemetry: --trace streams the run as JSONL; --slo / --trace-window
+    // shape the verdicts and snapshot granularity baked into it.
+    let trace_path = flag_value(args, "--trace");
+    let slo = match flag_value(args, "--slo") {
+        None => SloSpec::default(),
+        Some(s) => SloSpec::parse(&s).ok_or_else(|| {
+            anyhow!("bad --slo '{s}' (try 'default' or 'gold:ttft=100ms,itl=10ms')")
+        })?,
+    };
+    let window_ms: f64 =
+        flag_value(args, "--trace-window").map(|v| v.parse()).transpose()?.unwrap_or(100.0);
+    if !window_ms.is_finite() || window_ms <= 0.0 {
+        return Err(anyhow!("--trace-window must be a positive number of milliseconds"));
+    }
+    let tc = TraceConfig { window_ns: window_ms * 1e6, slo };
+
     let trace = sc.generate(seed);
+    let meta = TraceMeta {
+        scenario: sc.name.to_string(),
+        model: sc.model.name.clone(),
+        seed: Some(seed),
+        sessions: trace.len() as u64,
+        qos: sc.qos.to_string(),
+    };
     if trace.is_empty() {
         println!(
             "## serve-gen — scenario '{}' seed {}: empty trace (0 sessions), nothing to serve",
             sc.name, seed
         );
+        // An empty run still writes a *valid* trace (header + SLO
+        // verdict + footer, all no-data, no NaN) so downstream
+        // trace-report pipelines never see a truncated file.
+        if let Some(path) = &trace_path {
+            let doc = build_trace(Vec::new(), &tc, &meta);
+            write_trace(path, &doc)?;
+        }
         return Ok(());
     }
     let sched = SchedulerConfig { max_batch: batch, policy };
@@ -245,7 +293,22 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         let threads: usize =
             flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
         let cl = ClusterConfig::new(d, placement).with_threads(threads).with_engine(engine);
-        let r = run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached);
+        let (r, doc) = if trace_path.is_some() {
+            let (r, doc) = run_cluster_traced(
+                &stack_cfg,
+                &sc.model,
+                &trace,
+                &cl,
+                &sched,
+                route,
+                cached,
+                &tc,
+                &meta,
+            );
+            (r, Some(doc))
+        } else {
+            (run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached), None)
+        };
 
         println!(
             "## serve-gen cluster — scenario '{}' seed {} ({}, {} sessions, {} stacks {}, \
@@ -283,11 +346,19 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         // One u64 over the whole simulated outcome: equal across
         // engines, thread counts, and cache on/off by construction.
         println!("state-hash {:#018x}", r.state_hash());
+        if let (Some(path), Some(doc)) = (&trace_path, &doc) {
+            write_trace(path, doc)?;
+        }
         return Ok(());
     }
 
     let cfg = build_config(args)?;
-    let cont = run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine);
+    let (cont, doc) = if trace_path.is_some() {
+        let (r, doc) = run_continuous_traced(&cfg, &sc.model, &trace, &sched, engine, &tc, &meta);
+        (r, Some(doc))
+    } else {
+        (run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine), None)
+    };
     let stat = run_static(&cfg, &sc.model, &trace, batch);
 
     println!(
@@ -335,6 +406,38 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     }
     println!();
     report::serving_comparison(&[cont, stat]).print();
+    if let (Some(path), Some(doc)) = (&trace_path, &doc) {
+        write_trace(path, doc)?;
+    }
+    Ok(())
+}
+
+/// Emit a built trace as JSONL and print the grep-stable summary and
+/// verdict lines CI asserts on.
+fn write_trace(path: &str, doc: &Trace) -> Result<()> {
+    let mut sink = FileSink::create(std::path::Path::new(path))?;
+    doc.emit(&mut sink);
+    println!(
+        "trace: wrote {path} ({} spans, {} windows, schema v{SCHEMA_VERSION})",
+        doc.spans.len(),
+        doc.windows.len()
+    );
+    println!("{}", doc.slo.verdict_line());
+    Ok(())
+}
+
+/// `trace-report`: replay a JSONL trace file into human-readable
+/// tables (see `report::print_trace_report`).
+fn run_trace_report(args: &[String]) -> Result<()> {
+    let path = args
+        .get(1)
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| anyhow!("usage: artemis trace-report <trace.jsonl> [--top K]"))?;
+    let top: usize = flag_value(args, "--top").map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let text = std::fs::read_to_string(path)?;
+    let parsed = parse_trace(&text)?;
+    println!("## trace-report — {path}");
+    report::print_trace_report(&parsed, top);
     Ok(())
 }
 
@@ -404,6 +507,7 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
         SchedulerConfig { max_batch: lsc.max_batch, policy: Policy::ShortestPromptFirst };
     let mut hashes: Vec<u64> = Vec::new();
     let mut profile = PhaseProfile::default();
+    let mut long_itl_event_ms = f64::INFINITY;
     for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
         let name = format!("long_itl_{engine}");
         let cl = ClusterConfig::new(1, Placement::DataParallel)
@@ -432,6 +536,9 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
             best_ms = best_ms.min(ms);
         }
         hashes.push(hash);
+        if engine == EngineStrategy::Event {
+            long_itl_event_ms = best_ms;
+        }
         let tok_per_wall_s = tokens as f64 / (best_ms.max(1e-9) * 1e-3);
         println!(
             "bench {name}: wall {best_ms:.3} ms (best of {reps}), {tokens} trace \
@@ -452,6 +559,61 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
         ));
     }
 
+    // Telemetry overhead: re-time the long_itl event point with the
+    // full trace pipeline enabled and the emitted JSONL discarded into
+    // a null sink.  The ratio is the per-run cost of tracing; CI's
+    // perf gate holds null_sink_wall_ms to the same 2x ceiling as the
+    // untraced point, and the state hash must not move.
+    let telemetry = {
+        let cl = ClusterConfig::new(1, Placement::DataParallel)
+            .with_threads(threads)
+            .with_engine(EngineStrategy::Event);
+        let ttc = TraceConfig::default();
+        let tmeta = TraceMeta {
+            scenario: lsc.name.to_string(),
+            model: lsc.model.name.clone(),
+            seed: Some(seed),
+            sessions: ltrace.len() as u64,
+            qos: lsc.qos.to_string(),
+        };
+        let mut best_ms = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let (r, doc) = run_cluster_traced(
+                &cfg,
+                &lsc.model,
+                &ltrace,
+                &cl,
+                &lsched,
+                RoutePolicy::LeastLoaded,
+                true,
+                &ttc,
+                &tmeta,
+            );
+            doc.emit(&mut NullSink);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            if r.state_hash() != hashes[1] {
+                return Err(anyhow!(
+                    "telemetry moved the state hash: {:#018x} != {:#018x}",
+                    r.state_hash(),
+                    hashes[1]
+                ));
+            }
+            best_ms = best_ms.min(ms);
+        }
+        let ratio = best_ms / long_itl_event_ms.max(1e-9);
+        println!(
+            "bench long_itl_event+telemetry(null sink): wall {best_ms:.3} ms \
+             (best of {reps}), {ratio:.2}x the untraced run"
+        );
+        Json::obj(vec![
+            ("bench", Json::Str("long_itl_event".into())),
+            ("off_wall_ms", Json::Num((long_itl_event_ms * 1e3).round() / 1e3)),
+            ("null_sink_wall_ms", Json::Num((best_ms * 1e3).round() / 1e3)),
+            ("overhead_ratio", Json::Num((ratio * 1e3).round() / 1e3)),
+        ])
+    };
+
     // `threads` records the *request* (0 = auto): dp points resolve it
     // to min(stacks, machine parallelism), pp points to 1 (one logical
     // replica) — simulated outputs are identical regardless.
@@ -460,6 +622,7 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
         ("suite", Json::Str("serve_gen_cluster_x4_seed1".into())),
         ("threads", Json::Num(threads as f64)),
         ("benches", Json::Arr(benches)),
+        ("telemetry", telemetry),
     ];
     // Per-phase wall-time profile of the long_itl event run, against
     // the stated scheduler-overhead budget.  All-zero (and omitted)
@@ -628,6 +791,7 @@ fn main() -> Result<()> {
         }
         "serve" => run_serve(&args)?,
         "serve-gen" => run_serve_gen(&args)?,
+        "trace-report" => run_trace_report(&args)?,
         "cluster-scale" => report::cluster_scale_study(&cfg).print(),
         "bench-serve" => run_bench_serve(&args)?,
         "config" => println!("{}", cfg.to_json()),

@@ -9,6 +9,7 @@ mod extensions;
 mod fidelity;
 mod serving;
 mod table;
+mod trace;
 
 pub use cluster::cluster_scale_study;
 pub use experiments::*;
@@ -16,3 +17,7 @@ pub use extensions::*;
 pub use fidelity::{fidelity_pareto, qos_serving_study};
 pub use serving::{serving_comparison, serving_study};
 pub use table::TableBuilder;
+pub use trace::{
+    print_trace_report, trace_energy, trace_slo_table, trace_summary, trace_verdict_line,
+    trace_window_burn, trace_worst_sessions,
+};

@@ -1,0 +1,324 @@
+//! `trace-report`: replay a JSONL telemetry trace into human-readable
+//! tables — run summary, final SLO verdicts, the worst sessions and
+//! highest-burn windows, and per-tier energy attribution by phase.
+//!
+//! Works entirely from the parsed record stream ([`ParsedTrace`]), not
+//! the in-memory [`Trace`](crate::telemetry::Trace): the command must
+//! be able to replay a trace file written by another run (or another
+//! machine) with nothing but the file.
+
+use super::table::TableBuilder;
+use crate::telemetry::ParsedTrace;
+use crate::util::json::Json;
+
+const TIERS: [&str; 3] = ["gold", "silver", "bronze"];
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn text<'a>(j: &'a Json, key: &str) -> &'a str {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or("?")
+}
+
+fn ms(ns: f64) -> String {
+    format!("{:.3}", ns * 1e-6)
+}
+
+fn mj(pj: f64) -> String {
+    format!("{:.3}", pj * 1e-9)
+}
+
+/// Run-identity and whole-run totals (header + footer records).
+pub fn trace_summary(t: &ParsedTrace) -> TableBuilder {
+    let mut tb = TableBuilder::new("Trace summary", &["field", "value"]);
+    let h = &t.header;
+    let kv = |tb: &mut TableBuilder, k: &str, v: String| {
+        tb.row(vec![k.to_string(), v]);
+    };
+    kv(&mut tb, "schema", format!("v{}", t.schema));
+    kv(&mut tb, "scenario", text(h, "scenario").to_string());
+    kv(&mut tb, "model", text(h, "model").to_string());
+    let seed = h.get("seed").and_then(|v| v.as_u64());
+    kv(&mut tb, "seed", seed.map_or("-".into(), |s| s.to_string()));
+    kv(&mut tb, "qos", text(h, "qos").to_string());
+    kv(&mut tb, "window(ms)", ms(num(h, "window_ns")));
+    if let Some(f) = &t.footer {
+        kv(&mut tb, "sessions", format!("{}", num(f, "sessions") as u64));
+        kv(&mut tb, "rejected", format!("{}", num(f, "rejected") as u64));
+        kv(&mut tb, "tokens", format!("{}", num(f, "tokens") as u64));
+        kv(&mut tb, "makespan(ms)", ms(num(f, "makespan_ns")));
+        kv(&mut tb, "energy(mJ)", mj(num(f, "energy_pj")));
+        kv(&mut tb, "windows", format!("{}", num(f, "windows") as u64));
+        if let Some(p) = f.get("profile") {
+            kv(&mut tb, "profiled ticks", format!("{}", num(p, "ticks") as u64));
+            kv(
+                &mut tb,
+                "overhead ns/tick",
+                format!(
+                    "{:.0} (budget {})",
+                    num(p, "overhead_ns_per_tick"),
+                    num(p, "budget_ns_per_tick") as u64
+                ),
+            );
+        }
+    }
+    tb
+}
+
+/// Final per-tier SLO verdicts (the `slo` record).
+pub fn trace_slo_table(t: &ParsedTrace) -> TableBuilder {
+    let mut tb = TableBuilder::new(
+        "SLO verdicts — running p99 over the whole trace vs per-tier targets",
+        &["tier", "ttft p99(ms)", "target(ms)", "n", "itl p99(ms)", "target(ms)", "n", "verdict"],
+    );
+    let Some(slo) = &t.slo else {
+        return tb;
+    };
+    let Some(tiers) = slo.get("tiers") else {
+        return tb;
+    };
+    for key in TIERS {
+        let Some(v) = tiers.get(key) else { continue };
+        tb.row(vec![
+            key.to_string(),
+            ms(num(v, "ttft_p99_ns")),
+            ms(num(v, "ttft_target_ns")),
+            format!("{}", num(v, "ttft_n") as u64),
+            ms(num(v, "itl_p99_ns")),
+            ms(num(v, "itl_target_ns")),
+            format!("{}", num(v, "itl_n") as u64),
+            text(v, "verdict").to_string(),
+        ]);
+    }
+    tb
+}
+
+/// Reconstruct the one-line verdict from a parsed trace (what a live
+/// run prints from [`SloReport::verdict_line`]
+/// (crate::telemetry::SloReport::verdict_line)).
+pub fn trace_verdict_line(t: &ParsedTrace) -> String {
+    let verdict = |key: &str| -> &str {
+        t.slo
+            .as_ref()
+            .and_then(|s| s.get("tiers"))
+            .and_then(|ts| ts.get(key))
+            .map(|v| text(v, "verdict"))
+            .unwrap_or("no-data")
+    };
+    format!(
+        "slo-verdict gold={} silver={} bronze={}",
+        verdict("gold"),
+        verdict("silver"),
+        verdict("bronze")
+    )
+}
+
+/// Top-`top` worst sessions by TTFT (rejected sessions ranked by their
+/// queue wait, flagged by state).
+pub fn trace_worst_sessions(t: &ParsedTrace, top: usize) -> TableBuilder {
+    let mut tb = TableBuilder::new(
+        &format!("Worst sessions (top {top} by TTFT; rejected by queue wait)"),
+        &[
+            "id",
+            "replica",
+            "tier",
+            "state",
+            "prompt",
+            "gen'd/gen",
+            "queued(ms)",
+            "ttft(ms)",
+            "decode(ms)",
+            "energy(mJ)",
+        ],
+    );
+    let badness = |s: &Json| -> f64 {
+        if num(s, "generated") > 0.0 {
+            num(s, "first_token_ns") - num(s, "arrival_ns")
+        } else {
+            num(s, "queued_ns")
+        }
+    };
+    let mut spans: Vec<&Json> = t.spans.iter().collect();
+    spans.sort_by(|a, b| {
+        badness(b).total_cmp(&badness(a)).then(num(a, "id").total_cmp(&num(b, "id")))
+    });
+    for s in spans.into_iter().take(top) {
+        let ttft = if num(s, "generated") > 0.0 {
+            num(s, "first_token_ns") - num(s, "arrival_ns")
+        } else {
+            0.0
+        };
+        tb.row(vec![
+            format!("{}", num(s, "id") as u64),
+            format!("{}", num(s, "replica") as u64),
+            text(s, "tier").to_string(),
+            text(s, "state").to_string(),
+            format!("{}", num(s, "prompt") as u64),
+            format!("{}/{}", num(s, "generated") as u64, num(s, "gen") as u64),
+            ms(num(s, "queued_ns")),
+            ms(ttft),
+            ms(num(s, "decode_ns")),
+            mj(num(s, "prefill_pj") + num(s, "decode_pj")),
+        ]);
+    }
+    tb
+}
+
+/// Top-`top` windows by worst per-tier error-budget burn.
+pub fn trace_window_burn(t: &ParsedTrace, top: usize) -> TableBuilder {
+    let mut tb = TableBuilder::new(
+        &format!("Hottest windows (top {top} by max SLO burn; burn > 1 exceeds the p99 budget)"),
+        &[
+            "window",
+            "start(ms)",
+            "tokens",
+            "tok/s",
+            "peak act/q",
+            "gold burn",
+            "silver burn",
+            "bronze burn",
+        ],
+    );
+    let tier_burn = |w: &Json, key: &str| -> f64 {
+        w.get("tiers")
+            .and_then(|ts| ts.get(key))
+            .map(|v| num(v, "ttft_burn").max(num(v, "itl_burn")))
+            .unwrap_or(0.0)
+    };
+    let worst = |w: &Json| -> f64 { TIERS.iter().map(|&k| tier_burn(w, k)).fold(0.0, f64::max) };
+    let mut windows: Vec<&Json> = t.windows.iter().collect();
+    windows.sort_by(|a, b| {
+        worst(b).total_cmp(&worst(a)).then(num(a, "idx").total_cmp(&num(b, "idx")))
+    });
+    for w in windows.into_iter().take(top) {
+        tb.row(vec![
+            format!("{}", num(w, "idx") as u64),
+            ms(num(w, "start_ns")),
+            format!("{}", num(w, "tokens") as u64),
+            format!("{:.0}", num(w, "tokens_per_s")),
+            format!("{}/{}", num(w, "peak_active") as u64, num(w, "peak_queued") as u64),
+            format!("{:.2}", tier_burn(w, "gold")),
+            format!("{:.2}", tier_burn(w, "silver")),
+            format!("{:.2}", tier_burn(w, "bronze")),
+        ]);
+    }
+    tb
+}
+
+/// Per-tier energy attribution by phase, summed over the span records.
+pub fn trace_energy(t: &ParsedTrace) -> TableBuilder {
+    let mut tb = TableBuilder::new(
+        "Energy attribution by tier and phase (even per-row split of batched tick energy)",
+        &["tier", "sessions", "tokens", "prefill(mJ)", "decode(mJ)", "total(mJ)", "share%"],
+    );
+    let mut per: [(u64, u64, f64, f64); 3] = [(0, 0, 0.0, 0.0); 3];
+    for s in &t.spans {
+        let Some(i) = TIERS.iter().position(|&k| k == text(s, "tier")) else {
+            continue;
+        };
+        per[i].0 += 1;
+        per[i].1 += num(s, "generated") as u64;
+        per[i].2 += num(s, "prefill_pj");
+        per[i].3 += num(s, "decode_pj");
+    }
+    let total: f64 = per.iter().map(|p| p.2 + p.3).sum();
+    for (i, key) in TIERS.iter().enumerate() {
+        let (n, tokens, prefill, decode) = per[i];
+        if n == 0 {
+            continue;
+        }
+        let share = if total > 0.0 { (prefill + decode) / total * 100.0 } else { 0.0 };
+        tb.row(vec![
+            key.to_string(),
+            n.to_string(),
+            tokens.to_string(),
+            mj(prefill),
+            mj(decode),
+            mj(prefill + decode),
+            format!("{share:.1}"),
+        ]);
+    }
+    tb
+}
+
+/// The full `trace-report` output: every table plus the grep-stable
+/// verdict line CI asserts on.
+pub fn print_trace_report(t: &ParsedTrace, top: usize) {
+    trace_summary(t).print();
+    trace_slo_table(t).print();
+    let worst = trace_worst_sessions(t, top);
+    if !worst.is_empty() {
+        worst.print();
+    }
+    let burn = trace_window_burn(t, top);
+    if !burn.is_empty() {
+        burn.print();
+    }
+    let energy = trace_energy(t);
+    if !energy.is_empty() {
+        energy.print();
+    }
+    println!("{}", trace_verdict_line(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+    use crate::serve::{run_continuous_traced, Policy, Scenario, SchedulerConfig};
+    use crate::telemetry::{parse_trace, TraceConfig, TraceMeta};
+
+    fn traced_run(n: usize) -> ParsedTrace {
+        let cfg = crate::config::ArtemisConfig::default();
+        let mut sc = Scenario::chat().with_sessions(n);
+        sc.model = ModelZoo::transformer_base();
+        let trace = sc.generate(1);
+        let sched = SchedulerConfig::for_scenario(&sc, Policy::Fifo);
+        let tc = TraceConfig::default();
+        let meta = TraceMeta {
+            scenario: "chat".into(),
+            model: sc.model.name.clone(),
+            seed: Some(1),
+            sessions: n as u64,
+            qos: "mix".into(),
+        };
+        let (_, doc) = run_continuous_traced(
+            &cfg,
+            &sc.model,
+            &trace,
+            &sched,
+            crate::config::EngineStrategy::Tick,
+            &tc,
+            &meta,
+        );
+        parse_trace(&doc.lines().join("\n")).unwrap()
+    }
+
+    #[test]
+    fn report_tables_render_from_a_live_trace() {
+        let t = traced_run(6);
+        let summary = trace_summary(&t).render();
+        assert!(summary.contains("schema") && summary.contains("v1"), "{summary}");
+        assert!(!summary.contains("NaN"));
+        let slo = trace_slo_table(&t).render();
+        assert!(slo.contains("gold"), "{slo}");
+        let worst = trace_worst_sessions(&t, 3);
+        assert_eq!(worst.to_csv().lines().count(), 4, "header + top 3");
+        let energy = trace_energy(&t).render();
+        assert!(!energy.contains("NaN"), "{energy}");
+        let line = trace_verdict_line(&t);
+        assert!(line.starts_with("slo-verdict gold="), "{line}");
+    }
+
+    #[test]
+    fn empty_trace_renders_without_panicking() {
+        let t = traced_run(0);
+        assert!(trace_worst_sessions(&t, 5).is_empty());
+        assert!(trace_energy(&t).is_empty());
+        assert_eq!(
+            trace_verdict_line(&t),
+            "slo-verdict gold=no-data silver=no-data bronze=no-data"
+        );
+    }
+}

@@ -35,6 +35,38 @@ impl StreamingHistogram {
         ((v.ln() / LN_GROWTH) as usize).min(BUCKETS - 1)
     }
 
+    /// Stable log-bucket index of one sample.  The telemetry layer
+    /// (`telemetry::window`) stores sparse per-window bucket deltas
+    /// under these indices and replays them through
+    /// [`StreamingHistogram::fold_bucket_counts`] — sharing the bucket
+    /// function keeps window percentiles bit-identical to the ones a
+    /// dense histogram would report.
+    pub(crate) fn bucket_index(v: f64) -> usize {
+        Self::bucket(v.max(0.0))
+    }
+
+    /// Fold pre-bucketed counts in, exactly like [`StreamingHistogram::merge`]
+    /// but from a sparse `(bucket, count)` delta with its side stats.
+    pub(crate) fn fold_bucket_counts(
+        &mut self,
+        entries: &[(u16, u64)],
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+    ) {
+        if count == 0 {
+            return;
+        }
+        for &(b, c) in entries {
+            self.counts[(b as usize).min(BUCKETS - 1)] += c;
+        }
+        self.count += count;
+        self.sum += sum;
+        self.min = self.min.min(min);
+        self.max = self.max.max(max);
+    }
+
     /// Record one latency sample (ns; clamped to ≥ 0).
     pub fn record(&mut self, v: f64) {
         let v = v.max(0.0);

@@ -63,8 +63,8 @@ pub use metrics::{
 pub use profile::{Phase, PhaseProfile, PhaseTimer};
 pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{
-    run_continuous, run_continuous_engine, run_static, Coster, Policy, ReplicaSim,
-    SchedulerConfig, ServeGenReport, SessionReport,
+    run_continuous, run_continuous_engine, run_continuous_traced, run_static, Coster, Policy,
+    ReplicaSim, SchedulerConfig, ServeGenReport, SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
 

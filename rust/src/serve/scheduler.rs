@@ -56,6 +56,7 @@ use crate::sim::{
     simulate, CacheStats, DecodeBaseCache, Event, EventKind, EventQueue, SimOptions, StackCoster,
     StateHash, TickCost,
 };
+use crate::telemetry::{ReplicaTelemetry, SessionSpan, TraceConfig, WindowSet};
 use crate::xfmr::{batched_decode_step_workload, batched_prefill_workload};
 
 /// Admission-order policy for the wait queue.
@@ -440,6 +441,12 @@ pub struct ReplicaSim<'a> {
     base_reuse: DecodeBaseCache,
     /// Per-phase wall time (all zeros unless built with `profiling`).
     profile: PhaseProfile,
+    /// Trace buffers when this run is telemetered
+    /// ([`enable_telemetry`](Self::enable_telemetry)); `None` costs one
+    /// branch per hook site and allocates nothing.  Telemetry only
+    /// *reads* scheduler state, so the state hash is identical with it
+    /// on or off (asserted by `tests/trace_conformance.rs`).
+    telemetry: Option<ReplicaTelemetry>,
     // Reusable per-tick scratch buffers: the tick loop is the
     // simulator's hot path, and a `Vec` allocation per tick (contexts,
     // prompts, admission lists) was measurable at cluster scale
@@ -481,6 +488,7 @@ impl<'a> ReplicaSim<'a> {
             tick_pending: false,
             base_reuse: DecodeBaseCache::default(),
             profile: PhaseProfile::default(),
+            telemetry: None,
             scratch_ctx: Vec::new(),
             scratch_prompts: Vec::new(),
             scratch_admitted: Vec::new(),
@@ -518,6 +526,34 @@ impl<'a> ReplicaSim<'a> {
         self.sessions.push(Session::new(spec));
         self.waiting.push(idx);
         self.admission_dirty = true;
+        if let Some(tel) = &mut self.telemetry {
+            // Window the arrival under its *true* arrival time — the
+            // replica clock may have jumped past it, and the spec time
+            // is what both engines agree on.
+            tel.on_push(spec.arrival_ns);
+        }
+    }
+
+    /// Start collecting a trace for this run.  Call before driving any
+    /// sessions; buffers drain through
+    /// [`drain_telemetry`](Self::drain_telemetry) at trace-build time.
+    pub fn enable_telemetry(&mut self, tc: &TraceConfig) {
+        assert!(self.sessions.is_empty(), "enable telemetry before driving sessions");
+        self.telemetry = Some(ReplicaTelemetry::new(tc));
+    }
+
+    /// Tear the telemetry buffers down into per-session spans (tagged
+    /// with this replica's index) plus the windowed aggregates; `None`
+    /// when telemetry was never enabled.
+    pub(crate) fn drain_telemetry(
+        &mut self,
+        replica: usize,
+    ) -> Option<(Vec<SessionSpan>, WindowSet)> {
+        let tel = self.telemetry.take()?;
+        let (model, kv_layers) = (self.model, self.kv_layers);
+        Some(tel.into_parts(&self.sessions, replica, |s| {
+            kv_bytes_for_layers(model, s.max_context(), kv_layers)
+        }))
     }
 
     /// Run ticks until the clock reaches `t`; when idle, jump there.
@@ -678,6 +714,9 @@ impl<'a> ReplicaSim<'a> {
                     // queue forever.
                     self.sessions[idx].state = SessionState::Rejected;
                     self.sessions[idx].finished_ns = self.clock;
+                    if let Some(tel) = &mut self.telemetry {
+                        tel.on_reject(self.clock);
+                    }
                     continue;
                 }
                 if self.active.len() + admitted.len() < self.sched.max_batch
@@ -685,6 +724,9 @@ impl<'a> ReplicaSim<'a> {
                 {
                     self.sessions[idx].state = SessionState::Prefill;
                     self.sessions[idx].admitted_ns = self.clock;
+                    if let Some(tel) = &mut self.telemetry {
+                        tel.on_admit(self.clock);
+                    }
                     admitted.push(idx);
                 } else {
                     still_waiting.push(idx);
@@ -720,6 +762,18 @@ impl<'a> ReplicaSim<'a> {
             self.acc.energy_pj += c.energy_pj * ef;
             self.acc.ticks += 1;
             self.acc.decode_rows += self.active.len() as u64;
+            if let Some(tel) = &mut self.telemetry {
+                // Before emit_token mutates the sessions: `generated == 0`
+                // still identifies first tokens, `last_token_ns` is the
+                // previous emission.
+                tel.on_decode_tick(
+                    self.clock,
+                    c.ns * tf,
+                    c.energy_pj * ef,
+                    &self.active,
+                    &self.sessions,
+                );
+            }
             for &i in &self.active {
                 emit_token(&mut self.sessions[i], self.clock, &mut self.acc);
             }
@@ -728,11 +782,15 @@ impl<'a> ReplicaSim<'a> {
             let (sessions, kv, acc) = (&mut self.sessions, &mut self.kv, &mut self.acc);
             let (model, kv_layers, clock) = (self.model, self.kv_layers, self.clock);
             let fid = &self.fidelity;
+            let tel = &mut self.telemetry;
             active.retain(|&i| {
                 if sessions[i].generated >= sessions[i].spec.gen {
                     let est = fid.accuracy(sessions[i].spec.tier);
                     finish_session(&mut sessions[i], clock, acc, est);
                     kv.release(kv_bytes_for_layers(model, sessions[i].max_context(), kv_layers));
+                    if let Some(t) = tel.as_mut() {
+                        t.on_finish(clock);
+                    }
                     any_finished = true;
                     false
                 } else {
@@ -760,6 +818,9 @@ impl<'a> ReplicaSim<'a> {
             let (tf, ef) = self.batch_factors(&admitted);
             self.clock += c.ns * tf;
             self.acc.energy_pj += c.energy_pj * ef;
+            if let Some(tel) = &mut self.telemetry {
+                tel.on_prefill_tick(self.clock, c.ns * tf, c.energy_pj * ef, &admitted);
+            }
             for &idx in &admitted {
                 self.sessions[idx].state = SessionState::Decoding;
                 // Degenerate zero-length generations finish at prefill.
@@ -771,6 +832,9 @@ impl<'a> ReplicaSim<'a> {
                         self.sessions[idx].max_context(),
                         self.kv_layers,
                     ));
+                    if let Some(tel) = &mut self.telemetry {
+                        tel.on_finish(self.clock);
+                    }
                     self.capacity_freed = true;
                 } else {
                     self.active.push(idx);
@@ -786,6 +850,9 @@ impl<'a> ReplicaSim<'a> {
             queued: self.waiting.len(),
             kv_per_bank_bytes: self.kv.reserved_per_bank(),
         });
+        if let Some(tel) = &mut self.telemetry {
+            tel.on_occupancy(self.clock, self.active.len(), self.waiting.len());
+        }
     }
 
     /// Stats of the attached cost cache (zeros for the legacy coster).
@@ -878,6 +945,34 @@ pub fn run_continuous_engine(
     sched: &SchedulerConfig,
     engine: EngineStrategy,
 ) -> ServeGenReport {
+    run_continuous_inner(cfg, model, trace, sched, engine, None).0
+}
+
+/// [`run_continuous_engine`] with telemetry enabled: also returns the
+/// run's structured trace (`telemetry::Trace`), built from the
+/// replica's span/window buffers.  The report — and its state hash —
+/// is bit-identical to the untraced run's.
+pub fn run_continuous_traced(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    sched: &SchedulerConfig,
+    engine: EngineStrategy,
+    tc: &TraceConfig,
+    meta: &crate::telemetry::TraceMeta,
+) -> (ServeGenReport, crate::telemetry::Trace) {
+    let (report, doc) = run_continuous_inner(cfg, model, trace, sched, engine, Some((tc, meta)));
+    (report, doc.expect("telemetry was enabled"))
+}
+
+fn run_continuous_inner(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    sched: &SchedulerConfig,
+    engine: EngineStrategy,
+    tracing: Option<(&TraceConfig, &crate::telemetry::TraceMeta)>,
+) -> (ServeGenReport, Option<crate::telemetry::Trace>) {
     let mut order: Vec<SessionSpec> = trace.to_vec();
     order.sort_by(cmp_arrival);
     let coster = Coster::Batched { cfg, model, opts: SimOptions::artemis() };
@@ -890,6 +985,9 @@ pub fn run_continuous_engine(
         ServeFidelity::for_model(&cfg.fidelity, model),
         engine,
     );
+    if let Some((tc, _)) = tracing {
+        sim.enable_telemetry(tc);
+    }
     match engine {
         EngineStrategy::Tick => drive_replica(&mut sim, &order),
         EngineStrategy::Event => {
@@ -899,7 +997,14 @@ pub fn run_continuous_engine(
             sim.run_scheduled();
         }
     }
-    sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch))
+    let report = sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch));
+    let doc = tracing.map(|(tc, meta)| {
+        let parts = sim.drain_telemetry(0).expect("telemetry was enabled");
+        let mut t = crate::telemetry::build_trace(vec![parts], tc, meta);
+        t.attach_profile(sim.profile());
+        t
+    });
+    (report, doc)
 }
 
 /// Serve `trace` with the static pad-and-drop batcher the repo's

@@ -1,0 +1,57 @@
+//! Streaming telemetry: deterministic structured traces of serve runs.
+//!
+//! Turns every serve run into a versioned JSONL trace — per-session
+//! lifecycle **spans**, bounded-memory self-decimating **windowed
+//! snapshots**, and per-tier **SLO tracking** with error-budget burn —
+//! written through a pluggable [`TraceSink`] and replayed by the
+//! `trace-report` CLI command.  See DESIGN.md §Telemetry for the
+//! schema, the determinism argument, and why traces are excluded from
+//! the run state hash.
+//!
+//! Invariants (asserted by `tests/trace_conformance.rs`):
+//! - **Deterministic**: the same seed produces byte-identical traces
+//!   across `EngineStrategy::{Tick,Event}`, `--threads` counts, and
+//!   cost-cache on/off.
+//! - **Zero-cost when off**: a replica without telemetry enabled pays
+//!   one `Option` branch per hook site and allocates nothing.
+//! - **Hash-neutral**: enabling telemetry never changes a report's
+//!   state hash — hooks only read scheduler state, never mutate it.
+
+pub mod sink;
+mod span;
+mod trace;
+mod window;
+
+pub use sink::{FileSink, MemSink, NullSink, TraceSink};
+pub use span::{SessionSpan, SpanAcc};
+pub use trace::{
+    build_trace, parse_trace, ParsedTrace, ReplicaTelemetry, SloReport, SloVerdict, Trace,
+    TraceMeta, TierSnap, WindowRecord,
+};
+pub use window::WindowSet;
+
+use crate::config::SloSpec;
+
+/// Version stamped into every trace header; bump on any record-shape
+/// change (the golden fixture `rust/tests/golden/trace_schema.json`
+/// gates drift).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default snapshot window: 100 ms of simulated time.
+pub const DEFAULT_WINDOW_NS: f64 = 1e8;
+
+/// How a traced run buckets and judges its telemetry.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Initial window width, simulated ns (self-doubles to stay under
+    /// the bounded window count on long campaigns).
+    pub window_ns: f64,
+    /// Declarative per-tier SLO targets violations are counted against.
+    pub slo: SloSpec,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { window_ns: DEFAULT_WINDOW_NS, slo: SloSpec::default() }
+    }
+}

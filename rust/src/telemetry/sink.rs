@@ -1,0 +1,94 @@
+//! Pluggable trace output: file, in-memory (tests), or null.
+//!
+//! A sink receives finished JSONL records (one compact JSON value per
+//! line, no trailing newline) — it never sees partial lines, so any
+//! transport that can ship framed lines (a file, a TCP stream for the
+//! future serve-daemon, a test buffer) can implement it.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Receives one JSONL record per call (without the trailing newline).
+pub trait TraceSink {
+    fn write_line(&mut self, line: &str);
+    /// Flush buffered output; default no-op for unbuffered sinks.
+    fn flush(&mut self) {}
+}
+
+/// Discards everything — the zero-cost "telemetry off" sink used by the
+/// bench lane to measure pure instrumentation overhead.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn write_line(&mut self, _line: &str) {}
+}
+
+/// Collects lines in memory; the conformance tests compare these
+/// vectors byte-for-byte across engines and thread counts.
+#[derive(Debug, Default)]
+pub struct MemSink {
+    pub lines: Vec<String>,
+}
+
+impl TraceSink for MemSink {
+    fn write_line(&mut self, line: &str) {
+        self.lines.push(line.to_string());
+    }
+}
+
+/// Buffered JSONL file writer (the `serve-gen --trace <path>` target).
+pub struct FileSink {
+    out: BufWriter<File>,
+}
+
+impl FileSink {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        Ok(Self { out: BufWriter::new(File::create(path)?) })
+    }
+}
+
+impl TraceSink for FileSink {
+    fn write_line(&mut self, line: &str) {
+        // Serialization errors on a local file are unrecoverable for a
+        // trace write; surface them instead of silently truncating.
+        writeln!(self.out, "{line}").expect("trace write failed");
+    }
+
+    fn flush(&mut self) {
+        self.out.flush().expect("trace flush failed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_sink_collects_lines_null_sink_discards() {
+        let mut m = MemSink::default();
+        m.write_line("a");
+        m.write_line("b");
+        m.flush();
+        assert_eq!(m.lines, vec!["a", "b"]);
+        let mut n = NullSink;
+        n.write_line("ignored");
+        n.flush();
+    }
+
+    #[test]
+    fn file_sink_writes_newline_terminated_lines() {
+        let name = format!("artemis_sink_test_{}.jsonl", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        {
+            let mut f = FileSink::create(&path).unwrap();
+            f.write_line("{\"a\":1}");
+            f.write_line("{\"b\":2}");
+            f.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"a\":1}\n{\"b\":2}\n");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-session lifecycle spans: one record per served (or rejected)
+//! session with simulated-clock timestamps and per-phase sim-time /
+//! energy attribution.
+//!
+//! Most of a span is read straight out of the scheduler's [`Session`]
+//! state at trace-build time; only the per-phase attribution (which the
+//! session does not store) accumulates during the run, in a [`SpanAcc`]
+//! kept parallel to the replica's session table.  Batched tick costs
+//! are split evenly over the batch rows, so summing span energies
+//! reproduces the report's total energy exactly (up to float
+//! association — asserted to 1e-9 relative in the conformance suite).
+
+use crate::fidelity::QosTier;
+use crate::serve::{Session, SessionState};
+use crate::util::json::Json;
+
+/// Stable lowercase key for a tier (matches `QosTier`'s `Display`).
+pub(crate) fn tier_key(tier: QosTier) -> &'static str {
+    match tier {
+        QosTier::Gold => "gold",
+        QosTier::Silver => "silver",
+        QosTier::Bronze => "bronze",
+    }
+}
+
+fn state_key(state: SessionState) -> &'static str {
+    match state {
+        SessionState::Queued => "queued",
+        SessionState::Prefill => "prefill",
+        SessionState::Decoding => "decoding",
+        SessionState::Done => "done",
+        SessionState::Rejected => "rejected",
+    }
+}
+
+/// Per-phase attribution the session table does not store, kept
+/// parallel to `ReplicaSim::sessions` (same index).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanAcc {
+    /// Simulated time this session spent in batched prefill ticks, ns.
+    pub prefill_ns: f64,
+    /// Simulated time this session spent in batched decode ticks, ns.
+    pub decode_ns: f64,
+    /// This session's even share of prefill tick energy, pJ.
+    pub prefill_pj: f64,
+    /// This session's even share of decode tick energy, pJ.
+    pub decode_pj: f64,
+}
+
+/// One finished session's lifecycle record.
+#[derive(Debug, Clone)]
+pub struct SessionSpan {
+    pub id: u64,
+    /// Replica (dp) / stack-group index that served the session.
+    pub replica: usize,
+    pub tier: QosTier,
+    pub state: SessionState,
+    pub prompt: u64,
+    pub gen: u64,
+    pub generated: u64,
+    /// KV bytes reserved at max context on this replica's layer share.
+    pub kv_bytes: u64,
+    pub arrival_ns: f64,
+    /// 0.0 when the session was never admitted (rejected).
+    pub admitted_ns: f64,
+    /// 0.0 when no token was emitted.
+    pub first_token_ns: f64,
+    pub finished_ns: f64,
+    /// Arrival → admission (or rejection) wait, ns.
+    pub queued_ns: f64,
+    pub prefill_ns: f64,
+    pub decode_ns: f64,
+    pub prefill_pj: f64,
+    pub decode_pj: f64,
+}
+
+impl SessionSpan {
+    pub(crate) fn from_session(
+        s: &Session,
+        acc: &SpanAcc,
+        replica: usize,
+        kv_bytes: u64,
+    ) -> Self {
+        let queued_end =
+            if s.state == SessionState::Rejected { s.finished_ns } else { s.admitted_ns };
+        Self {
+            id: s.spec.id,
+            replica,
+            tier: s.spec.tier,
+            state: s.state,
+            prompt: s.spec.prompt,
+            gen: s.spec.gen,
+            generated: s.generated,
+            kv_bytes,
+            arrival_ns: s.spec.arrival_ns,
+            admitted_ns: s.admitted_ns,
+            first_token_ns: s.first_token_ns,
+            finished_ns: s.finished_ns,
+            queued_ns: (queued_end - s.spec.arrival_ns).max(0.0),
+            prefill_ns: acc.prefill_ns,
+            decode_ns: acc.decode_ns,
+            prefill_pj: acc.prefill_pj,
+            decode_pj: acc.decode_pj,
+        }
+    }
+
+    /// Total attributed energy, pJ.
+    pub fn energy_pj(&self) -> f64 {
+        self.prefill_pj + self.decode_pj
+    }
+
+    /// Time to first token, ns (0.0 when no token was emitted).
+    pub fn ttft_ns(&self) -> f64 {
+        if self.generated == 0 { 0.0 } else { self.first_token_ns - self.arrival_ns }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t", Json::Str("span".into())),
+            ("id", Json::Num(self.id as f64)),
+            ("replica", Json::Num(self.replica as f64)),
+            ("tier", Json::Str(tier_key(self.tier).into())),
+            ("state", Json::Str(state_key(self.state).into())),
+            ("prompt", Json::Num(self.prompt as f64)),
+            ("gen", Json::Num(self.gen as f64)),
+            ("generated", Json::Num(self.generated as f64)),
+            ("kv_bytes", Json::Num(self.kv_bytes as f64)),
+            ("arrival_ns", Json::Num(self.arrival_ns)),
+            ("admitted_ns", Json::Num(self.admitted_ns)),
+            ("first_token_ns", Json::Num(self.first_token_ns)),
+            ("finished_ns", Json::Num(self.finished_ns)),
+            ("queued_ns", Json::Num(self.queued_ns)),
+            ("prefill_ns", Json::Num(self.prefill_ns)),
+            ("decode_ns", Json::Num(self.decode_ns)),
+            ("prefill_pj", Json::Num(self.prefill_pj)),
+            ("decode_pj", Json::Num(self.decode_pj)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::SessionSpec;
+
+    #[test]
+    fn span_reads_session_state_and_attribution() {
+        let mut s = Session::new(SessionSpec {
+            id: 7,
+            arrival_ns: 100.0,
+            prompt: 64,
+            gen: 16,
+            tier: QosTier::Silver,
+        });
+        s.state = SessionState::Done;
+        s.generated = 16;
+        s.admitted_ns = 150.0;
+        s.first_token_ns = 300.0;
+        s.finished_ns = 900.0;
+        let acc = SpanAcc { prefill_ns: 50.0, decode_ns: 600.0, prefill_pj: 10.0, decode_pj: 40.0 };
+        let span = SessionSpan::from_session(&s, &acc, 2, 1234);
+        assert_eq!(span.queued_ns, 50.0);
+        assert_eq!(span.ttft_ns(), 200.0);
+        assert_eq!(span.energy_pj(), 50.0);
+        let j = span.to_json().compact();
+        assert!(j.contains("\"t\":\"span\""), "{j}");
+        assert!(j.contains("\"tier\":\"silver\""), "{j}");
+        assert!(j.contains("\"replica\":2"), "{j}");
+    }
+
+    #[test]
+    fn rejected_span_queues_until_rejection() {
+        let mut s = Session::new(SessionSpec {
+            id: 1,
+            arrival_ns: 10.0,
+            prompt: 1 << 20,
+            gen: 1,
+            tier: QosTier::Gold,
+        });
+        s.state = SessionState::Rejected;
+        s.finished_ns = 25.0;
+        let span = SessionSpan::from_session(&s, &SpanAcc::default(), 0, 0);
+        assert_eq!(span.queued_ns, 15.0);
+        assert_eq!(span.ttft_ns(), 0.0);
+        assert!(span.to_json().compact().contains("\"state\":\"rejected\""));
+    }
+}

@@ -1,0 +1,574 @@
+//! Trace assembly: per-replica telemetry buffers → one deterministic
+//! JSONL document, plus the parser `trace-report` replays it with.
+//!
+//! Record order is fixed — header, spans (by session id), windows (by
+//! window index, with running per-tier p99s), the SLO verdict record,
+//! footer — and every record serializes through [`Json::compact`]
+//! (sorted keys, shortest-roundtrip floats), so the same seed produces
+//! byte-identical traces across engines, thread counts, and cache
+//! modes.  The header deliberately omits engine/threads/cache-mode:
+//! those are allowed to differ between runs that must emit the same
+//! bytes.
+
+use crate::config::{SloSpec, SloTarget};
+use crate::fidelity::QosTier;
+use crate::serve::{PhaseProfile, Session, SessionState, StreamingHistogram};
+use crate::telemetry::sink::TraceSink;
+use crate::telemetry::span::{tier_key, SessionSpan, SpanAcc};
+use crate::telemetry::window::WindowSet;
+use crate::telemetry::{TraceConfig, SCHEMA_VERSION};
+use crate::util::json::Json;
+
+/// Run identity embedded in the trace header (everything that *must*
+/// be equal for two traces to be comparable — and nothing that is
+/// allowed to differ between byte-identical runs).
+#[derive(Debug, Clone)]
+pub struct TraceMeta {
+    pub scenario: String,
+    pub model: String,
+    pub seed: Option<u64>,
+    pub sessions: u64,
+    /// QoS tier assignment label (e.g. `gold` or `mix 2:1:1`).
+    pub qos: String,
+}
+
+/// Per-replica telemetry buffers, owned by a `ReplicaSim` while its
+/// run is traced.  All hooks are O(1) amortized and allocation-free on
+/// the hot path except window/bucket inserts (bounded by decimation).
+#[derive(Debug, Clone)]
+pub struct ReplicaTelemetry {
+    slo: SloSpec,
+    /// Per-phase attribution, parallel to the replica's session table.
+    spans: Vec<SpanAcc>,
+    windows: WindowSet,
+}
+
+impl ReplicaTelemetry {
+    pub(crate) fn new(tc: &TraceConfig) -> Self {
+        Self { slo: tc.slo, spans: Vec::new(), windows: WindowSet::new(tc.window_ns) }
+    }
+
+    /// A session entered the replica's queue (grows the span table —
+    /// must mirror every push into `ReplicaSim::sessions`).
+    pub(crate) fn on_push(&mut self, arrival_ns: f64) {
+        self.spans.push(SpanAcc::default());
+        self.windows.slot(arrival_ns).arrivals += 1;
+    }
+
+    pub(crate) fn on_admit(&mut self, clock: f64) {
+        self.windows.slot(clock).admitted += 1;
+    }
+
+    pub(crate) fn on_reject(&mut self, clock: f64) {
+        self.windows.slot(clock).rejected += 1;
+    }
+
+    pub(crate) fn on_finish(&mut self, clock: f64) {
+        self.windows.slot(clock).finished += 1;
+    }
+
+    /// One batched decode tick: attribute its duration/energy evenly
+    /// over the batch rows and record each row's TTFT/ITL sample
+    /// (called *before* `emit_token` updates the sessions, so
+    /// `generated == 0` still identifies first tokens).
+    pub(crate) fn on_decode_tick(
+        &mut self,
+        clock: f64,
+        dur_ns: f64,
+        energy_pj: f64,
+        active: &[usize],
+        sessions: &[Session],
+    ) {
+        let rows = active.len();
+        debug_assert!(rows > 0, "decode tick with an empty batch");
+        let share_pj = energy_pj / rows as f64;
+        for &i in active {
+            let a = &mut self.spans[i];
+            a.decode_ns += dur_ns;
+            a.decode_pj += share_pj;
+        }
+        let slo = self.slo;
+        let w = self.windows.slot(clock);
+        w.ticks += 1;
+        w.tokens += rows as u64;
+        w.energy_pj += energy_pj;
+        for &i in active {
+            let s = &sessions[i];
+            let tier = s.spec.tier;
+            let target = slo.target(tier);
+            let tw = &mut w.tiers[tier.idx()];
+            if s.generated == 0 {
+                let v = clock - s.spec.arrival_ns;
+                tw.ttft.record(v);
+                if v > target.ttft_p99_ns {
+                    tw.ttft_viol += 1;
+                }
+            } else {
+                let v = clock - s.last_token_ns;
+                tw.itl.record(v);
+                if v > target.itl_p99_ns {
+                    tw.itl_viol += 1;
+                }
+            }
+        }
+    }
+
+    /// One batched prefill tick over the just-admitted sessions.
+    pub(crate) fn on_prefill_tick(
+        &mut self,
+        clock: f64,
+        dur_ns: f64,
+        energy_pj: f64,
+        admitted: &[usize],
+    ) {
+        let rows = admitted.len();
+        debug_assert!(rows > 0, "prefill tick with no admissions");
+        let share_pj = energy_pj / rows as f64;
+        for &i in admitted {
+            let a = &mut self.spans[i];
+            a.prefill_ns += dur_ns;
+            a.prefill_pj += share_pj;
+        }
+        self.windows.slot(clock).energy_pj += energy_pj;
+    }
+
+    /// End-of-tick occupancy sample (same call site as the report
+    /// timeline, so the window peaks match the hashed timeline peaks).
+    pub(crate) fn on_occupancy(&mut self, clock: f64, active: usize, queued: usize) {
+        let w = self.windows.slot(clock);
+        w.peak_active = w.peak_active.max(active);
+        w.peak_queued = w.peak_queued.max(queued);
+    }
+
+    /// Tear down into span records + windows (trace-build time).
+    pub(crate) fn into_parts<F>(
+        self,
+        sessions: &[Session],
+        replica: usize,
+        kv_bytes: F,
+    ) -> (Vec<SessionSpan>, WindowSet)
+    where
+        F: Fn(&Session) -> u64,
+    {
+        debug_assert_eq!(self.spans.len(), sessions.len(), "span table out of sync");
+        let spans = sessions
+            .iter()
+            .zip(&self.spans)
+            .map(|(s, acc)| SessionSpan::from_session(s, acc, replica, kv_bytes(s)))
+            .collect();
+        (spans, self.windows)
+    }
+}
+
+/// Running per-tier percentile snapshot for one emitted window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierSnap {
+    /// Running (cumulative up to this window) TTFT p99, ns.
+    pub ttft_p99_ns: f64,
+    pub itl_p99_ns: f64,
+    /// Cumulative sample counts behind the running percentiles.
+    pub ttft_n: u64,
+    pub itl_n: u64,
+    /// This window's error-budget burn rate: fraction of samples over
+    /// target divided by the 1% a p99 target allows (>1 = burning).
+    pub ttft_burn: f64,
+    pub itl_burn: f64,
+}
+
+impl TierSnap {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("ttft_p99_ns", Json::Num(self.ttft_p99_ns)),
+            ("itl_p99_ns", Json::Num(self.itl_p99_ns)),
+            ("ttft_n", Json::Num(self.ttft_n as f64)),
+            ("itl_n", Json::Num(self.itl_n as f64)),
+            ("ttft_burn", Json::Num(self.ttft_burn)),
+            ("itl_burn", Json::Num(self.itl_burn)),
+        ])
+    }
+}
+
+/// One emitted window record.
+#[derive(Debug, Clone)]
+pub struct WindowRecord {
+    pub idx: u64,
+    pub start_ns: f64,
+    pub end_ns: f64,
+    pub arrivals: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub finished: u64,
+    pub tokens: u64,
+    pub ticks: u64,
+    pub energy_pj: f64,
+    pub tokens_per_s: f64,
+    pub mj_per_token: f64,
+    pub peak_active: usize,
+    pub peak_queued: usize,
+    pub tiers: [TierSnap; 3],
+}
+
+impl WindowRecord {
+    pub fn to_json(&self) -> Json {
+        let tiers = Json::obj(
+            QosTier::ALL
+                .iter()
+                .map(|&t| (tier_key(t), self.tiers[t.idx()].to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("t", Json::Str("window".into())),
+            ("idx", Json::Num(self.idx as f64)),
+            ("start_ns", Json::Num(self.start_ns)),
+            ("end_ns", Json::Num(self.end_ns)),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("finished", Json::Num(self.finished as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("ticks", Json::Num(self.ticks as f64)),
+            ("energy_pj", Json::Num(self.energy_pj)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("mj_per_token", Json::Num(self.mj_per_token)),
+            ("peak_active", Json::Num(self.peak_active as f64)),
+            ("peak_queued", Json::Num(self.peak_queued as f64)),
+            ("tiers", tiers),
+        ])
+    }
+}
+
+/// Final whole-run verdict for one tier.
+#[derive(Debug, Clone, Copy)]
+pub struct SloVerdict {
+    pub tier: QosTier,
+    pub ttft_p99_ns: f64,
+    pub ttft_target_ns: f64,
+    pub ttft_n: u64,
+    pub ttft_ok: bool,
+    pub itl_p99_ns: f64,
+    pub itl_target_ns: f64,
+    pub itl_n: u64,
+    pub itl_ok: bool,
+    /// `pass` | `fail` | `no-data`.
+    pub verdict: &'static str,
+}
+
+/// Per-tier final SLO verdicts.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub tiers: [SloVerdict; 3],
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let tiers = Json::obj(
+            QosTier::ALL
+                .iter()
+                .map(|&t| {
+                    let v = self.tiers[t.idx()];
+                    (
+                        tier_key(t),
+                        Json::obj(vec![
+                            ("verdict", Json::Str(v.verdict.into())),
+                            ("ttft_p99_ns", Json::Num(v.ttft_p99_ns)),
+                            ("ttft_target_ns", Json::Num(v.ttft_target_ns)),
+                            ("ttft_n", Json::Num(v.ttft_n as f64)),
+                            ("ttft_ok", Json::Bool(v.ttft_ok)),
+                            ("itl_p99_ns", Json::Num(v.itl_p99_ns)),
+                            ("itl_target_ns", Json::Num(v.itl_target_ns)),
+                            ("itl_n", Json::Num(v.itl_n as f64)),
+                            ("itl_ok", Json::Bool(v.itl_ok)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("t", Json::Str("slo".into())), ("tiers", tiers)])
+    }
+
+    /// The one-line verdict the CLI prints and CI greps for.
+    pub fn verdict_line(&self) -> String {
+        format!(
+            "slo-verdict gold={} silver={} bronze={}",
+            self.tiers[QosTier::Gold.idx()].verdict,
+            self.tiers[QosTier::Silver.idx()].verdict,
+            self.tiers[QosTier::Bronze.idx()].verdict,
+        )
+    }
+}
+
+/// A fully built trace, ready to emit as JSONL.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub header: Json,
+    pub spans: Vec<SessionSpan>,
+    pub windows: Vec<WindowRecord>,
+    pub slo: SloReport,
+    pub footer: Json,
+}
+
+impl Trace {
+    /// All records as compact JSONL lines, in emission order.
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(3 + self.spans.len() + self.windows.len());
+        out.push(self.header.compact());
+        for s in &self.spans {
+            out.push(s.to_json().compact());
+        }
+        for w in &self.windows {
+            out.push(w.to_json().compact());
+        }
+        out.push(self.slo.to_json().compact());
+        out.push(self.footer.compact());
+        out
+    }
+
+    /// Stream every record into a sink and flush it.
+    pub fn emit(&self, sink: &mut dyn TraceSink) {
+        for line in self.lines() {
+            sink.write_line(&line);
+        }
+        sink.flush();
+    }
+
+    /// Overlay the `profiling` feature's per-phase wall ns/tick onto
+    /// the footer.  No-op in a default build: wall-clock numbers are
+    /// nondeterministic, and only profiling builds are allowed to
+    /// trade trace byte-identity for them (DESIGN.md §Telemetry).
+    pub fn attach_profile(&mut self, profile: &PhaseProfile) {
+        if !cfg!(feature = "profiling") || profile.ticks == 0 {
+            return;
+        }
+        let mut phases: Vec<(&str, Json)> = PhaseProfile::PHASE_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| (name, Json::Num(profile.ns[i] as f64 / profile.ticks as f64)))
+            .collect();
+        phases.push(("ticks", Json::Num(profile.ticks as f64)));
+        phases.push(("overhead_ns_per_tick", Json::Num(profile.overhead_ns_per_tick())));
+        phases.push(("budget_ns_per_tick", Json::Num(PhaseProfile::BUDGET_NS_PER_TICK as f64)));
+        if let Json::Obj(m) = &mut self.footer {
+            m.insert("profile".to_string(), Json::obj(phases));
+        }
+    }
+}
+
+fn burn(viol: u64, samples: u64) -> f64 {
+    if samples == 0 {
+        0.0
+    } else {
+        (viol as f64 / samples as f64) / 0.01
+    }
+}
+
+/// Assemble one trace from per-replica parts (must be passed in
+/// replica-index order — the deterministic merge order, mirroring the
+/// parallel driver's index-ordered result collection).
+pub fn build_trace(
+    parts: Vec<(Vec<SessionSpan>, WindowSet)>,
+    tc: &TraceConfig,
+    meta: &TraceMeta,
+) -> Trace {
+    let mut spans: Vec<SessionSpan> = Vec::new();
+    let mut windows = WindowSet::new(tc.window_ns);
+    for (s, w) in parts {
+        spans.extend(s);
+        windows.merge(w);
+    }
+    spans.sort_by_key(|s| s.id);
+
+    // Running per-tier histograms: fold each window's sparse deltas in
+    // cumulatively so every window reports the percentile-so-far.
+    let mut running: Vec<[StreamingHistogram; 2]> =
+        (0..3).map(|_| [StreamingHistogram::new(), StreamingHistogram::new()]).collect();
+    let width = windows.window_ns();
+    let mut recs: Vec<WindowRecord> = Vec::with_capacity(windows.windows().len());
+    for (&i, w) in windows.windows() {
+        let mut tiers = [TierSnap::default(); 3];
+        for (ti, tw) in w.tiers.iter().enumerate() {
+            tw.ttft.fold_into(&mut running[ti][0]);
+            tw.itl.fold_into(&mut running[ti][1]);
+            tiers[ti] = TierSnap {
+                ttft_p99_ns: running[ti][0].quantile(0.99),
+                itl_p99_ns: running[ti][1].quantile(0.99),
+                ttft_n: running[ti][0].count(),
+                itl_n: running[ti][1].count(),
+                ttft_burn: burn(tw.ttft_viol, tw.ttft.count),
+                itl_burn: burn(tw.itl_viol, tw.itl.count),
+            };
+        }
+        recs.push(WindowRecord {
+            idx: i,
+            start_ns: i as f64 * width,
+            end_ns: (i + 1) as f64 * width,
+            arrivals: w.arrivals,
+            admitted: w.admitted,
+            rejected: w.rejected,
+            finished: w.finished,
+            tokens: w.tokens,
+            ticks: w.ticks,
+            energy_pj: w.energy_pj,
+            tokens_per_s: w.tokens as f64 / (width * 1e-9),
+            mj_per_token: if w.tokens == 0 { 0.0 } else { w.energy_pj * 1e-9 / w.tokens as f64 },
+            peak_active: w.peak_active,
+            peak_queued: w.peak_queued,
+            tiers,
+        });
+    }
+
+    let slo = slo_report(&running, &tc.slo);
+
+    let rejected = spans.iter().filter(|s| s.state == SessionState::Rejected).count();
+    let tokens: u64 = spans.iter().map(|s| s.generated).sum();
+    let energy_pj: f64 = spans.iter().map(|s| s.energy_pj()).sum();
+    let makespan_ns = spans.iter().map(|s| s.finished_ns).fold(0.0, f64::max);
+
+    let header = Json::obj(vec![
+        ("t", Json::Str("header".into())),
+        ("schema", Json::Num(SCHEMA_VERSION as f64)),
+        ("scenario", Json::Str(meta.scenario.clone())),
+        ("model", Json::Str(meta.model.clone())),
+        ("seed", meta.seed.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
+        ("sessions", Json::Num(meta.sessions as f64)),
+        ("qos", Json::Str(meta.qos.clone())),
+        ("window_ns", Json::Num(tc.window_ns)),
+        ("slo", tc.slo.to_json()),
+    ]);
+    let footer = Json::obj(vec![
+        ("t", Json::Str("footer".into())),
+        ("sessions", Json::Num(spans.len() as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("tokens", Json::Num(tokens as f64)),
+        ("energy_pj", Json::Num(energy_pj)),
+        ("makespan_ns", Json::Num(makespan_ns)),
+        ("windows", Json::Num(recs.len() as f64)),
+    ]);
+
+    Trace { header, spans, windows: recs, slo, footer }
+}
+
+fn slo_report(running: &[[StreamingHistogram; 2]], slo: &SloSpec) -> SloReport {
+    let verdict_for = |tier: QosTier| -> SloVerdict {
+        let target: SloTarget = slo.target(tier);
+        let ttft = &running[tier.idx()][0];
+        let itl = &running[tier.idx()][1];
+        let ttft_p99 = ttft.quantile(0.99);
+        let itl_p99 = itl.quantile(0.99);
+        let ttft_ok = ttft.is_empty() || ttft_p99 <= target.ttft_p99_ns;
+        let itl_ok = itl.is_empty() || itl_p99 <= target.itl_p99_ns;
+        let verdict = if ttft.is_empty() && itl.is_empty() {
+            "no-data"
+        } else if ttft_ok && itl_ok {
+            "pass"
+        } else {
+            "fail"
+        };
+        SloVerdict {
+            tier,
+            ttft_p99_ns: ttft_p99,
+            ttft_target_ns: target.ttft_p99_ns,
+            ttft_n: ttft.count(),
+            ttft_ok,
+            itl_p99_ns: itl_p99,
+            itl_target_ns: target.itl_p99_ns,
+            itl_n: itl.count(),
+            itl_ok,
+            verdict,
+        }
+    };
+    let mut tiers = [verdict_for(QosTier::Gold); 3];
+    for &t in &QosTier::ALL {
+        tiers[t.idx()] = verdict_for(t);
+    }
+    SloReport { tiers }
+}
+
+/// A parsed JSONL trace (the `trace-report` input form).
+#[derive(Debug)]
+pub struct ParsedTrace {
+    pub schema: u64,
+    pub header: Json,
+    pub spans: Vec<Json>,
+    pub windows: Vec<Json>,
+    pub slo: Option<Json>,
+    pub footer: Option<Json>,
+}
+
+/// Parse a JSONL trace document back into its records.
+pub fn parse_trace(text: &str) -> anyhow::Result<ParsedTrace> {
+    use anyhow::{anyhow, bail};
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, first) = lines.next().ok_or_else(|| anyhow!("empty trace file"))?;
+    let header = Json::parse(first).map_err(|e| anyhow!("trace line 1: {e}"))?;
+    if header.get("t").and_then(|v| v.as_str()) != Some("header") {
+        bail!("first record is not a header");
+    }
+    let schema = header
+        .get("schema")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("header missing schema version"))?;
+    if schema != SCHEMA_VERSION {
+        bail!("trace schema v{schema} != supported v{SCHEMA_VERSION}");
+    }
+    let mut out =
+        ParsedTrace { schema, header, spans: vec![], windows: vec![], slo: None, footer: None };
+    for (i, line) in lines {
+        let j = Json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        match j.get("t").and_then(|v| v.as_str()) {
+            Some("span") => out.spans.push(j),
+            Some("window") => out.windows.push(j),
+            Some("slo") => out.slo = Some(j),
+            Some("footer") => out.footer = Some(j),
+            other => bail!("trace line {}: unknown record type {:?}", i + 1, other),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            scenario: "test".into(),
+            model: "m".into(),
+            seed: Some(1),
+            sessions: 0,
+            qos: "gold".into(),
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_valid_and_nan_free() {
+        let tc = TraceConfig::default();
+        let trace = build_trace(Vec::new(), &tc, &meta());
+        let lines = trace.lines();
+        // header + slo + footer, nothing else.
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            assert!(!l.contains("NaN") && !l.contains("inf"), "{l}");
+            Json::parse(l).unwrap();
+        }
+        let verdict = trace.slo.verdict_line();
+        assert_eq!(verdict, "slo-verdict gold=no-data silver=no-data bronze=no-data");
+        let parsed = parse_trace(&lines.join("\n")).unwrap();
+        assert_eq!(parsed.schema, SCHEMA_VERSION);
+        assert!(parsed.spans.is_empty() && parsed.windows.is_empty());
+        assert!(parsed.slo.is_some() && parsed.footer.is_some());
+    }
+
+    #[test]
+    fn parse_rejects_missing_header_and_wrong_schema() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("{\"t\":\"span\"}").is_err());
+        assert!(parse_trace("{\"schema\":999,\"t\":\"header\"}").is_err());
+    }
+
+    #[test]
+    fn burn_is_zero_when_no_samples() {
+        assert_eq!(burn(0, 0), 0.0);
+        assert_eq!(burn(1, 100), 1.0); // exactly at the 1% allowance
+        assert_eq!(burn(5, 100), 5.0);
+    }
+}

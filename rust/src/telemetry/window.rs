@@ -1,0 +1,249 @@
+//! Bounded-memory windowed aggregates over the simulated clock.
+//!
+//! Each telemetry-enabled replica buckets its events into fixed-width
+//! windows of simulated time.  When the window count would exceed
+//! [`MAX_WINDOWS`], the set *self-decimates*: the window width doubles
+//! and adjacent windows merge (counts add, peaks max, sparse histogram
+//! deltas fold together), so memory stays bounded for arbitrarily long
+//! campaigns while early windows keep their (coarsened) content.
+//! Decimation depends only on the recorded event sequence — identical
+//! across engines, thread counts, and cache modes — so traces stay
+//! byte-identical.
+//!
+//! Latency samples are stored as *sparse deltas* over the same log
+//! buckets as [`StreamingHistogram`]: per window only the touched
+//! buckets are kept, and the trace builder folds the deltas cumulatively
+//! back into dense histograms to report running percentiles that are
+//! bit-identical to what a whole-run histogram would say.  SLO
+//! violations are counted exactly at record time (the targets are known
+//! declaratively up front), so error-budget burn needs no bucket
+//! approximation.
+
+use crate::fidelity::QosTier;
+use crate::serve::StreamingHistogram;
+use std::collections::BTreeMap;
+
+/// Window-count bound; crossing it doubles the window width.
+pub(crate) const MAX_WINDOWS: usize = 512;
+
+/// Sparse per-window histogram delta over `StreamingHistogram` buckets.
+#[derive(Debug, Clone)]
+pub(crate) struct SparseHist {
+    /// `(bucket index, count)` pairs, sorted by bucket index.
+    pub buckets: Vec<(u16, u64)>,
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for SparseHist {
+    fn default() -> Self {
+        Self { buckets: Vec::new(), count: 0, sum: 0.0, min: f64::MAX, max: 0.0 }
+    }
+}
+
+impl SparseHist {
+    pub fn record(&mut self, v: f64) {
+        let v = v.max(0.0);
+        let b = StreamingHistogram::bucket_index(v) as u16;
+        match self.buckets.binary_search_by_key(&b, |&(i, _)| i) {
+            Ok(pos) => self.buckets[pos].1 += 1,
+            Err(pos) => self.buckets.insert(pos, (b, 1)),
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &SparseHist) {
+        if other.count == 0 {
+            return;
+        }
+        for &(b, c) in &other.buckets {
+            match self.buckets.binary_search_by_key(&b, |&(i, _)| i) {
+                Ok(pos) => self.buckets[pos].1 += c,
+                Err(pos) => self.buckets.insert(pos, (b, c)),
+            }
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Fold this delta into a dense running histogram (exact).
+    pub fn fold_into(&self, h: &mut StreamingHistogram) {
+        h.fold_bucket_counts(&self.buckets, self.count, self.sum, self.min, self.max);
+    }
+}
+
+/// One tier's latency deltas and exact SLO-violation counts in a window.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct TierWin {
+    pub ttft: SparseHist,
+    pub itl: SparseHist,
+    pub ttft_viol: u64,
+    pub itl_viol: u64,
+}
+
+impl TierWin {
+    fn merge(&mut self, other: &TierWin) {
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.ttft_viol += other.ttft_viol;
+        self.itl_viol += other.itl_viol;
+    }
+}
+
+/// All aggregates for one window of simulated time.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct WindowAcc {
+    pub arrivals: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub finished: u64,
+    pub tokens: u64,
+    pub ticks: u64,
+    pub energy_pj: f64,
+    pub peak_active: usize,
+    pub peak_queued: usize,
+    pub tiers: [TierWin; 3],
+}
+
+impl WindowAcc {
+    fn merge(&mut self, other: &WindowAcc) {
+        self.arrivals += other.arrivals;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.finished += other.finished;
+        self.tokens += other.tokens;
+        self.ticks += other.ticks;
+        self.energy_pj += other.energy_pj;
+        self.peak_active = self.peak_active.max(other.peak_active);
+        self.peak_queued = self.peak_queued.max(other.peak_queued);
+        for (a, b) in self.tiers.iter_mut().zip(&other.tiers) {
+            a.merge(b);
+        }
+    }
+}
+
+/// Self-decimating map of window index → aggregates.
+#[derive(Debug, Clone)]
+pub struct WindowSet {
+    window_ns: f64,
+    windows: BTreeMap<u64, WindowAcc>,
+}
+
+impl WindowSet {
+    pub(crate) fn new(window_ns: f64) -> Self {
+        assert!(window_ns > 0.0, "window width must be positive");
+        Self { window_ns, windows: BTreeMap::new() }
+    }
+
+    /// Current (possibly coarsened) window width, ns.
+    pub(crate) fn window_ns(&self) -> f64 {
+        self.window_ns
+    }
+
+    pub(crate) fn windows(&self) -> &BTreeMap<u64, WindowAcc> {
+        &self.windows
+    }
+
+    fn idx(&self, t_ns: f64) -> u64 {
+        (t_ns.max(0.0) / self.window_ns) as u64
+    }
+
+    /// Double the window width, merging adjacent windows.
+    fn coarsen(&mut self) {
+        self.window_ns *= 2.0;
+        let old = std::mem::take(&mut self.windows);
+        for (i, w) in old {
+            self.windows.entry(i / 2).or_default().merge(&w);
+        }
+    }
+
+    /// The window holding `t_ns`, coarsening first if inserting a new
+    /// window would exceed the bound.
+    pub(crate) fn slot(&mut self, t_ns: f64) -> &mut WindowAcc {
+        while !self.windows.contains_key(&self.idx(t_ns)) && self.windows.len() >= MAX_WINDOWS {
+            self.coarsen();
+        }
+        let i = self.idx(t_ns);
+        self.windows.entry(i).or_default()
+    }
+
+    /// Fold another replica's windows in (index-ordered merge).  Widths
+    /// are all `base × 2^k`, so the finer side coarsens until they
+    /// match, then windows merge index-wise.
+    pub(crate) fn merge(&mut self, mut other: WindowSet) {
+        while self.window_ns < other.window_ns {
+            self.coarsen();
+        }
+        while other.window_ns < self.window_ns {
+            other.coarsen();
+        }
+        for (i, w) in other.windows {
+            self.windows.entry(i).or_default().merge(&w);
+        }
+        while self.windows.len() > MAX_WINDOWS {
+            self.coarsen();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_matches_dense_histogram() {
+        let mut sparse = SparseHist::default();
+        let mut dense = StreamingHistogram::new();
+        for v in [1.0, 5.0, 5.5, 1e6, 3.2e7, 0.0] {
+            sparse.record(v);
+            dense.record(v);
+        }
+        let mut folded = StreamingHistogram::new();
+        sparse.fold_into(&mut folded);
+        let (a, b) = (folded.summary(), dense.summary());
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.p50, b.p50);
+        assert_eq!(a.p99, b.p99);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.max, b.max);
+    }
+
+    #[test]
+    fn windows_decimate_to_bound_and_preserve_totals() {
+        let mut ws = WindowSet::new(10.0);
+        for i in 0..5_000u64 {
+            ws.slot(i as f64 * 10.0).arrivals += 1;
+        }
+        assert!(ws.windows().len() <= MAX_WINDOWS);
+        let total: u64 = ws.windows().values().map(|w| w.arrivals).sum();
+        assert_eq!(total, 5_000);
+        // Width doubled some number of times from the base.
+        let k = (ws.window_ns() / 10.0).log2();
+        assert!((k - k.round()).abs() < 1e-12, "width {} not base*2^k", ws.window_ns());
+        assert!(ws.window_ns() > 10.0);
+    }
+
+    #[test]
+    fn merge_equalizes_widths_and_adds_counts() {
+        let mut a = WindowSet::new(10.0);
+        a.slot(5.0).tokens += 3;
+        a.slot(95.0).tokens += 1;
+        let mut b = WindowSet::new(10.0);
+        // Force b to coarsen once.
+        for i in 0..(MAX_WINDOWS as u64 + 1) {
+            b.slot(i as f64 * 10.0).tokens += 1;
+        }
+        assert_eq!(b.window_ns(), 20.0);
+        a.merge(b);
+        assert_eq!(a.window_ns(), 20.0);
+        let total: u64 = a.windows().values().map(|w| w.tokens).sum();
+        assert_eq!(total, 4 + MAX_WINDOWS as u64 + 1);
+    }
+}

@@ -37,9 +37,11 @@ fn help_exits_zero_and_lists_commands() {
         "cluster-scale",
         "bench-serve",
         "fidelity-sweep",
+        "trace-report",
         "--placement dp|pp",
         "--qos gold|silver|bronze|mix",
         "--engine tick|event",
+        "--trace FILE",
         "long_itl",
     ];
     for cmd in cmds {
@@ -415,6 +417,132 @@ fn serve_gen_rejects_unknown_scenario() {
     let (ok, _, stderr) = run(&["serve-gen", "--scenario", "nope"]);
     assert!(!ok);
     assert!(stderr.contains("unknown scenario"), "{stderr}");
+}
+
+/// A per-test temp path for trace files (pid + tag keeps parallel test
+/// threads and concurrent CI jobs from colliding).
+fn temp_trace(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("artemis-smoke-{tag}-{}.jsonl", std::process::id()))
+}
+
+#[test]
+fn serve_gen_trace_roundtrips_through_trace_report() {
+    let path = temp_trace("roundtrip");
+    let p = path.to_str().unwrap();
+    let args = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "6",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--qos",
+        "mix",
+        "--trace",
+        p,
+    ];
+    let (ok, out, stderr) = run(&args);
+    assert!(ok, "traced serve-gen failed: {stderr}");
+    assert!(out.contains("trace: wrote"), "{out}");
+    assert!(out.contains("schema v1"), "{out}");
+    assert!(out.contains("slo-verdict gold="), "{out}");
+    // The file is versioned JSONL: header first, footer last.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 3, "suspiciously short trace:\n{text}");
+    assert!(lines[0].contains("\"t\":\"header\"") && lines[0].contains("\"schema\":1"), "{text}");
+    assert!(lines[lines.len() - 1].contains("\"t\":\"footer\""), "{text}");
+    assert!(!text.contains("NaN") && !text.contains("inf"), "non-finite JSON:\n{text}");
+    // trace-report replays the file into tables plus the verdict line.
+    let (ok, report, stderr) = run(&["trace-report", p, "--top", "3"]);
+    assert!(ok, "trace-report failed: {stderr}");
+    for needle in ["Trace summary", "SLO verdicts", "Worst sessions", "slo-verdict gold="] {
+        assert!(report.contains(needle), "missing '{needle}':\n{report}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_gen_trace_files_are_byte_identical_across_runs_and_engines() {
+    // Determinism holds at the artifact level too: same seed, same
+    // bytes on disk — run-to-run and tick-vs-event.
+    let base = [
+        "serve-gen",
+        "--scenario",
+        "burst",
+        "--seed",
+        "3",
+        "--sessions",
+        "6",
+        "--batch",
+        "3",
+        "--model",
+        "Transformer-base",
+        "--qos",
+        "mix",
+        "--trace",
+    ];
+    let mut texts = Vec::new();
+    for (tag, engine) in [("eng-a", "tick"), ("eng-b", "tick"), ("eng-c", "event")] {
+        let path = temp_trace(tag);
+        let p = path.to_str().unwrap().to_owned();
+        let mut args: Vec<&str> = base.to_vec();
+        args.push(&p);
+        args.extend(["--engine", engine]);
+        let (ok, _, stderr) = run(&args);
+        assert!(ok, "traced serve-gen ({tag}) failed: {stderr}");
+        texts.push(std::fs::read_to_string(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+    assert_eq!(texts[0], texts[1], "same-seed reruns must write identical traces");
+    assert_eq!(texts[0], texts[2], "tick vs event must write identical traces");
+}
+
+#[test]
+fn serve_gen_zero_sessions_writes_a_valid_empty_trace() {
+    // Regression: `--sessions 0 --trace` used to skip the trace file
+    // entirely; it must write header + slo + footer with no NaN.
+    let path = temp_trace("empty");
+    let p = path.to_str().unwrap();
+    let (ok, out, stderr) = run(&["serve-gen", "--sessions", "0", "--trace", p]);
+    assert!(ok, "empty traced serve-gen failed: {stderr}");
+    assert!(out.contains("empty trace (0 sessions)"), "{out}");
+    assert!(out.contains("trace: wrote"), "{out}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "empty trace should be header+slo+footer:\n{text}");
+    assert!(lines[0].contains("\"t\":\"header\""), "{text}");
+    assert!(lines[1].contains("\"t\":\"slo\""), "{text}");
+    assert!(lines[2].contains("\"t\":\"footer\""), "{text}");
+    assert!(!text.contains("NaN") && !text.contains("inf"), "non-finite JSON:\n{text}");
+    let (ok, report, stderr) = run(&["trace-report", p]);
+    assert!(ok, "trace-report on empty trace failed: {stderr}");
+    assert!(report.contains("slo-verdict gold=no-data"), "{report}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_gen_rejects_bad_telemetry_flags() {
+    let (ok, _, stderr) = run(&["serve-gen", "--trace", "/tmp/x.jsonl", "--slo", "garbage"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad --slo"), "{stderr}");
+    let (ok, _, stderr) = run(&["serve-gen", "--trace", "/tmp/x.jsonl", "--trace-window", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("--trace-window must be a positive"), "{stderr}");
+}
+
+#[test]
+fn trace_report_rejects_missing_args_and_files() {
+    let (ok, _, stderr) = run(&["trace-report"]);
+    assert!(!ok);
+    assert!(stderr.contains("usage: artemis trace-report"), "{stderr}");
+    let (ok, _, stderr) = run(&["trace-report", "/definitely/not/a/file.jsonl"]);
+    assert!(!ok, "nonexistent trace file must fail: {stderr}");
 }
 
 #[test]

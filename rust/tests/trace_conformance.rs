@@ -1,0 +1,291 @@
+//! Telemetry trace conformance suite (DESIGN.md §Telemetry).
+//!
+//! The three invariants the telemetry layer promises, asserted
+//! end-to-end against live serve runs:
+//!
+//! 1. **Determinism** — the same seed emits *byte-identical* JSONL
+//!    across `EngineStrategy::{Tick,Event}`, driver thread counts, and
+//!    cost-cache on/off.
+//! 2. **Hash neutrality** — enabling telemetry never moves a report's
+//!    state hash.
+//! 3. **Exactness** — span energies sum to the report's total energy,
+//!    and a single-tier run's final SLO percentiles reproduce the
+//!    report's histogram percentiles bit-for-bit.
+//!
+//! Plus the schema gate: `tests/golden/trace_schema.json` pins the
+//! per-record-type key sets; any record-shape drift fails here until
+//! the schema version and fixture are bumped together.
+
+use artemis::cluster::{run_cluster, run_cluster_traced};
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement, SloSpec};
+use artemis::serve::{
+    run_continuous_engine, run_continuous_traced, Policy, QosAssignment, RoutePolicy, Scenario,
+    SchedulerConfig, ServeGenReport,
+};
+use artemis::telemetry::{parse_trace, MemSink, Trace, TraceConfig, TraceMeta, SCHEMA_VERSION};
+use artemis::util::json::Json;
+
+/// A fast scenario: the 2-layer model keeps per-tick simulation cheap.
+fn small_scenario(n: usize) -> Scenario {
+    let mut sc = Scenario::chat().with_sessions(n);
+    sc.model = ModelZoo::transformer_base();
+    sc
+}
+
+fn meta_for(sc: &Scenario, seed: u64, sessions: usize) -> TraceMeta {
+    TraceMeta {
+        scenario: sc.name.to_string(),
+        model: sc.model.name.clone(),
+        seed: Some(seed),
+        sessions: sessions as u64,
+        qos: sc.qos.to_string(),
+    }
+}
+
+/// One traced single-replica run; returns the report and the trace.
+fn traced_single(
+    sc: &Scenario,
+    seed: u64,
+    engine: EngineStrategy,
+    tc: &TraceConfig,
+) -> (ServeGenReport, Trace) {
+    let cfg = ArtemisConfig::default();
+    let trace = sc.generate(seed);
+    let sched = SchedulerConfig::for_scenario(sc, Policy::Fifo);
+    let meta = meta_for(sc, seed, trace.len());
+    run_continuous_traced(&cfg, &sc.model, &trace, &sched, engine, tc, &meta)
+}
+
+fn lines_of(doc: &Trace) -> Vec<String> {
+    let mut sink = MemSink::default();
+    doc.emit(&mut sink);
+    sink.lines
+}
+
+fn keys_of(j: &Json) -> Vec<String> {
+    j.as_obj().expect("record is an object").keys().cloned().collect()
+}
+
+fn fixture_keys(j: &Json, name: &str) -> Vec<String> {
+    j.get("records")
+        .and_then(|r| r.get(name))
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("fixture missing record list '{name}'"))
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect()
+}
+
+#[test]
+fn schema_fixture_gates_record_shape_drift() {
+    let path = format!("{}/tests/golden/trace_schema.json", env!("CARGO_MANIFEST_DIR"));
+    let fixture = Json::parse(&std::fs::read_to_string(&path).expect("schema fixture"))
+        .expect("fixture parses");
+    assert_eq!(
+        fixture.get("schema").and_then(Json::as_u64),
+        Some(SCHEMA_VERSION),
+        "fixture schema version out of step — bump fixture and SCHEMA_VERSION together"
+    );
+
+    let sc = small_scenario(8).with_qos(QosAssignment::parse("mix").unwrap());
+    let (_, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &TraceConfig::default());
+    let parsed = parse_trace(&lines_of(&doc).join("\n")).unwrap();
+
+    assert_eq!(keys_of(&parsed.header), fixture_keys(&fixture, "header"), "header drift");
+    for (tier, spec) in parsed.header.get("slo").unwrap().as_obj().unwrap() {
+        assert_eq!(keys_of(spec), fixture_keys(&fixture, "header_slo_tier"), "slo[{tier}]");
+    }
+    assert!(!parsed.spans.is_empty() && !parsed.windows.is_empty());
+    for s in &parsed.spans {
+        assert_eq!(keys_of(s), fixture_keys(&fixture, "span"), "span drift");
+    }
+    for w in &parsed.windows {
+        assert_eq!(keys_of(w), fixture_keys(&fixture, "window"), "window drift");
+        for (tier, snap) in w.get("tiers").unwrap().as_obj().unwrap() {
+            assert_eq!(keys_of(snap), fixture_keys(&fixture, "window_tier"), "tiers[{tier}]");
+        }
+    }
+    let slo = parsed.slo.as_ref().expect("slo record");
+    assert_eq!(keys_of(slo), fixture_keys(&fixture, "slo"), "slo drift");
+    for (tier, v) in slo.get("tiers").unwrap().as_obj().unwrap() {
+        assert_eq!(keys_of(v), fixture_keys(&fixture, "slo_tier"), "slo tiers[{tier}]");
+    }
+    let footer = parsed.footer.as_ref().expect("footer record");
+    let optional = fixture_keys(&fixture, "footer_optional");
+    let footer_keys: Vec<String> =
+        keys_of(footer).into_iter().filter(|k| !optional.contains(k)).collect();
+    assert_eq!(footer_keys, fixture_keys(&fixture, "footer"), "footer drift");
+}
+
+#[test]
+fn traces_are_byte_identical_across_engines() {
+    let sc = small_scenario(10).with_qos(QosAssignment::parse("mix").unwrap());
+    let tc = TraceConfig::default();
+    let (rt, tick) = traced_single(&sc, 1, EngineStrategy::Tick, &tc);
+    let (re, event) = traced_single(&sc, 1, EngineStrategy::Event, &tc);
+    assert_eq!(rt.state_hash(), re.state_hash());
+    assert_eq!(lines_of(&tick), lines_of(&event), "tick and event traces must match bytewise");
+}
+
+#[test]
+fn cluster_traces_are_byte_identical_across_threads_cache_and_engine() {
+    let cfg = ArtemisConfig::default();
+    let sc = small_scenario(12).with_qos(QosAssignment::parse("mix").unwrap());
+    let trace = sc.generate(1);
+    let sched = SchedulerConfig::for_scenario(&sc, Policy::Fifo);
+    let tc = TraceConfig::default();
+    let meta = meta_for(&sc, 1, trace.len());
+    let mut variants: Vec<Vec<String>> = Vec::new();
+    for (threads, cached, engine) in [
+        (1, true, EngineStrategy::Tick),
+        (2, true, EngineStrategy::Tick),
+        (1, false, EngineStrategy::Tick),
+        (1, true, EngineStrategy::Event),
+    ] {
+        let cl = ClusterConfig::new(2, Placement::DataParallel)
+            .with_threads(threads)
+            .with_engine(engine);
+        let (_, doc) = run_cluster_traced(
+            &cfg,
+            &sc.model,
+            &trace,
+            &cl,
+            &sched,
+            RoutePolicy::LeastLoaded,
+            cached,
+            &tc,
+            &meta,
+        );
+        variants.push(lines_of(&doc));
+    }
+    for (i, v) in variants.iter().enumerate().skip(1) {
+        assert_eq!(&variants[0], v, "variant {i} diverged from the reference trace");
+    }
+}
+
+#[test]
+fn telemetry_never_moves_the_state_hash() {
+    let cfg = ArtemisConfig::default();
+    let sc = small_scenario(8);
+    let trace = sc.generate(1);
+    let sched = SchedulerConfig::for_scenario(&sc, Policy::Fifo);
+    let tc = TraceConfig::default();
+    let meta = meta_for(&sc, 1, trace.len());
+
+    let plain = run_continuous_engine(&cfg, &sc.model, &trace, &sched, EngineStrategy::Tick);
+    let (traced, _) =
+        run_continuous_traced(&cfg, &sc.model, &trace, &sched, EngineStrategy::Tick, &tc, &meta);
+    assert_eq!(plain.state_hash(), traced.state_hash(), "single-replica hash moved");
+
+    let cl = ClusterConfig::new(2, Placement::DataParallel);
+    let plain = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, RoutePolicy::LeastLoaded, true);
+    let (traced, _) = run_cluster_traced(
+        &cfg,
+        &sc.model,
+        &trace,
+        &cl,
+        &sched,
+        RoutePolicy::LeastLoaded,
+        true,
+        &tc,
+        &meta,
+    );
+    assert_eq!(plain.state_hash(), traced.state_hash(), "cluster hash moved");
+}
+
+#[test]
+fn span_and_window_energy_sum_to_report_energy() {
+    let sc = small_scenario(10);
+    let (r, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &TraceConfig::default());
+    let span_pj: f64 = doc.spans.iter().map(|s| s.energy_pj()).sum();
+    let window_pj: f64 = doc.windows.iter().map(|w| w.energy_pj).sum();
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-30);
+    assert!(
+        rel(span_pj, r.sim_energy_pj) < 1e-9,
+        "span energy {span_pj} != report {}",
+        r.sim_energy_pj
+    );
+    assert!(
+        rel(window_pj, r.sim_energy_pj) < 1e-9,
+        "window energy {window_pj} != report {}",
+        r.sim_energy_pj
+    );
+    // Every session appears as a span; token counts reconcile too.
+    assert_eq!(doc.spans.len(), r.sessions);
+    let span_tokens: u64 = doc.spans.iter().map(|s| s.generated).sum();
+    assert_eq!(span_tokens, r.total_tokens);
+}
+
+#[test]
+fn gold_only_run_reproduces_report_percentiles_bitwise() {
+    // All sessions on one tier: the trace's final gold histograms see
+    // exactly the samples the report's metrics saw, so the running
+    // p99s must land on the same bits.
+    let sc = small_scenario(8).with_qos(QosAssignment::parse("gold").unwrap());
+    let (r, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &TraceConfig::default());
+    let gold = doc.slo.tiers[artemis::fidelity::QosTier::Gold.idx()];
+    assert_eq!(gold.ttft_p99_ns.to_bits(), r.ttft.p99.to_bits(), "ttft p99 drifted");
+    assert_eq!(gold.itl_p99_ns.to_bits(), r.itl.p99.to_bits(), "itl p99 drifted");
+    assert_eq!(gold.ttft_n, r.ttft.count);
+}
+
+#[test]
+fn zero_session_trace_is_valid_and_nan_free() {
+    let sc = small_scenario(0);
+    let (r, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &TraceConfig::default());
+    assert_eq!(r.sessions, 0);
+    let lines = lines_of(&doc);
+    assert_eq!(lines.len(), 3, "header + slo + footer");
+    for l in &lines {
+        assert!(!l.contains("NaN") && !l.contains("inf"), "invalid JSON number in {l}");
+        Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+    }
+    assert_eq!(doc.slo.verdict_line(), "slo-verdict gold=no-data silver=no-data bronze=no-data");
+    let parsed = parse_trace(&lines.join("\n")).unwrap();
+    assert_eq!(parsed.schema, SCHEMA_VERSION);
+}
+
+#[test]
+fn slo_targets_drive_the_verdicts() {
+    let sc = small_scenario(8).with_qos(QosAssignment::parse("mix").unwrap());
+    let spec = "gold:ttft=1ns,itl=1ns;silver:ttft=1ns,itl=1ns;bronze:ttft=1ns,itl=1ns";
+    let tight = TraceConfig { slo: SloSpec::parse(spec).unwrap(), ..TraceConfig::default() };
+    let (_, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &tight);
+    for v in &doc.slo.tiers {
+        if v.ttft_n + v.itl_n > 0 {
+            assert_eq!(v.verdict, "fail", "{:?} passed a 1ns target", v.tier);
+        }
+    }
+    // A window that saw violations must burn more than the 1% budget.
+    let burned = doc.windows.iter().any(|w| w.tiers.iter().any(|t| t.ttft_burn > 1.0));
+    assert!(burned, "no window burned under an unmeetable SLO");
+
+    let spec = "gold:ttft=100s,itl=100s;silver:ttft=100s,itl=100s;bronze:ttft=100s,itl=100s";
+    let loose = TraceConfig { slo: SloSpec::parse(spec).unwrap(), ..TraceConfig::default() };
+    let (_, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &loose);
+    for v in &doc.slo.tiers {
+        if v.ttft_n + v.itl_n > 0 {
+            assert_eq!(v.verdict, "pass", "{:?} failed a 100s target", v.tier);
+        }
+    }
+}
+
+#[test]
+fn tiny_windows_stay_bounded_and_ordered() {
+    let sc = small_scenario(16);
+    // A 1 us window against a multi-ms makespan forces decimation.
+    let tc = TraceConfig { window_ns: 1e3, ..TraceConfig::default() };
+    let (_, doc) = traced_single(&sc, 1, EngineStrategy::Tick, &tc);
+    assert!(doc.windows.len() <= 512, "window bound violated: {}", doc.windows.len());
+    assert!(!doc.windows.is_empty());
+    let width = doc.windows[0].end_ns - doc.windows[0].start_ns;
+    let k = (width / 1e3).log2();
+    assert!(k >= 0.0 && (k - k.round()).abs() < 1e-12, "width {width} is not base*2^k");
+    for pair in doc.windows.windows(2) {
+        assert!(pair[0].idx < pair[1].idx, "window records out of order");
+    }
+    for w in &doc.windows {
+        assert_eq!(w.start_ns, w.idx as f64 * width);
+        assert_eq!(w.end_ns, (w.idx + 1) as f64 * width);
+    }
+}
