@@ -1,0 +1,369 @@
+//! Incremental cluster campaign driver — `run_cluster`, sliced.
+//!
+//! The one-shot driver ([`run_cluster`](super::run_cluster)) owns the
+//! whole timeline: it routes every arrival and then runs each replica
+//! to completion before returning.  The serve daemon needs the same
+//! run *resumable* — advance a bounded amount, answer a status or
+//! snapshot request, advance again — so [`Campaign`] re-packages the
+//! serial driving loop as an explicit state machine:
+//!
+//! * **Arrival phase** (`next_arrival < order.len()`): each
+//!   [`Campaign::step`] advances every replica to the next arrival,
+//!   routes it against live load, and hands it over — exactly one
+//!   iteration of the one-shot serial loop.
+//! * **Drain phase**: replicas run to completion in index order,
+//!   `max_ticks` scheduler ticks at a time
+//!   ([`ReplicaSim::step_ticks`]).
+//!
+//! Construction goes through [`build_replicas`](super::build_replicas)
+//! and the final report through
+//! [`assemble_report`](super::assemble_report) — the same code paths
+//! as the one-shot driver — so a stepped campaign's report (and its
+//! state hash) is bit-identical to `run_cluster`'s for the same
+//! inputs, whatever step granularity drove it.  The driver is serial
+//! by construction (each step is one bounded unit of work); thread
+//! requests only affect the one-shot path, and never move a reported
+//! bit there either.
+//!
+//! [`Campaign::snapshot_json`] / [`Campaign::restore_json`] serialize
+//! the in-flight state — the two phase cursors, the router's
+//! round-robin pointer, and every replica's full serving state
+//! (DESIGN.md §Serve-daemon).  The trace (regenerated from the spec's
+//! seed) and all pure-memoization state stay out of the snapshot; a
+//! restored campaign continues the exact tick sequence and lands on
+//! the same state hash as the uninterrupted run.
+
+use crate::config::{ArtemisConfig, ClusterConfig, TransformerModel};
+use crate::serve::{
+    Phase, PhaseProfile, PhaseTimer, ReplicaSim, RoutePolicy, Router, SchedulerConfig,
+    SessionSpec,
+};
+use crate::telemetry::{Trace, TraceConfig, TraceMeta};
+use crate::util::json::{parse_u64_str, u64_str, Json};
+
+use super::{assemble_report, build_replicas, ClusterReport};
+
+/// A cluster serving run as an explicit, resumable state machine.
+pub struct Campaign<'a> {
+    replicas: Vec<ReplicaSim<'a>>,
+    /// The trace in arrival order (`(arrival_ns, id)`-sorted).
+    order: Vec<SessionSpec>,
+    /// Arrivals already routed.
+    next_arrival: usize,
+    /// First replica not yet run to completion (drain phase).
+    drain_cursor: usize,
+    router: Router,
+    cluster: ClusterConfig,
+    sched: SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+    /// Present iff telemetry was enabled at construction.
+    tc: Option<TraceConfig>,
+    routing_profile: PhaseProfile,
+    model: &'a TransformerModel,
+}
+
+impl<'a> Campaign<'a> {
+    /// Build the campaign (replicas, sorted arrival order, router).
+    /// Telemetry is enabled up front when `tc` is given — a replica
+    /// cannot start tracing mid-run.
+    #[allow(clippy::too_many_arguments)] // run_cluster's knobs, unbundled
+    pub fn new(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        trace: &[SessionSpec],
+        cluster: &ClusterConfig,
+        sched: &SchedulerConfig,
+        route: RoutePolicy,
+        cached: bool,
+        tc: Option<&TraceConfig>,
+    ) -> Self {
+        assert!(cluster.stacks > 0, "cluster needs at least one stack");
+        let mut replicas = build_replicas(cfg, model, cluster, sched, cached);
+        if let Some(tc) = tc {
+            for r in replicas.iter_mut() {
+                r.enable_telemetry(tc);
+            }
+        }
+        let mut order: Vec<SessionSpec> = trace.to_vec();
+        order.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+        Self {
+            replicas,
+            order,
+            next_arrival: 0,
+            drain_cursor: 0,
+            router: Router::new(route),
+            cluster: *cluster,
+            sched: sched.clone(),
+            route,
+            cached,
+            tc: tc.cloned(),
+            routing_profile: PhaseProfile::default(),
+            model,
+        }
+    }
+
+    /// Advance by one bounded unit of work: route the next arrival, or
+    /// run up to `max_ticks` drain ticks on the current replica.
+    /// Returns `false` once the campaign is complete (and stays
+    /// `false`; stepping a finished campaign is a no-op).
+    pub fn step(&mut self, max_ticks: u64) -> bool {
+        if self.next_arrival < self.order.len() {
+            let spec = self.order[self.next_arrival];
+            for r in self.replicas.iter_mut() {
+                r.advance_to(spec.arrival_ns);
+            }
+            let timer = PhaseTimer::start();
+            let loads: Vec<_> =
+                self.replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
+            let pick = self.router.route(&loads);
+            timer.stop(&mut self.routing_profile, Phase::Routing);
+            self.replicas[pick].push(spec);
+            self.next_arrival += 1;
+            return true;
+        }
+        while self.drain_cursor < self.replicas.len() {
+            if self.replicas[self.drain_cursor].step_ticks(max_ticks) {
+                return true;
+            }
+            self.drain_cursor += 1;
+        }
+        false
+    }
+
+    /// Whether every arrival is routed and every replica fully drained.
+    pub fn is_done(&self) -> bool {
+        self.next_arrival >= self.order.len()
+            && self
+                .replicas
+                .iter()
+                .skip(self.drain_cursor)
+                .all(|r| !r.has_work())
+    }
+
+    /// `(arrivals routed, total arrivals)` — the daemon's progress line.
+    pub fn progress(&self) -> (usize, usize) {
+        (self.next_arrival, self.order.len())
+    }
+
+    /// The replicas, for live introspection (`trace-window`).
+    pub fn replicas(&self) -> &[ReplicaSim<'a>] {
+        &self.replicas
+    }
+
+    /// Run to completion and assemble the final report (and trace,
+    /// when telemetry was enabled — `meta` must be `Some` exactly
+    /// then, mirroring `run_cluster` vs `run_cluster_traced`).
+    pub fn finish(mut self, meta: Option<&TraceMeta>) -> (ClusterReport, Option<Trace>) {
+        while self.step(u64::MAX) {}
+        let Campaign {
+            replicas, cluster, sched, route, cached, tc, routing_profile, model, ..
+        } = self;
+        let tracing = match (&tc, meta) {
+            (Some(tc), Some(m)) => Some((tc, m)),
+            (None, None) => None,
+            (Some(_), None) => panic!("traced campaign finished without trace meta"),
+            (None, Some(_)) => panic!("trace meta passed to an untraced campaign"),
+        };
+        assemble_report(
+            replicas,
+            model,
+            &cluster,
+            &sched,
+            route,
+            cached,
+            1,
+            routing_profile,
+            tracing,
+        )
+    }
+
+    /// Serialize the in-flight campaign state: phase cursors, router
+    /// round-robin pointer, every replica's serving state.  The trace
+    /// itself is not carried — it regenerates from the spec's seed —
+    /// and neither is the wall-clock phase profile.
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("next_arrival", u64_str(self.next_arrival as u64)),
+            ("drain_cursor", u64_str(self.drain_cursor as u64)),
+            ("rr_next", u64_str(self.router.rr_next() as u64)),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(|r| r.snapshot_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Overlay a snapshot onto a freshly built campaign.  The campaign
+    /// must have been constructed from the same spec (same trace,
+    /// cluster shape, and telemetry choice); shape mismatches error
+    /// without mutating cursor state.
+    pub fn restore_json(&mut self, j: &Json) -> Result<(), String> {
+        let want = |name: &str| {
+            j.get(name).ok_or_else(|| format!("campaign snapshot missing '{name}'"))
+        };
+        let next_arrival = parse_u64_str(want("next_arrival")?)
+            .ok_or("bad campaign next_arrival")? as usize;
+        let drain_cursor =
+            parse_u64_str(want("drain_cursor")?).ok_or("bad campaign drain_cursor")? as usize;
+        let rr_next = parse_u64_str(want("rr_next")?).ok_or("bad campaign rr_next")? as usize;
+        if next_arrival > self.order.len() {
+            return Err(format!(
+                "snapshot routed {next_arrival} arrivals, trace has {}",
+                self.order.len()
+            ));
+        }
+        if drain_cursor > self.replicas.len() {
+            return Err(format!(
+                "snapshot drain cursor {drain_cursor} exceeds {} replicas",
+                self.replicas.len()
+            ));
+        }
+        let reps = want("replicas")?
+            .as_arr()
+            .ok_or("campaign snapshot 'replicas' must be an array")?;
+        if reps.len() != self.replicas.len() {
+            return Err(format!(
+                "snapshot has {} replicas, campaign has {}",
+                reps.len(),
+                self.replicas.len()
+            ));
+        }
+        for (i, (r, rj)) in self.replicas.iter_mut().zip(reps.iter()).enumerate() {
+            r.restore_json(rj).map_err(|e| format!("replica {i}: {e}"))?;
+        }
+        self.router.set_rr_next(rr_next);
+        self.next_arrival = next_arrival;
+        self.drain_cursor = drain_cursor;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_cluster;
+    use super::*;
+    use crate::config::{ArtemisConfig, EngineStrategy, Placement};
+    use crate::config::ModelZoo;
+    use crate::serve::{Policy, Scenario};
+
+    fn setup(n: usize) -> (ArtemisConfig, TransformerModel, Vec<SessionSpec>, SchedulerConfig) {
+        let cfg = ArtemisConfig::default();
+        let model = ModelZoo::transformer_base(); // 2 layers: fast sim
+        let trace = Scenario::chat().with_sessions(n).generate(1);
+        let sched = SchedulerConfig { max_batch: 4, policy: Policy::Fifo };
+        (cfg, model, trace, sched)
+    }
+
+    #[test]
+    fn stepped_campaign_matches_one_shot_driver_bit_for_bit() {
+        let (cfg, model, trace, sched) = setup(8);
+        for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+            for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
+                let cl = ClusterConfig::new(2, placement).with_engine(engine);
+                let reference = run_cluster(
+                    &cfg,
+                    &model,
+                    &trace,
+                    &cl,
+                    &sched,
+                    RoutePolicy::RoundRobin,
+                    true,
+                );
+                let mut c = Campaign::new(
+                    &cfg,
+                    &model,
+                    &trace,
+                    &cl,
+                    &sched,
+                    RoutePolicy::RoundRobin,
+                    true,
+                    None,
+                );
+                // Deliberately tiny slices: granularity must not matter.
+                let mut steps = 0usize;
+                while c.step(3) {
+                    steps += 1;
+                    assert!(steps < 1_000_000, "campaign never finished");
+                }
+                assert!(c.is_done());
+                let (r, doc) = c.finish(None);
+                assert!(doc.is_none());
+                assert_eq!(
+                    r.state_hash(),
+                    reference.state_hash(),
+                    "{placement}/{engine}"
+                );
+                assert_eq!(r.aggregate.ticks, reference.aggregate.ticks);
+                assert_eq!(
+                    r.aggregate.makespan_ns.to_bits(),
+                    reference.aggregate.makespan_ns.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_to_identical_state_hash() {
+        let (cfg, model, trace, sched) = setup(10);
+        for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+            let cl = ClusterConfig::new(2, placement).with_engine(EngineStrategy::Event);
+            let route = RoutePolicy::RoundRobin;
+            let reference =
+                run_cluster(&cfg, &model, &trace, &cl, &sched, route, true).state_hash();
+
+            // Drive half-way (into the drain for dp, mid-arrivals is
+            // covered by the smaller step count on pp), snapshot, and
+            // round-trip the snapshot through its serialized text.
+            let mut first = Campaign::new(&cfg, &model, &trace, &cl, &sched, route, true, None);
+            let budget = if placement == Placement::DataParallel { 14 } else { 6 };
+            for _ in 0..budget {
+                if !first.step(2) {
+                    break;
+                }
+            }
+            let snap = Json::parse(&first.snapshot_json().compact()).expect("snapshot parses");
+
+            let mut resumed =
+                Campaign::new(&cfg, &model, &trace, &cl, &sched, route, true, None);
+            resumed.restore_json(&snap).expect("restore");
+            let (r, _) = resumed.finish(None);
+            assert_eq!(r.state_hash(), reference, "{placement}");
+
+            // The interrupted original also finishes to the same hash.
+            let (orig, _) = first.finish(None);
+            assert_eq!(orig.state_hash(), reference, "{placement} original");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatches() {
+        let (cfg, model, trace, sched) = setup(4);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let donor = Campaign::new(
+            &cfg,
+            &model,
+            &trace,
+            &cl,
+            &sched,
+            RoutePolicy::RoundRobin,
+            true,
+            None,
+        );
+        let snap = donor.snapshot_json();
+        // A 3-stack campaign cannot absorb a 2-stack snapshot.
+        let cl3 = ClusterConfig::new(3, Placement::DataParallel);
+        let mut other = Campaign::new(
+            &cfg,
+            &model,
+            &trace,
+            &cl3,
+            &sched,
+            RoutePolicy::RoundRobin,
+            true,
+            None,
+        );
+        let err = other.restore_json(&snap).unwrap_err();
+        assert!(err.contains("replicas"), "{err}");
+    }
+}

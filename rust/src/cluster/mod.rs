@@ -31,7 +31,10 @@
 //! points, so every thread count produces bit-identical reports
 //! (DESIGN.md §Performance-engineering).
 
+mod campaign;
 mod parallel;
+
+pub use campaign::Campaign;
 
 use crate::config::{ArtemisConfig, ClusterConfig, Placement, TransformerModel};
 use crate::dataflow::{stack_groups, StackLink};
@@ -135,24 +138,26 @@ pub fn run_cluster_traced(
     (report, doc.expect("telemetry was enabled"))
 }
 
-#[allow(clippy::too_many_arguments)] // internal: the union of both entry points
-fn run_cluster_inner(
-    cfg: &ArtemisConfig,
-    model: &TransformerModel,
-    trace: &[SessionSpec],
+/// Build the replica set for a cluster shape — every full replica per
+/// stack under `dp`, one logical replica over the stack groups under
+/// `pp` — with telemetry not yet enabled.  Shared by the one-shot
+/// driver ([`run_cluster`]) and the incremental [`Campaign`] so both
+/// execute the exact same construction sequence.  The shared cost
+/// cache is created here; replicas hold their own handles, so the
+/// local binding dropping on return is inert.
+pub(crate) fn build_replicas<'a>(
+    cfg: &'a ArtemisConfig,
+    model: &'a TransformerModel,
     cluster: &ClusterConfig,
     sched: &SchedulerConfig,
-    route: RoutePolicy,
     cached: bool,
-    tracing: Option<(&TraceConfig, &TraceMeta)>,
-) -> (ClusterReport, Option<Trace>) {
-    assert!(cluster.stacks > 0, "cluster needs at least one stack");
+) -> Vec<ReplicaSim<'a>> {
     let opts = SimOptions::artemis();
     let cache = cached.then(CostCache::shared);
     let layers = model.layers as u64;
 
     let fidelity = crate::fidelity::ServeFidelity::for_model(&cfg.fidelity, model);
-    let mut replicas: Vec<ReplicaSim<'_>> = match cluster.placement {
+    match cluster.placement {
         Placement::DataParallel => (0..cluster.stacks)
             .map(|_| {
                 let coster =
@@ -193,7 +198,22 @@ fn run_cluster_inner(
                 cluster.engine,
             )]
         }
-    };
+    }
+}
+
+#[allow(clippy::too_many_arguments)] // internal: the union of both entry points
+fn run_cluster_inner(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+    tracing: Option<(&TraceConfig, &TraceMeta)>,
+) -> (ClusterReport, Option<Trace>) {
+    assert!(cluster.stacks > 0, "cluster needs at least one stack");
+    let mut replicas = build_replicas(cfg, model, cluster, sched, cached);
     if let Some((tc, _)) = tracing {
         for r in replicas.iter_mut() {
             r.enable_telemetry(tc);
@@ -227,7 +247,36 @@ fn run_cluster_inner(
         replicas =
             parallel::drive_parallel(replicas, &order, &mut router, threads, &mut routing_profile);
     }
+    assemble_report(
+        replicas,
+        model,
+        cluster,
+        sched,
+        route,
+        cached,
+        threads,
+        routing_profile,
+        tracing,
+    )
+}
 
+/// Assemble the finished replicas into the [`ClusterReport`] (labels,
+/// per-stack + aggregate reports, cache stats, profile roll-up) and
+/// drain the telemetry trace.  Shared by [`run_cluster`] and
+/// [`Campaign::finish`], so the incremental driver's output is
+/// byte-identical to the one-shot driver's.
+#[allow(clippy::too_many_arguments)] // internal: the report's full provenance
+pub(crate) fn assemble_report(
+    mut replicas: Vec<ReplicaSim<'_>>,
+    model: &TransformerModel,
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+    threads: usize,
+    routing_profile: PhaseProfile,
+    tracing: Option<(&TraceConfig, &TraceMeta)>,
+) -> (ClusterReport, Option<Trace>) {
     let label = format!(
         "{} {} b{} {}",
         cluster.label(),
@@ -267,7 +316,6 @@ fn run_cluster_inner(
         t.attach_profile(&profile);
         t
     });
-    drop(cache);
 
     let report = ClusterReport {
         stacks: cluster.stacks,

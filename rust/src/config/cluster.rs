@@ -40,6 +40,14 @@ impl std::fmt::Display for Placement {
     }
 }
 
+impl crate::util::cli::CliOption for Placement {
+    const KIND: &'static str = "placement";
+    const VALUES: &'static [&'static str] = &["dp", "pp"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        Placement::parse(s)
+    }
+}
+
 /// How a replica advances its simulated clock (`serve-gen --engine`).
 ///
 /// Purely a wall-clock knob: both strategies run the *same* tick
@@ -75,6 +83,14 @@ impl std::fmt::Display for EngineStrategy {
             EngineStrategy::Tick => write!(f, "tick"),
             EngineStrategy::Event => write!(f, "event"),
         }
+    }
+}
+
+impl crate::util::cli::CliOption for EngineStrategy {
+    const KIND: &'static str = "engine";
+    const VALUES: &'static [&'static str] = &["tick", "event"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        EngineStrategy::parse(s)
     }
 }
 

@@ -148,6 +148,20 @@ impl SloSpec {
     }
 }
 
+impl crate::util::cli::CliOption for SloSpec {
+    const KIND: &'static str = "SLO spec";
+    /// Advertised forms, not a closed value set: `default` or per-tier
+    /// `tier:metric=dur` overrides — so `error_for` is overridden with
+    /// a by-example message instead of the generated enumeration.
+    const VALUES: &'static [&'static str] = &["default", "gold:ttft=100ms,itl=10ms"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        SloSpec::parse(s)
+    }
+    fn error_for(got: &str) -> String {
+        format!("bad --slo '{got}' (try 'default' or 'gold:ttft=100ms,itl=10ms')")
+    }
+}
+
 impl fmt::Display for SloSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         for (i, &tier) in QosTier::ALL.iter().enumerate() {

@@ -1,0 +1,587 @@
+//! Live serve daemon: a long-running TCP front-end for serving
+//! campaigns, with mid-run snapshot/restore.
+//!
+//! `artemis serve-daemon [--listen ADDR]` binds a listener (default
+//! `127.0.0.1:0` — kernel-assigned port, announced on stdout as
+//! `daemon: listening on <addr>`), then serves line-delimited JSON
+//! requests, one JSON object per line, one JSON response per line:
+//!
+//! | request | response |
+//! |---|---|
+//! | `{"cmd":"submit","spec":{...},"pause_after":N?}` | `{"ok":true,"job":J}` |
+//! | `{"cmd":"status","job":J}` | `{"ok":true,"state":...,"units":...,"arrivals":[a,n],...}` |
+//! | `{"cmd":"snapshot","job":J}` | `{"ok":true,"snapshot":{...}}` |
+//! | `{"cmd":"restore","snapshot":{...},"pause_after":N?}` | `{"ok":true,"job":J}` |
+//! | `{"cmd":"resume","job":J}` | `{"ok":true}` |
+//! | `{"cmd":"trace-window","job":J}` | `{"ok":true,"windows":[...]}` |
+//! | `{"cmd":"reload-config","path":P?}` | `{"ok":true}` |
+//! | `{"cmd":"shutdown"}` | `{"ok":true}` then the process exits |
+//!
+//! Every failure is `{"ok":false,"error":"..."}`; the connection stays
+//! usable.  `submit` bodies are [`ServeSpec`] JSON — the same
+//! serializable request `serve-gen --spec FILE` consumes, so a CLI
+//! invocation and a daemon submission are interchangeable.
+//!
+//! Each job runs on its own worker thread driving an incremental
+//! [`Campaign`]: between bounded steps the worker drains control
+//! commands (snapshot, trace-window, resume), so a snapshot is always
+//! taken at a deterministic step boundary.  `pause_after` parks the
+//! job after that many steps — the handle CI uses to snapshot a
+//! half-finished campaign, kill the daemon, and restore elsewhere.
+//!
+//! The snapshot document (`kind: "artemis-serve-snapshot"`, version
+//! [`SNAPSHOT_VERSION`]) embeds the spec, the resolved machine config,
+//! and the campaign state (cursors, router pointer, every replica's
+//! serving state).  Restoring rebuilds the campaign from the spec —
+//! the trace regenerates from the seed; memoization caches restart
+//! cold — overlays the snapshot, and continues the exact tick
+//! sequence: the finished job reports the **same state hash** as an
+//! uninterrupted run (DESIGN.md §Serve-daemon).  On completion a job
+//! prints `job J: state-hash 0x...` (and, when the spec traces, the
+//! `trace: wrote ...` + `slo-verdict ...` lines) to stdout.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::cluster::Campaign;
+use crate::config::ArtemisConfig;
+use crate::serve::{meta_for, ServeSpec};
+use crate::telemetry::{FileSink, Trace, SCHEMA_VERSION};
+use crate::util::json::{parse_u64_str, u64_str, Json};
+
+/// `kind` tag of the snapshot document.
+pub const SNAPSHOT_KIND: &str = "artemis-serve-snapshot";
+/// Snapshot schema version; bump on incompatible change.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Scheduler ticks per drain-phase step: small enough that control
+/// commands get serviced promptly, large enough that stepping overhead
+/// stays negligible.
+const TICK_SLICE: u64 = 64;
+
+/// Control commands the daemon forwards to a job's worker thread.
+enum Cmd {
+    /// Serialize the campaign at the next step boundary.
+    Snapshot(mpsc::Sender<Result<Json, String>>),
+    /// Report the live windowed telemetry of every replica.
+    TraceWindow(mpsc::Sender<Result<Json, String>>),
+    /// Un-pause a job parked by `pause_after`.
+    Resume,
+}
+
+/// Where a job is in its lifecycle, as reported by `status`.
+enum JobState {
+    Running,
+    Paused,
+    Done { hash: u64 },
+    Failed { error: String },
+}
+
+struct JobStatus {
+    state: JobState,
+    /// Campaign steps completed (including steps before a restore).
+    units: u64,
+    /// `(arrivals routed, total arrivals)`.
+    arrivals: (usize, usize),
+}
+
+type Jobs = Arc<Mutex<HashMap<u64, JobStatus>>>;
+
+fn update_status(jobs: &Jobs, job: u64, f: impl FnOnce(&mut JobStatus)) {
+    if let Ok(mut m) = jobs.lock() {
+        if let Some(s) = m.get_mut(&job) {
+            f(s);
+        }
+    }
+}
+
+fn ok_obj(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut v = vec![("ok", Json::Bool(true))];
+    v.append(&mut fields);
+    Json::obj(v)
+}
+
+fn err_obj(msg: String) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+}
+
+/// The daemon's main-thread state: job registry + command handles.
+struct Daemon {
+    jobs: Jobs,
+    handles: HashMap<u64, mpsc::Sender<Cmd>>,
+    next_job: u64,
+    /// Default `--config` path applied to submits that carry none
+    /// (`reload-config` swaps it for future submissions).
+    default_config: Option<String>,
+}
+
+impl Daemon {
+    fn new() -> Self {
+        Self {
+            jobs: Arc::new(Mutex::new(HashMap::new())),
+            handles: HashMap::new(),
+            next_job: 0,
+            default_config: None,
+        }
+    }
+
+    fn spawn_job(
+        &mut self,
+        spec: ServeSpec,
+        restore: Option<Json>,
+        pause_after: Option<u64>,
+    ) -> u64 {
+        let job = self.next_job;
+        self.next_job += 1;
+        let (tx, rx) = mpsc::channel();
+        self.handles.insert(job, tx);
+        self.jobs.lock().expect("jobs lock").insert(
+            job,
+            JobStatus { state: JobState::Running, units: 0, arrivals: (0, 0) },
+        );
+        let jobs = Arc::clone(&self.jobs);
+        std::thread::spawn(move || {
+            let outcome = run_job(job, &spec, restore, pause_after, &jobs, &rx);
+            update_status(&jobs, job, |s| {
+                s.state = match outcome {
+                    Ok(hash) => JobState::Done { hash },
+                    Err(error) => JobState::Failed { error },
+                };
+            });
+        });
+        job
+    }
+
+    fn job_handle(&self, req: &Json) -> Result<(u64, &mpsc::Sender<Cmd>), String> {
+        let job = req.get("job").and_then(parse_u64_str).ok_or("request needs a 'job' id")?;
+        let tx = self.handles.get(&job).ok_or_else(|| format!("unknown job {job}"))?;
+        Ok((job, tx))
+    }
+
+    /// Round-trip a command that carries a reply channel to the worker.
+    fn ask(
+        &self,
+        tx: &mpsc::Sender<Cmd>,
+        make: impl FnOnce(mpsc::Sender<Result<Json, String>>) -> Cmd,
+    ) -> Result<Json, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(make(reply_tx))
+            .map_err(|_| "job is not accepting commands (finished?)".to_string())?;
+        reply_rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| "job did not answer (finished?)".to_string())?
+    }
+
+    /// Handle one request line; the bool asks the caller to shut down.
+    fn handle(&mut self, line: &str) -> (Json, bool) {
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(_) => return (err_obj("request is not valid JSON".into()), false),
+        };
+        let cmd = match req.get("cmd").and_then(|c| c.as_str()) {
+            Some(c) => c.to_string(),
+            None => return (err_obj("request needs a string 'cmd'".into()), false),
+        };
+        let pause_after = req.get("pause_after").and_then(parse_u64_str);
+        let resp = match cmd.as_str() {
+            "submit" => req
+                .get("spec")
+                .ok_or_else(|| "submit needs a 'spec' object".to_string())
+                .and_then(|sj| ServeSpec::from_json(sj).map_err(|e| e.to_string()))
+                .and_then(|mut spec| {
+                    if spec.config.is_none() {
+                        spec.config = self.default_config.clone();
+                    }
+                    spec.validate().map_err(|e| e.to_string())?;
+                    let job = self.spawn_job(spec, None, pause_after);
+                    Ok(ok_obj(vec![("job", Json::Num(job as f64))]))
+                }),
+            "restore" => req
+                .get("snapshot")
+                .ok_or_else(|| "restore needs a 'snapshot' object".to_string())
+                .and_then(|snap| {
+                    check_snapshot_header(snap)?;
+                    let sj = snap.get("spec").ok_or("snapshot missing 'spec'")?;
+                    let spec = ServeSpec::from_json(sj).map_err(|e| e.to_string())?;
+                    spec.validate().map_err(|e| e.to_string())?;
+                    let job = self.spawn_job(spec, Some(snap.clone()), pause_after);
+                    Ok(ok_obj(vec![("job", Json::Num(job as f64))]))
+                }),
+            "status" => self.status(&req),
+            "snapshot" => self
+                .job_handle(&req)
+                .and_then(|(_, tx)| self.ask(tx, Cmd::Snapshot))
+                .map(|snap| ok_obj(vec![("snapshot", snap)])),
+            "trace-window" => self
+                .job_handle(&req)
+                .and_then(|(_, tx)| self.ask(tx, Cmd::TraceWindow))
+                .map(|w| ok_obj(vec![("windows", w)])),
+            "resume" => self.job_handle(&req).and_then(|(job, tx)| {
+                tx.send(Cmd::Resume)
+                    .map_err(|_| "job is not accepting commands (finished?)".to_string())?;
+                update_status(&self.jobs, job, |s| {
+                    if matches!(s.state, JobState::Paused) {
+                        s.state = JobState::Running;
+                    }
+                });
+                Ok(ok_obj(vec![]))
+            }),
+            "reload-config" => match req.get("path").and_then(|p| p.as_str()) {
+                Some(path) => std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read '{path}': {e}"))
+                    .and_then(|text| {
+                        ArtemisConfig::from_json(&text).map_err(|e| e.to_string())?;
+                        self.default_config = Some(path.to_string());
+                        Ok(ok_obj(vec![]))
+                    }),
+                None => {
+                    self.default_config = None;
+                    Ok(ok_obj(vec![]))
+                }
+            },
+            "shutdown" => return (ok_obj(vec![]), true),
+            other => Err(format!("unknown command '{other}'")),
+        };
+        (resp.unwrap_or_else(err_obj), false)
+    }
+
+    fn status(&self, req: &Json) -> Result<Json, String> {
+        let job = req.get("job").and_then(parse_u64_str).ok_or("request needs a 'job' id")?;
+        let m = self.jobs.lock().map_err(|_| "jobs lock poisoned".to_string())?;
+        let s = m.get(&job).ok_or_else(|| format!("unknown job {job}"))?;
+        let state = match s.state {
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        };
+        let arrivals =
+            Json::Arr(vec![Json::Num(s.arrivals.0 as f64), Json::Num(s.arrivals.1 as f64)]);
+        let mut fields = vec![
+            ("job", Json::Num(job as f64)),
+            ("state", Json::Str(state.into())),
+            ("units", u64_str(s.units)),
+            ("arrivals", arrivals),
+        ];
+        if let JobState::Done { hash } = s.state {
+            fields.push(("state_hash", Json::Str(format!("{hash:#018x}"))));
+        }
+        if let JobState::Failed { error } = &s.state {
+            fields.push(("error", Json::Str(error.clone())));
+        }
+        Ok(ok_obj(fields))
+    }
+}
+
+fn check_snapshot_header(snap: &Json) -> Result<(), String> {
+    match snap.get("kind").and_then(|k| k.as_str()) {
+        Some(SNAPSHOT_KIND) => {}
+        Some(k) => return Err(format!("not a serve snapshot (kind '{k}')")),
+        None => return Err("snapshot missing 'kind'".into()),
+    }
+    match snap.get("version").and_then(|v| v.as_u64()) {
+        Some(SNAPSHOT_VERSION) => Ok(()),
+        v => Err(format!("unsupported snapshot version {v:?} (have {SNAPSHOT_VERSION})")),
+    }
+}
+
+/// One job, on its own thread: build the campaign from the spec (and
+/// optionally overlay a snapshot), step it to completion while
+/// draining control commands at step boundaries, then print the
+/// grep-stable completion lines.
+fn run_job(
+    job: u64,
+    spec: &ServeSpec,
+    restore: Option<Json>,
+    pause_after: Option<u64>,
+    jobs: &Jobs,
+    rx: &mpsc::Receiver<Cmd>,
+) -> Result<u64, String> {
+    // Machine config: embedded in the snapshot (so a restore never
+    // depends on a config file still existing), else from the spec.
+    let cfg = match &restore {
+        Some(snap) => {
+            let cj = snap.get("config").ok_or("snapshot missing 'config'")?;
+            ArtemisConfig::from_json(&cj.compact()).map_err(|e| e.to_string())?
+        }
+        None => spec.load_stack_config().map_err(|e| e.to_string())?,
+    };
+    let cfg_json =
+        Json::parse(&cfg.to_json()).map_err(|_| "config did not round-trip".to_string())?;
+    let resolved = spec.resolve().map_err(|e| e.to_string())?;
+    let sc = resolved.scenario;
+    let trace = sc.generate(spec.seed);
+    // The daemon always drives through the cluster campaign; a spec
+    // without a cluster section runs the default 1-stack dp shape.
+    let cl_spec = spec.cluster.unwrap_or_default();
+    let cl = cl_spec.to_cluster_config(spec.engine);
+    let sched = spec.sched(resolved.batch);
+    let traced = spec.trace.path.is_some();
+    let tc = resolved.tc;
+    let mut campaign = Campaign::new(
+        &cfg,
+        &sc.model,
+        &trace,
+        &cl,
+        &sched,
+        cl_spec.route,
+        cl_spec.cost_cache,
+        traced.then_some(&tc),
+    );
+    let mut units: u64 = 0;
+    if let Some(snap) = &restore {
+        campaign.restore_json(snap.get("campaign").ok_or("snapshot missing 'campaign'")?)?;
+        units = snap.get("units").and_then(parse_u64_str).unwrap_or(0);
+        update_status(jobs, job, |s| {
+            s.units = units;
+            s.arrivals = campaign.progress();
+        });
+    }
+    let mut paused = false;
+    loop {
+        // Drain control commands; block while paused (a parked job
+        // burns no CPU until `resume`, `snapshot`, or daemon exit).
+        loop {
+            let cmd = if paused {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return Err("daemon dropped a paused job".into()),
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    // Disconnected = daemon is gone; finish the run.
+                    Err(_) => break,
+                }
+            };
+            match cmd {
+                Cmd::Resume => {
+                    paused = false;
+                    update_status(jobs, job, |s| s.state = JobState::Running);
+                }
+                Cmd::Snapshot(reply) => {
+                    let _ = reply.send(Ok(Json::obj(vec![
+                        ("kind", Json::Str(SNAPSHOT_KIND.into())),
+                        ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+                        ("spec", spec.to_json()),
+                        ("config", cfg_json.clone()),
+                        ("units", u64_str(units)),
+                        ("campaign", campaign.snapshot_json()),
+                    ])));
+                }
+                Cmd::TraceWindow(reply) => {
+                    let windows: Vec<Json> = campaign
+                        .replicas()
+                        .iter()
+                        .map(|r| match r.live_windows() {
+                            Some(w) => w.snapshot_json(),
+                            None => Json::Null,
+                        })
+                        .collect();
+                    let _ = reply.send(Ok(Json::Arr(windows)));
+                }
+            }
+        }
+        if !campaign.step(TICK_SLICE) {
+            break;
+        }
+        units += 1;
+        let progress = campaign.progress();
+        update_status(jobs, job, |s| {
+            s.units = units;
+            s.arrivals = progress;
+        });
+        if pause_after == Some(units) && !campaign.is_done() {
+            paused = true;
+            update_status(jobs, job, |s| s.state = JobState::Paused);
+        }
+    }
+    let meta = meta_for(&sc, spec.seed, trace.len() as u64);
+    let (report, doc) = campaign.finish(traced.then_some(&meta));
+    let hash = report.state_hash();
+    println!("job {job}: state-hash {hash:#018x}");
+    if let (Some(path), Some(doc)) = (&spec.trace.path, &doc) {
+        write_job_trace(path, doc)?;
+    }
+    let _ = std::io::stdout().flush();
+    Ok(hash)
+}
+
+/// Emit a finished job's trace, with the same grep-stable summary and
+/// verdict lines `serve-gen --trace` prints.
+fn write_job_trace(path: &str, doc: &Trace) -> Result<(), String> {
+    let mut sink = FileSink::create(std::path::Path::new(path))
+        .map_err(|e| format!("cannot write trace '{path}': {e}"))?;
+    doc.emit(&mut sink);
+    println!(
+        "trace: wrote {path} ({} spans, {} windows, schema v{SCHEMA_VERSION})",
+        doc.spans.len(),
+        doc.windows.len()
+    );
+    println!("{}", doc.slo.verdict_line());
+    Ok(())
+}
+
+/// `serve-daemon` entry point: bind, announce, serve until `shutdown`.
+pub fn run_daemon(args: &[String]) -> Result<()> {
+    let listen = args
+        .iter()
+        .position(|a| a == "--listen")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "127.0.0.1:0".into());
+    let listener = TcpListener::bind(&listen)?;
+    println!("daemon: listening on {}", listener.local_addr()?);
+    std::io::stdout().flush()?;
+    let mut daemon = Daemon::new();
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if serve_connection(&mut daemon, stream)? {
+            // `shutdown` acknowledged: returning ends the process (any
+            // worker threads — e.g. a paused job being abandoned — die
+            // with it; that *is* the kill in snapshot/kill/restore).
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+/// Serve one client connection; true when the client asked to shut
+/// the daemon down (after the acknowledgement was sent).
+fn serve_connection(daemon: &mut Daemon, stream: TcpStream) -> Result<bool> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(false),
+            Ok(_) => {}
+            Err(_) => return Ok(false),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = daemon.handle(trimmed);
+        writeln!(writer, "{}", resp.compact())?;
+        writer.flush()?;
+        if shutdown {
+            return Ok(true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_header_checks() {
+        let good = Json::obj(vec![
+            ("kind", Json::Str(SNAPSHOT_KIND.into())),
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+        ]);
+        assert!(check_snapshot_header(&good).is_ok());
+        let bad_kind = Json::obj(vec![
+            ("kind", Json::Str("something".into())),
+            ("version", Json::Num(1.0)),
+        ]);
+        assert!(check_snapshot_header(&bad_kind).is_err());
+        let bad_version = Json::obj(vec![
+            ("kind", Json::Str(SNAPSHOT_KIND.into())),
+            ("version", Json::Num(99.0)),
+        ]);
+        assert!(check_snapshot_header(&bad_version).is_err());
+    }
+
+    #[test]
+    fn submit_status_snapshot_restore_through_the_dispatcher() {
+        // Drive the daemon's dispatcher directly (no TCP): submit a
+        // paused job, snapshot it, restore into a second job, and
+        // check both finish on the same state hash.
+        let mut d = Daemon::new();
+        let spec = ServeSpec::from_args(
+            &["serve-gen", "--sessions", "6", "--model", "Transformer-base", "--batch", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let submit = Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("spec", spec.to_json()),
+            ("pause_after", Json::Num(4.0)),
+        ]);
+        let (resp, _) = d.handle(&submit.compact());
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let job = resp.get("job").and_then(|v| v.as_u64()).unwrap();
+
+        // Wait for the pause.
+        let paused = wait_for_state(&d, job, "paused");
+        assert_eq!(paused, "paused");
+
+        let (resp, _) = d.handle(
+            &Json::obj(vec![
+                ("cmd", Json::Str("snapshot".into())),
+                ("job", Json::Num(job as f64)),
+            ])
+            .compact(),
+        );
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let snap = resp.get("snapshot").unwrap().clone();
+        check_snapshot_header(&snap).unwrap();
+
+        // Restore into a fresh job and let it run to completion.
+        let (resp, _) = d.handle(
+            &Json::obj(vec![("cmd", Json::Str("restore".into())), ("snapshot", snap)]).compact(),
+        );
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let restored = resp.get("job").and_then(|v| v.as_u64()).unwrap();
+        assert_eq!(wait_for_state(&d, restored, "done"), "done");
+
+        // Resume the original; both must land on the same hash.
+        let (resp, _) = d.handle(
+            &Json::obj(vec![
+                ("cmd", Json::Str("resume".into())),
+                ("job", Json::Num(job as f64)),
+            ])
+            .compact(),
+        );
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        assert_eq!(wait_for_state(&d, job, "done"), "done");
+        let h1 = status_hash(&d, job);
+        let h2 = status_hash(&d, restored);
+        assert_eq!(h1, h2, "restored job diverged from the original");
+    }
+
+    fn status_req(job: u64) -> String {
+        Json::obj(vec![("cmd", Json::Str("status".into())), ("job", Json::Num(job as f64))])
+            .compact()
+    }
+
+    fn wait_for_state(d: &Daemon, job: u64, want: &str) -> String {
+        for _ in 0..600 {
+            let resp = d.status(&Json::parse(&status_req(job)).unwrap()).unwrap();
+            let state = resp.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+            if state == want || state == "failed" {
+                if state == "failed" {
+                    panic!("job {job} failed: {}", resp.compact());
+                }
+                return state;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        panic!("job {job} never reached '{want}'");
+    }
+
+    fn status_hash(d: &Daemon, job: u64) -> String {
+        let resp = d.status(&Json::parse(&status_req(job)).unwrap()).unwrap();
+        resp.get("state_hash").and_then(|v| v.as_str()).unwrap().to_string()
+    }
+}

@@ -32,6 +32,8 @@
 //! * [`runtime`]   — pluggable execution backends: pure-Rust reference
 //!   executor (default) or PJRT artifact loading (feature `pjrt`).
 //! * [`coordinator`] — request router, batcher, co-simulation driver.
+//! * [`daemon`]    — live serve daemon: TCP/JSON front-end over the
+//!   cluster campaign driver, with mid-run snapshot/restore.
 //! * [`serve`]     — continuous-batching generation server: simulated
 //!   clock, KV-residency admission, load generator, latency histograms,
 //!   cluster-aware session router.
@@ -48,6 +50,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod dataflow;
 pub mod dram;
 pub mod energy;

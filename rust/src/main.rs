@@ -6,14 +6,15 @@
 
 use anyhow::{anyhow, Result};
 use artemis::cluster::{run_cluster, run_cluster_traced, run_scenario_cluster};
-use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement, SloSpec};
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, Placement};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
+use artemis::daemon::run_daemon;
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
 use artemis::serve::{
-    run_continuous_engine, run_continuous_traced, run_static, PhaseProfile, Policy,
-    QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
+    meta_for, run_continuous_engine, run_continuous_traced, run_static, PhaseProfile, Policy,
+    RoutePolicy, Scenario, SchedulerConfig, ServeSpec,
 };
 use artemis::sim::SimOptions;
 use artemis::telemetry::{
@@ -64,7 +65,7 @@ Other commands:
            [--qos gold|silver|bronze|mix] [--engine tick|event]
            [--stacks D] [--placement dp|pp] [--route rr|ll|kv]
            [--no-cost-cache] [--trace FILE] [--slo SPEC]
-           [--trace-window MS]
+           [--trace-window MS] [--spec FILE]
            continuous-batching generation server on the simulated clock:
            TTFT + per-token p50/p95/p99 (simulated ns), tokens/s,
            estimated-accuracy percentiles, and the comparison against
@@ -88,7 +89,20 @@ Other commands:
            counts, and cache modes, and the report's state hash never
            moves.  --slo sets per-tier p99 targets ('default' or e.g.
            'gold:ttft=100ms,itl=10ms;bronze:ttft=2s'); --trace-window
-           sets the snapshot window in simulated ms (default 100)
+           sets the snapshot window in simulated ms (default 100).
+           --spec FILE loads a serialized ServeSpec JSON document (the
+           same schema the serve daemon accepts) as the base request;
+           explicit flags layer over its fields
+  serve-daemon [--listen ADDR]
+           long-running serving daemon: line-delimited JSON over TCP
+           (submit / status / snapshot / restore / resume /
+           trace-window / reload-config / shutdown).  submit takes the
+           same ServeSpec JSON as serve-gen --spec and drives the run
+           incrementally on a worker thread; snapshot serializes the
+           mid-run campaign state to a versioned document, and restore
+           resumes it — finishing on the same state-hash line an
+           uninterrupted run prints.  Default ADDR 127.0.0.1:0 (the
+           bound address is announced on stdout)
   trace-report <trace.jsonl> [--top K]
            replay a --trace file into human-readable tables: run
            summary, per-tier SLO verdicts, top-K worst sessions,
@@ -187,63 +201,32 @@ fn run_serve(args: &[String]) -> Result<()> {
 }
 
 fn run_serve_gen(args: &[String]) -> Result<()> {
-    let scenario = flag_value(args, "--scenario").unwrap_or_else(|| "chat".into());
-    let mut sc = Scenario::by_name(&scenario).ok_or_else(|| {
-        anyhow!("unknown scenario '{scenario}' (chat|summarize|burst|long_itl)")
-    })?;
-    let seed: u64 = flag_value(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
-    if let Some(n) = flag_value(args, "--sessions") {
-        sc = sc.with_sessions(n.parse()?);
-    }
-    if let Some(name) = flag_value(args, "--model") {
-        sc.model = ModelZoo::by_name(&name)
-            .ok_or_else(|| anyhow!("unknown model '{name}' — see `artemis help`"))?;
-    }
-    let batch: usize =
-        flag_value(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(sc.max_batch);
-    if batch == 0 {
-        return Err(anyhow!("--batch must be positive"));
-    }
-    let policy = match flag_value(args, "--policy") {
-        None => Policy::Fifo,
-        Some(p) => Policy::parse(&p).ok_or_else(|| anyhow!("unknown policy '{p}' (fifo|spf)"))?,
+    // --spec FILE seeds the request from a serialized ServeSpec
+    // document; explicit flags layer over it.  Bare flags parse over
+    // the defaults — byte-identical to the historical flag loop.
+    let base = match flag_value(args, "--spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)?;
+            ServeSpec::from_json(&Json::parse(&text)?)?
+        }
+        None => ServeSpec::default(),
     };
-    let engine = match flag_value(args, "--engine") {
-        None => EngineStrategy::Tick,
-        Some(e) => EngineStrategy::parse(&e)
-            .ok_or_else(|| anyhow!("unknown engine '{e}' (tick|event)"))?,
-    };
-    if let Some(q) = flag_value(args, "--qos") {
-        sc = sc.with_qos(
-            QosAssignment::parse(&q)
-                .ok_or_else(|| anyhow!("unknown QoS tier '{q}' (gold|silver|bronze|mix)"))?,
-        );
-    }
+    let spec = ServeSpec::from_args_over(base, args)?;
+    run_serve_gen_spec(&spec)
+}
 
-    // Telemetry: --trace streams the run as JSONL; --slo / --trace-window
-    // shape the verdicts and snapshot granularity baked into it.
-    let trace_path = flag_value(args, "--trace");
-    let slo = match flag_value(args, "--slo") {
-        None => SloSpec::default(),
-        Some(s) => SloSpec::parse(&s).ok_or_else(|| {
-            anyhow!("bad --slo '{s}' (try 'default' or 'gold:ttft=100ms,itl=10ms')")
-        })?,
-    };
-    let window_ms: f64 =
-        flag_value(args, "--trace-window").map(|v| v.parse()).transpose()?.unwrap_or(100.0);
-    if !window_ms.is_finite() || window_ms <= 0.0 {
-        return Err(anyhow!("--trace-window must be a positive number of milliseconds"));
-    }
-    let tc = TraceConfig { window_ns: window_ms * 1e6, slo };
+/// Execute one validated [`ServeSpec`] — the shared path behind
+/// `serve-gen` flags, `--spec` files, and the daemon's one-shot runs.
+fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
+    let resolved = spec.resolve()?;
+    let sc = resolved.scenario;
+    let batch = resolved.batch;
+    let tc = resolved.tc;
+    let seed = spec.seed;
+    let trace_path = spec.trace.path.as_deref();
 
     let trace = sc.generate(seed);
-    let meta = TraceMeta {
-        scenario: sc.name.to_string(),
-        model: sc.model.name.clone(),
-        seed: Some(seed),
-        sessions: trace.len() as u64,
-        qos: sc.qos.to_string(),
-    };
+    let meta = meta_for(&sc, seed, trace.len() as u64);
     if trace.is_empty() {
         println!(
             "## serve-gen — scenario '{}' seed {}: empty trace (0 sessions), nothing to serve",
@@ -252,47 +235,25 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         // An empty run still writes a *valid* trace (header + SLO
         // verdict + footer, all no-data, no NaN) so downstream
         // trace-report pipelines never see a truncated file.
-        if let Some(path) = &trace_path {
+        if let Some(path) = trace_path {
             let doc = build_trace(Vec::new(), &tc, &meta);
             write_trace(path, &doc)?;
         }
         return Ok(());
     }
-    let sched = SchedulerConfig { max_batch: batch, policy };
+    let sched = spec.sched(batch);
 
-    // Cluster mode: any of the scale-out flags switches `--stacks` from
-    // "one bigger machine" (the fig12 meaning elsewhere) to "D cluster
-    // stacks, each a default/--config machine".
-    let stacks: Option<u64> = flag_value(args, "--stacks").map(|v| v.parse()).transpose()?;
-    let cluster_mode = stacks.is_some()
-        || args.iter().any(|a| {
-            a == "--placement" || a == "--route" || a == "--no-cost-cache" || a == "--threads"
-        });
-    if cluster_mode {
-        let stack_cfg = if let Some(path) = flag_value(args, "--config") {
-            ArtemisConfig::from_json(&std::fs::read_to_string(path)?)?
-        } else {
-            ArtemisConfig::default()
-        };
-        let d = stacks.unwrap_or(1);
-        if d == 0 {
-            return Err(anyhow!("--stacks must be positive"));
-        }
-        let placement = match flag_value(args, "--placement") {
-            None => Placement::DataParallel,
-            Some(p) => {
-                Placement::parse(&p).ok_or_else(|| anyhow!("unknown placement '{p}' (dp|pp)"))?
-            }
-        };
-        let route = match flag_value(args, "--route") {
-            None => RoutePolicy::LeastLoaded,
-            Some(r) => RoutePolicy::parse(&r)
-                .ok_or_else(|| anyhow!("unknown route policy '{r}' (rr|ll|kv)"))?,
-        };
-        let cached = !has_flag(args, "--no-cost-cache");
-        let threads: usize =
-            flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0);
-        let cl = ClusterConfig::new(d, placement).with_threads(threads).with_engine(engine);
+    // Cluster mode: any of the scale-out flags (or a spec `cluster`
+    // section) switches `--stacks` from "one bigger machine" (the
+    // fig12 meaning elsewhere) to "D cluster stacks, each a
+    // default/--config machine".
+    if let Some(cl_spec) = spec.cluster {
+        let stack_cfg = spec.load_stack_config()?;
+        let d = cl_spec.stacks;
+        let placement = cl_spec.placement;
+        let route = cl_spec.route;
+        let cached = cl_spec.cost_cache;
+        let cl = cl_spec.to_cluster_config(spec.engine);
         let (r, doc) = if trace_path.is_some() {
             let (r, doc) = run_cluster_traced(
                 &stack_cfg,
@@ -321,9 +282,9 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
             placement,
             route,
             batch,
-            policy,
+            spec.policy,
             sc.qos,
-            engine,
+            spec.engine,
             if cached { "on" } else { "off" }
         );
         let mut reports = r.per_stack.clone();
@@ -346,18 +307,19 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         // One u64 over the whole simulated outcome: equal across
         // engines, thread counts, and cache on/off by construction.
         println!("state-hash {:#018x}", r.state_hash());
-        if let (Some(path), Some(doc)) = (&trace_path, &doc) {
+        if let (Some(path), Some(doc)) = (trace_path, &doc) {
             write_trace(path, doc)?;
         }
         return Ok(());
     }
 
-    let cfg = build_config(args)?;
+    let cfg = spec.load_stack_config()?;
     let (cont, doc) = if trace_path.is_some() {
-        let (r, doc) = run_continuous_traced(&cfg, &sc.model, &trace, &sched, engine, &tc, &meta);
+        let (r, doc) =
+            run_continuous_traced(&cfg, &sc.model, &trace, &sched, spec.engine, &tc, &meta);
         (r, Some(doc))
     } else {
-        (run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine), None)
+        (run_continuous_engine(&cfg, &sc.model, &trace, &sched, spec.engine), None)
     };
     let stat = run_static(&cfg, &sc.model, &trace, batch);
 
@@ -369,9 +331,9 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
         sc.model.name,
         trace.len(),
         batch,
-        policy,
+        spec.policy,
         sc.qos,
-        engine
+        spec.engine
     );
     for r in [&cont, &stat] {
         println!("{}:", r.scheme);
@@ -406,7 +368,7 @@ fn run_serve_gen(args: &[String]) -> Result<()> {
     }
     println!();
     report::serving_comparison(&[cont, stat]).print();
-    if let (Some(path), Some(doc)) = (&trace_path, &doc) {
+    if let (Some(path), Some(doc)) = (trace_path, &doc) {
         write_trace(path, doc)?;
     }
     Ok(())
@@ -791,6 +753,7 @@ fn main() -> Result<()> {
         }
         "serve" => run_serve(&args)?,
         "serve-gen" => run_serve_gen(&args)?,
+        "serve-daemon" => run_daemon(&args)?,
         "trace-report" => run_trace_report(&args)?,
         "cluster-scale" => report::cluster_scale_study(&cfg).print(),
         "bench-serve" => run_bench_serve(&args)?,

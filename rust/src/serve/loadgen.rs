@@ -46,6 +46,14 @@ impl std::fmt::Display for QosAssignment {
     }
 }
 
+impl crate::util::cli::CliOption for QosAssignment {
+    const KIND: &'static str = "QoS tier";
+    const VALUES: &'static [&'static str] = &["gold", "silver", "bronze", "mix"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        QosAssignment::parse(s)
+    }
+}
+
 /// Token-length distribution for prompts / generation lengths.
 #[derive(Debug, Clone, Copy)]
 pub enum LengthDist {

@@ -135,6 +135,23 @@ impl StreamingHistogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Serialize to the sparse `(bucket, count)` form plus side stats —
+    /// the daemon snapshot carrier.  Replaying the parts through
+    /// [`StreamingHistogram::fold_bucket_counts`] on a fresh histogram
+    /// reproduces this one exactly (a fresh histogram's `min`/`max`
+    /// sentinels are the identity of the fold, including the empty
+    /// case, where the fold is a no-op and `new()` already matches).
+    pub(crate) fn snapshot_parts(&self) -> (Vec<(u16, u64)>, u64, f64, f64, f64) {
+        let entries = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| (b as u16, c))
+            .collect();
+        (entries, self.count, self.sum, self.min, self.max)
+    }
+
     /// Snapshot the p50/p95/p99/mean/max summary.
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
@@ -277,6 +294,28 @@ impl OccupancyTimeline {
 
     pub fn samples(&self) -> &[OccupancySample] {
         &self.samples
+    }
+
+    /// Current decimation stride (snapshot extraction).
+    pub(crate) fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Samples observed so far, pre-decimation (snapshot extraction).
+    pub(crate) fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Rebuild a timeline from snapshotted parts — the exact inverse
+    /// of reading `samples`/`stride`/`seen` and the peak getters.
+    pub(crate) fn from_parts(
+        samples: Vec<OccupancySample>,
+        stride: u64,
+        seen: u64,
+        peak_active: usize,
+        peak_kv_per_bank: u64,
+    ) -> Self {
+        Self { samples, stride, seen, peak_active, peak_kv_per_bank }
     }
 
     /// Fold another timeline's (already-decimated) samples into this

@@ -20,6 +20,9 @@
 //!   (TTFT, per-token, inter-token gap) and occupancy timelines.
 //! * [`router`](Router) — cluster-aware session routing (round-robin /
 //!   least-loaded / KV-headroom) over live [`ReplicaLoad`] snapshots.
+//! * [`spec`](ServeSpec) — the serializable serving-run request shared
+//!   by `serve-gen` and the serve daemon: CLI flags, JSON spec files,
+//!   and daemon `submit` bodies all parse into one [`ServeSpec`].
 //!
 //! Sessions carry a per-request QoS tier ([`QosTier`], assigned by the
 //! load generator's [`QosAssignment`]) mapping to a stream-length
@@ -52,6 +55,7 @@ mod profile;
 mod router;
 mod scheduler;
 mod session;
+mod spec;
 
 pub(crate) use scheduler::aggregate_report;
 
@@ -67,5 +71,6 @@ pub use scheduler::{
     ReplicaSim, SchedulerConfig, ServeGenReport, SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
+pub use spec::{meta_for, ClusterSpec, ResolvedServe, ServeSpec, TraceSpec, SPEC_VERSION};
 
 pub use crate::fidelity::QosTier;

@@ -71,6 +71,14 @@ impl std::fmt::Display for RoutePolicy {
     }
 }
 
+impl crate::util::cli::CliOption for RoutePolicy {
+    const KIND: &'static str = "route policy";
+    const VALUES: &'static [&'static str] = &["rr", "ll", "kv"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        RoutePolicy::parse(s)
+    }
+}
+
 /// Stateful router (round-robin keeps a cursor; the live policies are
 /// pure functions of the load snapshots).
 #[derive(Debug, Clone)]
@@ -86,6 +94,17 @@ impl Router {
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
+    }
+
+    /// Round-robin cursor, for snapshot extraction (the live policies
+    /// are stateless; this cursor is the router's only mutable state).
+    pub(crate) fn rr_next(&self) -> usize {
+        self.rr_next
+    }
+
+    /// Overwrite the round-robin cursor when restoring a snapshot.
+    pub(crate) fn set_rr_next(&mut self, rr_next: usize) {
+        self.rr_next = rr_next;
     }
 
     /// Pick the replica that admits the next session.

@@ -56,7 +56,8 @@ use crate::sim::{
     simulate, CacheStats, DecodeBaseCache, Event, EventKind, EventQueue, SimOptions, StackCoster,
     StateHash, TickCost,
 };
-use crate::telemetry::{ReplicaTelemetry, SessionSpan, TraceConfig, WindowSet};
+use crate::telemetry::{ReplicaTelemetry, SessionSpan, SpanAcc, TraceConfig, WindowSet};
+use crate::util::json::{f64_bits, parse_f64_bits, parse_u64_str, u64_str, Json};
 use crate::xfmr::{batched_decode_step_workload, batched_prefill_workload};
 
 /// Admission-order policy for the wait queue.
@@ -85,6 +86,14 @@ impl std::fmt::Display for Policy {
             Policy::Fifo => write!(f, "fifo"),
             Policy::ShortestPromptFirst => write!(f, "spf"),
         }
+    }
+}
+
+impl crate::util::cli::CliOption for Policy {
+    const KIND: &'static str = "policy";
+    const VALUES: &'static [&'static str] = &["fifo", "spf"];
+    fn parse_cli(s: &str) -> Option<Self> {
+        Policy::parse(s)
     }
 }
 
@@ -258,6 +267,236 @@ impl MetricsAcc {
         self.ticks += o.ticks;
         self.decode_rows += o.decode_rows;
     }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", hist_to_json(&self.ttft)),
+            ("per_token", hist_to_json(&self.per_token)),
+            ("itl", hist_to_json(&self.itl)),
+            ("timeline", timeline_to_json(&self.timeline)),
+            ("accuracy", Json::Arr(self.accuracy.iter().map(|&v| f64_bits(v)).collect())),
+            ("total_tokens", u64_str(self.total_tokens)),
+            ("energy_pj", f64_bits(self.energy_pj)),
+            ("ticks", u64_str(self.ticks)),
+            ("decode_rows", u64_str(self.decode_rows)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        let mut accuracy = Vec::new();
+        for v in j.get("accuracy")?.as_arr()? {
+            accuracy.push(parse_f64_bits(v)?);
+        }
+        Some(Self {
+            ttft: hist_from_json(j.get("ttft")?)?,
+            per_token: hist_from_json(j.get("per_token")?)?,
+            itl: hist_from_json(j.get("itl")?)?,
+            timeline: timeline_from_json(j.get("timeline")?)?,
+            accuracy,
+            total_tokens: parse_u64_str(j.get("total_tokens")?)?,
+            energy_pj: parse_f64_bits(j.get("energy_pj")?)?,
+            ticks: parse_u64_str(j.get("ticks")?)?,
+            decode_rows: parse_u64_str(j.get("decode_rows")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Daemon snapshot carriers (DESIGN.md §Serve-daemon).  Every f64 travels
+// as its bit pattern and every u64 as a decimal string so a restored
+// replica is field-for-field identical to the snapshotted one — the
+// restore-equals-uninterrupted state-hash invariant depends on it.
+
+fn hist_to_json(h: &StreamingHistogram) -> Json {
+    let (entries, count, sum, min, max) = h.snapshot_parts();
+    Json::obj(vec![
+        (
+            "buckets",
+            Json::Arr(
+                entries
+                    .iter()
+                    .map(|&(b, c)| Json::Arr(vec![Json::Num(b as f64), u64_str(c)]))
+                    .collect(),
+            ),
+        ),
+        ("count", u64_str(count)),
+        ("sum", f64_bits(sum)),
+        ("min", f64_bits(min)),
+        ("max", f64_bits(max)),
+    ])
+}
+
+fn hist_from_json(j: &Json) -> Option<StreamingHistogram> {
+    let mut entries = Vec::new();
+    for e in j.get("buckets")?.as_arr()? {
+        let pair = e.as_arr()?;
+        entries.push((pair.first()?.as_u64()? as u16, parse_u64_str(pair.get(1)?)?));
+    }
+    let mut h = StreamingHistogram::new();
+    h.fold_bucket_counts(
+        &entries,
+        parse_u64_str(j.get("count")?)?,
+        parse_f64_bits(j.get("sum")?)?,
+        parse_f64_bits(j.get("min")?)?,
+        parse_f64_bits(j.get("max")?)?,
+    );
+    Some(h)
+}
+
+fn timeline_to_json(t: &OccupancyTimeline) -> Json {
+    let samples = t
+        .samples()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("t_ns", f64_bits(s.t_ns)),
+                ("active", Json::Num(s.active as f64)),
+                ("queued", Json::Num(s.queued as f64)),
+                ("kv", u64_str(s.kv_per_bank_bytes)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("samples", Json::Arr(samples)),
+        ("stride", u64_str(t.stride())),
+        ("seen", u64_str(t.seen())),
+        ("peak_active", Json::Num(t.peak_active() as f64)),
+        ("peak_kv_per_bank", u64_str(t.peak_kv_per_bank())),
+    ])
+}
+
+fn timeline_from_json(j: &Json) -> Option<OccupancyTimeline> {
+    let mut samples = Vec::new();
+    for s in j.get("samples")?.as_arr()? {
+        samples.push(OccupancySample {
+            t_ns: parse_f64_bits(s.get("t_ns")?)?,
+            active: s.get("active")?.as_u64()? as usize,
+            queued: s.get("queued")?.as_u64()? as usize,
+            kv_per_bank_bytes: parse_u64_str(s.get("kv")?)?,
+        });
+    }
+    Some(OccupancyTimeline::from_parts(
+        samples,
+        parse_u64_str(j.get("stride")?)?,
+        parse_u64_str(j.get("seen")?)?,
+        j.get("peak_active")?.as_u64()? as usize,
+        parse_u64_str(j.get("peak_kv_per_bank")?)?,
+    ))
+}
+
+fn state_code(s: SessionState) -> u64 {
+    match s {
+        SessionState::Queued => 0,
+        SessionState::Prefill => 1,
+        SessionState::Decoding => 2,
+        SessionState::Done => 3,
+        SessionState::Rejected => 4,
+    }
+}
+
+fn state_from_code(v: u64) -> Option<SessionState> {
+    Some(match v {
+        0 => SessionState::Queued,
+        1 => SessionState::Prefill,
+        2 => SessionState::Decoding,
+        3 => SessionState::Done,
+        4 => SessionState::Rejected,
+        _ => return None,
+    })
+}
+
+fn spec_to_json(s: &SessionSpec) -> Json {
+    Json::obj(vec![
+        ("id", u64_str(s.id)),
+        ("arrival_ns", f64_bits(s.arrival_ns)),
+        ("prompt", u64_str(s.prompt)),
+        ("gen", u64_str(s.gen)),
+        ("tier", Json::Num(s.tier.idx() as f64)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Option<SessionSpec> {
+    Some(SessionSpec {
+        id: parse_u64_str(j.get("id")?)?,
+        arrival_ns: parse_f64_bits(j.get("arrival_ns")?)?,
+        prompt: parse_u64_str(j.get("prompt")?)?,
+        gen: parse_u64_str(j.get("gen")?)?,
+        tier: *QosTier::ALL.get(j.get("tier")?.as_u64()? as usize)?,
+    })
+}
+
+fn session_to_json(s: &Session) -> Json {
+    Json::obj(vec![
+        ("spec", spec_to_json(&s.spec)),
+        ("state", Json::Num(state_code(s.state) as f64)),
+        ("generated", u64_str(s.generated)),
+        ("admitted_ns", f64_bits(s.admitted_ns)),
+        ("first_token_ns", f64_bits(s.first_token_ns)),
+        ("last_token_ns", f64_bits(s.last_token_ns)),
+        ("finished_ns", f64_bits(s.finished_ns)),
+    ])
+}
+
+fn session_from_json(j: &Json) -> Option<Session> {
+    let mut s = Session::new(spec_from_json(j.get("spec")?)?);
+    s.state = state_from_code(j.get("state")?.as_u64()?)?;
+    s.generated = parse_u64_str(j.get("generated")?)?;
+    s.admitted_ns = parse_f64_bits(j.get("admitted_ns")?)?;
+    s.first_token_ns = parse_f64_bits(j.get("first_token_ns")?)?;
+    s.last_token_ns = parse_f64_bits(j.get("last_token_ns")?)?;
+    s.finished_ns = parse_f64_bits(j.get("finished_ns")?)?;
+    Some(s)
+}
+
+fn idx_list_to_json(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect())
+}
+
+fn idx_list_from_json(j: &Json, len: usize) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for e in j.as_arr()? {
+        let i = e.as_u64()? as usize;
+        if i >= len {
+            return None;
+        }
+        out.push(i);
+    }
+    Some(out)
+}
+
+fn event_to_json(e: &Event<Option<SessionSpec>>) -> Json {
+    let kind = match e.kind {
+        EventKind::Arrival => 0.0,
+        EventKind::TickBoundary => 1.0,
+    };
+    Json::obj(vec![
+        ("t_ns", f64_bits(e.t_ns)),
+        ("kind", Json::Num(kind)),
+        ("id", u64_str(e.id)),
+        ("spec", e.payload.as_ref().map(spec_to_json).unwrap_or(Json::Null)),
+    ])
+}
+
+fn event_from_json(j: &Json) -> Option<Event<Option<SessionSpec>>> {
+    let kind = match j.get("kind")?.as_u64()? {
+        0 => EventKind::Arrival,
+        1 => EventKind::TickBoundary,
+        _ => return None,
+    };
+    let payload = match j.get("spec")? {
+        Json::Null => None,
+        spec => Some(spec_from_json(spec)?),
+    };
+    Some(Event {
+        t_ns: parse_f64_bits(j.get("t_ns")?)?,
+        kind,
+        id: parse_u64_str(j.get("id")?)?,
+        payload,
+    })
+}
+
+fn want<'j>(j: &'j Json, name: &str) -> Result<&'j Json, String> {
+    j.get(name).ok_or_else(|| format!("snapshot replica: missing field '{name}'"))
 }
 
 fn session_reports(sessions: &[Session], fid: &ServeFidelity) -> Vec<SessionReport> {
@@ -574,6 +813,25 @@ impl<'a> ReplicaSim<'a> {
         }
     }
 
+    /// Run at most `max_ticks` scheduler ticks; returns `true` while
+    /// work remains.  The daemon's pause point: a bounded slice of the
+    /// exact tick sequence [`run_to_completion`](Self::run_to_completion)
+    /// executes, for either engine (in cluster driving the event
+    /// engine's win lives entirely *inside* [`tick`] — the admission
+    /// scan gate and decode-piece reuse — so slicing the loop is
+    /// engine-agnostic and hash-neutral).
+    pub fn step_ticks(&mut self, max_ticks: u64) -> bool {
+        let mut n = 0;
+        while self.has_work() {
+            if n >= max_ticks {
+                return true;
+            }
+            self.tick();
+            n += 1;
+        }
+        false
+    }
+
     /// Queue a future arrival on the event heap (event-engine driving;
     /// the counterpart of the tick driver's `advance_to` + [`push`](Self::push)).
     /// Insertion order is irrelevant: the heap pops in the total
@@ -878,6 +1136,143 @@ impl<'a> ReplicaSim<'a> {
             self.kv.budget_per_bank(),
             &self.fidelity,
         )
+    }
+
+    /// Live windowed telemetry aggregates, when this run is traced —
+    /// the daemon's `trace-window` source.
+    pub(crate) fn live_windows(&self) -> Option<&WindowSet> {
+        self.telemetry.as_ref().map(|t| t.snapshot_parts().1)
+    }
+
+    /// Serialize every mutable run-state field of this replica
+    /// (DESIGN.md §Serve-daemon).  Deliberately **excluded**, because
+    /// they are rebuilt or irrelevant on restore: the model/config/
+    /// fidelity tables and the KV tracker's budget (rebuilt from the
+    /// request spec), the decode-reuse and cost caches (pure
+    /// memoization — bit-identical results with or without them),
+    /// scratch buffers, and the phase profile (wall-clock facts).
+    pub(crate) fn snapshot_json(&self) -> Json {
+        let telemetry = match &self.telemetry {
+            None => Json::Null,
+            Some(tel) => {
+                let (spans, windows) = tel.snapshot_parts();
+                let spans = spans
+                    .iter()
+                    .map(|a| {
+                        Json::Arr(vec![
+                            f64_bits(a.prefill_ns),
+                            f64_bits(a.decode_ns),
+                            f64_bits(a.prefill_pj),
+                            f64_bits(a.decode_pj),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("spans", Json::Arr(spans)),
+                    ("windows", windows.snapshot_json()),
+                ])
+            }
+        };
+        Json::obj(vec![
+            ("clock", f64_bits(self.clock)),
+            ("admission_dirty", Json::Bool(self.admission_dirty)),
+            ("capacity_freed", Json::Bool(self.capacity_freed)),
+            ("tick_pending", Json::Bool(self.tick_pending)),
+            ("events", Json::Arr(self.events.ordered_events().iter().map(event_to_json).collect())),
+            ("sessions", Json::Arr(self.sessions.iter().map(session_to_json).collect())),
+            ("waiting", idx_list_to_json(&self.waiting)),
+            ("active", idx_list_to_json(&self.active)),
+            ("acc", self.acc.to_json()),
+            (
+                "kv",
+                Json::obj(vec![
+                    ("reserved_per_bank", u64_str(self.kv.reserved_per_bank())),
+                    ("peak_per_bank", u64_str(self.kv.peak_per_bank())),
+                ]),
+            ),
+            ("telemetry", telemetry),
+        ])
+    }
+
+    /// Overlay a [`Self::snapshot_json`] state onto this replica.
+    ///
+    /// The replica must be freshly built from the same request spec
+    /// (same model, scheduler knobs, engine, and — when the snapshot
+    /// carries telemetry — [`enable_telemetry`](Self::enable_telemetry)
+    /// already called with the same `TraceConfig`).  After a successful
+    /// restore, continuing the run executes the exact tick sequence the
+    /// snapshotted replica would have, landing on the same state hash.
+    pub(crate) fn restore_json(&mut self, j: &Json) -> Result<(), String> {
+        let bad = |name: &str| format!("snapshot replica: bad field '{name}'");
+        let clock = parse_f64_bits(want(j, "clock")?).ok_or_else(|| bad("clock"))?;
+        let admission_dirty =
+            want(j, "admission_dirty")?.as_bool().ok_or_else(|| bad("admission_dirty"))?;
+        let capacity_freed =
+            want(j, "capacity_freed")?.as_bool().ok_or_else(|| bad("capacity_freed"))?;
+        let tick_pending = want(j, "tick_pending")?.as_bool().ok_or_else(|| bad("tick_pending"))?;
+        let mut sessions = Vec::new();
+        for s in want(j, "sessions")?.as_arr().ok_or_else(|| bad("sessions"))? {
+            sessions.push(session_from_json(s).ok_or_else(|| bad("sessions"))?);
+        }
+        let waiting =
+            idx_list_from_json(want(j, "waiting")?, sessions.len()).ok_or_else(|| bad("waiting"))?;
+        let active =
+            idx_list_from_json(want(j, "active")?, sessions.len()).ok_or_else(|| bad("active"))?;
+        let acc = MetricsAcc::from_json(want(j, "acc")?).ok_or_else(|| bad("acc"))?;
+        let kv = want(j, "kv")?;
+        let kv_reserved = parse_u64_str(want(kv, "reserved_per_bank")?)
+            .ok_or_else(|| bad("kv.reserved_per_bank"))?;
+        let kv_peak =
+            parse_u64_str(want(kv, "peak_per_bank")?).ok_or_else(|| bad("kv.peak_per_bank"))?;
+        let mut events = Vec::new();
+        for e in want(j, "events")?.as_arr().ok_or_else(|| bad("events"))? {
+            events.push(event_from_json(e).ok_or_else(|| bad("events"))?);
+        }
+        match (&mut self.telemetry, want(j, "telemetry")?) {
+            (None, Json::Null) => {}
+            (Some(tel), tj @ Json::Obj(_)) => {
+                let mut spans = Vec::new();
+                for sp in want(tj, "spans")?.as_arr().ok_or_else(|| bad("telemetry.spans"))? {
+                    let q = sp
+                        .as_arr()
+                        .filter(|q| q.len() == 4)
+                        .ok_or_else(|| bad("telemetry.spans"))?;
+                    let f =
+                        |i: usize| parse_f64_bits(&q[i]).ok_or_else(|| bad("telemetry.spans"));
+                    spans.push(SpanAcc {
+                        prefill_ns: f(0)?,
+                        decode_ns: f(1)?,
+                        prefill_pj: f(2)?,
+                        decode_pj: f(3)?,
+                    });
+                }
+                if spans.len() != sessions.len() {
+                    return Err("snapshot replica: span table length != session count".into());
+                }
+                let windows = WindowSet::restore_json(want(tj, "windows")?)
+                    .ok_or_else(|| bad("telemetry.windows"))?;
+                tel.restore_parts(spans, windows);
+            }
+            (Some(_), _) => {
+                return Err("snapshot replica: run is traced but snapshot has no telemetry".into())
+            }
+            (None, _) => {
+                return Err("snapshot replica: snapshot has telemetry but run is untraced".into())
+            }
+        }
+        self.clock = clock;
+        self.admission_dirty = admission_dirty;
+        self.capacity_freed = capacity_freed;
+        self.tick_pending = tick_pending;
+        self.sessions = sessions;
+        self.waiting = waiting;
+        self.active = active;
+        self.acc = acc;
+        self.kv.restore_occupancy(kv_reserved, kv_peak);
+        for ev in events {
+            self.events.push(ev);
+        }
+        Ok(())
     }
 }
 
@@ -1311,6 +1706,61 @@ mod tests {
         assert_eq!(tick.makespan_ns.to_bits(), event.makespan_ns.to_bits());
         assert_eq!(tick.ticks, event.ticks);
         assert_eq!(tick.scheme, event.scheme, "labels are engine-independent");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_to_identical_state_hash() {
+        let (cfg, sc, trace) = chat_small(8);
+        let mk = |tc: Option<&TraceConfig>| {
+            let coster =
+                Coster::Batched { cfg: &cfg, model: &sc.model, opts: SimOptions::artemis() };
+            let mut sim = ReplicaSim::new(
+                &sc.model,
+                SchedulerConfig::default(),
+                coster,
+                KvTracker::new(&cfg, &sc.model),
+                sc.model.layers as u64,
+                ServeFidelity::for_model(&cfg.fidelity, &sc.model),
+                EngineStrategy::Tick,
+            );
+            if let Some(tc) = tc {
+                sim.enable_telemetry(tc);
+            }
+            sim
+        };
+        let tc = TraceConfig::default();
+        for traced in [false, true] {
+            let tcr = traced.then_some(&tc);
+            // Uninterrupted reference run.
+            let mut reference = mk(tcr);
+            for spec in &trace {
+                reference.advance_to(spec.arrival_ns);
+                reference.push(*spec);
+            }
+            reference.run_to_completion();
+            let want = reference.report("r".into()).state_hash();
+
+            // Same driving, paused mid-run, snapshotted, restored into
+            // a fresh replica, then run out.
+            let mut a = mk(tcr);
+            for spec in &trace {
+                a.advance_to(spec.arrival_ns);
+                a.push(*spec);
+            }
+            assert!(a.step_ticks(5), "trace must outlast the pause point");
+            let snap = a.snapshot_json();
+            // The snapshot must survive a serialize/parse round trip
+            // (that is how it travels through the daemon).
+            let snap = crate::util::json::Json::parse(&snap.compact()).unwrap();
+            let mut b = mk(tcr);
+            b.restore_json(&snap).unwrap();
+            b.run_to_completion();
+            assert_eq!(b.report("r".into()).state_hash(), want, "traced={traced}");
+            if traced {
+                let (spans, _) = b.drain_telemetry(0).unwrap();
+                assert_eq!(spans.len(), 8);
+            }
+        }
     }
 
     #[test]

@@ -208,6 +208,14 @@ impl KvTracker {
     pub fn release(&mut self, total_bytes: u64) {
         self.reserved_per_bank = self.reserved_per_bank.saturating_sub(self.per_bank(total_bytes));
     }
+
+    /// Overwrite the dynamic occupancy counters when restoring a
+    /// snapshot (`banks`/`budget_per_bank` are rebuilt from config, so
+    /// only the two run-state fields travel in the snapshot).
+    pub(crate) fn restore_occupancy(&mut self, reserved_per_bank: u64, peak_per_bank: u64) {
+        self.reserved_per_bank = reserved_per_bank;
+        self.peak_per_bank = peak_per_bank;
+    }
 }
 
 #[cfg(test)]

@@ -116,6 +116,18 @@ impl<P> EventQueue<P> {
     }
 }
 
+impl<P: Clone> EventQueue<P> {
+    /// Every queued event in pop order (earliest first), without
+    /// draining the queue.  `Ord` on [`Event`] is reversed so the
+    /// max-heap pops the earliest event, which makes
+    /// `into_sorted_vec` come back latest-first — hence the reverse.
+    pub fn ordered_events(&self) -> Vec<Event<P>> {
+        let mut evs = self.heap.clone().into_sorted_vec();
+        evs.reverse();
+        evs
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +184,19 @@ mod tests {
         }
         let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.id).collect();
         assert_eq!(ids, vec![0, 2, 5, 9]);
+    }
+
+    #[test]
+    fn ordered_events_matches_pop_order_without_draining() {
+        let mut q = EventQueue::new();
+        for id in [9u64, 2, 5] {
+            q.push(ev(id as f64, EventKind::Arrival, id));
+        }
+        let snap: Vec<u64> = q.ordered_events().iter().map(|e| e.id).collect();
+        assert_eq!(snap, vec![2, 5, 9]);
+        assert_eq!(q.len(), 3, "snapshot must not drain");
+        let popped: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.id).collect();
+        assert_eq!(popped, snap);
     }
 
     #[test]

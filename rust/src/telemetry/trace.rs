@@ -140,6 +140,20 @@ impl ReplicaTelemetry {
         w.peak_queued = w.peak_queued.max(queued);
     }
 
+    /// Borrow the live buffers — span accumulators in session order
+    /// plus the window set — for daemon snapshot extraction.
+    pub(crate) fn snapshot_parts(&self) -> (&[SpanAcc], &WindowSet) {
+        (&self.spans, &self.windows)
+    }
+
+    /// Overlay snapshotted buffers onto a freshly created telemetry
+    /// (the SLO spec is rebuilt from the request's `TraceConfig`, so
+    /// only the run-state buffers travel in the snapshot).
+    pub(crate) fn restore_parts(&mut self, spans: Vec<SpanAcc>, windows: WindowSet) {
+        self.spans = spans;
+        self.windows = windows;
+    }
+
     /// Tear down into span records + windows (trace-build time).
     pub(crate) fn into_parts<F>(
         self,

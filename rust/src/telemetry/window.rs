@@ -21,6 +21,7 @@
 
 use crate::fidelity::QosTier;
 use crate::serve::StreamingHistogram;
+use crate::util::json::{f64_bits, parse_f64_bits, parse_u64_str, u64_str, Json};
 use std::collections::BTreeMap;
 
 /// Window-count bound; crossing it doubles the window width.
@@ -77,6 +78,39 @@ impl SparseHist {
     pub fn fold_into(&self, h: &mut StreamingHistogram) {
         h.fold_bucket_counts(&self.buckets, self.count, self.sum, self.min, self.max);
     }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(b, c)| Json::Arr(vec![Json::Num(b as f64), u64_str(c)]))
+                        .collect(),
+                ),
+            ),
+            ("count", u64_str(self.count)),
+            ("sum", f64_bits(self.sum)),
+            ("min", f64_bits(self.min)),
+            ("max", f64_bits(self.max)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        let mut buckets = Vec::new();
+        for e in j.get("buckets")?.as_arr()? {
+            let pair = e.as_arr()?;
+            buckets.push((pair.first()?.as_u64()? as u16, parse_u64_str(pair.get(1)?)?));
+        }
+        Some(Self {
+            buckets,
+            count: parse_u64_str(j.get("count")?)?,
+            sum: parse_f64_bits(j.get("sum")?)?,
+            min: parse_f64_bits(j.get("min")?)?,
+            max: parse_f64_bits(j.get("max")?)?,
+        })
+    }
 }
 
 /// One tier's latency deltas and exact SLO-violation counts in a window.
@@ -94,6 +128,24 @@ impl TierWin {
         self.itl.merge(&other.itl);
         self.ttft_viol += other.ttft_viol;
         self.itl_viol += other.itl_viol;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", self.ttft.to_json()),
+            ("itl", self.itl.to_json()),
+            ("ttft_viol", u64_str(self.ttft_viol)),
+            ("itl_viol", u64_str(self.itl_viol)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            ttft: SparseHist::from_json(j.get("ttft")?)?,
+            itl: SparseHist::from_json(j.get("itl")?)?,
+            ttft_viol: parse_u64_str(j.get("ttft_viol")?)?,
+            itl_viol: parse_u64_str(j.get("itl_viol")?)?,
+        })
     }
 }
 
@@ -126,6 +178,44 @@ impl WindowAcc {
         for (a, b) in self.tiers.iter_mut().zip(&other.tiers) {
             a.merge(b);
         }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", u64_str(self.arrivals)),
+            ("admitted", u64_str(self.admitted)),
+            ("rejected", u64_str(self.rejected)),
+            ("finished", u64_str(self.finished)),
+            ("tokens", u64_str(self.tokens)),
+            ("ticks", u64_str(self.ticks)),
+            ("energy_pj", f64_bits(self.energy_pj)),
+            ("peak_active", u64_str(self.peak_active as u64)),
+            ("peak_queued", u64_str(self.peak_queued as u64)),
+            ("tiers", Json::Arr(self.tiers.iter().map(TierWin::to_json).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        let tiers_j = j.get("tiers")?.as_arr()?;
+        if tiers_j.len() != 3 {
+            return None;
+        }
+        let mut tiers: [TierWin; 3] = Default::default();
+        for (t, tj) in tiers.iter_mut().zip(tiers_j) {
+            *t = TierWin::from_json(tj)?;
+        }
+        Some(Self {
+            arrivals: parse_u64_str(j.get("arrivals")?)?,
+            admitted: parse_u64_str(j.get("admitted")?)?,
+            rejected: parse_u64_str(j.get("rejected")?)?,
+            finished: parse_u64_str(j.get("finished")?)?,
+            tokens: parse_u64_str(j.get("tokens")?)?,
+            ticks: parse_u64_str(j.get("ticks")?)?,
+            energy_pj: parse_f64_bits(j.get("energy_pj")?)?,
+            peak_active: parse_u64_str(j.get("peak_active")?)? as usize,
+            peak_queued: parse_u64_str(j.get("peak_queued")?)? as usize,
+            tiers,
+        })
     }
 }
 
@@ -190,6 +280,39 @@ impl WindowSet {
         while self.windows.len() > MAX_WINDOWS {
             self.coarsen();
         }
+    }
+
+    /// Serialize the full live state (width + every window) losslessly:
+    /// f64s travel as bit patterns, u64s as decimal strings, so a
+    /// restored set is field-for-field identical, including decimation
+    /// state (the width *is* the decimation state).
+    pub(crate) fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_ns", f64_bits(self.window_ns)),
+            (
+                "windows",
+                Json::Arr(
+                    self.windows
+                        .iter()
+                        .map(|(&i, w)| Json::Arr(vec![u64_str(i), w.to_json()]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a window set written by [`Self::snapshot_json`].
+    pub(crate) fn restore_json(j: &Json) -> Option<Self> {
+        let window_ns = parse_f64_bits(j.get("window_ns")?)?;
+        if !(window_ns > 0.0) {
+            return None;
+        }
+        let mut windows = BTreeMap::new();
+        for e in j.get("windows")?.as_arr()? {
+            let pair = e.as_arr()?;
+            windows.insert(parse_u64_str(pair.first()?)?, WindowAcc::from_json(pair.get(1)?)?);
+        }
+        Some(Self { window_ns, windows })
     }
 }
 

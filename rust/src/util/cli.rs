@@ -1,0 +1,162 @@
+//! One source of truth for CLI enum options.
+//!
+//! Every multi-valued flag of the serving CLI (`--policy`, `--engine`,
+//! `--placement`, `--route`, `--qos`, `--slo`) historically carried its
+//! own hand-written `parse` and its own hand-written error string, and
+//! the `help` text enumerated the same values a third time.  The three
+//! copies drifted independently.  [`CliOption`] collapses them: an
+//! implementor declares its *kind* (the noun used in error messages)
+//! and its canonical *values* list once, and the parse error, the
+//! `help` enumeration ([`CliOption::values_help`]), and the validation
+//! entry point ([`CliOption::parse_or_err`]) are all generated from it.
+//!
+//! The module also carries the did-you-mean machinery ([`closest`])
+//! used to reject unknown `--flags` instead of silently ignoring them
+//! (the historical `flag_value` scan skipped anything it did not
+//! recognize, so `--polcy spf` ran a FIFO campaign without a word).
+
+/// A CLI option with a closed set of accepted spellings.
+///
+/// `KIND` is the noun in the generated error (`unknown {KIND} '{got}'
+/// (...)`); `VALUES` is the canonical value list, in help order.
+/// `parse_cli` may accept aliases beyond `VALUES` (e.g. `round-robin`
+/// for `rr`) — the list is what help and errors *advertise*, the
+/// parser is what the flag *accepts*.
+pub trait CliOption: Sized {
+    /// Noun used in error messages, e.g. `"policy"` or `"QoS tier"`.
+    const KIND: &'static str;
+    /// Canonical accepted values, in the order help text lists them.
+    const VALUES: &'static [&'static str];
+
+    /// Parse one CLI token; `None` if it matches no accepted spelling.
+    fn parse_cli(s: &str) -> Option<Self>;
+
+    /// The generated rejection message for an unparseable token.
+    fn error_for(got: &str) -> String {
+        unknown_value(Self::KIND, got, Self::VALUES)
+    }
+
+    /// Parse or produce the generated error.
+    fn parse_or_err(s: &str) -> Result<Self, String> {
+        Self::parse_cli(s).ok_or_else(|| Self::error_for(s))
+    }
+
+    /// The `a|b|c` enumeration help text embeds, from the same list
+    /// the error message uses.
+    fn values_help() -> String {
+        Self::VALUES.join("|")
+    }
+}
+
+/// The uniform unknown-value error: `unknown {kind} '{got}' (a|b|c)`.
+pub fn unknown_value(kind: &str, got: &str, values: &[&str]) -> String {
+    format!("unknown {kind} '{got}' ({})", values.join("|"))
+}
+
+/// Levenshtein edit distance — small-alphabet DP, two rolling rows.
+/// Inputs are ASCII CLI tokens, so byte-wise comparison is exact.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate to `got` within a typo-sized edit budget
+/// (≤ 2 edits, and less than the candidate's own length so wildly
+/// short inputs don't match long flags).  Deterministic: ties break
+/// on (distance, candidate order).
+pub fn closest<'a>(got: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(usize, &'a str)> = None;
+    for &c in candidates {
+        let d = edit_distance(got, c);
+        if d <= 2 && d < c.len() && best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            best = Some((d, c));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// The unknown-flag rejection message, with a did-you-mean suffix
+/// when a known flag is within typo distance.
+pub fn unknown_flag(got: &str, known: &[&str]) -> String {
+    match closest(got, known) {
+        Some(c) => format!("unknown flag '{got}' (did you mean '{c}'?)"),
+        None => format!("unknown flag '{got}' — see `artemis help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("", "ab"), 2);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("--polcy", "--policy"), 1);
+    }
+
+    #[test]
+    fn closest_finds_typo_and_respects_budget() {
+        let known = ["--policy", "--engine", "--placement"];
+        assert_eq!(closest("--polcy", &known), Some("--policy"));
+        assert_eq!(closest("--enginee", &known), Some("--engine"));
+        assert_eq!(closest("--frobnicate", &known), None);
+        // Too-short inputs never match a long flag wholesale.
+        assert_eq!(closest("x", &["abc"]), None);
+    }
+
+    #[test]
+    fn closest_ties_break_on_candidate_order() {
+        assert_eq!(closest("ac", &["ab", "ad"]), Some("ab"));
+    }
+
+    #[test]
+    fn unknown_flag_message_shapes() {
+        let known = ["--policy", "--seed"];
+        assert_eq!(
+            unknown_flag("--polcy", &known),
+            "unknown flag '--polcy' (did you mean '--policy'?)"
+        );
+        assert_eq!(unknown_flag("--zzz", &known), "unknown flag '--zzz' — see `artemis help`");
+    }
+
+    #[test]
+    fn unknown_value_matches_historical_shape() {
+        assert_eq!(
+            unknown_value("policy", "lifo", &["fifo", "spf"]),
+            "unknown policy 'lifo' (fifo|spf)"
+        );
+    }
+
+    struct Toy;
+    impl CliOption for Toy {
+        const KIND: &'static str = "toy";
+        const VALUES: &'static [&'static str] = &["a", "b"];
+        fn parse_cli(s: &str) -> Option<Self> {
+            matches!(s, "a" | "b" | "alias-a").then_some(Toy)
+        }
+    }
+
+    #[test]
+    fn cli_option_generates_error_and_help() {
+        assert_eq!(Toy::values_help(), "a|b");
+        assert_eq!(Toy::parse_or_err("c").unwrap_err(), "unknown toy 'c' (a|b)");
+        assert!(Toy::parse_or_err("alias-a").is_ok(), "aliases parse but are not advertised");
+    }
+}

@@ -203,6 +203,44 @@ impl Json {
     }
 }
 
+// -- lossless scalar encodings for snapshot state ------------------------
+//
+// The writer collapses integral floats to integer text (`2.0` → `2`),
+// which round-trips the *value* but not the formatting, and `as_u64`
+// goes through f64 (exact only below 2^53).  Snapshot state must
+// round-trip bit-exactly, so f64s travel as 16-hex-digit bit patterns
+// and u64s as decimal strings.
+
+/// Encode an `f64` as the 16-hex-digit string of its IEEE-754 bits —
+/// bit-exact across write/parse, including -0.0, subnormals and NaN.
+pub fn f64_bits(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// Decode a value written by [`f64_bits`].
+pub fn parse_f64_bits(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// Encode a `u64` as a decimal string (exact beyond 2^53, where
+/// `Json::Num` would lose low bits through its f64 carrier).
+pub fn u64_str(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode a `u64` written by [`u64_str`] — also accepts a plain JSON
+/// number for small values, so hand-written snapshots stay usable.
+pub fn parse_u64_str(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse().ok(),
+        _ => j.as_u64(),
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -469,6 +507,28 @@ mod tests {
         assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
         assert_eq!(Json::parse("7.5").unwrap().as_u64(), None);
         assert_eq!(Json::parse("-7").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn f64_bits_round_trips_exactly() {
+        for v in [0.0, -0.0, 1.5, 1e-308 / 7.0, f64::MAX, f64::INFINITY, 0.1 + 0.2] {
+            let j = Json::parse(&f64_bits(v).compact()).unwrap();
+            assert_eq!(parse_f64_bits(&j).unwrap().to_bits(), v.to_bits(), "{v}");
+        }
+        let nan = parse_f64_bits(&f64_bits(f64::NAN)).unwrap();
+        assert!(nan.is_nan());
+        assert_eq!(parse_f64_bits(&Json::Str("xyz".into())), None);
+        assert_eq!(parse_f64_bits(&Json::Num(1.0)), None);
+    }
+
+    #[test]
+    fn u64_str_round_trips_past_2_pow_53() {
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX] {
+            let j = Json::parse(&u64_str(v).compact()).unwrap();
+            assert_eq!(parse_u64_str(&j), Some(v), "{v}");
+        }
+        assert_eq!(parse_u64_str(&Json::Num(7.0)), Some(7), "plain numbers accepted");
+        assert_eq!(parse_u64_str(&Json::Str("nope".into())), None);
     }
 
     #[test]

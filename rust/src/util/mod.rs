@@ -157,6 +157,7 @@ mod tests {
 }
 
 pub mod bench;
+pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod smallvec;

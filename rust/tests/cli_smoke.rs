@@ -38,10 +38,12 @@ fn help_exits_zero_and_lists_commands() {
         "bench-serve",
         "fidelity-sweep",
         "trace-report",
+        "serve-daemon",
         "--placement dp|pp",
         "--qos gold|silver|bronze|mix",
         "--engine tick|event",
         "--trace FILE",
+        "--spec FILE",
         "long_itl",
     ];
     for cmd in cmds {
@@ -550,4 +552,57 @@ fn unknown_command_exits_nonzero() {
     let (ok, _, stderr) = run(&["not-a-command"]);
     assert!(!ok);
     assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn serve_gen_rejects_misspelled_flags_with_did_you_mean() {
+    // Regression: `--polcy spf` used to be silently ignored (the run
+    // proceeded under the default fifo); unknown flags now reject,
+    // with a closest-match hint when one is near.
+    let (ok, _, stderr) = run(&["serve-gen", "--polcy", "spf"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag '--polcy'"), "{stderr}");
+    assert!(stderr.contains("did you mean '--policy'?"), "{stderr}");
+    // No close neighbour: point at help instead of guessing.
+    let (ok, _, stderr) = run(&["serve-gen", "--frobnicate", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag '--frobnicate'"), "{stderr}");
+    assert!(stderr.contains("artemis help"), "{stderr}");
+}
+
+#[test]
+fn serve_gen_spec_file_is_equivalent_to_flags() {
+    // A --spec file and the equivalent flag vector are one request:
+    // the outputs must be byte-identical.  Explicit flags layer over
+    // the file's fields.
+    let path = std::env::temp_dir().join(format!("artemis-spec-{}.json", std::process::id()));
+    let spec_json = concat!(
+        r#"{"kind":"artemis-serve-spec","version":1,"scenario":"chat","#,
+        r#""seed":"1","sessions":6,"model":"Transformer-base","batch":4}"#
+    );
+    std::fs::write(&path, spec_json).unwrap();
+    let p = path.to_str().unwrap();
+    let flags = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "6",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+    ];
+    let (ok1, out1, stderr) = run(&flags);
+    assert!(ok1, "flag serve-gen failed: {stderr}");
+    let (ok2, out2, stderr) = run(&["serve-gen", "--spec", p]);
+    assert!(ok2, "spec serve-gen failed: {stderr}");
+    assert_eq!(out1, out2, "--spec FILE must reproduce the flag run byte-for-byte");
+    // An explicit flag wins over the file value.
+    let (ok3, out3, stderr) = run(&["serve-gen", "--spec", p, "--batch", "2"]);
+    assert!(ok3, "spec+flag serve-gen failed: {stderr}");
+    assert!(out3.contains("batch 2"), "flag must override the spec file:\n{out3}");
+    std::fs::remove_file(&path).ok();
 }

@@ -1,0 +1,295 @@
+//! Live-daemon integration: drive `artemis serve-daemon` over real TCP
+//! through submit / status / snapshot / restore / shutdown, and assert
+//! the tentpole invariant — a campaign snapshotted mid-run, the daemon
+//! hard-killed, and the snapshot restored into a fresh daemon finishes
+//! on the exact state hash of an uninterrupted run (and of the
+//! in-process cluster driver), for both engines and both placements.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use artemis::cluster::run_cluster;
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement};
+use artemis::serve::{Policy, RoutePolicy, Scenario, SchedulerConfig, ServeSpec};
+use artemis::util::cli::CliOption;
+use artemis::util::json::Json;
+
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn start() -> Self {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_artemis"))
+            .args(["serve-daemon"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn serve-daemon");
+        let stdout = child.stdout.take().expect("daemon stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("daemon announce line");
+        let addr = line
+            .trim()
+            .strip_prefix("daemon: listening on ")
+            .unwrap_or_else(|| panic!("unexpected announce line: {line:?}"))
+            .to_string();
+        // Keep draining stdout (job completion lines) so the daemon
+        // never blocks on a full pipe.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        Self { child, addr }
+    }
+
+    fn connect(&self) -> Client {
+        Client::connect(&self.addr)
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { stream, reader }
+    }
+
+    fn raw(&mut self, line: &str) -> Json {
+        writeln!(self.stream, "{line}").expect("send request");
+        self.stream.flush().expect("flush request");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read reply");
+        Json::parse(reply.trim()).expect("reply must be JSON")
+    }
+
+    fn req(&mut self, body: &Json) -> Json {
+        self.raw(&body.compact())
+    }
+
+    fn ok(&mut self, body: &Json) -> Json {
+        let r = self.req(body);
+        assert_eq!(
+            r.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "request {} failed: {}",
+            body.compact(),
+            r.compact()
+        );
+        r
+    }
+}
+
+/// Read a numeric field that may travel as a decimal string (the
+/// daemon's u64-exact path) or a plain JSON number.
+fn num_field(j: &Json, name: &str) -> u64 {
+    let v = j.get(name).unwrap_or_else(|| panic!("missing '{name}': {}", j.compact()));
+    match v {
+        Json::Str(s) => s.parse().unwrap_or_else(|_| panic!("bad '{name}': {}", j.compact())),
+        _ => v.as_u64().unwrap_or_else(|| panic!("bad '{name}': {}", j.compact())),
+    }
+}
+
+fn hash_field(status: &Json) -> String {
+    status
+        .get("state_hash")
+        .and_then(|v| v.as_str())
+        .unwrap_or_else(|| panic!("no state_hash: {}", status.compact()))
+        .to_string()
+}
+
+fn status(c: &mut Client, job: u64) -> Json {
+    c.ok(&Json::obj(vec![("cmd", Json::Str("status".into())), ("job", Json::Num(job as f64))]))
+}
+
+fn wait_state(c: &mut Client, job: u64, want: &str) -> Json {
+    for _ in 0..600 {
+        let s = status(c, job);
+        match s.get("state").and_then(|v| v.as_str()) {
+            Some(state) if state == want => return s,
+            Some("failed") => panic!("job {job} failed: {}", s.compact()),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    panic!("job {job} never reached '{want}'");
+}
+
+/// The shared request: a 2-stack rr-routed chat campaign on the fast
+/// 2-layer model, parameterized over engine and placement.
+fn make_spec(engine: &str, placement: &str) -> ServeSpec {
+    let args: Vec<String> = [
+        "serve-gen",
+        "--scenario",
+        "chat",
+        "--seed",
+        "1",
+        "--sessions",
+        "6",
+        "--batch",
+        "4",
+        "--model",
+        "Transformer-base",
+        "--stacks",
+        "2",
+        "--route",
+        "rr",
+        "--engine",
+        engine,
+        "--placement",
+        placement,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    ServeSpec::from_args(&args).expect("valid spec args")
+}
+
+/// The same campaign through the in-process one-shot cluster driver.
+fn library_hash(engine: EngineStrategy, placement: Placement) -> String {
+    let mut sc = Scenario::by_name("chat").expect("chat scenario").with_sessions(6);
+    sc.model = ModelZoo::by_name("Transformer-base").expect("model");
+    let trace = sc.generate(1);
+    let cfg = ArtemisConfig::default();
+    let cl = ClusterConfig::new(2, placement).with_engine(engine);
+    let sched = SchedulerConfig { max_batch: 4, policy: Policy::Fifo };
+    let r = run_cluster(&cfg, &sc.model, &trace, &cl, &sched, RoutePolicy::RoundRobin, true);
+    format!("{:#018x}", r.state_hash())
+}
+
+#[test]
+fn snapshot_kill_restore_lands_on_the_uninterrupted_state_hash() {
+    for (engine, placement) in [("tick", "dp"), ("tick", "pp"), ("event", "dp"), ("event", "pp")] {
+        let spec = make_spec(engine, placement);
+        let daemon_a = Daemon::start();
+        let mut ca = daemon_a.connect();
+
+        // Uninterrupted reference run through the daemon.
+        let submit = Json::obj(vec![("cmd", Json::Str("submit".into())), ("spec", spec.to_json())]);
+        let r = ca.ok(&submit);
+        let ref_job = num_field(&r, "job");
+        let done = wait_state(&mut ca, ref_job, "done");
+        let ref_hash = hash_field(&done);
+        let total_units = num_field(&done, "units");
+        assert!(total_units > 0, "campaign took no steps: {}", done.compact());
+
+        // Same spec again, parked two thirds of the way in.
+        let pause = (total_units * 2 / 3).max(1);
+        let submit_paused = Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("spec", spec.to_json()),
+            ("pause_after", Json::Num(pause as f64)),
+        ]);
+        let r = ca.ok(&submit_paused);
+        let paused_job = num_field(&r, "job");
+        wait_state(&mut ca, paused_job, "paused");
+        if (engine, placement) == ("tick", "dp") {
+            // Untraced jobs answer trace-window with one null per
+            // replica — the command works, there is just no telemetry.
+            let tw = Json::obj(vec![
+                ("cmd", Json::Str("trace-window".into())),
+                ("job", Json::Num(paused_job as f64)),
+            ]);
+            let w = ca.ok(&tw);
+            let windows = w.get("windows").and_then(|v| v.as_arr()).expect("windows array");
+            assert_eq!(windows.len(), 2, "one entry per stack: {}", w.compact());
+        }
+        let snap_req = Json::obj(vec![
+            ("cmd", Json::Str("snapshot".into())),
+            ("job", Json::Num(paused_job as f64)),
+        ]);
+        let snap = ca.ok(&snap_req).get("snapshot").expect("snapshot body").clone();
+
+        // Hard-kill the daemon mid-campaign: the snapshot document is
+        // all that survives.
+        drop(ca);
+        drop(daemon_a);
+
+        // Fresh daemon: restore and run to completion.
+        let daemon_b = Daemon::start();
+        let mut cb = daemon_b.connect();
+        let restore = Json::obj(vec![("cmd", Json::Str("restore".into())), ("snapshot", snap)]);
+        let r = cb.ok(&restore);
+        let restored_job = num_field(&r, "job");
+        let done = wait_state(&mut cb, restored_job, "done");
+        let restored_hash = hash_field(&done);
+        assert_eq!(
+            num_field(&done, "units"),
+            total_units,
+            "restored run took a different step count ({engine}/{placement})"
+        );
+        cb.ok(&Json::obj(vec![("cmd", Json::Str("shutdown".into()))]));
+        drop(cb);
+        drop(daemon_b);
+
+        let lib = library_hash(
+            EngineStrategy::parse_cli(engine).expect("engine"),
+            Placement::parse_cli(placement).expect("placement"),
+        );
+        assert_eq!(
+            ref_hash,
+            restored_hash,
+            "snapshot/kill/restore diverged from the uninterrupted run ({engine}/{placement})"
+        );
+        assert_eq!(
+            ref_hash,
+            lib,
+            "daemon run diverged from the in-process driver ({engine}/{placement})"
+        );
+    }
+}
+
+#[test]
+fn daemon_rejects_malformed_requests_and_keeps_serving() {
+    let daemon = Daemon::start();
+    let mut c = daemon.connect();
+
+    let r = c.raw("this is not json");
+    assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(false), "{}", r.compact());
+
+    let r = c.req(&Json::obj(vec![("cmd", Json::Str("status".into())), ("job", Json::Num(9.0))]));
+    assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(false), "{}", r.compact());
+    let err = r.get("error").and_then(|v| v.as_str()).expect("error field").to_string();
+    assert!(err.contains("unknown job"), "{err}");
+
+    let bad_snap = Json::obj(vec![
+        ("cmd", Json::Str("restore".into())),
+        ("snapshot", Json::obj(vec![("kind", Json::Str("nope".into()))])),
+    ]);
+    let r = c.req(&bad_snap);
+    let err = r.get("error").and_then(|v| v.as_str()).expect("error field").to_string();
+    assert!(err.contains("not a serve snapshot"), "{err}");
+
+    // A bad spec value rejects with the canonical CLI error string.
+    let bad_spec = Json::obj(vec![
+        ("cmd", Json::Str("submit".into())),
+        ("spec", Json::obj(vec![("policy", Json::Str("sideways".into()))])),
+    ]);
+    let r = c.req(&bad_spec);
+    let err = r.get("error").and_then(|v| v.as_str()).expect("error field").to_string();
+    assert!(err.contains("unknown policy 'sideways' (fifo|spf)"), "{err}");
+
+    let r = c.req(&Json::obj(vec![("cmd", Json::Str("explode".into()))]));
+    let err = r.get("error").and_then(|v| v.as_str()).expect("error field").to_string();
+    assert!(err.contains("unknown command"), "{err}");
+
+    // The connection survived every error: a real command still works.
+    c.ok(&Json::obj(vec![("cmd", Json::Str("shutdown".into()))]));
+}

@@ -1,0 +1,143 @@
+//! Property tests for the serializable [`ServeSpec`] request API: a
+//! randomized valid `serve-gen` flag vector must parse into a spec
+//! that survives the JSON round-trip bit-exactly (args → spec → JSON →
+//! spec identity), and layering the same flags over the parsed spec
+//! must be idempotent.
+
+use artemis::serve::ServeSpec;
+use artemis::util::json::Json;
+use artemis::util::prop::{check, Gen};
+
+const SCENARIOS: [&str; 4] = ["chat", "summarize", "burst", "long_itl"];
+const MODELS: [&str; 5] = ["Transformer-base", "BERT-base", "ALBERT-base", "ViT-base", "OPT-350"];
+const POLICIES: [&str; 2] = ["fifo", "spf"];
+const ENGINES: [&str; 2] = ["tick", "event"];
+const QOS: [&str; 4] = ["gold", "silver", "bronze", "mix"];
+const PLACEMENTS: [&str; 2] = ["dp", "pp"];
+const ROUTES: [&str; 3] = ["rr", "ll", "kv"];
+const SLOS: [&str; 3] = ["default", "gold:ttft=100ms,itl=10ms", "gold:ttft=50ms;bronze:ttft=2s"];
+const WINDOWS: [&str; 3] = ["50", "100", "250.5"];
+
+/// One random valid flag vector: every flag independently present or
+/// absent, every value drawn from its legal domain.
+fn gen_args(g: &mut Gen) -> Vec<String> {
+    let mut args: Vec<String> = vec!["serve-gen".into()];
+    let flag = |args: &mut Vec<String>, name: &str, value: String| {
+        args.push(name.into());
+        args.push(value);
+    };
+    if g.bool() {
+        flag(&mut args, "--scenario", SCENARIOS[g.usize_in(0, 3)].into());
+    }
+    if g.bool() {
+        // Full-width seeds: the decimal-string JSON path must carry
+        // values the f64 number path would round.
+        flag(&mut args, "--seed", g.u64_below(u64::MAX).to_string());
+    }
+    if g.bool() {
+        flag(&mut args, "--sessions", g.usize_in(0, 40).to_string());
+    }
+    if g.bool() {
+        flag(&mut args, "--model", MODELS[g.usize_in(0, 4)].into());
+    }
+    if g.bool() {
+        flag(&mut args, "--batch", g.usize_in(1, 16).to_string());
+    }
+    if g.bool() {
+        flag(&mut args, "--policy", POLICIES[g.usize_in(0, 1)].into());
+    }
+    if g.bool() {
+        flag(&mut args, "--engine", ENGINES[g.usize_in(0, 1)].into());
+    }
+    if g.bool() {
+        flag(&mut args, "--qos", QOS[g.usize_in(0, 3)].into());
+    }
+    if g.bool() {
+        flag(&mut args, "--trace", format!("trace-{}.jsonl", g.u64_below(1000)));
+        if g.bool() {
+            flag(&mut args, "--slo", SLOS[g.usize_in(0, 2)].into());
+        }
+        if g.bool() {
+            flag(&mut args, "--trace-window", WINDOWS[g.usize_in(0, 2)].into());
+        }
+    }
+    if g.bool() {
+        // Cluster section: any one of these flags switches it on.
+        if g.bool() {
+            flag(&mut args, "--stacks", (g.u64_below(6) + 1).to_string());
+        }
+        if g.bool() {
+            flag(&mut args, "--placement", PLACEMENTS[g.usize_in(0, 1)].into());
+        }
+        if g.bool() {
+            flag(&mut args, "--route", ROUTES[g.usize_in(0, 2)].into());
+        }
+        if g.bool() {
+            flag(&mut args, "--threads", g.usize_in(0, 8).to_string());
+        }
+        if g.bool() {
+            args.push("--no-cost-cache".into());
+        }
+    }
+    args
+}
+
+#[test]
+fn random_flag_vectors_round_trip_through_json_bit_exactly() {
+    check(200, 0x5EC5, |g| {
+        let args = gen_args(g);
+        let spec = ServeSpec::from_args(&args)
+            .unwrap_or_else(|e| panic!("valid args rejected ({e}): {args:?}"));
+        let j = spec.to_json();
+        let spec2 = ServeSpec::from_json(&j)
+            .unwrap_or_else(|e| panic!("own JSON rejected ({e}): {}", j.compact()));
+        assert_eq!(spec, spec2, "spec drifted through Json values: {}", j.compact());
+        // Through the text form too: parse(compact) is the wire path
+        // the daemon and `--spec FILE` use.
+        let parsed = Json::parse(&j.compact()).expect("spec JSON must parse");
+        let spec3 = ServeSpec::from_json(&parsed).expect("parsed spec JSON must convert");
+        assert_eq!(spec, spec3, "spec drifted through the text round-trip");
+        assert_eq!(
+            j.compact(),
+            spec3.to_json().compact(),
+            "serialized form must be a fixed point"
+        );
+    });
+}
+
+#[test]
+fn relayering_the_same_flags_is_idempotent() {
+    check(200, 0xA11A, |g| {
+        let args = gen_args(g);
+        let spec = ServeSpec::from_args(&args).expect("valid args");
+        // Same flags over the spec they produced: nothing moves.
+        let again = ServeSpec::from_args_over(spec.clone(), &args).expect("relayer");
+        assert_eq!(spec, again, "relayering the same flags moved a field: {args:?}");
+        // No flags at all (the daemon's validate() path): nothing moves.
+        let validated = ServeSpec::from_args_over(spec.clone(), &[]).expect("validate");
+        assert_eq!(spec, validated, "validation moved a field: {args:?}");
+    });
+}
+
+#[test]
+fn specs_validate_and_resolve_consistently() {
+    check(100, 0xBEEF, |g| {
+        let args = gen_args(g);
+        let spec = ServeSpec::from_args(&args).expect("valid args");
+        spec.validate().expect("parsed specs must validate");
+        let resolved = spec.resolve().expect("parsed specs must resolve");
+        assert!(resolved.batch >= 1, "resolved batch must be positive");
+        // The resolved scenario honours the overrides carried in the
+        // spec (sessions is the one numeric override loadgen echoes).
+        if let Some(n) = spec.sessions {
+            assert_eq!(resolved.scenario.sessions, n, "sessions override lost");
+        }
+        if let Some(model) = &spec.model {
+            assert!(
+                resolved.scenario.model.name.eq_ignore_ascii_case(model),
+                "model override lost: {} vs {model}",
+                resolved.scenario.model.name
+            );
+        }
+    });
+}
