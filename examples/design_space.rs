@@ -1,67 +1,62 @@
-//! Design-space exploration: the ablations DESIGN.md calls out.
+//! Design-space exploration through the `search` autotuner.
 //!
-//! * MOMCAP capacitance sweep (Fig. 7's design decision: why 8 pF)
-//! * MOMCAP window depth vs end-to-end latency (conversion amortization)
-//! * sign-split ablation (Section III.C.1 dual pass)
-//! * power budget sweep (the 60 W throttle's effect)
+//! Builds a serving design grid — stochastic stream length × analog noise
+//! sigma × stack count × placement — and asks `artemis::search` for the
+//! exact Pareto front over accuracy × tokens/s × mJ/token, twice:
+//!
+//! * exhaustively (every grid point evaluated), and
+//! * with successive halving (small session budgets prune the grid
+//!   before the full-fidelity rung runs).
+//!
+//! The same sweep is available from the CLI (`artemis design-search`) and
+//! as a daemon job kind; this example drives the library API directly and
+//! runs entirely in memory (no shard files, no resume).
 //!
 //! Run with: `cargo run --release --example design_space`
 
-use artemis::analog::momcap_staircase;
-use artemis::config::{ArtemisConfig, ModelZoo};
-use artemis::sim::{simulate, SimOptions};
-use artemis::xfmr::build_workload;
+use artemis::config::Placement;
+use artemis::report::search_front_table;
+use artemis::search::{run_search, AxisSpec, RunOptions, SamplerKind, SearchSpec};
+use artemis::serve::{QosAssignment, ServeSpec};
 
-fn main() {
-    let model = ModelZoo::bert_base();
-    let workload = build_workload(&model);
+fn main() -> anyhow::Result<()> {
+    // One serving scenario (chat, Transformer-base, 4 sessions) swept over
+    // the fidelity/topology axes that trade accuracy against speed and
+    // energy. Everything not on an axis rides in the base ServeSpec.
+    let d = SearchSpec::default();
+    let spec = SearchSpec {
+        base: ServeSpec { sessions: Some(4), ..d.base.clone() },
+        axes: AxisSpec {
+            stream_lens: vec![32, 64, 128],
+            sigmas: vec![0.0, 1.0],
+            stacks: vec![1, 2],
+            placements: vec![Placement::DataParallel, Placement::PipelineParallel],
+            hops_ns: vec![40.0],
+            qos: vec![QosAssignment::parse("mix").expect("qos")],
+        },
+        ..d
+    };
 
-    println!("== MOMCAP capacitance: accumulation window vs area ==");
-    println!("{:>6} {:>14} {:>20}", "pF", "linear steps", "fits 338um^2 tile?");
-    for c in [2.0, 4.0, 8.0, 16.0, 24.0, 32.0, 40.0] {
-        let s = momcap_staircase(c, 150);
-        // M4-M7 MOM density ~2 fF/um^2 x 4 layers => ~8 pF in a tile.
-        let fits = c <= 8.0;
-        println!(
-            "{c:>6.0} {:>14} {:>20}",
-            s.max_linear_accumulations,
-            if fits { "yes" } else { "no (bigger tile)" }
-        );
-    }
+    println!("== exhaustive grid: {} candidates ==", spec.grid_size());
+    let full = run_search(&spec, &RunOptions::default(), &mut |e| {
+        let (n, of) = (e.shard + 1, e.shards);
+        println!("  shard {n}/{of} {} ({} candidates)", e.outcome, e.candidates);
+    })?;
+    println!();
+    search_front_table(&full.front).print();
+    println!("front-hash {:#018x}", full.front_hash);
 
-    println!("\n== MOMCAP window depth vs BERT-base latency ==");
-    println!("{:>8} {:>12} {:>12}", "window", "latency(ms)", "energy(mJ)");
-    for acc in [5u32, 10, 20, 40, 80] {
-        let mut cfg = ArtemisConfig::default();
-        cfg.momcap.max_accumulations = acc;
-        let r = simulate(&cfg, &workload, SimOptions::artemis());
-        println!("{acc:>8} {:>12.3} {:>12.1}", r.latency_ms(), r.total_energy_mj());
-    }
-
-    println!("\n== Sign-split dual pass ablation ==");
-    for split in [true, false] {
-        let mut cfg = ArtemisConfig::default();
-        cfg.sign_split_passes = split;
-        let r = simulate(&cfg, &workload, SimOptions::artemis());
-        println!(
-            "  sign_split={:5}  latency {:.3} ms  energy {:.1} mJ",
-            split,
-            r.latency_ms(),
-            r.total_energy_mj()
-        );
-    }
-
-    println!("\n== Power budget sweep (the 60 W throttle) ==");
-    println!("{:>8} {:>12} {:>12} {:>12}", "watts", "latency(ms)", "GOPS", "GOPS/W");
-    for budget in [30.0, 60.0, 120.0, 240.0, 480.0] {
-        let mut cfg = ArtemisConfig::default();
-        cfg.power_budget_w = budget;
-        let r = simulate(&cfg, &workload, SimOptions::artemis());
-        println!(
-            "{budget:>8.0} {:>12.3} {:>12.0} {:>12.1}",
-            r.latency_ms(),
-            r.gops(),
-            r.gops_per_w()
-        );
-    }
+    // Successive halving re-runs the same grid but spends small session
+    // budgets on early rungs, keeping only the non-dominated half each
+    // time; only survivors pay the full-fidelity evaluation.
+    let halving = SearchSpec { sampler: SamplerKind::Halving { rungs: 2 }, ..spec.clone() };
+    let sh = run_search(&halving, &RunOptions::default(), &mut |_| {})?;
+    println!("\n== successive halving ({}) ==", halving.sampler);
+    search_front_table(&sh.front).print();
+    println!(
+        "halving kept {} of {} grid points for the full-fidelity rung",
+        sh.candidates_total,
+        spec.grid_size()
+    );
+    Ok(())
 }

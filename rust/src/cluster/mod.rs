@@ -44,6 +44,7 @@ use crate::serve::{
 };
 use crate::sim::{CacheStats, CostCache, SimOptions, StackCoster, StateHash};
 use crate::telemetry::{build_trace, Trace, TraceConfig, TraceMeta};
+use std::sync::Arc;
 
 /// Outcome of one cluster run: per-stack reports plus the exact
 /// aggregate (merged histograms, summed tokens/energy, max makespan).
@@ -112,7 +113,27 @@ pub fn run_cluster(
     route: RoutePolicy,
     cached: bool,
 ) -> ClusterReport {
-    run_cluster_inner(cfg, model, trace, cluster, sched, route, cached, None).0
+    let cache = cached.then(CostCache::shared);
+    run_cluster_inner(cfg, model, trace, cluster, sched, route, cache, cached, None).0
+}
+
+/// [`run_cluster`] against a caller-owned shared cost cache: the
+/// design-search runner threads one cache through every candidate of a
+/// sweep that shares a coster shape, so structurally identical tick
+/// costs are simulated once per sweep instead of once per candidate.
+/// Sound because the memoized layer sits below the fidelity overrides
+/// (`cfg.fidelity` never reaches the coster) — and bit-identical to a
+/// private cache, which is what `tests/search_properties.rs` pins.
+pub fn run_cluster_with_cache(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    trace: &[SessionSpec],
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cache: Arc<CostCache>,
+) -> ClusterReport {
+    run_cluster_inner(cfg, model, trace, cluster, sched, route, Some(cache), true, None).0
 }
 
 /// [`run_cluster`] with telemetry enabled on every replica: also
@@ -133,8 +154,10 @@ pub fn run_cluster_traced(
     tc: &TraceConfig,
     meta: &TraceMeta,
 ) -> (ClusterReport, Trace) {
+    let cache = cached.then(CostCache::shared);
+    let tracing = Some((tc, meta));
     let (report, doc) =
-        run_cluster_inner(cfg, model, trace, cluster, sched, route, cached, Some((tc, meta)));
+        run_cluster_inner(cfg, model, trace, cluster, sched, route, cache, cached, tracing);
     (report, doc.expect("telemetry was enabled"))
 }
 
@@ -152,8 +175,19 @@ pub(crate) fn build_replicas<'a>(
     sched: &SchedulerConfig,
     cached: bool,
 ) -> Vec<ReplicaSim<'a>> {
+    build_replicas_with(cfg, model, cluster, sched, cached.then(CostCache::shared))
+}
+
+/// [`build_replicas`] with an explicit (possibly caller-shared) cost
+/// cache instead of a fresh per-run one; `None` runs uncached.
+pub(crate) fn build_replicas_with<'a>(
+    cfg: &'a ArtemisConfig,
+    model: &'a TransformerModel,
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    cache: Option<Arc<CostCache>>,
+) -> Vec<ReplicaSim<'a>> {
     let opts = SimOptions::artemis();
-    let cache = cached.then(CostCache::shared);
     let layers = model.layers as u64;
 
     let fidelity = crate::fidelity::ServeFidelity::for_model(&cfg.fidelity, model);
@@ -209,11 +243,12 @@ fn run_cluster_inner(
     cluster: &ClusterConfig,
     sched: &SchedulerConfig,
     route: RoutePolicy,
+    cache: Option<Arc<CostCache>>,
     cached: bool,
     tracing: Option<(&TraceConfig, &TraceMeta)>,
 ) -> (ClusterReport, Option<Trace>) {
     assert!(cluster.stacks > 0, "cluster needs at least one stack");
-    let mut replicas = build_replicas(cfg, model, cluster, sched, cached);
+    let mut replicas = build_replicas_with(cfg, model, cluster, sched, cache);
     if let Some((tc, _)) = tracing {
         for r in replicas.iter_mut() {
             r.enable_telemetry(tc);
@@ -474,6 +509,27 @@ mod tests {
         // The cache actually worked (and the uncached run never looked).
         assert!(hot.cache.hit_rate() > 0.8, "hit rate {}", hot.cache.hit_rate());
         assert_eq!(cold.cache, CacheStats::default());
+    }
+
+    #[test]
+    fn caller_shared_cache_is_bit_identical_and_warm() {
+        // The design-search runner reuses one cache across candidates;
+        // a pre-warmed shared cache must not move a reported bit, and
+        // the second run over the same shape must hit almost always.
+        let (cfg, model, trace) = fast_trace(10);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let private =
+            run_cluster(&cfg, &model, &trace, &cl, &sched(4), RoutePolicy::RoundRobin, true);
+        let cache = CostCache::shared();
+        let first = run_cluster_with_cache(
+            &cfg, &model, &trace, &cl, &sched(4), RoutePolicy::RoundRobin, cache.clone(),
+        );
+        let warm = run_cluster_with_cache(
+            &cfg, &model, &trace, &cl, &sched(4), RoutePolicy::RoundRobin, cache,
+        );
+        assert_eq!(private.state_hash(), first.state_hash());
+        assert_eq!(first.state_hash(), warm.state_hash());
+        assert!(warm.cache.hit_rate() > first.cache.hit_rate(), "warm reuse must raise hits");
     }
 
     #[test]

@@ -162,6 +162,13 @@ impl ClusterConfig {
         self
     }
 
+    /// Same shape with explicit stack-to-stack link parameters (the
+    /// design-search link axes override the defaults through here).
+    pub fn with_link(mut self, link: StackLinkParams) -> Self {
+        self.link = link;
+        self
+    }
+
     /// Short label, e.g. `dp x4`.
     pub fn label(&self) -> String {
         format!("{} x{}", self.placement, self.stacks)
@@ -209,6 +216,16 @@ mod tests {
         let c = ClusterConfig::new(4, Placement::DataParallel).with_threads(2);
         assert_eq!(c.threads, 2);
         assert_eq!(c.stacks, 4, "with_threads must not touch the shape");
+    }
+
+    #[test]
+    fn with_link_overrides_only_the_link() {
+        let link = StackLinkParams { hop_ns: 80.0, width_bits: 256, ..Default::default() };
+        let c = ClusterConfig::new(4, Placement::PipelineParallel).with_link(link);
+        assert_eq!(c.link.hop_ns, 80.0);
+        assert_eq!(c.link.width_bits, 256);
+        assert_eq!(c.stacks, 4, "with_link must not touch the shape");
+        assert_eq!(c.link.beat_ns, StackLinkParams::default().beat_ns);
     }
 
     #[test]

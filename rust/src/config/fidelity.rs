@@ -19,11 +19,19 @@ pub struct FidelityParams {
     /// Fraction of a tick's *energy* that scales with stream length
     /// (activation + MOMCAP + conversion share of tick energy).
     pub beta_energy: f64,
+    /// Gold-tier uniform SC stream length, bits.  The design-search
+    /// stream-length axis: at the default 128 the gold tier is the
+    /// paper's reference point and serving is bit-identical to the
+    /// pre-override scheduler.
+    pub gold_stream_len: u32,
+    /// Gold-tier per-step analog charge noise, bit-line units (0.0 =
+    /// the noise-free reference point).
+    pub gold_sigma: f64,
 }
 
 impl Default for FidelityParams {
     fn default() -> Self {
-        Self { alpha_time: 0.8, beta_energy: 0.85 }
+        Self { alpha_time: 0.8, beta_energy: 0.85, gold_stream_len: 128, gold_sigma: 0.0 }
     }
 }
 
@@ -47,6 +55,13 @@ mod tests {
         assert_eq!(p.time_factor(128.0).to_bits(), 1.0f64.to_bits());
         let ef = crate::energy::sc_stream_energy_factor(&p, 128.0);
         assert_eq!(ef.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn gold_override_defaults_to_the_reference_point() {
+        let p = FidelityParams::default();
+        assert_eq!(p.gold_stream_len, 128, "default gold tier is the 128-bit reference");
+        assert_eq!(p.gold_sigma.to_bits(), 0.0f64.to_bits(), "default gold tier is noise-free");
     }
 
     #[test]

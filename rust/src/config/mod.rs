@@ -118,6 +118,12 @@ impl ArtemisConfig {
             if let Some(v) = f.get("beta_energy").and_then(|v| v.as_f64()) {
                 c.fidelity.beta_energy = v;
             }
+            if let Some(v) = f.get("gold_stream_len").and_then(|v| v.as_u64()) {
+                c.fidelity.gold_stream_len = v as u32;
+            }
+            if let Some(v) = f.get("gold_sigma").and_then(|v| v.as_f64()) {
+                c.fidelity.gold_sigma = v;
+            }
         }
         if let Some(v) = j.get("sign_split_passes").and_then(|v| v.as_bool()) {
             c.sign_split_passes = v;
@@ -155,6 +161,8 @@ impl ArtemisConfig {
                 Json::obj(vec![
                     ("alpha_time", Json::Num(self.fidelity.alpha_time)),
                     ("beta_energy", Json::Num(self.fidelity.beta_energy)),
+                    ("gold_stream_len", Json::Num(self.fidelity.gold_stream_len as f64)),
+                    ("gold_sigma", Json::Num(self.fidelity.gold_sigma)),
                 ]),
             ),
         ])
@@ -186,6 +194,20 @@ mod tests {
         let c2 = ArtemisConfig::from_json(&j).unwrap();
         assert_eq!(c2.hbm.banks_total(), c.hbm.banks_total());
         assert_eq!(c2.power_budget_w, c.power_budget_w);
+        assert_eq!(c2.fidelity, c.fidelity);
+    }
+
+    #[test]
+    fn fidelity_gold_override_survives_the_json_path() {
+        // Daemon snapshots embed the resolved config as JSON; a
+        // restored design-search candidate must keep its gold-tier
+        // operating point bit-exactly.
+        let mut c = ArtemisConfig::default();
+        c.fidelity.gold_stream_len = 32;
+        c.fidelity.gold_sigma = 1.5;
+        let c2 = ArtemisConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.fidelity.gold_stream_len, 32);
+        assert_eq!(c2.fidelity.gold_sigma.to_bits(), 1.5f64.to_bits());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | `{"cmd":"restore","snapshot":{...},"pause_after":N?}` | `{"ok":true,"job":J}` |
 //! | `{"cmd":"resume","job":J}` | `{"ok":true}` |
 //! | `{"cmd":"trace-window","job":J}` | `{"ok":true,"windows":[...]}` |
+//! | `{"cmd":"design-search","search":{...},"out"?,...}` | `{"ok":true,"job":J}` |
 //! | `{"cmd":"reload-config","path":P?}` | `{"ok":true}` |
 //! | `{"cmd":"shutdown"}` | `{"ok":true}` then the process exits |
 //!
@@ -21,6 +22,16 @@
 //! usable.  `submit` bodies are [`ServeSpec`] JSON — the same
 //! serializable request `serve-gen --spec FILE` consumes, so a CLI
 //! invocation and a daemon submission are interchangeable.
+//! `design-search` bodies are [`SearchSpec`] JSON (the `artemis
+//! design-search --search` schema); the job's `units`/`arrivals`
+//! report settled shards and its completion hash is the front hash.
+//!
+//! Worker panics never take the daemon down: each worker runs under
+//! `catch_unwind`, a panicking job lands in state `failed` with the
+//! panic payload in `error`, and the job table recovers from mutex
+//! poisoning — `submit`/`status`/`shutdown` keep working afterwards
+//! (`tests/daemon_integration.rs` pins this with a deliberately
+//! panicking job).
 //!
 //! Each job runs on its own worker thread driving an incremental
 //! [`Campaign`]: between bounded steps the worker drains control
@@ -40,17 +51,19 @@
 //! prints `job J: state-hash 0x...` (and, when the spec traces, the
 //! `trace: wrote ...` + `slo-verdict ...` lines) to stdout.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cluster::Campaign;
 use crate::config::ArtemisConfig;
+use crate::search::{run_search, RunOptions, SearchSpec, ShardOutcome};
 use crate::serve::{meta_for, ServeSpec};
 use crate::telemetry::{FileSink, Trace, SCHEMA_VERSION};
 use crate::util::json::{parse_u64_str, u64_str, Json};
@@ -93,11 +106,19 @@ struct JobStatus {
 
 type Jobs = Arc<Mutex<HashMap<u64, JobStatus>>>;
 
+/// Lock the job table, recovering from poisoning.  A worker that
+/// panics while holding this lock (mid-`update_status`) poisons it,
+/// but every record is plain data — there is no invariant a partial
+/// update can break — so the daemon claims the guard and keeps
+/// serving rather than dying with the job that panicked.
+fn lock_jobs(jobs: &Jobs) -> MutexGuard<'_, HashMap<u64, JobStatus>> {
+    jobs.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 fn update_status(jobs: &Jobs, job: u64, f: impl FnOnce(&mut JobStatus)) {
-    if let Ok(mut m) = jobs.lock() {
-        if let Some(s) = m.get_mut(&job) {
-            f(s);
-        }
+    let mut m = lock_jobs(jobs);
+    if let Some(s) = m.get_mut(&job) {
+        f(s);
     }
 }
 
@@ -111,10 +132,31 @@ fn err_obj(msg: String) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
 }
 
+/// Map a finished (or crashed) worker's outcome to the job state.
+/// Panics are already caught by the caller's `catch_unwind`; the
+/// payload lands in `error` so `status` can report what blew up.
+fn job_state_for(outcome: std::thread::Result<Result<u64, String>>) -> JobState {
+    match outcome {
+        Ok(Ok(hash)) => JobState::Done { hash },
+        Ok(Err(error)) => JobState::Failed { error },
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string payload>");
+            JobState::Failed { error: format!("job panicked: {msg}") }
+        }
+    }
+}
+
 /// The daemon's main-thread state: job registry + command handles.
 struct Daemon {
     jobs: Jobs,
     handles: HashMap<u64, mpsc::Sender<Cmd>>,
+    /// Jobs running a design search: status-only (no snapshot /
+    /// trace-window / resume), so those commands answer clearly.
+    search_jobs: HashSet<u64>,
     next_job: u64,
     /// Default `--config` path applied to submits that carry none
     /// (`reload-config` swaps it for future submissions).
@@ -126,6 +168,7 @@ impl Daemon {
         Self {
             jobs: Arc::new(Mutex::new(HashMap::new())),
             handles: HashMap::new(),
+            search_jobs: HashSet::new(),
             next_job: 0,
             default_config: None,
         }
@@ -136,26 +179,50 @@ impl Daemon {
         spec: ServeSpec,
         restore: Option<Json>,
         pause_after: Option<u64>,
+        inject_panic: Option<u64>,
     ) -> u64 {
         let job = self.next_job;
         self.next_job += 1;
         let (tx, rx) = mpsc::channel();
         self.handles.insert(job, tx);
-        self.jobs.lock().expect("jobs lock").insert(
-            job,
-            JobStatus { state: JobState::Running, units: 0, arrivals: (0, 0) },
-        );
+        lock_jobs(&self.jobs)
+            .insert(job, JobStatus { state: JobState::Running, units: 0, arrivals: (0, 0) });
         let jobs = Arc::clone(&self.jobs);
         std::thread::spawn(move || {
-            let outcome = run_job(job, &spec, restore, pause_after, &jobs, &rx);
-            update_status(&jobs, job, |s| {
-                s.state = match outcome {
-                    Ok(hash) => JobState::Done { hash },
-                    Err(error) => JobState::Failed { error },
-                };
-            });
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                run_job(job, &spec, restore, pause_after, inject_panic, &jobs, &rx)
+            }));
+            let state = job_state_for(outcome);
+            update_status(&jobs, job, |s| s.state = state);
         });
         job
+    }
+
+    fn spawn_search_job(&mut self, spec: SearchSpec, opts: RunOptions) -> u64 {
+        let job = self.next_job;
+        self.next_job += 1;
+        self.search_jobs.insert(job);
+        lock_jobs(&self.jobs)
+            .insert(job, JobStatus { state: JobState::Running, units: 0, arrivals: (0, 0) });
+        let jobs = Arc::clone(&self.jobs);
+        std::thread::spawn(move || {
+            let outcome =
+                catch_unwind(AssertUnwindSafe(|| run_search_job(job, &spec, &opts, &jobs)));
+            let state = job_state_for(outcome);
+            update_status(&jobs, job, |s| s.state = state);
+        });
+        job
+    }
+
+    /// Commands a design-search job cannot answer get a clear error
+    /// instead of a control-channel timeout.
+    fn reject_search_job(&self, req: &Json) -> Result<(), String> {
+        if let Some(job) = req.get("job").and_then(parse_u64_str) {
+            if self.search_jobs.contains(&job) {
+                return Err(format!("job {job} is a design-search job (status only)"));
+            }
+        }
+        Ok(())
     }
 
     fn job_handle(&self, req: &Json) -> Result<(u64, &mpsc::Sender<Cmd>), String> {
@@ -199,7 +266,29 @@ impl Daemon {
                         spec.config = self.default_config.clone();
                     }
                     spec.validate().map_err(|e| e.to_string())?;
-                    let job = self.spawn_job(spec, None, pause_after);
+                    // `inject_panic` is a test-only hook: detonate the
+                    // worker inside the status critical section after
+                    // that many units (the lock-poisoning regression).
+                    let inject_panic = req.get("inject_panic").and_then(parse_u64_str);
+                    let job = self.spawn_job(spec, None, pause_after, inject_panic);
+                    Ok(ok_obj(vec![("job", Json::Num(job as f64))]))
+                }),
+            "design-search" => req
+                .get("search")
+                .ok_or_else(|| "design-search needs a 'search' object".to_string())
+                .and_then(|sj| SearchSpec::from_json(sj).map_err(|e| e.to_string()))
+                .and_then(|spec| {
+                    spec.validate().map_err(|e| e.to_string())?;
+                    let opts = RunOptions {
+                        out: req
+                            .get("out")
+                            .and_then(|v| v.as_str())
+                            .map(std::path::PathBuf::from),
+                        threads: req.get("threads").and_then(|v| v.as_u64()).unwrap_or(0)
+                            as usize,
+                        max_shards: req.get("max_shards").and_then(parse_u64_str),
+                    };
+                    let job = self.spawn_search_job(spec, opts);
                     Ok(ok_obj(vec![("job", Json::Num(job as f64))]))
                 }),
             "restore" => req
@@ -210,19 +299,22 @@ impl Daemon {
                     let sj = snap.get("spec").ok_or("snapshot missing 'spec'")?;
                     let spec = ServeSpec::from_json(sj).map_err(|e| e.to_string())?;
                     spec.validate().map_err(|e| e.to_string())?;
-                    let job = self.spawn_job(spec, Some(snap.clone()), pause_after);
+                    let job = self.spawn_job(spec, Some(snap.clone()), pause_after, None);
                     Ok(ok_obj(vec![("job", Json::Num(job as f64))]))
                 }),
             "status" => self.status(&req),
             "snapshot" => self
-                .job_handle(&req)
+                .reject_search_job(&req)
+                .and_then(|_| self.job_handle(&req))
                 .and_then(|(_, tx)| self.ask(tx, Cmd::Snapshot))
                 .map(|snap| ok_obj(vec![("snapshot", snap)])),
             "trace-window" => self
-                .job_handle(&req)
+                .reject_search_job(&req)
+                .and_then(|_| self.job_handle(&req))
                 .and_then(|(_, tx)| self.ask(tx, Cmd::TraceWindow))
                 .map(|w| ok_obj(vec![("windows", w)])),
-            "resume" => self.job_handle(&req).and_then(|(job, tx)| {
+            "resume" => self.reject_search_job(&req).and_then(|_| {
+                let (job, tx) = self.job_handle(&req)?;
                 tx.send(Cmd::Resume)
                     .map_err(|_| "job is not accepting commands (finished?)".to_string())?;
                 update_status(&self.jobs, job, |s| {
@@ -253,7 +345,7 @@ impl Daemon {
 
     fn status(&self, req: &Json) -> Result<Json, String> {
         let job = req.get("job").and_then(parse_u64_str).ok_or("request needs a 'job' id")?;
-        let m = self.jobs.lock().map_err(|_| "jobs lock poisoned".to_string())?;
+        let m = lock_jobs(&self.jobs);
         let s = m.get(&job).ok_or_else(|| format!("unknown job {job}"))?;
         let state = match s.state {
             JobState::Running => "running",
@@ -300,6 +392,7 @@ fn run_job(
     spec: &ServeSpec,
     restore: Option<Json>,
     pause_after: Option<u64>,
+    inject_panic: Option<u64>,
     jobs: &Jobs,
     rx: &mpsc::Receiver<Cmd>,
 ) -> Result<u64, String> {
@@ -392,6 +485,12 @@ fn run_job(
             break;
         }
         units += 1;
+        // Test hook: detonate *inside* the status critical section, so
+        // the jobs mutex is genuinely poisoned — the regression rig for
+        // the daemon's poison recovery (`lock_jobs`).
+        if inject_panic == Some(units) {
+            update_status(jobs, job, |_| panic!("injected panic at unit {units}"));
+        }
         let progress = campaign.progress();
         update_status(jobs, job, |s| {
             s.units = units;
@@ -411,6 +510,46 @@ fn run_job(
     }
     let _ = std::io::stdout().flush();
     Ok(hash)
+}
+
+/// One design-search job on its own thread: run (or resume) the sweep
+/// and report the front hash as the job's completion hash.  `units`
+/// and `arrivals` track settled shards; an invocation bounded by
+/// `max_shards` that leaves shards unfinished fails with a
+/// resubmit-to-resume hint rather than reporting a partial front.
+fn run_search_job(
+    job: u64,
+    spec: &SearchSpec,
+    opts: &RunOptions,
+    jobs: &Jobs,
+) -> Result<u64, String> {
+    let outcome = run_search(spec, opts, &mut |e| {
+        let settled = e.outcome != ShardOutcome::Skipped;
+        update_status(jobs, job, |s| {
+            if settled {
+                s.units += 1;
+                s.arrivals.0 += 1;
+            }
+            s.arrivals.1 = e.shards as usize;
+        });
+    })
+    .map_err(|e| e.to_string())?;
+    if !outcome.complete {
+        return Err(format!(
+            "design-search incomplete: {} of {} shards done — resubmit with the same 'out' \
+             directory to resume",
+            outcome.shards_reused + outcome.shards_evaluated,
+            outcome.shards_total
+        ));
+    }
+    println!(
+        "job {job}: design-search front-hash {:#018x} ({} candidates, {} front points)",
+        outcome.front_hash,
+        outcome.candidates_total,
+        outcome.front.len()
+    );
+    let _ = std::io::stdout().flush();
+    Ok(outcome.front_hash)
 }
 
 /// Emit a finished job's trace, with the same grep-stable summary and
@@ -560,6 +699,87 @@ mod tests {
         assert_eq!(h1, h2, "restored job diverged from the original");
     }
 
+    #[test]
+    fn panicking_job_fails_cleanly_and_the_daemon_keeps_serving() {
+        // A worker that panics *while holding the jobs lock* poisons the
+        // mutex.  The daemon must recover the guard, park the job in
+        // `failed` with the panic payload, and keep serving new work.
+        let mut d = Daemon::new();
+        let spec = ServeSpec::from_args(
+            &["serve-gen", "--sessions", "4", "--model", "Transformer-base", "--batch", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let submit = Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("spec", spec.to_json()),
+            ("inject_panic", Json::Num(1.0)),
+        ]);
+        let (resp, _) = d.handle(&submit.compact());
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let crashed = resp.get("job").and_then(|v| v.as_u64()).unwrap();
+
+        let status = wait_for_status(&d, crashed, "failed");
+        let error = status.get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(error.contains("panicked"), "unexpected error: {error}");
+
+        // The poisoned lock must not take the daemon down: a fresh
+        // submit runs to completion and status keeps answering.
+        let submit =
+            Json::obj(vec![("cmd", Json::Str("submit".into())), ("spec", spec.to_json())]);
+        let (resp, _) = d.handle(&submit.compact());
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let job = resp.get("job").and_then(|v| v.as_u64()).unwrap();
+        assert_eq!(wait_for_state(&d, job, "done"), "done");
+        assert!(!status_hash(&d, job).is_empty());
+    }
+
+    #[test]
+    fn design_search_job_reports_the_runner_front_hash() {
+        // Submit a tiny in-memory sweep as a daemon job; its completion
+        // hash must be the same front hash a direct run_search produces,
+        // and snapshot/resume must be rejected for search jobs.
+        let d0 = SearchSpec::default();
+        let search = SearchSpec {
+            base: ServeSpec { sessions: Some(3), ..d0.base.clone() },
+            axes: crate::search::AxisSpec {
+                stream_lens: vec![64, 128],
+                sigmas: vec![0.0],
+                stacks: vec![1],
+                placements: vec![crate::config::Placement::DataParallel],
+                hops_ns: vec![40.0],
+                qos: vec![crate::serve::QosAssignment::Uniform(crate::serve::QosTier::Gold)],
+            },
+            shards: 2,
+            ..d0
+        };
+        let mut d = Daemon::new();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("design-search".into())),
+            ("search", search.to_json()),
+        ]);
+        let (resp, _) = d.handle(&req.compact());
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.compact());
+        let job = resp.get("job").and_then(|v| v.as_u64()).unwrap();
+        assert_eq!(wait_for_state(&d, job, "done"), "done");
+
+        let direct = run_search(&search, &RunOptions::default(), &mut |_| {}).unwrap();
+        assert_eq!(status_hash(&d, job), format!("{:#018x}", direct.front_hash));
+
+        // Search jobs carry no control channel: stateful commands bounce.
+        let (resp, _) = d.handle(
+            &Json::obj(vec![
+                ("cmd", Json::Str("snapshot".into())),
+                ("job", Json::Num(job as f64)),
+            ])
+            .compact(),
+        );
+        let err = resp.get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(err.contains("design-search job"), "unexpected error: {err}");
+    }
+
     fn status_req(job: u64) -> String {
         Json::obj(vec![("cmd", Json::Str("status".into())), ("job", Json::Num(job as f64))])
             .compact()
@@ -574,6 +794,19 @@ mod tests {
                     panic!("job {job} failed: {}", resp.compact());
                 }
                 return state;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        panic!("job {job} never reached '{want}'");
+    }
+
+    /// Like `wait_for_state` but returns the full status body and does
+    /// not treat `failed` as fatal — for tests that expect the failure.
+    fn wait_for_status(d: &Daemon, job: u64, want: &str) -> Json {
+        for _ in 0..600 {
+            let resp = d.status(&Json::parse(&status_req(job)).unwrap()).unwrap();
+            if resp.get("state").and_then(|v| v.as_str()) == Some(want) {
+                return resp;
             }
             std::thread::sleep(Duration::from_millis(50));
         }

@@ -195,12 +195,23 @@ impl ServeFidelity {
         let mut energy_factor = [1.0; 3];
         let mut accuracy = [1.0; 3];
         for tier in QosTier::ALL {
-            let policy = tier.policy();
+            // The gold tier's operating point is configurable — the
+            // design-search stream-length × noise axes move it through
+            // `FidelityParams`.  At the (128, 0.0) defaults
+            // `Uniform(128)` *is* `FidelityPolicy::REFERENCE`, so the
+            // factors reconstruct exactly 1.0 and serving stays
+            // bit-identical to the pre-override scheduler.
+            let (policy, sigma) = match tier {
+                QosTier::Gold => {
+                    (FidelityPolicy::Uniform(params.gold_stream_len), params.gold_sigma)
+                }
+                _ => (tier.policy(), tier.sigma_units()),
+            };
             let mean = policy.mac_weighted_mean_len(model);
             let i = tier.idx();
             time_factor[i] = params.time_factor(mean);
             energy_factor[i] = sc_stream_energy_factor(params, mean);
-            accuracy[i] = estimate(model, &policy, tier.sigma_units()).accuracy;
+            accuracy[i] = estimate(model, &policy, sigma).accuracy;
         }
         Self { time_factor, energy_factor, accuracy }
     }
@@ -274,6 +285,36 @@ mod tests {
         let f = ServeFidelity::for_model(&FidelityParams::default(), &ModelZoo::opt_350());
         assert_eq!(f.time(QosTier::Gold).to_bits(), 1.0f64.to_bits());
         assert_eq!(f.energy(QosTier::Gold).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn gold_override_moves_only_the_gold_tier() {
+        let model = ModelZoo::transformer_base();
+        let base = ServeFidelity::for_model(&FidelityParams::default(), &model);
+        let mut p = FidelityParams::default();
+        p.gold_stream_len = 64;
+        p.gold_sigma = 1.0;
+        let tuned = ServeFidelity::for_model(&p, &model);
+        // Gold at (64, sigma 1.0) must match silver's built-in
+        // operating point (Uniform(64), sigma 1.0) bit-for-bit.
+        assert_eq!(
+            tuned.time(QosTier::Gold).to_bits(),
+            base.time(QosTier::Silver).to_bits()
+        );
+        assert_eq!(
+            tuned.energy(QosTier::Gold).to_bits(),
+            base.energy(QosTier::Silver).to_bits()
+        );
+        assert_eq!(
+            tuned.accuracy(QosTier::Gold).to_bits(),
+            base.accuracy(QosTier::Silver).to_bits()
+        );
+        // Silver/bronze are untouched by the gold override.
+        assert_eq!(tuned.time(QosTier::Silver).to_bits(), base.time(QosTier::Silver).to_bits());
+        assert_eq!(
+            tuned.accuracy(QosTier::Bronze).to_bits(),
+            base.accuracy(QosTier::Bronze).to_bits()
+        );
     }
 
     #[test]

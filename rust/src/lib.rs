@@ -39,6 +39,9 @@
 //!   cluster-aware session router.
 //! * [`cluster`]   — multi-stack scale-out: data-parallel replicas or
 //!   pipeline-parallel stack groups over the memoized cost cache.
+//! * [`search`]    — design-space autotuner: grid / seeded-random /
+//!   successive-halving sampling over serving candidates, shard-parallel
+//!   resumable sweeps, exact Pareto-front extraction.
 //! * [`telemetry`] — deterministic JSONL serve traces: session spans,
 //!   windowed snapshots, per-tier SLO tracking, pluggable sinks.
 //! * [`report`]    — table/figure emitters for the paper's evaluation.
@@ -59,6 +62,7 @@ pub mod nsc;
 pub mod report;
 pub mod runtime;
 pub mod sc;
+pub mod search;
 pub mod serve;
 pub mod sim;
 pub mod telemetry;

@@ -12,6 +12,7 @@ use artemis::daemon::run_daemon;
 use artemis::dataflow::{Dataflow, Pipelining};
 use artemis::report;
 use artemis::runtime::ArtifactRegistry;
+use artemis::search::{run_search, RunOptions, SearchSpec};
 use artemis::serve::{
     meta_for, run_continuous_engine, run_continuous_traced, run_static, PhaseProfile, Policy,
     RoutePolicy, Scenario, SchedulerConfig, ServeSpec,
@@ -122,6 +123,30 @@ Other commands:
            Also re-times the long_itl event point with telemetry
            enabled into a null sink and records the overhead ratio
            under a top-level \"telemetry\" field
+  design-search [--stream-lens CSV] [--sigmas CSV] [--stacks CSV]
+           [--placements CSV] [--hops CSV] [--qos CSV]
+           [--sampler grid|random|halving] [--samples N] [--rungs R]
+           [--sampler-seed N] [--shards K] [--out DIR] [--threads N]
+           [--max-shards N] [--search FILE] [--no-cost-cache]
+           [--scenario NAME] [--seed N] [--sessions N] [--model NAME]
+           [--batch B] [--policy fifo|spf] [--engine tick|event]
+           [--route rr|ll|kv] [--bench-out FILE]
+           resumable design-space autotuner: sweeps the cross product
+           of gold-tier SC stream length x analog noise x cluster
+           stacks x placement x link hop latency x QoS mix, serves
+           every candidate through the cluster driver, and prints the
+           exact Pareto front over estimated accuracy x tokens/s x
+           mJ/token (plus a deterministic front-hash digest).
+           --sampler random draws a seeded subset of the grid; halving
+           runs cheap elimination rounds at reduced session budgets
+           before evaluating survivors at full budget.  With --out DIR
+           results persist as sharded JSONL: a killed sweep resumes
+           from its completed shards and converges to the
+           byte-identical front (--max-shards bounds the work of one
+           invocation).  Every record embeds its full ServeSpec and
+           state-hash, so any point replays via serve-gen --spec.
+           --search FILE loads a serialized search JSON; flags layer
+           over it
   config   print the default configuration as JSON
   help     this text
 
@@ -629,6 +654,81 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `design-search`: run (or resume) a design-space sweep and print the
+/// Pareto front.  The serializable [`SearchSpec`] carries everything
+/// that shapes the results; `--out`, `--threads` and `--max-shards`
+/// only steer this invocation.
+fn run_design_search(args: &[String]) -> Result<()> {
+    let spec = SearchSpec::from_args(args)?;
+    let opts = RunOptions {
+        out: flag_value(args, "--out").map(std::path::PathBuf::from),
+        threads: flag_value(args, "--threads").map(|v| v.parse()).transpose()?.unwrap_or(0),
+        max_shards: flag_value(args, "--max-shards").map(|v| v.parse()).transpose()?,
+    };
+    println!(
+        "## design-search — {} sampler over a {}-point grid, {} shards, cost-cache {}{}",
+        spec.sampler,
+        spec.grid_size(),
+        spec.shards,
+        if spec.cost_cache { "on" } else { "off" },
+        match &opts.out {
+            Some(dir) => format!(", out {}", dir.display()),
+            None => String::new(),
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let outcome = run_search(&spec, &opts, &mut |e| {
+        println!(
+            "design-search: shard {}/{} {} ({} candidates)",
+            e.shard + 1,
+            e.shards,
+            e.outcome,
+            e.candidates
+        );
+    })?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    if outcome.complete {
+        println!();
+        report::search_front_table(&outcome.front).print();
+        println!(
+            "design-search: {} candidates -> {} front points ({} shards: {} evaluated, \
+             {} reused) in {:.1} ms",
+            outcome.candidates_total,
+            outcome.front.len(),
+            outcome.shards_total,
+            outcome.shards_evaluated,
+            outcome.shards_reused,
+            wall_ms
+        );
+        println!("front-hash {:#018x}", outcome.front_hash);
+    } else {
+        println!(
+            "design-search: incomplete — {} of {} shards done, {} skipped by --max-shards; \
+             rerun with the same --out to resume",
+            outcome.shards_reused + outcome.shards_evaluated,
+            outcome.shards_total,
+            outcome.shards_skipped
+        );
+    }
+
+    // Perf-lane artifact: configs evaluated per wall-second, this
+    // invocation (reused shards cost ~nothing and are excluded).
+    if let Some(out) = flag_value(args, "--bench-out") {
+        let per_s = outcome.evaluated_candidates as f64 / (wall_ms.max(1e-9) * 1e-3);
+        let doc = Json::obj(vec![
+            ("suite", Json::Str("design_search".into())),
+            ("configs", Json::Num(outcome.evaluated_candidates as f64)),
+            ("wall_ms", Json::Num((wall_ms * 1e3).round() / 1e3)),
+            ("configs_per_s", Json::Num((per_s * 10.0).round() / 10.0)),
+            ("threads", Json::Num(opts.threads as f64)),
+        ]);
+        std::fs::write(&out, doc.pretty() + "\n")?;
+        println!("wrote {out} ({} configs evaluated)", outcome.evaluated_candidates);
+    }
+    Ok(())
+}
+
 fn run_tab4() -> Result<()> {
     let mut registry = ArtifactRegistry::open_default()?;
     let results = evaluate_variants(&mut registry, 64, 0x7AB4)?;
@@ -658,7 +758,13 @@ fn run_tab4() -> Result<()> {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let cfg = build_config(&args)?;
+    // design-search owns its flag vocabulary (`--stacks` is a CSV axis
+    // there, not this shared machine-size override).
+    let cfg = if cmd == "design-search" {
+        ArtemisConfig::default()
+    } else {
+        build_config(&args)?
+    };
 
     match cmd {
         "fig2" => report::fig2(&cfg).print(),
@@ -757,6 +863,7 @@ fn main() -> Result<()> {
         "trace-report" => run_trace_report(&args)?,
         "cluster-scale" => report::cluster_scale_study(&cfg).print(),
         "bench-serve" => run_bench_serve(&args)?,
+        "design-search" => run_design_search(&args)?,
         "config" => println!("{}", cfg.to_json()),
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {

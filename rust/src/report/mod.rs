@@ -7,6 +7,7 @@ mod cluster;
 mod experiments;
 mod extensions;
 mod fidelity;
+mod search;
 mod serving;
 mod table;
 mod trace;
@@ -15,6 +16,7 @@ pub use cluster::cluster_scale_study;
 pub use experiments::*;
 pub use extensions::*;
 pub use fidelity::{fidelity_pareto, qos_serving_study};
+pub use search::search_front_table;
 pub use serving::{serving_comparison, serving_study};
 pub use table::TableBuilder;
 pub use trace::{

@@ -1,0 +1,73 @@
+//! Design-search Pareto front rendering.
+
+use super::table::TableBuilder;
+use crate::search::SearchResult;
+
+/// The design-search front as an aligned table: one row per
+/// non-dominated candidate (ascending id), objectives plus the
+/// replayable per-candidate state hash.
+pub fn search_front_table(front: &[SearchResult]) -> TableBuilder {
+    let mut t = TableBuilder::new(
+        "Design-search Pareto front — estimated accuracy x tokens/s x mJ/token",
+        &[
+            "id",
+            "stream",
+            "sigma",
+            "stacks",
+            "place",
+            "hop ns",
+            "qos",
+            "accuracy",
+            "tokens/s",
+            "mJ/token",
+            "state-hash",
+        ],
+    );
+    for r in front {
+        let c = &r.cand;
+        t.row(vec![
+            c.id.to_string(),
+            c.stream_len.to_string(),
+            format!("{:.2}", c.sigma),
+            c.stacks.to_string(),
+            c.placement.to_string(),
+            format!("{:.1}", c.hop_ns),
+            c.qos.to_string(),
+            format!("{:.4}", r.obj.accuracy),
+            format!("{:.0}", r.obj.tokens_per_s),
+            format!("{:.4}", r.obj.mj_per_token),
+            format!("{:#018x}", r.state_hash),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Placement;
+    use crate::search::{Candidate, Objectives};
+    use crate::serve::{QosAssignment, QosTier};
+
+    #[test]
+    fn front_table_renders_every_axis_and_the_hash() {
+        let front = [SearchResult {
+            cand: Candidate {
+                id: 7,
+                stream_len: 64,
+                sigma: 1.5,
+                stacks: 2,
+                placement: Placement::PipelineParallel,
+                hop_ns: 62.5,
+                qos: QosAssignment::Uniform(QosTier::Gold),
+            },
+            obj: Objectives { accuracy: 0.9876, tokens_per_s: 1234.0, mj_per_token: 0.0042 },
+            state_hash: 0xDEAD_BEEF,
+        }];
+        let text = search_front_table(&front).render();
+        for needle in ["7", "64", "1.50", "pp", "62.5", "gold", "0.9876", "1234", "0.0042"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        assert!(text.contains("0x00000000deadbeef"));
+    }
+}

@@ -1,0 +1,839 @@
+//! Design-space search: one engine for massive serving-design sweeps.
+//!
+//! ARTEMIS exposes a wide serving design space — SC stream length ×
+//! analog noise × stack count × placement × link latency × QoS mix —
+//! and the interesting answers are *fronts*, not points: which
+//! operating points are simultaneously accurate, fast and frugal.
+//! Historically each sweep was its own ad-hoc loop
+//! (`examples/design_space.rs`, the `fidelity-sweep` report); this
+//! module generalizes them into one engine:
+//!
+//! * [`SearchSpec`] — a serializable sweep description: a base
+//!   [`ServeSpec`] plus per-axis value lists ([`AxisSpec`]) and a
+//!   sampling strategy ([`SamplerKind`]: exhaustive grid, seeded
+//!   random subset, or successive halving).  Parses from the
+//!   `artemis design-search` flag vocabulary and round-trips through
+//!   JSON bit-exactly, like every other spec in the tree.
+//! * [`Candidate`] — one grid point, with a stable `id` derived from
+//!   its axis indices (the same id under every sampler, so results
+//!   from different strategies are directly comparable).
+//! * [`runner`] — shard-parallel evaluation over the cluster driver
+//!   with resumable JSONL shard files and exact Pareto-front
+//!   extraction ([`pareto`]).
+//!
+//! Determinism contract: a killed-and-resumed sweep converges to
+//! byte-identical shard files and front as an uninterrupted run, for
+//! every `--threads` value (`tests/search_properties.rs`).
+
+pub mod pareto;
+pub mod runner;
+
+pub use pareto::{pareto_front, pareto_layers, Objectives};
+pub use runner::{run_search, RunOptions, SearchOutcome, SearchResult, ShardEvent, ShardOutcome};
+
+use crate::config::Placement;
+use crate::serve::{FidelitySpec, QosAssignment, QosTier, ServeSpec};
+use crate::util::cli::{self, CliOption};
+use crate::util::json::{parse_u64_str, u64_str, Json};
+use crate::util::XorShift64;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeSet;
+
+/// `kind` tag in the JSON form, so a search file is self-describing.
+pub const SEARCH_KIND: &str = "artemis-design-search";
+/// Version of the JSON search schema; bump on incompatible change.
+pub const SEARCH_VERSION: u64 = 1;
+
+/// Every `design-search` flag that takes a value token.  Runner-level
+/// flags (`--out`, ...) are part of the vocabulary so one unknown-flag
+/// scan covers the whole command line; [`SearchSpec::from_args`]
+/// simply does not consume them.
+pub const VALUE_FLAGS: &[&str] = &[
+    "--search",
+    "--sampler",
+    "--samples",
+    "--rungs",
+    "--sampler-seed",
+    "--shards",
+    "--stream-lens",
+    "--sigmas",
+    "--stacks",
+    "--placements",
+    "--hops",
+    "--qos",
+    "--scenario",
+    "--seed",
+    "--sessions",
+    "--model",
+    "--batch",
+    "--policy",
+    "--engine",
+    "--route",
+    "--out",
+    "--threads",
+    "--max-shards",
+    "--bench-out",
+];
+
+/// Boolean flags (no value token follows).
+pub const BOOL_FLAGS: &[&str] = &["--no-cost-cache"];
+
+/// Flags forwarded verbatim to the base [`ServeSpec`] parser, so the
+/// base point of a sweep speaks exactly the `serve-gen` vocabulary.
+const BASE_FLAGS: &[&str] = &[
+    "--scenario",
+    "--seed",
+    "--sessions",
+    "--model",
+    "--batch",
+    "--policy",
+    "--engine",
+    "--route",
+];
+
+/// How the sweep picks candidates from the axis grid.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SamplerKind {
+    /// Every grid point, in id order.
+    Grid,
+    /// A seeded uniform subset of the grid (deduplicated, id order);
+    /// `samples` caps at the grid size.
+    Random { samples: u64 },
+    /// Successive halving: `rungs` cheap elimination rounds at reduced
+    /// session budgets, survivors then evaluated at full budget.
+    Halving { rungs: u32 },
+}
+
+impl std::fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerKind::Grid => write!(f, "grid"),
+            SamplerKind::Random { .. } => write!(f, "random"),
+            SamplerKind::Halving { .. } => write!(f, "halving"),
+        }
+    }
+}
+
+/// The sampler spellings `--sampler` accepts.
+pub const SAMPLER_VALUES: &[&str] = &["grid", "random", "halving"];
+
+/// Per-axis value lists.  The cross product is the candidate grid;
+/// id order is row-major with QoS innermost (see [`SearchSpec::candidate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisSpec {
+    /// Gold-tier SC stream lengths, bits (`--stream-lens`).
+    pub stream_lens: Vec<u32>,
+    /// Gold-tier analog charge noise levels (`--sigmas`).
+    pub sigmas: Vec<f64>,
+    /// Cluster stack counts (`--stacks`).
+    pub stacks: Vec<u64>,
+    /// Placements (`--placements`).
+    pub placements: Vec<Placement>,
+    /// Stack-to-stack per-hop latencies, ns (`--hops`).
+    pub hops_ns: Vec<f64>,
+    /// QoS assignments (`--qos`).
+    pub qos: Vec<QosAssignment>,
+}
+
+impl Default for AxisSpec {
+    fn default() -> Self {
+        Self {
+            stream_lens: vec![32, 64, 128],
+            sigmas: vec![0.0, 1.0],
+            stacks: vec![1, 2],
+            placements: vec![Placement::DataParallel],
+            hops_ns: vec![40.0],
+            qos: vec![QosAssignment::Uniform(QosTier::Gold)],
+        }
+    }
+}
+
+/// One grid point.  `id` is stable across samplers and sessions: it is
+/// the row-major index of the axis-value combination, so a random
+/// subset, a halving survivor and an exhaustive sweep all name the
+/// same design the same way.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub id: u64,
+    pub stream_len: u32,
+    pub sigma: f64,
+    pub stacks: u64,
+    pub placement: Placement,
+    pub hop_ns: f64,
+    pub qos: QosAssignment,
+}
+
+/// A complete, serializable design-search request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    /// The base serving point every candidate derives from.
+    pub base: ServeSpec,
+    pub axes: AxisSpec,
+    pub sampler: SamplerKind,
+    /// Sampler seed (`--sampler-seed`) — distinct from the base spec's
+    /// trace seed.
+    pub seed: u64,
+    /// Result-file shard count (`--shards`); the unit of resume.
+    pub shards: u64,
+    /// Share one memoized cost cache per coster shape across the whole
+    /// sweep (`--no-cost-cache` turns it off).
+    pub cost_cache: bool,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        Self {
+            base: ServeSpec {
+                sessions: Some(6),
+                model: Some("Transformer-base".into()),
+                batch: Some(4),
+                ..ServeSpec::default()
+            },
+            axes: AxisSpec::default(),
+            sampler: SamplerKind::Grid,
+            seed: 1,
+            shards: 8,
+            cost_cache: true,
+        }
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Reject any `--token` outside the design-search vocabulary.
+fn reject_unknown_flags(args: &[String]) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if VALUE_FLAGS.contains(&a) {
+            i += 2;
+            continue;
+        }
+        if BOOL_FLAGS.contains(&a) || !a.starts_with("--") {
+            i += 1;
+            continue;
+        }
+        let known: Vec<&str> = VALUE_FLAGS.iter().chain(BOOL_FLAGS.iter()).copied().collect();
+        return Err(anyhow!(cli::unknown_flag(a, &known)));
+    }
+    Ok(())
+}
+
+/// Split one CSV axis token into trimmed non-empty entries.
+fn csv(v: &str) -> Vec<&str> {
+    v.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()
+}
+
+impl SearchSpec {
+    /// Parse a full `design-search` argument vector: `--search FILE`
+    /// loads a JSON base first, then flags layer over it (file first,
+    /// flags win — the `--spec` convention).
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        reject_unknown_flags(args)?;
+        let mut spec = match flag_value(args, "--search") {
+            Some(path) => {
+                let text = std::fs::read_to_string(&path)?;
+                let j = Json::parse(&text).map_err(|e| anyhow!("search spec parse: {e}"))?;
+                Self::from_json(&j)?
+            }
+            None => Self::default(),
+        };
+
+        // Base-spec pass-through: forward the serve-gen-vocabulary
+        // flags untouched so validation order and error strings match.
+        let mut base_args = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if BASE_FLAGS.contains(&args[i].as_str()) {
+                base_args.push(args[i].clone());
+                if let Some(v) = args.get(i + 1) {
+                    base_args.push(v.clone());
+                }
+                i += 2;
+                continue;
+            }
+            i += 1;
+        }
+        spec.base = ServeSpec::from_args_over(spec.base, &base_args)?;
+
+        if let Some(v) = flag_value(args, "--stream-lens") {
+            spec.axes.stream_lens = csv(&v)
+                .iter()
+                .map(|t| t.parse().map_err(|_| anyhow!("bad --stream-lens value '{t}'")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = flag_value(args, "--sigmas") {
+            spec.axes.sigmas = csv(&v)
+                .iter()
+                .map(|t| t.parse().map_err(|_| anyhow!("bad --sigmas value '{t}'")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = flag_value(args, "--stacks") {
+            spec.axes.stacks = csv(&v)
+                .iter()
+                .map(|t| t.parse().map_err(|_| anyhow!("bad --stacks value '{t}'")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = flag_value(args, "--placements") {
+            spec.axes.placements = csv(&v)
+                .iter()
+                .map(|t| Placement::parse_or_err(t).map_err(|m| anyhow!(m)))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = flag_value(args, "--hops") {
+            spec.axes.hops_ns = csv(&v)
+                .iter()
+                .map(|t| t.parse().map_err(|_| anyhow!("bad --hops value '{t}'")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = flag_value(args, "--qos") {
+            spec.axes.qos = csv(&v)
+                .iter()
+                .map(|t| QosAssignment::parse_or_err(t).map_err(|m| anyhow!(m)))
+                .collect::<Result<_>>()?;
+        }
+
+        let samples = flag_value(args, "--samples").map(|v| v.parse::<u64>()).transpose()?;
+        let rungs = flag_value(args, "--rungs").map(|v| v.parse::<u32>()).transpose()?;
+        if samples.is_some() && rungs.is_some() {
+            return Err(anyhow!("--samples and --rungs pick different samplers"));
+        }
+        match flag_value(args, "--sampler").as_deref() {
+            Some("grid") => spec.sampler = SamplerKind::Grid,
+            Some("random") => {
+                spec.sampler = SamplerKind::Random { samples: samples.unwrap_or(64) }
+            }
+            Some("halving") => spec.sampler = SamplerKind::Halving { rungs: rungs.unwrap_or(2) },
+            Some(got) => return Err(anyhow!(cli::unknown_value("sampler", got, SAMPLER_VALUES))),
+            None => {
+                // A budget flag alone implies its sampler.
+                if let Some(n) = samples {
+                    spec.sampler = SamplerKind::Random { samples: n };
+                }
+                if let Some(r) = rungs {
+                    spec.sampler = SamplerKind::Halving { rungs: r };
+                }
+            }
+        }
+        if let Some(v) = flag_value(args, "--sampler-seed") {
+            spec.seed = v.parse()?;
+        }
+        if let Some(v) = flag_value(args, "--shards") {
+            spec.shards = v.parse()?;
+        }
+        if args.iter().any(|a| a == "--no-cost-cache") {
+            spec.cost_cache = false;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Validate the merged spec: non-empty well-formed axes, a sane
+    /// sampler budget, and a base spec that passes `serve-gen`'s own
+    /// validation and is compatible with sweeping.
+    pub fn validate(&self) -> Result<()> {
+        let a = &self.axes;
+        if a.stream_lens.is_empty() {
+            return Err(anyhow!("--stream-lens needs at least one value"));
+        }
+        if a.sigmas.is_empty() {
+            return Err(anyhow!("--sigmas needs at least one value"));
+        }
+        if a.stacks.is_empty() {
+            return Err(anyhow!("--stacks needs at least one value"));
+        }
+        if a.placements.is_empty() {
+            return Err(anyhow!("--placements needs at least one value"));
+        }
+        if a.hops_ns.is_empty() {
+            return Err(anyhow!("--hops needs at least one value"));
+        }
+        if a.qos.is_empty() {
+            return Err(anyhow!("--qos needs at least one value"));
+        }
+        if a.stream_lens.iter().any(|&l| !(8..=1024).contains(&l)) {
+            return Err(anyhow!("--stream-lens values must be between 8 and 1024 bits"));
+        }
+        if a.sigmas.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err(anyhow!("--sigmas values must be finite non-negative noise levels"));
+        }
+        if a.stacks.iter().any(|&s| s == 0) {
+            return Err(anyhow!("--stacks values must be positive"));
+        }
+        if a.hops_ns.iter().any(|h| !h.is_finite() || *h < 0.0) {
+            return Err(anyhow!("--hops values must be finite non-negative ns"));
+        }
+        match self.sampler {
+            SamplerKind::Random { samples } if samples == 0 => {
+                return Err(anyhow!("--samples must be positive"));
+            }
+            SamplerKind::Halving { rungs } if rungs == 0 => {
+                return Err(anyhow!("--rungs must be positive"));
+            }
+            _ => {}
+        }
+        if self.shards == 0 {
+            return Err(anyhow!("--shards must be positive"));
+        }
+        self.base.validate()?;
+        if self.base.trace.path.is_some() {
+            return Err(anyhow!("design-search does not support --trace on the base spec"));
+        }
+        if self.base.sessions == Some(0) {
+            return Err(anyhow!("design-search needs at least one session"));
+        }
+        Ok(())
+    }
+
+    /// Number of points in the full axis grid.
+    pub fn grid_size(&self) -> u64 {
+        let a = &self.axes;
+        (a.stream_lens.len()
+            * a.sigmas.len()
+            * a.stacks.len()
+            * a.placements.len()
+            * a.hops_ns.len()
+            * a.qos.len()) as u64
+    }
+
+    /// The grid point with row-major index `id` (axes outer-to-inner:
+    /// stream length, sigma, stacks, placement, hop, QoS).
+    pub fn candidate(&self, id: u64) -> Candidate {
+        assert!(id < self.grid_size(), "candidate id {id} out of grid");
+        let a = &self.axes;
+        let mut r = id as usize;
+        let q = r % a.qos.len();
+        r /= a.qos.len();
+        let h = r % a.hops_ns.len();
+        r /= a.hops_ns.len();
+        let p = r % a.placements.len();
+        r /= a.placements.len();
+        let st = r % a.stacks.len();
+        r /= a.stacks.len();
+        let sg = r % a.sigmas.len();
+        r /= a.sigmas.len();
+        let sl = r % a.stream_lens.len();
+        Candidate {
+            id,
+            stream_len: a.stream_lens[sl],
+            sigma: a.sigmas[sg],
+            stacks: a.stacks[st],
+            placement: a.placements[p],
+            hop_ns: a.hops_ns[h],
+            qos: a.qos[q],
+        }
+    }
+
+    /// The sampled candidate set, in ascending id order.  `Grid` and
+    /// `Random` are closed-form; `Halving` starts from the full grid
+    /// and is narrowed by the runner's elimination rounds.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let n = self.grid_size();
+        match self.sampler {
+            SamplerKind::Grid | SamplerKind::Halving { .. } => {
+                (0..n).map(|id| self.candidate(id)).collect()
+            }
+            SamplerKind::Random { samples } => {
+                let want = samples.min(n);
+                let mut rng = XorShift64::new(self.seed);
+                let mut picked = BTreeSet::new();
+                while (picked.len() as u64) < want {
+                    picked.insert(rng.below(n));
+                }
+                picked.into_iter().map(|id| self.candidate(id)).collect()
+            }
+        }
+    }
+
+    /// The concrete [`ServeSpec`] one candidate evaluates: the base
+    /// spec with the candidate's QoS, fidelity point and cluster shape
+    /// applied.  Evaluation is single-threaded per candidate (the sweep
+    /// parallelizes across shards) — a pure wall-clock choice, since
+    /// the state hash is thread-count-independent.
+    pub fn candidate_spec(&self, c: &Candidate) -> ServeSpec {
+        let mut s = self.base.clone();
+        s.qos = Some(c.qos);
+        s.fidelity = Some(FidelitySpec { stream_len: c.stream_len, sigma: c.sigma });
+        let mut cl = s.cluster.unwrap_or_default();
+        cl.stacks = c.stacks;
+        cl.placement = c.placement;
+        cl.link_hop_ns = c.hop_ns;
+        cl.threads = 1;
+        cl.cost_cache = self.cost_cache;
+        s.cluster = Some(cl);
+        s
+    }
+
+    /// JSON form.  Axis floats travel as plain numbers — the writer
+    /// emits the shortest exactly-round-tripping decimal, so the path
+    /// is bit-exact; counts travel as decimal strings like every spec.
+    pub fn to_json(&self) -> Json {
+        let a = &self.axes;
+        let sampler = match self.sampler {
+            SamplerKind::Grid => Json::obj(vec![("kind", Json::Str("grid".into()))]),
+            SamplerKind::Random { samples } => Json::obj(vec![
+                ("kind", Json::Str("random".into())),
+                ("samples", u64_str(samples)),
+            ]),
+            SamplerKind::Halving { rungs } => Json::obj(vec![
+                ("kind", Json::Str("halving".into())),
+                ("rungs", Json::Num(rungs as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("kind", Json::Str(SEARCH_KIND.into())),
+            ("version", Json::Num(SEARCH_VERSION as f64)),
+            ("base", self.base.to_json()),
+            (
+                "axes",
+                Json::obj(vec![
+                    (
+                        "stream_lens",
+                        Json::Arr(a.stream_lens.iter().map(|&v| Json::Num(v as f64)).collect()),
+                    ),
+                    ("sigmas", Json::Arr(a.sigmas.iter().map(|&v| Json::Num(v)).collect())),
+                    ("stacks", Json::Arr(a.stacks.iter().map(|&v| u64_str(v)).collect())),
+                    (
+                        "placements",
+                        Json::Arr(a.placements.iter().map(|p| Json::Str(p.to_string())).collect()),
+                    ),
+                    ("hops_ns", Json::Arr(a.hops_ns.iter().map(|&v| Json::Num(v)).collect())),
+                    ("qos", Json::Arr(a.qos.iter().map(|q| Json::Str(q.to_string())).collect())),
+                ]),
+            ),
+            ("sampler", sampler),
+            ("seed", u64_str(self.seed)),
+            ("shards", u64_str(self.shards)),
+            ("cost_cache", Json::Bool(self.cost_cache)),
+        ])
+    }
+
+    /// Parse the JSON form.  Missing fields keep defaults; value-level
+    /// validation happens in [`SearchSpec::validate`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if j.as_obj().is_none() {
+            return Err(anyhow!("search spec must be a JSON object"));
+        }
+        if let Some(k) = j.get("kind").and_then(|v| v.as_str()) {
+            if k != SEARCH_KIND {
+                return Err(anyhow!("not a design-search spec (kind '{k}', want '{SEARCH_KIND}')"));
+            }
+        }
+        if let Some(v) = j.get("version") {
+            match v.as_u64() {
+                Some(SEARCH_VERSION) => {}
+                _ => {
+                    return Err(anyhow!(
+                        "unsupported design-search version {} (have {SEARCH_VERSION})",
+                        v.compact()
+                    ))
+                }
+            }
+        }
+        let mut spec = Self::default();
+        if let Some(b) = j.get("base") {
+            spec.base = ServeSpec::from_json(b)?;
+        }
+        if let Some(a) = j.get("axes") {
+            if a.as_obj().is_none() {
+                return Err(anyhow!("search.axes must be an object"));
+            }
+            let arr = |name: &str| -> Result<Option<&[Json]>> {
+                match a.get(name) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .as_arr()
+                        .map(Some)
+                        .ok_or_else(|| anyhow!("search.axes.{name} must be an array")),
+                }
+            };
+            if let Some(vs) = arr("stream_lens")? {
+                spec.axes.stream_lens = vs
+                    .iter()
+                    .map(|v| {
+                        v.as_u64().map(|n| n as u32).ok_or_else(|| {
+                            anyhow!("search.axes.stream_lens values must be unsigned integers")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(vs) = arr("sigmas")? {
+                spec.axes.sigmas = vs
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| anyhow!("search.axes.sigmas values must be numbers"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(vs) = arr("stacks")? {
+                spec.axes.stacks = vs
+                    .iter()
+                    .map(|v| {
+                        parse_u64_str(v).ok_or_else(|| {
+                            anyhow!("search.axes.stacks values must be unsigned integers")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(vs) = arr("placements")? {
+                spec.axes.placements = vs
+                    .iter()
+                    .map(|v| {
+                        let s = v.as_str().ok_or_else(|| {
+                            anyhow!("search.axes.placements values must be strings")
+                        })?;
+                        Placement::parse_or_err(s).map_err(|m| anyhow!(m))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(vs) = arr("hops_ns")? {
+                spec.axes.hops_ns = vs
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| anyhow!("search.axes.hops_ns values must be numbers"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(vs) = arr("qos")? {
+                spec.axes.qos = vs
+                    .iter()
+                    .map(|v| {
+                        let s = v
+                            .as_str()
+                            .ok_or_else(|| anyhow!("search.axes.qos values must be strings"))?;
+                        QosAssignment::parse_or_err(s).map_err(|m| anyhow!(m))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+        }
+        if let Some(s) = j.get("sampler") {
+            let kind = s
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("search.sampler.kind must be a string"))?;
+            spec.sampler = match kind {
+                "grid" => SamplerKind::Grid,
+                "random" => {
+                    let samples = match s.get("samples") {
+                        None => 64,
+                        Some(v) => parse_u64_str(v).ok_or_else(|| {
+                            anyhow!("search.sampler.samples must be an unsigned integer")
+                        })?,
+                    };
+                    SamplerKind::Random { samples }
+                }
+                "halving" => {
+                    let rungs = match s.get("rungs") {
+                        None => 2,
+                        Some(v) => v.as_u64().ok_or_else(|| {
+                            anyhow!("search.sampler.rungs must be an unsigned integer")
+                        })? as u32,
+                    };
+                    SamplerKind::Halving { rungs }
+                }
+                got => return Err(anyhow!(cli::unknown_value("sampler", got, SAMPLER_VALUES))),
+            };
+        }
+        if let Some(v) = j.get("seed") {
+            spec.seed = parse_u64_str(v)
+                .ok_or_else(|| anyhow!("search.seed must be an unsigned integer"))?;
+        }
+        if let Some(v) = j.get("shards") {
+            spec.shards = parse_u64_str(v)
+                .ok_or_else(|| anyhow!("search.shards must be an unsigned integer"))?;
+        }
+        if let Some(v) = j.get("cost_cache") {
+            spec.cost_cache =
+                v.as_bool().ok_or_else(|| anyhow!("search.cost_cache must be a bool"))?;
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_grid_enumerates_row_major_with_qos_innermost() {
+        let spec = SearchSpec::default();
+        assert_eq!(spec.grid_size(), 3 * 2 * 2);
+        let cands = spec.candidates();
+        assert_eq!(cands.len(), 12);
+        assert_eq!(cands[0].stream_len, 32);
+        assert_eq!(cands[0].sigma, 0.0);
+        assert_eq!(cands[0].stacks, 1);
+        // Innermost axes cycle fastest: stacks before sigma before
+        // stream length (single-value axes collapse).
+        assert_eq!(cands[1].stacks, 2);
+        assert_eq!(cands[2].sigma, 1.0);
+        assert_eq!(cands[4].stream_len, 64);
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.id, i as u64, "grid ids are the enumeration order");
+            assert_eq!(spec.candidate(c.id), *c, "id decomposition round-trips");
+        }
+    }
+
+    #[test]
+    fn random_sampler_is_seeded_deduplicated_and_id_sorted() {
+        let mut spec =
+            SearchSpec { sampler: SamplerKind::Random { samples: 5 }, ..SearchSpec::default() };
+        let a = spec.candidates();
+        let b = spec.candidates();
+        assert_eq!(a, b, "same seed, same subset");
+        assert_eq!(a.len(), 5);
+        let ids: Vec<u64> = a.iter().map(|c| c.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ids, sorted, "ascending unique ids");
+        spec.seed = 2;
+        let c = spec.candidates();
+        assert_ne!(a, c, "different seed, different subset");
+        // Oversampling caps at the grid.
+        spec.sampler = SamplerKind::Random { samples: 10_000 };
+        assert_eq!(spec.candidates().len(), spec.grid_size() as usize);
+    }
+
+    #[test]
+    fn candidate_spec_applies_every_axis() {
+        let spec = SearchSpec::default();
+        let c = Candidate {
+            id: 3,
+            stream_len: 64,
+            sigma: 1.0,
+            stacks: 2,
+            placement: Placement::PipelineParallel,
+            hop_ns: 80.0,
+            qos: QosAssignment::Mixed,
+        };
+        let s = spec.candidate_spec(&c);
+        assert_eq!(s.qos, Some(QosAssignment::Mixed));
+        assert_eq!(s.fidelity.unwrap().stream_len, 64);
+        assert_eq!(s.fidelity.unwrap().sigma, 1.0);
+        let cl = s.cluster.unwrap();
+        assert_eq!(cl.stacks, 2);
+        assert_eq!(cl.placement, Placement::PipelineParallel);
+        assert_eq!(cl.link_hop_ns, 80.0);
+        assert_eq!(cl.threads, 1, "candidates evaluate serially; shards parallelize");
+        assert!(cl.cost_cache);
+        // The spec is a valid serve spec — the daemon/serve-gen replay path.
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn cli_round_trip_and_json_are_bit_exact() {
+        let spec = SearchSpec::from_args(&sv(&[
+            "design-search",
+            "--scenario",
+            "chat",
+            "--sessions",
+            "4",
+            "--stream-lens",
+            "32,128",
+            "--sigmas",
+            "0,0.5",
+            "--stacks",
+            "1,2",
+            "--placements",
+            "dp,pp",
+            "--hops",
+            "40,62.5",
+            "--qos",
+            "gold,mix",
+            "--sampler",
+            "random",
+            "--samples",
+            "7",
+            "--sampler-seed",
+            "9",
+            "--shards",
+            "3",
+            "--no-cost-cache",
+        ]))
+        .unwrap();
+        assert_eq!(spec.axes.stream_lens, vec![32, 128]);
+        assert_eq!(spec.axes.sigmas, vec![0.0, 0.5]);
+        assert_eq!(spec.axes.placements.len(), 2);
+        assert_eq!(spec.sampler, SamplerKind::Random { samples: 7 });
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.shards, 3);
+        assert!(!spec.cost_cache);
+        assert_eq!(spec.base.sessions, Some(4));
+        let j = spec.to_json();
+        let round = SearchSpec::from_json(&Json::parse(&j.compact()).unwrap()).unwrap();
+        assert_eq!(spec, round);
+        assert_eq!(j.compact(), round.to_json().compact());
+    }
+
+    #[test]
+    fn budget_flags_imply_their_sampler() {
+        let s = SearchSpec::from_args(&sv(&["design-search", "--samples", "12"])).unwrap();
+        assert_eq!(s.sampler, SamplerKind::Random { samples: 12 });
+        let s = SearchSpec::from_args(&sv(&["design-search", "--rungs", "3"])).unwrap();
+        assert_eq!(s.sampler, SamplerKind::Halving { rungs: 3 });
+    }
+
+    #[test]
+    fn canonical_errors() {
+        let err = |args: &[&str]| SearchSpec::from_args(&sv(args)).unwrap_err().to_string();
+        assert_eq!(
+            err(&["design-search", "--sampler", "annealing"]),
+            "unknown sampler 'annealing' (grid|random|halving)"
+        );
+        assert_eq!(
+            err(&["design-search", "--stream-lens", "4"]),
+            "--stream-lens values must be between 8 and 1024 bits"
+        );
+        assert_eq!(
+            err(&["design-search", "--sigmas", "-1"]),
+            "--sigmas values must be finite non-negative noise levels"
+        );
+        assert_eq!(err(&["design-search", "--stacks", "0"]), "--stacks values must be positive");
+        assert_eq!(
+            err(&["design-search", "--hops", ""]),
+            "--hops needs at least one value"
+        );
+        assert_eq!(err(&["design-search", "--shards", "0"]), "--shards must be positive");
+        assert_eq!(err(&["design-search", "--samples", "0"]), "--samples must be positive");
+        assert_eq!(err(&["design-search", "--rungs", "0"]), "--rungs must be positive");
+        assert_eq!(
+            err(&["design-search", "--samples", "4", "--rungs", "2"]),
+            "--samples and --rungs pick different samplers"
+        );
+        assert_eq!(
+            err(&["design-search", "--sessions", "0"]),
+            "design-search needs at least one session"
+        );
+        assert_eq!(
+            err(&["design-search", "--placements", "zz"]),
+            "unknown placement 'zz' (dp|pp)"
+        );
+        assert_eq!(
+            err(&["design-search", "--qos", "plat"]),
+            "unknown QoS tier 'plat' (gold|silver|bronze|mix)"
+        );
+        // Base-spec errors surface with serve-gen's own strings.
+        assert_eq!(
+            err(&["design-search", "--scenario", "nope"]),
+            "unknown scenario 'nope' (chat|summarize|burst|long_itl)"
+        );
+        let e = err(&["design-search", "--smaples", "4"]);
+        assert_eq!(e, "unknown flag '--smaples' (did you mean '--samples'?)");
+        // A traced base spec is rejected (trace only arrives via file).
+        let mut spec = SearchSpec::default();
+        spec.base.trace.path = Some("t.jsonl".into());
+        assert_eq!(
+            spec.validate().unwrap_err().to_string(),
+            "design-search does not support --trace on the base spec"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Exact Pareto-front extraction over the serving objective triple.
+//!
+//! Design-search optimizes three objectives at once — estimated task
+//! accuracy (up), delivered throughput (up), and energy per token
+//! (down) — so "best" is a *front*, not a point.  Candidate counts are
+//! small (≤ a few thousand), so the extraction is the exact O(n²)
+//! dominance scan: no sampling, no epsilon boxes, and a deterministic
+//! earliest-index tie-break for exactly-duplicate points, which is what
+//! lets a resumed sweep reproduce its front byte-for-byte
+//! (`tests/search_properties.rs`).
+
+/// The objective triple of one evaluated candidate.  Accuracy and
+/// throughput are maximized, energy per token is minimized.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// Mean estimated per-session task accuracy (fidelity engine).
+    pub accuracy: f64,
+    /// Delivered generation throughput, tokens per second.
+    pub tokens_per_s: f64,
+    /// Delivered energy per generated token, millijoules.
+    pub mj_per_token: f64,
+}
+
+impl Objectives {
+    /// `self` dominates `other`: no objective worse, at least one
+    /// strictly better.  Callers guarantee finite values (the runner
+    /// rejects non-finite objectives), so plain comparisons are total.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let no_worse = self.accuracy >= other.accuracy
+            && self.tokens_per_s >= other.tokens_per_s
+            && self.mj_per_token <= other.mj_per_token;
+        let strictly_better = self.accuracy > other.accuracy
+            || self.tokens_per_s > other.tokens_per_s
+            || self.mj_per_token < other.mj_per_token;
+        no_worse && strictly_better
+    }
+}
+
+/// Indices of the non-dominated points, in input order.  A point
+/// survives iff nothing dominates it; among exactly-duplicate points
+/// only the earliest index survives (the deterministic tie-break the
+/// byte-identical-front guarantee rests on).
+pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if q.dominates(p) {
+                continue 'outer;
+            }
+            if j < i && q == p {
+                continue 'outer; // exact duplicate: earliest index wins
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Non-dominated sorting: rank 0 is the front, rank 1 the front of
+/// what remains, and so on.  Successive halving ranks a rung's
+/// candidates by these layers (then by id) to pick the survivors.
+/// Exact duplicates defer to the layer after their earliest twin, so
+/// the ranking stays deterministic.
+pub fn pareto_layers(points: &[Objectives]) -> Vec<usize> {
+    let n = points.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0;
+    let mut layer = 0;
+    while assigned < n {
+        let mut this_layer = Vec::new();
+        'outer: for i in 0..n {
+            if rank[i] != usize::MAX {
+                continue;
+            }
+            for j in 0..n {
+                if rank[j] != usize::MAX || j == i {
+                    continue;
+                }
+                if points[j].dominates(&points[i]) {
+                    continue 'outer;
+                }
+                if j < i && points[j] == points[i] {
+                    continue 'outer;
+                }
+            }
+            this_layer.push(i);
+        }
+        // Dominance is a strict partial order and the duplicate rule is
+        // well-founded (earlier index first), so every pass assigns at
+        // least one point and the loop terminates.
+        for &i in &this_layer {
+            rank[i] = layer;
+        }
+        assigned += this_layer.len();
+        layer += 1;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(a: f64, t: f64, e: f64) -> Objectives {
+        Objectives { accuracy: a, tokens_per_s: t, mj_per_token: e }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_sign_aware() {
+        let best = o(0.9, 100.0, 1.0);
+        assert!(best.dominates(&o(0.8, 100.0, 1.0)));
+        assert!(best.dominates(&o(0.9, 90.0, 1.0)));
+        assert!(best.dominates(&o(0.9, 100.0, 2.0)), "lower energy dominates");
+        assert!(!best.dominates(&best), "a point never dominates itself");
+        // Trade-offs in opposite directions: neither dominates.
+        let frugal = o(0.7, 60.0, 0.5);
+        assert!(!best.dominates(&frugal) && !frugal.dominates(&best));
+    }
+
+    #[test]
+    fn front_is_exactly_the_non_dominated_set() {
+        let pts = vec![
+            o(0.9, 100.0, 2.0), // front: most accurate
+            o(0.8, 120.0, 1.5), // front: fastest
+            o(0.7, 110.0, 1.0), // front: cheapest
+            o(0.7, 90.0, 2.5),  // dominated by all three
+            o(0.8, 100.0, 2.0), // dominated by index 0
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+        // Brute-force cross-check: no survivor is dominated, every
+        // non-survivor is dominated or a duplicate.
+        let front = pareto_front(&pts);
+        for &i in &front {
+            assert!(pts.iter().all(|q| !q.dominates(&pts[i])));
+        }
+        for i in 0..pts.len() {
+            if !front.contains(&i) {
+                let dominated = pts.iter().any(|q| q.dominates(&pts[i]));
+                let duplicate = front.iter().any(|&j| j < i && pts[j] == pts[i]);
+                assert!(dominated || duplicate);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_points_keep_the_earliest_index() {
+        let p = o(0.9, 100.0, 1.0);
+        let pts = vec![o(0.5, 50.0, 3.0), p, p, p];
+        assert_eq!(pareto_front(&pts), vec![1], "one survivor per duplicate set");
+        let ranks = pareto_layers(&pts);
+        assert_eq!(ranks[1], 0, "earliest twin leads");
+        assert!(ranks[2] > 0 && ranks[3] > ranks[2], "later twins defer layer by layer");
+    }
+
+    #[test]
+    fn layers_order_by_repeated_front_removal() {
+        let pts = vec![
+            o(0.9, 100.0, 1.0), // layer 0
+            o(0.8, 90.0, 1.5),  // layer 1 (dominated only by 0)
+            o(0.7, 80.0, 2.0),  // layer 2
+        ];
+        assert_eq!(pareto_layers(&pts), vec![0, 1, 2]);
+        assert!(pareto_layers(&[]).is_empty());
+    }
+}

@@ -1,0 +1,774 @@
+//! Shard-parallel, resumable evaluation of a [`SearchSpec`].
+//!
+//! The candidate list is split into `spec.shards` contiguous id-order
+//! shards; a scoped worker pool claims shards and evaluates each
+//! candidate through the cluster driver (the exact `serve-gen --spec`
+//! execution path, so a record's `state_hash` replays bit-for-bit).
+//! With an output directory every finished shard is written as one
+//! JSONL file via tmp-file + atomic rename, so a killed sweep leaves
+//! only whole shards behind; the next run re-reads them (after
+//! verifying the embedded search spec matches byte-for-byte) and
+//! evaluates just the gap.  Floats travel as bit patterns, so a
+//! resumed sweep's shard files and Pareto front are byte-identical to
+//! an uninterrupted run's, at every `--threads` value.
+//!
+//! Candidates sharing a coster shape share one memoized cost cache
+//! across the whole sweep (keyed per placement/stack-count/link, since
+//! the pipelined coster bakes those in; the fidelity axes never reach
+//! the coster, see DESIGN.md §Fidelity-engine) — bit-identical to
+//! cache-off, which `tests/search_properties.rs` pins.
+
+use super::pareto::{pareto_front, pareto_layers, Objectives};
+use super::{Candidate, SamplerKind, SearchSpec};
+use crate::cluster::{run_cluster, run_cluster_with_cache};
+use crate::config::Placement;
+use crate::serve::QosAssignment;
+use crate::sim::{CostCache, StateHash};
+use crate::util::json::{f64_bits, parse_f64_bits, parse_u64_str, u64_str, Json};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// `kind` tag of one shard result file.
+pub const SHARD_KIND: &str = "artemis-design-search-shard";
+/// `kind` tag of the front file.
+pub const FRONT_KIND: &str = "artemis-design-search-front";
+/// Version of the shard/front JSONL schema; bump on incompatible change.
+pub const SHARD_SCHEMA: u64 = 1;
+
+/// Runner-level knobs (everything *outside* the serializable spec:
+/// these never change a result bit, only where files go and how much
+/// runs now).
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Result directory (`--out`); `None` runs fully in memory.
+    pub out: Option<PathBuf>,
+    /// Worker threads (`--threads`; 0 = auto).
+    pub threads: usize,
+    /// Evaluate at most this many missing shards this invocation
+    /// (`--max-shards`) — the knob the kill/resume tests drive.
+    pub max_shards: Option<u64>,
+}
+
+/// One evaluated candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchResult {
+    pub cand: Candidate,
+    pub obj: Objectives,
+    /// The run's deterministic state hash — equal to what
+    /// `serve-gen --spec` prints for the record's embedded spec.
+    pub state_hash: u64,
+}
+
+/// How one shard was satisfied this invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShardOutcome {
+    /// Evaluated now (and persisted, if an output directory is set).
+    Evaluated,
+    /// A valid shard file from an earlier run was reused.
+    Reused,
+    /// Left for a later invocation (`--max-shards` budget exhausted).
+    Skipped,
+}
+
+impl std::fmt::Display for ShardOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardOutcome::Evaluated => write!(f, "evaluated"),
+            ShardOutcome::Reused => write!(f, "reused"),
+            ShardOutcome::Skipped => write!(f, "skipped"),
+        }
+    }
+}
+
+/// Progress callback payload: one event per shard.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardEvent {
+    pub shard: u64,
+    pub shards: u64,
+    pub outcome: ShardOutcome,
+    /// Candidates in this shard.
+    pub candidates: u64,
+}
+
+/// Everything a finished (or budget-limited) invocation knows.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Results of every completed shard, ascending candidate id.
+    pub results: Vec<SearchResult>,
+    /// The exact Pareto front over `results` (empty until `complete`).
+    pub front: Vec<SearchResult>,
+    /// Deterministic digest of the front's serialized records
+    /// (0 until `complete`) — the byte-equality handle CI greps.
+    pub front_hash: u64,
+    pub shards_total: u64,
+    pub shards_reused: u64,
+    pub shards_evaluated: u64,
+    pub shards_skipped: u64,
+    /// Candidates evaluated in this invocation (halving rung
+    /// evaluations excluded).
+    pub evaluated_candidates: u64,
+    /// Candidates the sampler selected in total.
+    pub candidates_total: u64,
+    /// Every shard is accounted for: the front is final.
+    pub complete: bool,
+}
+
+/// Shared cost caches, one per coster shape.  The data-parallel coster
+/// is independent of the cluster shape, so every dp candidate shares a
+/// single cache; the pipelined coster bakes in the stack grouping and
+/// the link, so pp candidates share per (stacks, hop) point.
+struct CachePool {
+    caches: Mutex<BTreeMap<(u8, u64, u64), Arc<CostCache>>>,
+}
+
+impl CachePool {
+    fn new() -> Self {
+        Self { caches: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn get(&self, c: &Candidate) -> Arc<CostCache> {
+        let key = match c.placement {
+            Placement::DataParallel => (0u8, 0u64, 0u64),
+            Placement::PipelineParallel => (1u8, c.stacks, c.hop_ns.to_bits()),
+        };
+        let mut m = self.caches.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        m.entry(key).or_insert_with(CostCache::shared).clone()
+    }
+}
+
+/// Evaluate one candidate through the exact `serve-gen --spec` cluster
+/// path (resolve → seeded trace → scheduler → cluster driver), with an
+/// optional session-budget override (halving rungs) and an optional
+/// sweep-shared cost cache.
+fn evaluate_candidate(
+    spec: &SearchSpec,
+    c: &Candidate,
+    pool: Option<&CachePool>,
+    sessions: Option<usize>,
+) -> Result<SearchResult> {
+    let mut cspec = spec.candidate_spec(c);
+    if let Some(n) = sessions {
+        cspec.sessions = Some(n);
+    }
+    let cfg = cspec.load_stack_config()?;
+    let resolved = cspec.resolve()?;
+    let trace = resolved.scenario.generate(cspec.seed);
+    let sched = cspec.sched(resolved.batch);
+    let cl_spec = cspec.cluster.expect("candidate specs always carry a cluster section");
+    let cluster = cl_spec.to_cluster_config(cspec.engine);
+    let model = &resolved.scenario.model;
+    let report = match pool {
+        Some(p) => run_cluster_with_cache(
+            &cfg,
+            model,
+            &trace,
+            &cluster,
+            &sched,
+            cl_spec.route,
+            p.get(c),
+        ),
+        None => {
+            run_cluster(&cfg, model, &trace, &cluster, &sched, cl_spec.route, cl_spec.cost_cache)
+        }
+    };
+    let obj = Objectives {
+        accuracy: report.aggregate.accuracy.mean,
+        tokens_per_s: report.tokens_per_s(),
+        mj_per_token: report.aggregate.pj_per_token() * 1e-9,
+    };
+    if !obj.accuracy.is_finite() || !obj.tokens_per_s.is_finite() || !obj.mj_per_token.is_finite()
+    {
+        return Err(anyhow!("candidate {} produced a non-finite objective", c.id));
+    }
+    Ok(SearchResult { cand: *c, obj, state_hash: report.state_hash() })
+}
+
+/// One result record line.  Floats travel as bit patterns and the full
+/// candidate `ServeSpec` is embedded, so any record replays directly
+/// through `serve-gen --spec` to the same `state_hash`.
+fn record_json(spec: &SearchSpec, r: &SearchResult) -> Json {
+    let c = &r.cand;
+    Json::obj(vec![
+        ("t", Json::Str("result".into())),
+        ("id", u64_str(c.id)),
+        ("stream_len", Json::Num(c.stream_len as f64)),
+        ("sigma", f64_bits(c.sigma)),
+        ("stacks", u64_str(c.stacks)),
+        ("placement", Json::Str(c.placement.to_string())),
+        ("hop_ns", f64_bits(c.hop_ns)),
+        ("qos", Json::Str(c.qos.to_string())),
+        ("accuracy", f64_bits(r.obj.accuracy)),
+        ("tokens_per_s", f64_bits(r.obj.tokens_per_s)),
+        ("mj_per_token", f64_bits(r.obj.mj_per_token)),
+        ("spec", spec.candidate_spec(c).to_json()),
+        ("state_hash", Json::Str(format!("{:#018x}", r.state_hash))),
+    ])
+}
+
+fn parse_record(j: &Json) -> Option<SearchResult> {
+    let cand = Candidate {
+        id: parse_u64_str(j.get("id")?)?,
+        stream_len: j.get("stream_len")?.as_u64()? as u32,
+        sigma: parse_f64_bits(j.get("sigma")?)?,
+        stacks: parse_u64_str(j.get("stacks")?)?,
+        placement: Placement::parse(j.get("placement")?.as_str()?)?,
+        hop_ns: parse_f64_bits(j.get("hop_ns")?)?,
+        qos: QosAssignment::parse(j.get("qos")?.as_str()?)?,
+    };
+    let obj = Objectives {
+        accuracy: parse_f64_bits(j.get("accuracy")?)?,
+        tokens_per_s: parse_f64_bits(j.get("tokens_per_s")?)?,
+        mj_per_token: parse_f64_bits(j.get("mj_per_token")?)?,
+    };
+    let state_hash =
+        u64::from_str_radix(j.get("state_hash")?.as_str()?.strip_prefix("0x")?, 16).ok()?;
+    Some(SearchResult { cand, obj, state_hash })
+}
+
+fn shard_path(dir: &Path, shard: u64) -> PathBuf {
+    dir.join(format!("shard-{shard:04}.jsonl"))
+}
+
+/// Serialize one complete shard file (header + records + footer).
+fn shard_text(
+    spec: &SearchSpec,
+    shard: u64,
+    shards: u64,
+    start: u64,
+    results: &[SearchResult],
+) -> String {
+    let header = Json::obj(vec![
+        ("t", Json::Str("header".into())),
+        ("kind", Json::Str(SHARD_KIND.into())),
+        ("schema", Json::Num(SHARD_SCHEMA as f64)),
+        ("shard", u64_str(shard)),
+        ("shards", u64_str(shards)),
+        ("start", u64_str(start)),
+        ("count", u64_str(results.len() as u64)),
+        ("search", spec.to_json()),
+    ]);
+    let mut out = header.compact();
+    out.push('\n');
+    for r in results {
+        out.push_str(&record_json(spec, r).compact());
+        out.push('\n');
+    }
+    let footer = Json::obj(vec![
+        ("t", Json::Str("footer".into())),
+        ("results", u64_str(results.len() as u64)),
+    ]);
+    out.push_str(&footer.compact());
+    out.push('\n');
+    out
+}
+
+/// Write a shard file atomically: whole shards or nothing, so a killed
+/// sweep never leaves a half-written file under the final name.
+fn write_shard(
+    dir: &Path,
+    spec: &SearchSpec,
+    shard: u64,
+    shards: u64,
+    start: u64,
+    results: &[SearchResult],
+) -> Result<()> {
+    let text = shard_text(spec, shard, shards, start, results);
+    let path = shard_path(dir, shard);
+    let tmp = dir.join(format!("shard-{shard:04}.jsonl.tmp"));
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Try to reuse an existing shard file.  `Ok(None)` means absent or
+/// truncated/corrupt records (re-evaluate and overwrite); a file whose
+/// header names a *different search* — or is not a shard file at all —
+/// is a hard error rather than something to silently clobber.
+fn read_shard(
+    dir: &Path,
+    spec: &SearchSpec,
+    shard: u64,
+    shards: u64,
+    expected: &[Candidate],
+) -> Result<Option<Vec<SearchResult>>> {
+    let path = shard_path(dir, shard);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .and_then(|l| Json::parse(l).ok())
+        .ok_or_else(|| anyhow!("refusing to overwrite '{}': unreadable header", path.display()))?;
+    if header.get("kind").and_then(|v| v.as_str()) != Some(SHARD_KIND) {
+        return Err(anyhow!(
+            "refusing to overwrite '{}': not a design-search shard file",
+            path.display()
+        ));
+    }
+    let same_search = header
+        .get("search")
+        .map(|s| s.compact() == spec.to_json().compact())
+        .unwrap_or(false);
+    let same_slot = header.get("shard").and_then(parse_u64_str) == Some(shard)
+        && header.get("shards").and_then(parse_u64_str) == Some(shards)
+        && header.get("schema").and_then(|v| v.as_u64()) == Some(SHARD_SCHEMA);
+    if !same_search || !same_slot {
+        return Err(anyhow!(
+            "refusing to resume from '{}': it records a different search",
+            path.display()
+        ));
+    }
+    // From here down, damage means "re-evaluate", not "give up".
+    let mut results = Vec::with_capacity(expected.len());
+    for line in lines {
+        let Ok(j) = Json::parse(line) else { return Ok(None) };
+        match j.get("t").and_then(|v| v.as_str()) {
+            Some("result") => match parse_record(&j) {
+                Some(r) => results.push(r),
+                None => return Ok(None),
+            },
+            Some("footer") => {
+                let n = j.get("results").and_then(parse_u64_str);
+                if n != Some(results.len() as u64) || results.len() != expected.len() {
+                    return Ok(None);
+                }
+                let ids_match = results.iter().zip(expected).all(|(r, c)| r.cand.id == c.id);
+                return Ok(if ids_match { Some(results) } else { None });
+            }
+            _ => return Ok(None),
+        }
+    }
+    Ok(None) // no footer: truncated
+}
+
+/// The front file's serialized lines plus its deterministic digest.
+fn front_lines(
+    spec: &SearchSpec,
+    shards: u64,
+    results: &[SearchResult],
+    front: &[SearchResult],
+) -> (Vec<String>, u64) {
+    let mut lines = Vec::with_capacity(front.len() + 2);
+    let header = Json::obj(vec![
+        ("t", Json::Str("header".into())),
+        ("kind", Json::Str(FRONT_KIND.into())),
+        ("schema", Json::Num(SHARD_SCHEMA as f64)),
+        ("candidates", u64_str(results.len() as u64)),
+        ("shards", u64_str(shards)),
+        ("search", spec.to_json()),
+    ]);
+    lines.push(header.compact());
+    let mut h = StateHash::new();
+    for r in front {
+        let line = record_json(spec, r).compact();
+        h.write_str(&line);
+        lines.push(line);
+    }
+    let hash = h.finish();
+    let footer = Json::obj(vec![
+        ("t", Json::Str("footer".into())),
+        ("front", u64_str(front.len() as u64)),
+        ("front_hash", Json::Str(format!("{hash:#018x}"))),
+    ]);
+    lines.push(footer.compact());
+    (lines, hash)
+}
+
+/// Mirror of the cluster driver's thread resolution: `0` = one worker
+/// per job, capped at the machine; always in `[1, jobs]`.
+fn resolve_workers(requested: usize, jobs: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { auto } else { requested };
+    t.clamp(1, jobs.max(1))
+}
+
+/// Successive halving over the full grid: `rungs` elimination rounds
+/// at geometrically growing session budgets, ranking each round by
+/// Pareto layer (then id) and keeping the better half.  Survivors are
+/// returned in id order for the full-budget persistent phase, so a
+/// halving sweep's records are bit-identical to the same candidates
+/// under an exhaustive sweep.
+fn halving_select(spec: &SearchSpec, rungs: u32, threads: usize) -> Result<Vec<Candidate>> {
+    let full_sessions = spec.base.resolve()?.scenario.sessions;
+    let mut survivors = spec.candidates();
+    let pool = spec.cost_cache.then(CachePool::new);
+    for r in 0..rungs {
+        if survivors.len() <= 1 {
+            break;
+        }
+        let budget = (full_sessions >> (rungs - r)).max(2);
+        let objs = evaluate_all(spec, &survivors, pool.as_ref(), Some(budget), threads)?;
+        let ranks = pareto_layers(&objs.iter().map(|r| r.obj).collect::<Vec<_>>());
+        let mut order: Vec<usize> = (0..survivors.len()).collect();
+        order.sort_by_key(|&i| (ranks[i], survivors[i].id));
+        let keep = survivors.len().div_ceil(2);
+        order.truncate(keep);
+        order.sort_unstable();
+        survivors = order.into_iter().map(|i| survivors[i]).collect();
+    }
+    Ok(survivors)
+}
+
+/// Evaluate a candidate slice on a scoped worker pool, preserving
+/// input order.  Results are order-stable for every thread count:
+/// workers claim indices atomically but write into their own slot.
+fn evaluate_all(
+    spec: &SearchSpec,
+    cands: &[Candidate],
+    pool: Option<&CachePool>,
+    sessions: Option<usize>,
+    threads: usize,
+) -> Result<Vec<SearchResult>> {
+    let workers = resolve_workers(threads, cands.len());
+    let slots: Vec<Mutex<Option<Result<SearchResult>>>> =
+        cands.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cands.len() {
+                    break;
+                }
+                let r = evaluate_candidate(spec, &cands[i], pool, sessions);
+                *slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
+        .map(|r| r.expect("every slot was claimed"))
+        .collect()
+}
+
+/// Run (or resume) a design search.  See the module doc for the
+/// persistence and determinism contract; `progress` fires once per
+/// shard as it settles (order is scheduling-dependent, contents are
+/// not).
+pub fn run_search(
+    spec: &SearchSpec,
+    opts: &RunOptions,
+    progress: &mut dyn FnMut(&ShardEvent),
+) -> Result<SearchOutcome> {
+    spec.validate()?;
+    let survivors = match spec.sampler {
+        SamplerKind::Halving { rungs } => halving_select(spec, rungs, opts.threads)?,
+        _ => spec.candidates(),
+    };
+    let n = survivors.len() as u64;
+    let shards = spec.shards.min(n).max(1);
+    let range = |s: u64| -> (usize, usize) {
+        ((s * n / shards) as usize, ((s + 1) * n / shards) as usize)
+    };
+
+    if let Some(dir) = &opts.out {
+        std::fs::create_dir_all(dir)?;
+    }
+
+    // Phase 1: reuse whatever valid shard files already exist.
+    let mut done: Vec<Option<Vec<SearchResult>>> = (0..shards).map(|_| None).collect();
+    let mut reused = 0;
+    if let Some(dir) = &opts.out {
+        for s in 0..shards {
+            let (lo, hi) = range(s);
+            if let Some(rs) = read_shard(dir, spec, s, shards, &survivors[lo..hi])? {
+                done[s as usize] = Some(rs);
+                reused += 1;
+                progress(&ShardEvent {
+                    shard: s,
+                    shards,
+                    outcome: ShardOutcome::Reused,
+                    candidates: (hi - lo) as u64,
+                });
+            }
+        }
+    }
+
+    // Phase 2: evaluate the gap, up to the `--max-shards` budget.
+    let missing: Vec<u64> = (0..shards).filter(|&s| done[s as usize].is_none()).collect();
+    let budget = opts.max_shards.unwrap_or(u64::MAX).min(missing.len() as u64) as usize;
+    let (pending, skipped) = missing.split_at(budget);
+    let pool = spec.cost_cache.then(CachePool::new);
+    let mut evaluated_candidates = 0;
+    if !pending.is_empty() {
+        let workers = resolve_workers(opts.threads, pending.len());
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let (tx, rx) = mpsc::channel::<(u64, Result<Vec<SearchResult>>)>();
+        let survivors = &survivors;
+        let pool_ref = pool.as_ref();
+        let dir = opts.out.as_deref();
+        std::thread::scope(|sc| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                sc.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= pending.len() {
+                        break;
+                    }
+                    let shard = pending[i];
+                    let (lo, hi) = range(shard);
+                    let result = survivors[lo..hi]
+                        .iter()
+                        .map(|c| evaluate_candidate(spec, c, pool_ref, None))
+                        .collect::<Result<Vec<_>>>()
+                        .and_then(|rs| {
+                            if let Some(d) = dir {
+                                write_shard(d, spec, shard, shards, lo as u64, &rs)?;
+                            }
+                            Ok(rs)
+                        });
+                    if tx.send((shard, result)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut first_err: Option<(u64, anyhow::Error)> = None;
+            for (shard, result) in rx {
+                match result {
+                    Ok(rs) => {
+                        let (lo, hi) = range(shard);
+                        evaluated_candidates += (hi - lo) as u64;
+                        done[shard as usize] = Some(rs);
+                        progress(&ShardEvent {
+                            shard,
+                            shards,
+                            outcome: ShardOutcome::Evaluated,
+                            candidates: (hi - lo) as u64,
+                        });
+                    }
+                    Err(e) => {
+                        // Keep the lowest-shard error for determinism.
+                        if first_err.as_ref().map(|(s, _)| shard < *s).unwrap_or(true) {
+                            first_err = Some((shard, e));
+                        }
+                    }
+                }
+            }
+            match first_err {
+                Some((_, e)) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+    }
+    for &s in skipped {
+        let (lo, hi) = range(s);
+        progress(&ShardEvent {
+            shard: s,
+            shards,
+            outcome: ShardOutcome::Skipped,
+            candidates: (hi - lo) as u64,
+        });
+    }
+
+    // Phase 3: assemble, extract the front, persist it when final.
+    let complete = done.iter().all(Option::is_some);
+    let mut results = Vec::with_capacity(n as usize);
+    for rs in done.iter().flatten() {
+        results.extend_from_slice(rs);
+    }
+    let (front, front_hash) = if complete {
+        let objs: Vec<Objectives> = results.iter().map(|r| r.obj).collect();
+        let front: Vec<SearchResult> =
+            pareto_front(&objs).into_iter().map(|i| results[i]).collect();
+        let (lines, hash) = front_lines(spec, shards, &results, &front);
+        if let Some(dir) = &opts.out {
+            let tmp = dir.join("front.jsonl.tmp");
+            let path = dir.join("front.jsonl");
+            std::fs::write(&tmp, lines.join("\n") + "\n")?;
+            std::fs::rename(&tmp, &path)?;
+        }
+        (front, hash)
+    } else {
+        (Vec::new(), 0)
+    };
+
+    Ok(SearchOutcome {
+        results,
+        front,
+        front_hash,
+        shards_total: shards,
+        shards_reused: reused,
+        shards_evaluated: pending.len() as u64,
+        shards_skipped: skipped.len() as u64,
+        evaluated_candidates,
+        candidates_total: n,
+        complete,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Placement;
+    use crate::serve::{QosAssignment, QosTier};
+
+    /// A 4-point sweep small enough for unit tests: 2 stream lengths ×
+    /// 2 sigmas on a single dp stack, 3 chat sessions.
+    fn tiny_spec() -> SearchSpec {
+        let d = SearchSpec::default();
+        SearchSpec {
+            base: crate::serve::ServeSpec { sessions: Some(3), ..d.base.clone() },
+            axes: crate::search::AxisSpec {
+                stream_lens: vec![64, 128],
+                sigmas: vec![0.0, 1.0],
+                stacks: vec![1],
+                placements: vec![Placement::DataParallel],
+                hops_ns: vec![40.0],
+                qos: vec![QosAssignment::Uniform(QosTier::Gold)],
+            },
+            shards: 2,
+            ..d
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("artemis-runner-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn in_memory_sweep_completes_with_a_front() {
+        let spec = tiny_spec();
+        let mut events = Vec::new();
+        let out = run_search(&spec, &RunOptions::default(), &mut |e| events.push(*e)).unwrap();
+        assert!(out.complete);
+        assert_eq!(out.results.len(), 4);
+        assert_eq!(out.shards_total, 2);
+        assert_eq!(events.len(), 2);
+        assert!(!out.front.is_empty() && out.front.len() <= 4);
+        assert_ne!(out.front_hash, 0);
+        // Results arrive in ascending candidate id order.
+        let ids: Vec<u64> = out.results.iter().map(|r| r.cand.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        // No front member is dominated by any result.
+        for f in &out.front {
+            assert!(out.results.iter().all(|r| !r.obj.dominates(&f.obj)));
+        }
+        // The noise axis can only lower accuracy at equal cost, so the
+        // noisy twin of a front point never beats it.
+        let quiet = out.results.iter().find(|r| r.cand.sigma == 0.0).unwrap();
+        let noisy = out.results.iter().find(|r| r.cand.sigma == 1.0).unwrap();
+        assert!(quiet.obj.accuracy >= noisy.obj.accuracy);
+    }
+
+    #[test]
+    fn persisted_sweep_reuses_shards_and_reproduces_bytes() {
+        let spec = tiny_spec();
+        let dir = tmpdir("reuse");
+        let opts = RunOptions { out: Some(dir.clone()), ..RunOptions::default() };
+        let a = run_search(&spec, &opts, &mut |_| {}).unwrap();
+        assert!(a.complete);
+        assert_eq!(a.shards_evaluated, 2);
+        let front_a = std::fs::read(dir.join("front.jsonl")).unwrap();
+        // Second invocation: everything reused, front re-written
+        // byte-identically.
+        let b = run_search(&spec, &opts, &mut |_| {}).unwrap();
+        assert!(b.complete);
+        assert_eq!(b.shards_reused, 2);
+        assert_eq!(b.shards_evaluated, 0);
+        assert_eq!(a.front_hash, b.front_hash);
+        assert_eq!(front_a, std::fs::read(dir.join("front.jsonl")).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn max_shards_pauses_then_resumes() {
+        let spec = tiny_spec();
+        let dir = tmpdir("pause");
+        let opts = RunOptions {
+            out: Some(dir.clone()),
+            max_shards: Some(1),
+            ..RunOptions::default()
+        };
+        let a = run_search(&spec, &opts, &mut |_| {}).unwrap();
+        assert!(!a.complete);
+        assert_eq!(a.shards_evaluated, 1);
+        assert_eq!(a.shards_skipped, 1);
+        assert!(a.front.is_empty() && a.front_hash == 0);
+        assert!(!dir.join("front.jsonl").exists(), "no front until complete");
+        let b = run_search(&spec, &opts, &mut |_| {}).unwrap();
+        assert!(b.complete);
+        assert_eq!(b.shards_reused, 1);
+        assert_eq!(b.shards_evaluated, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_shard_files_are_never_clobbered() {
+        let spec = tiny_spec();
+        let dir = tmpdir("foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("shard-0000.jsonl"), "this is not json\n").unwrap();
+        let opts = RunOptions { out: Some(dir.clone()), ..RunOptions::default() };
+        let err = run_search(&spec, &opts, &mut |_| {}).unwrap_err().to_string();
+        assert!(err.contains("unreadable header"), "{err}");
+        // A shard of a *different* search is a hard error too.
+        let mut other = spec.clone();
+        other.base.seed = 99;
+        let _ = std::fs::remove_dir_all(&dir);
+        run_search(&other, &opts, &mut |_| {}).unwrap();
+        let err = run_search(&spec, &opts, &mut |_| {}).unwrap_err().to_string();
+        assert!(err.contains("different search"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_shard_files_are_re_evaluated() {
+        let spec = tiny_spec();
+        let dir = tmpdir("truncated");
+        let opts = RunOptions { out: Some(dir.clone()), ..RunOptions::default() };
+        run_search(&spec, &opts, &mut |_| {}).unwrap();
+        // Chop the footer (and last record) off shard 1.
+        let path = dir.join("shard-0001.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let keep: Vec<&str> = text.lines().take(2).collect();
+        std::fs::write(&path, keep.join("\n") + "\n").unwrap();
+        let mut outcomes = Vec::new();
+        let b = run_search(&spec, &opts, &mut |e| outcomes.push((e.shard, e.outcome))).unwrap();
+        assert!(b.complete);
+        outcomes.sort();
+        assert_eq!(outcomes, vec![(0, ShardOutcome::Reused), (1, ShardOutcome::Evaluated)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn halving_keeps_the_budget_stable_front() {
+        let mut spec = tiny_spec();
+        spec.base.sessions = Some(5);
+        spec.sampler = SamplerKind::Halving { rungs: 2 };
+        let sh = run_search(&spec, &RunOptions::default(), &mut |_| {}).unwrap();
+        assert!(sh.complete);
+        assert!(
+            sh.candidates_total < spec.grid_size(),
+            "halving must eliminate someone ({} of {})",
+            sh.candidates_total,
+            spec.grid_size()
+        );
+        let mut full = spec.clone();
+        full.sampler = SamplerKind::Grid;
+        let ex = run_search(&full, &RunOptions::default(), &mut |_| {}).unwrap();
+        // Survivor results are bit-identical to the exhaustive sweep's
+        // for the same ids, and the halving front is a subset of the
+        // exhaustive front (the fidelity axes order identically at
+        // every session budget).
+        for r in &sh.results {
+            let twin = ex.results.iter().find(|e| e.cand.id == r.cand.id).unwrap();
+            assert_eq!(r.state_hash, twin.state_hash);
+            assert_eq!(r.obj.accuracy.to_bits(), twin.obj.accuracy.to_bits());
+        }
+        let ex_front: Vec<u64> = ex.front.iter().map(|r| r.cand.id).collect();
+        for f in &sh.front {
+            assert!(ex_front.contains(&f.cand.id), "{} not in exhaustive front", f.cand.id);
+        }
+    }
+}

@@ -71,6 +71,8 @@ pub use scheduler::{
     ReplicaSim, SchedulerConfig, ServeGenReport, SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
-pub use spec::{meta_for, ClusterSpec, ResolvedServe, ServeSpec, TraceSpec, SPEC_VERSION};
+pub use spec::{
+    meta_for, ClusterSpec, FidelitySpec, ResolvedServe, ServeSpec, TraceSpec, SPEC_VERSION,
+};
 
 pub use crate::fidelity::QosTier;

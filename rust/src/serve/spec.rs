@@ -23,7 +23,9 @@
 //! `serve-gen` and the serve daemon's `submit` command share this type,
 //! so a request captured from one can be replayed through the other.
 
-use crate::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement, SloSpec};
+use crate::config::{
+    ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement, SloSpec, StackLinkParams,
+};
 use crate::serve::{Policy, QosAssignment, RoutePolicy, Scenario, SchedulerConfig};
 use crate::telemetry::{TraceConfig, TraceMeta};
 use crate::util::cli::{self, CliOption};
@@ -47,12 +49,16 @@ pub const VALUE_FLAGS: &[&str] = &[
     "--policy",
     "--engine",
     "--qos",
+    "--stream-len",
+    "--sigma",
     "--trace",
     "--slo",
     "--trace-window",
     "--stacks",
     "--placement",
     "--route",
+    "--link-hop",
+    "--link-width",
     "--threads",
     "--config",
     "--spec",
@@ -72,16 +78,23 @@ pub struct ClusterSpec {
     pub threads: usize,
     /// Shared memoized cost cache (`--no-cost-cache` turns it off).
     pub cost_cache: bool,
+    /// Stack-to-stack per-hop latency (`--link-hop`), ns.
+    pub link_hop_ns: f64,
+    /// Stack-to-stack link width (`--link-width`), bits per beat.
+    pub link_width_bits: u64,
 }
 
 impl Default for ClusterSpec {
     fn default() -> Self {
+        let link = StackLinkParams::default();
         Self {
             stacks: 1,
             placement: Placement::DataParallel,
             route: RoutePolicy::LeastLoaded,
             threads: 0,
             cost_cache: true,
+            link_hop_ns: link.hop_ns,
+            link_width_bits: link.width_bits,
         }
     }
 }
@@ -89,9 +102,34 @@ impl Default for ClusterSpec {
 impl ClusterSpec {
     /// The driver-level [`ClusterConfig`] this shape resolves to.
     pub fn to_cluster_config(&self, engine: EngineStrategy) -> ClusterConfig {
+        let link = StackLinkParams {
+            hop_ns: self.link_hop_ns,
+            width_bits: self.link_width_bits,
+            ..StackLinkParams::default()
+        };
         ClusterConfig::new(self.stacks, self.placement)
             .with_threads(self.threads)
             .with_engine(engine)
+            .with_link(link)
+    }
+}
+
+/// Serving-fidelity operating-point override: moves the **gold** tier
+/// off the paper's 128-bit noise-free reference.  The design-search
+/// stream-length × noise axes; absent means the reference point (and a
+/// present `(128, 0.0)` section is bit-identical to absent — the gold
+/// factors reconstruct exactly 1.0 either way).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FidelitySpec {
+    /// Uniform gold-tier SC stream length (`--stream-len`), bits.
+    pub stream_len: u32,
+    /// Gold-tier per-step analog charge noise (`--sigma`), bit-line units.
+    pub sigma: f64,
+}
+
+impl Default for FidelitySpec {
+    fn default() -> Self {
+        Self { stream_len: 128, sigma: 0.0 }
     }
 }
 
@@ -134,6 +172,8 @@ pub struct ServeSpec {
     pub engine: EngineStrategy,
     /// QoS assignment override (`--qos`).
     pub qos: Option<QosAssignment>,
+    /// Gold-tier fidelity operating point (`--stream-len`/`--sigma`).
+    pub fidelity: Option<FidelitySpec>,
     /// Stack config file path (`--config`); default machine otherwise.
     pub config: Option<String>,
     pub cluster: Option<ClusterSpec>,
@@ -151,6 +191,7 @@ impl Default for ServeSpec {
             policy: Policy::Fifo,
             engine: EngineStrategy::Tick,
             qos: None,
+            fidelity: None,
             config: None,
             cluster: None,
             trace: TraceSpec::default(),
@@ -253,6 +294,25 @@ impl ServeSpec {
         if let Some(q) = flag_value(args, "--qos") {
             spec.qos = Some(QosAssignment::parse_or_err(&q).map_err(|m| anyhow!(m))?);
         }
+        // Either fidelity flag (or an inherited section) switches the
+        // gold tier off the 128-bit noise-free reference point.
+        let fidelity_flag = args.iter().any(|a| a == "--stream-len" || a == "--sigma");
+        if fidelity_flag || spec.fidelity.is_some() {
+            let mut f = spec.fidelity.unwrap_or_default();
+            if let Some(v) = flag_value(args, "--stream-len") {
+                f.stream_len = v.parse()?;
+            }
+            if !(8..=1024).contains(&f.stream_len) {
+                return Err(anyhow!("--stream-len must be between 8 and 1024 bits"));
+            }
+            if let Some(v) = flag_value(args, "--sigma") {
+                f.sigma = v.parse()?;
+            }
+            if !f.sigma.is_finite() || f.sigma < 0.0 {
+                return Err(anyhow!("--sigma must be a finite non-negative noise level"));
+            }
+            spec.fidelity = Some(f);
+        }
         if let Some(p) = flag_value(args, "--trace") {
             spec.trace.path = Some(p);
         }
@@ -265,6 +325,12 @@ impl ServeSpec {
         if !spec.trace.window_ms.is_finite() || spec.trace.window_ms <= 0.0 {
             return Err(anyhow!("--trace-window must be a positive number of milliseconds"));
         }
+        // The telemetry layer works in nanoseconds; a window that
+        // overflows the ms→ns conversion would hand the window set an
+        // infinite width (`telemetry/window.rs` divides by it).
+        if !(spec.trace.window_ms * 1e6).is_finite() {
+            return Err(anyhow!("--trace-window is too large to express in nanoseconds"));
+        }
         // Any scale-out flag (or an inherited cluster section) switches
         // `--stacks` from "one bigger machine" to "D cluster stacks".
         let cluster_flag = args.iter().any(|a| {
@@ -273,6 +339,8 @@ impl ServeSpec {
                 || a == "--route"
                 || a == "--no-cost-cache"
                 || a == "--threads"
+                || a == "--link-hop"
+                || a == "--link-width"
         });
         if cluster_flag || spec.cluster.is_some() {
             let mut cl = spec.cluster.unwrap_or_default();
@@ -293,6 +361,18 @@ impl ServeSpec {
             }
             if let Some(t) = flag_value(args, "--threads") {
                 cl.threads = t.parse()?;
+            }
+            if let Some(v) = flag_value(args, "--link-hop") {
+                cl.link_hop_ns = v.parse()?;
+            }
+            if !cl.link_hop_ns.is_finite() || cl.link_hop_ns < 0.0 {
+                return Err(anyhow!("--link-hop must be a finite non-negative number of ns"));
+            }
+            if let Some(v) = flag_value(args, "--link-width") {
+                cl.link_width_bits = v.parse()?;
+            }
+            if cl.link_width_bits == 0 {
+                return Err(anyhow!("--link-width must be positive"));
             }
             spec.cluster = Some(cl);
         }
@@ -338,12 +418,20 @@ impl ServeSpec {
 
     /// The per-stack machine config: `--config` file, else the default
     /// machine (the historical cluster-branch semantics — `--stacks`
-    /// never scales the per-stack machine in serving mode).
+    /// never scales the per-stack machine in serving mode).  A
+    /// `fidelity` section wins over the file's gold-tier operating
+    /// point, so every execution path (serve-gen, daemon, search)
+    /// applies the override identically.
     pub fn load_stack_config(&self) -> Result<ArtemisConfig> {
-        Ok(match &self.config {
+        let mut cfg = match &self.config {
             Some(path) => ArtemisConfig::from_json(&std::fs::read_to_string(path)?)?,
             None => ArtemisConfig::default(),
-        })
+        };
+        if let Some(f) = &self.fidelity {
+            cfg.fidelity.gold_stream_len = f.stream_len;
+            cfg.fidelity.gold_sigma = f.sigma;
+        }
+        Ok(cfg)
     }
 
     /// JSON form.  Enums travel as their `Display` spelling (each
@@ -366,6 +454,15 @@ impl ServeSpec {
                 ("route", Json::Str(c.route.to_string())),
                 ("threads", Json::Num(c.threads as f64)),
                 ("cost_cache", Json::Bool(c.cost_cache)),
+                ("link_hop_ns", Json::Num(c.link_hop_ns)),
+                ("link_width_bits", u64_str(c.link_width_bits)),
+            ]),
+        };
+        let fidelity = match &self.fidelity {
+            None => Json::Null,
+            Some(f) => Json::obj(vec![
+                ("stream_len", Json::Num(f.stream_len as f64)),
+                ("sigma", Json::Num(f.sigma)),
             ]),
         };
         Json::obj(vec![
@@ -385,6 +482,7 @@ impl ServeSpec {
                     None => Json::Null,
                 },
             ),
+            ("fidelity", fidelity),
             ("config", opt_str(&self.config)),
             ("cluster", cluster),
             (
@@ -465,6 +563,23 @@ impl ServeSpec {
         if let Some(s) = str_field("qos")? {
             spec.qos = Some(QosAssignment::parse_or_err(&s).map_err(|m| anyhow!(m))?);
         }
+        if let Some(f) = field("fidelity") {
+            if f.as_obj().is_none() {
+                return Err(anyhow!("spec.fidelity must be an object"));
+            }
+            let mut fs = FidelitySpec::default();
+            if let Some(v) = f.get("stream_len") {
+                fs.stream_len = v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("spec.fidelity.stream_len must be an unsigned integer"))?
+                    as u32;
+            }
+            if let Some(v) = f.get("sigma") {
+                fs.sigma =
+                    v.as_f64().ok_or_else(|| anyhow!("spec.fidelity.sigma must be a number"))?;
+            }
+            spec.fidelity = Some(fs);
+        }
         spec.config = str_field("config")?;
         if let Some(c) = field("cluster") {
             if c.as_obj().is_none() {
@@ -491,6 +606,16 @@ impl ServeSpec {
                 cl.cost_cache = v
                     .as_bool()
                     .ok_or_else(|| anyhow!("spec.cluster.cost_cache must be a bool"))?;
+            }
+            if let Some(v) = c.get("link_hop_ns") {
+                cl.link_hop_ns = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("spec.cluster.link_hop_ns must be a number"))?;
+            }
+            if let Some(v) = c.get("link_width_bits") {
+                cl.link_width_bits = parse_u64_str(v).ok_or_else(|| {
+                    anyhow!("spec.cluster.link_width_bits must be an unsigned integer")
+                })?;
             }
             spec.cluster = Some(cl);
         }
@@ -624,6 +749,87 @@ mod tests {
     }
 
     #[test]
+    fn trace_window_rejects_degenerate_values() {
+        // telemetry/window.rs divides by window_ns; every spelling that
+        // would hand it a zero, negative, NaN or infinite width must be
+        // rejected at parse time with the canonical error.
+        let err = |args: &[&str]| ServeSpec::from_args(&sv(args)).unwrap_err().to_string();
+        for bad in ["0", "-5", "nan", "NaN", "-0.0", "inf"] {
+            assert_eq!(
+                err(&["serve-gen", "--trace-window", bad]),
+                "--trace-window must be a positive number of milliseconds",
+                "--trace-window {bad}"
+            );
+        }
+        // Finite in ms but infinite after the ms -> ns conversion.
+        assert_eq!(
+            err(&["serve-gen", "--trace-window", "1e308"]),
+            "--trace-window is too large to express in nanoseconds"
+        );
+        // The raw-JSON path funnels through the same validation.
+        let bad = ServeSpec {
+            trace: TraceSpec { window_ms: 0.0, ..TraceSpec::default() },
+            ..ServeSpec::default()
+        };
+        assert_eq!(
+            bad.validate().unwrap_err().to_string(),
+            "--trace-window must be a positive number of milliseconds"
+        );
+    }
+
+    #[test]
+    fn fidelity_and_link_flags_validate() {
+        let err = |args: &[&str]| ServeSpec::from_args(&sv(args)).unwrap_err().to_string();
+        assert_eq!(
+            err(&["serve-gen", "--stream-len", "4"]),
+            "--stream-len must be between 8 and 1024 bits"
+        );
+        assert_eq!(
+            err(&["serve-gen", "--stream-len", "2048"]),
+            "--stream-len must be between 8 and 1024 bits"
+        );
+        assert_eq!(
+            err(&["serve-gen", "--sigma", "-1"]),
+            "--sigma must be a finite non-negative noise level"
+        );
+        assert_eq!(
+            err(&["serve-gen", "--sigma", "nan"]),
+            "--sigma must be a finite non-negative noise level"
+        );
+        assert_eq!(
+            err(&["serve-gen", "--link-hop", "-3"]),
+            "--link-hop must be a finite non-negative number of ns"
+        );
+        assert_eq!(err(&["serve-gen", "--link-width", "0"]), "--link-width must be positive");
+        // Either fidelity flag creates the section; the other axis
+        // keeps its reference default.
+        let s = ServeSpec::from_args(&sv(&["serve-gen", "--sigma", "1.5"])).unwrap();
+        assert_eq!(s.fidelity, Some(FidelitySpec { stream_len: 128, sigma: 1.5 }));
+        let s = ServeSpec::from_args(&sv(&["serve-gen", "--stream-len", "64"])).unwrap();
+        assert_eq!(s.fidelity, Some(FidelitySpec { stream_len: 64, sigma: 0.0 }));
+        assert!(s.cluster.is_none(), "fidelity flags alone must not create a cluster section");
+        // A link flag creates the cluster section (single-stack shape).
+        let s = ServeSpec::from_args(&sv(&["serve-gen", "--link-hop", "80"])).unwrap();
+        let cl = s.cluster.unwrap();
+        assert_eq!(cl.stacks, 1);
+        assert_eq!(cl.link_hop_ns, 80.0);
+        assert_eq!(cl.link_width_bits, 512);
+    }
+
+    #[test]
+    fn fidelity_override_reaches_the_stack_config() {
+        let s =
+            ServeSpec::from_args(&sv(&["serve-gen", "--stream-len", "32", "--sigma", "2.0"]))
+                .unwrap();
+        let cfg = s.load_stack_config().unwrap();
+        assert_eq!(cfg.fidelity.gold_stream_len, 32);
+        assert_eq!(cfg.fidelity.gold_sigma.to_bits(), 2.0f64.to_bits());
+        // No section -> the untouched default machine.
+        let cfg = ServeSpec::default().load_stack_config().unwrap();
+        assert_eq!(cfg.fidelity.gold_stream_len, 128);
+    }
+
+    #[test]
     fn unknown_flag_rejected_with_did_you_mean() {
         let err = ServeSpec::from_args(&sv(&["serve-gen", "--polcy", "spf"])).unwrap_err();
         assert_eq!(err.to_string(), "unknown flag '--polcy' (did you mean '--policy'?)");
@@ -651,6 +857,19 @@ mod tests {
                 "gold:ttft=100ms,itl=10ms;bronze:ttft=2s",
                 "--trace-window",
                 "12.5",
+            ],
+            vec![
+                "serve-gen",
+                "--stream-len",
+                "48",
+                "--sigma",
+                "0.75",
+                "--stacks",
+                "3",
+                "--link-hop",
+                "62.5",
+                "--link-width",
+                "256",
             ],
         ] {
             let s = ServeSpec::from_args(&sv(&args)).unwrap();

@@ -369,4 +369,33 @@ mod tests {
         let total: u64 = a.windows().values().map(|w| w.tokens).sum();
         assert_eq!(total, 4 + MAX_WINDOWS as u64 + 1);
     }
+
+    #[test]
+    fn index_math_is_total_at_extreme_timestamps() {
+        // `idx` must stay well-defined for every float a caller can
+        // produce: negative and NaN clamp to window 0, huge and infinite
+        // timestamps saturate at u64::MAX instead of wrapping.  This
+        // pins the float→integer cast semantics the decimation relies
+        // on (Rust's `as` saturates, it does not UB or wrap).
+        let mut ws = WindowSet::new(10.0);
+        assert_eq!(ws.idx(-5.0), 0);
+        assert_eq!(ws.idx(f64::NAN), 0);
+        assert_eq!(ws.idx(0.0), 0);
+        assert_eq!(ws.idx(9.999), 0);
+        assert_eq!(ws.idx(10.0), 1);
+        assert_eq!(ws.idx(f64::MAX), u64::MAX);
+        assert_eq!(ws.idx(f64::INFINITY), u64::MAX);
+        // And `slot` actually lands a countable window there.
+        ws.slot(f64::INFINITY).arrivals += 1;
+        assert_eq!(ws.windows().get(&u64::MAX).map(|w| w.arrivals), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "window width must be positive")]
+    fn zero_window_width_is_rejected_at_construction() {
+        // The serve layer validates `--trace-window` before it ever gets
+        // here; this assert is the last line of defence against a
+        // division by zero in `idx`.
+        let _ = WindowSet::new(0.0);
+    }
 }

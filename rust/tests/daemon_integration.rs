@@ -132,6 +132,19 @@ fn wait_state(c: &mut Client, job: u64, want: &str) -> Json {
     panic!("job {job} never reached '{want}'");
 }
 
+/// Like [`wait_state`] but without the failed-is-fatal shortcut, for
+/// tests that *expect* the failure.
+fn wait_state_any(c: &mut Client, job: u64, want: &str) -> Json {
+    for _ in 0..600 {
+        let s = status(c, job);
+        if s.get("state").and_then(|v| v.as_str()) == Some(want) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("job {job} never reached '{want}'");
+}
+
 /// The shared request: a 2-stack rr-routed chat campaign on the fast
 /// 2-layer model, parameterized over engine and placement.
 fn make_spec(engine: &str, placement: &str) -> ServeSpec {
@@ -254,6 +267,43 @@ fn snapshot_kill_restore_lands_on_the_uninterrupted_state_hash() {
             "daemon run diverged from the in-process driver ({engine}/{placement})"
         );
     }
+}
+
+#[test]
+fn panicking_job_poisons_nothing_the_daemon_still_needs() {
+    // Regression for the lock-poisoning hang: a worker that panics while
+    // holding the jobs mutex used to take every later `status`, `submit`
+    // and `shutdown` down with it.  The daemon must park the job in
+    // `failed` (with the panic payload) and keep serving.
+    let daemon = Daemon::start();
+    let mut c = daemon.connect();
+    let spec = make_spec("tick", "dp");
+
+    // `inject_panic` is the daemon's test-only detonator: the worker
+    // panics at the given unit count *inside* the status update, i.e.
+    // while the jobs lock is held.
+    let submit = Json::obj(vec![
+        ("cmd", Json::Str("submit".into())),
+        ("spec", spec.to_json()),
+        ("inject_panic", Json::Num(1.0)),
+    ]);
+    let r = c.ok(&submit);
+    let crashed = num_field(&r, "job");
+    let s = wait_state_any(&mut c, crashed, "failed");
+    let err = s.get("error").and_then(|v| v.as_str()).expect("error field");
+    assert!(err.contains("panicked"), "unexpected error: {err}");
+
+    // The same connection keeps working, and a fresh job runs to
+    // completion on the recovered lock.
+    let submit = Json::obj(vec![("cmd", Json::Str("submit".into())), ("spec", spec.to_json())]);
+    let r = c.ok(&submit);
+    let job = num_field(&r, "job");
+    let done = wait_state(&mut c, job, "done");
+    assert!(!hash_field(&done).is_empty());
+    // Status on the crashed job still answers too.
+    let s = status(&mut c, crashed);
+    assert_eq!(s.get("state").and_then(|v| v.as_str()), Some("failed"));
+    c.ok(&Json::obj(vec![("cmd", Json::Str("shutdown".into()))]));
 }
 
 #[test]

@@ -1,0 +1,232 @@
+//! Determinism and correctness properties of the design-search engine.
+//!
+//! The contract under test (DESIGN.md §Design-search):
+//!
+//! * Pareto extraction is *exact* — set-identical to a brute-force
+//!   dominance scan.
+//! * A killed-and-resumed sweep converges to byte-identical shard files
+//!   and front as an uninterrupted run, at every `--threads` value.
+//! * Successive halving returns records bit-identical to the exhaustive
+//!   sweep's for the surviving ids, and its front is a subset of the
+//!   exhaustive front.
+//! * Every persisted record's embedded `ServeSpec` replays through the
+//!   plain cluster path (`serve-gen --spec`) to the same `state_hash`.
+//! * The sweep-shared cost cache never changes a result bit.
+
+use artemis::cluster::run_cluster;
+use artemis::config::Placement;
+use artemis::search::{
+    pareto_front, run_search, AxisSpec, Objectives, RunOptions, SamplerKind, SearchSpec,
+};
+use artemis::serve::{QosAssignment, QosTier, ServeSpec};
+use artemis::util::XorShift64;
+use std::path::PathBuf;
+
+/// A 4-point sweep (2 stream lengths × 2 noise levels, one dp stack,
+/// 3 chat sessions) split unevenly over 3 shards.
+fn tiny_spec() -> SearchSpec {
+    let d = SearchSpec::default();
+    SearchSpec {
+        base: ServeSpec { sessions: Some(3), ..d.base.clone() },
+        axes: AxisSpec {
+            stream_lens: vec![32, 128],
+            sigmas: vec![0.0, 2.0],
+            stacks: vec![1],
+            placements: vec![Placement::DataParallel],
+            hops_ns: vec![40.0],
+            qos: vec![QosAssignment::Uniform(QosTier::Gold)],
+        },
+        shards: 3,
+        ..d
+    }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("artemis-search-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn read(p: PathBuf) -> Vec<u8> {
+    std::fs::read(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+#[test]
+fn front_extraction_matches_brute_force() {
+    // Synthetic objective cloud: the extractor must agree exactly with
+    // the O(n²) dominance definition.
+    let mut rng = XorShift64::new(7);
+    let objs: Vec<Objectives> = (0..64)
+        .map(|_| Objectives {
+            accuracy: rng.below(1000) as f64 / 1000.0,
+            tokens_per_s: rng.below(1000) as f64 + 1.0,
+            mj_per_token: rng.below(1000) as f64 / 10.0 + 0.1,
+        })
+        .collect();
+    let front = pareto_front(&objs);
+    assert!(!front.is_empty());
+    for (i, o) in objs.iter().enumerate() {
+        let dominated = objs.iter().any(|p| p.dominates(o));
+        assert_eq!(!dominated, front.contains(&i), "membership of index {i}");
+    }
+    // Same input, same front — extraction is deterministic.
+    assert_eq!(front, pareto_front(&objs));
+}
+
+#[test]
+fn resumed_sweep_is_byte_identical_to_uninterrupted() {
+    let spec = tiny_spec();
+    let full_dir = tmpdir("full");
+    let full_opts = RunOptions { out: Some(full_dir.clone()), ..RunOptions::default() };
+    let full = run_search(&spec, &full_opts, &mut |_| {}).unwrap();
+    assert!(full.complete);
+
+    // "Kill" a second sweep after every shard by budgeting one shard per
+    // invocation; the last call assembles the front from reused files.
+    let step_dir = tmpdir("step");
+    let step_opts = RunOptions {
+        out: Some(step_dir.clone()),
+        threads: 2,
+        max_shards: Some(1),
+    };
+    let mut last = run_search(&spec, &step_opts, &mut |_| {}).unwrap();
+    let mut rounds = 1;
+    while !last.complete {
+        last = run_search(&spec, &step_opts, &mut |_| {}).unwrap();
+        rounds += 1;
+        assert!(rounds <= 8, "resume failed to converge");
+    }
+    assert_eq!(last.front_hash, full.front_hash);
+    for s in 0..spec.shards.min(spec.grid_size()) {
+        let name = format!("shard-{s:04}.jsonl");
+        assert_eq!(read(full_dir.join(&name)), read(step_dir.join(&name)), "{name}");
+    }
+    assert_eq!(read(full_dir.join("front.jsonl")), read(step_dir.join("front.jsonl")));
+    let _ = std::fs::remove_dir_all(&full_dir);
+    let _ = std::fs::remove_dir_all(&step_dir);
+}
+
+#[test]
+fn sweep_files_are_stable_across_thread_counts() {
+    let spec = tiny_spec();
+    let serial_dir = tmpdir("serial");
+    let wide_dir = tmpdir("wide");
+    let serial = run_search(
+        &spec,
+        &RunOptions { out: Some(serial_dir.clone()), threads: 1, ..RunOptions::default() },
+        &mut |_| {},
+    )
+    .unwrap();
+    let wide = run_search(
+        &spec,
+        &RunOptions { out: Some(wide_dir.clone()), threads: 3, ..RunOptions::default() },
+        &mut |_| {},
+    )
+    .unwrap();
+    assert_eq!(serial.front_hash, wide.front_hash);
+    for s in 0..spec.shards.min(spec.grid_size()) {
+        let name = format!("shard-{s:04}.jsonl");
+        assert_eq!(read(serial_dir.join(&name)), read(wide_dir.join(&name)), "{name}");
+    }
+    assert_eq!(read(serial_dir.join("front.jsonl")), read(wide_dir.join("front.jsonl")));
+    let _ = std::fs::remove_dir_all(&serial_dir);
+    let _ = std::fs::remove_dir_all(&wide_dir);
+}
+
+#[test]
+fn halving_front_is_a_subset_of_the_exhaustive_front() {
+    let halving =
+        SearchSpec { sampler: SamplerKind::Halving { rungs: 2 }, ..tiny_spec() };
+    let sh = run_search(&halving, &RunOptions::default(), &mut |_| {}).unwrap();
+    assert!(sh.complete);
+    assert!(sh.candidates_total < halving.grid_size(), "halving must eliminate someone");
+
+    let exhaustive = SearchSpec { sampler: SamplerKind::Grid, ..halving.clone() };
+    let ex = run_search(&exhaustive, &RunOptions::default(), &mut |_| {}).unwrap();
+    // Survivors were re-evaluated at the full budget, so their records
+    // are bit-identical to the exhaustive sweep's.
+    for r in &sh.results {
+        let twin = ex.results.iter().find(|e| e.cand.id == r.cand.id).unwrap();
+        assert_eq!(r.state_hash, twin.state_hash, "candidate {}", r.cand.id);
+        assert_eq!(r.obj.accuracy.to_bits(), twin.obj.accuracy.to_bits());
+        assert_eq!(r.obj.tokens_per_s.to_bits(), twin.obj.tokens_per_s.to_bits());
+        assert_eq!(r.obj.mj_per_token.to_bits(), twin.obj.mj_per_token.to_bits());
+    }
+    let ex_front: Vec<u64> = ex.front.iter().map(|r| r.cand.id).collect();
+    for f in &sh.front {
+        assert!(ex_front.contains(&f.cand.id), "{} not in exhaustive front", f.cand.id);
+    }
+}
+
+#[test]
+fn record_specs_replay_to_the_same_state_hash() {
+    // Acceptance check: a sweep record's embedded ServeSpec, replayed
+    // through the plain `serve-gen --spec` cluster path (JSON round-trip
+    // included), lands on the record's state_hash.
+    let spec = tiny_spec();
+    let out = run_search(&spec, &RunOptions::default(), &mut |_| {}).unwrap();
+    assert!(out.complete && !out.front.is_empty());
+    for r in &out.front {
+        let embedded = spec.candidate_spec(&r.cand);
+        let cspec = ServeSpec::from_json(&embedded.to_json()).unwrap();
+        assert_eq!(cspec, embedded, "candidate spec JSON round-trip");
+        let cfg = cspec.load_stack_config().unwrap();
+        let resolved = cspec.resolve().unwrap();
+        let trace = resolved.scenario.generate(cspec.seed);
+        let sched = cspec.sched(resolved.batch);
+        let cl = cspec.cluster.expect("candidate specs carry a cluster section");
+        let cluster = cl.to_cluster_config(cspec.engine);
+        let report = run_cluster(
+            &cfg,
+            &resolved.scenario.model,
+            &trace,
+            &cluster,
+            &sched,
+            cl.route,
+            cl.cost_cache,
+        );
+        assert_eq!(report.state_hash(), r.state_hash, "candidate {}", r.cand.id);
+    }
+}
+
+#[test]
+fn shared_cost_cache_never_changes_a_bit() {
+    let cached = tiny_spec();
+    let uncached = SearchSpec { cost_cache: false, ..cached.clone() };
+    let a = run_search(&cached, &RunOptions::default(), &mut |_| {}).unwrap();
+    let b = run_search(&uncached, &RunOptions::default(), &mut |_| {}).unwrap();
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.cand.id, y.cand.id);
+        assert_eq!(x.state_hash, y.state_hash, "candidate {}", x.cand.id);
+        assert_eq!(x.obj.accuracy.to_bits(), y.obj.accuracy.to_bits());
+        assert_eq!(x.obj.tokens_per_s.to_bits(), y.obj.tokens_per_s.to_bits());
+        assert_eq!(x.obj.mj_per_token.to_bits(), y.obj.mj_per_token.to_bits());
+    }
+    // Same objectives, same front membership (the front *files* differ
+    // only through the embedded spec's cost_cache flag).
+    let fa: Vec<u64> = a.front.iter().map(|r| r.cand.id).collect();
+    let fb: Vec<u64> = b.front.iter().map(|r| r.cand.id).collect();
+    assert_eq!(fa, fb);
+}
+
+#[test]
+fn search_spec_round_trips_and_rejects_bad_input() {
+    let s = tiny_spec();
+    let j = s.to_json();
+    let back = SearchSpec::from_json(&j).unwrap();
+    assert_eq!(back, s);
+    assert_eq!(back.to_json().compact(), j.compact());
+
+    let args = |v: &[&str]| v.iter().map(|t| t.to_string()).collect::<Vec<String>>();
+    let err = SearchSpec::from_args(&args(&["--shards", "0"])).unwrap_err().to_string();
+    assert!(err.contains("--shards must be positive"), "{err}");
+    let err = SearchSpec::from_args(&args(&["--stream-lens", "4"])).unwrap_err().to_string();
+    assert!(err.contains("between 8 and 1024"), "{err}");
+    let err = SearchSpec::from_args(&args(&["--bogus-flag", "1"])).unwrap_err().to_string();
+    assert!(err.contains("--bogus-flag"), "{err}");
+    let err = SearchSpec::from_args(&args(&["--samples", "4", "--rungs", "2"]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("different samplers"), "{err}");
+}
