@@ -7,10 +7,12 @@
 //! snapshot request, advance again — so [`Campaign`] re-packages the
 //! serial driving loop as an explicit state machine:
 //!
-//! * **Arrival phase** (`next_arrival < order.len()`): each
-//!   [`Campaign::step`] advances every replica to the next arrival,
-//!   routes it against live load, and hands it over — exactly one
-//!   iteration of the one-shot serial loop.
+//! * **Arrival phase** (arrivals remain): each [`Campaign::step`]
+//!   advances every replica to the next arrival, routes it against
+//!   live load, and hands it over — exactly one iteration of the
+//!   one-shot serial loop.  Arrivals come from a materialized slice
+//!   ([`Campaign::new`]) or a lazy seeded stream
+//!   ([`Campaign::new_streamed`]) — the routed sequence is identical.
 //! * **Drain phase**: replicas run to completion in index order,
 //!   `max_ticks` scheduler ticks at a time
 //!   ([`ReplicaSim::step_ticks`]).
@@ -33,23 +35,79 @@
 //! restored campaign continues the exact tick sequence and lands on
 //! the same state hash as the uninterrupted run.
 
+use std::borrow::Cow;
+
 use crate::config::{ArtemisConfig, ClusterConfig, TransformerModel};
 use crate::serve::{
-    Phase, PhaseProfile, PhaseTimer, ReplicaSim, RoutePolicy, Router, SchedulerConfig,
-    SessionSpec,
+    is_arrival_sorted, Phase, PhaseProfile, PhaseTimer, ReplicaSim, RoutePolicy, Router,
+    SchedulerConfig, SessionSpec, TraceCursor, TraceStream,
 };
 use crate::telemetry::{Trace, TraceConfig, TraceMeta};
-use crate::util::json::{parse_u64_str, u64_str, Json};
+use crate::util::json::{f64_bits, parse_f64_bits, parse_u64_str, u64_str, Json};
 
 use super::{assemble_report, build_replicas, ClusterReport};
+
+/// Where a campaign's arrivals come from: a materialized trace slice
+/// (borrowed when already `(arrival, id)`-sorted, cloned only to sort)
+/// or a lazy seeded [`TraceStream`] whose cursor travels with
+/// snapshots.  Either way the routed sequence is identical.
+enum Arrivals<'a> {
+    Order { order: Cow<'a, [SessionSpec]>, next: usize },
+    Stream { stream: TraceStream },
+}
+
+impl Arrivals<'_> {
+    fn next(&mut self) -> Option<SessionSpec> {
+        match self {
+            Arrivals::Order { order, next } => {
+                let s = order.get(*next).copied();
+                if s.is_some() {
+                    *next += 1;
+                }
+                s
+            }
+            Arrivals::Stream { stream } => stream.next(),
+        }
+    }
+
+    /// Arrivals already routed.
+    fn routed(&self) -> usize {
+        match self {
+            Arrivals::Order { next, .. } => *next,
+            Arrivals::Stream { stream } => stream.emitted() as usize,
+        }
+    }
+
+    /// Total arrivals the campaign will route.
+    fn total(&self) -> usize {
+        match self {
+            Arrivals::Order { order, .. } => order.len(),
+            Arrivals::Stream { stream } => stream.total() as usize,
+        }
+    }
+}
+
+fn cursor_to_json(c: &TraceCursor) -> Json {
+    Json::obj(vec![
+        ("rng", u64_str(c.rng_state)),
+        ("t_ns", f64_bits(c.t_ns)),
+        ("next_id", u64_str(c.next_id)),
+    ])
+}
+
+fn cursor_from_json(j: &Json) -> Option<TraceCursor> {
+    Some(TraceCursor {
+        rng_state: parse_u64_str(j.get("rng")?)?,
+        t_ns: parse_f64_bits(j.get("t_ns")?)?,
+        next_id: parse_u64_str(j.get("next_id")?)?,
+    })
+}
 
 /// A cluster serving run as an explicit, resumable state machine.
 pub struct Campaign<'a> {
     replicas: Vec<ReplicaSim<'a>>,
-    /// The trace in arrival order (`(arrival_ns, id)`-sorted).
-    order: Vec<SessionSpec>,
-    /// Arrivals already routed.
-    next_arrival: usize,
+    /// The arrival sequence in `(arrival_ns, id)` order.
+    arrivals: Arrivals<'a>,
     /// First replica not yet run to completion (drain phase).
     drain_cursor: usize,
     router: Router,
@@ -71,7 +129,66 @@ impl<'a> Campaign<'a> {
     pub fn new(
         cfg: &'a ArtemisConfig,
         model: &'a TransformerModel,
-        trace: &[SessionSpec],
+        trace: &'a [SessionSpec],
+        cluster: &ClusterConfig,
+        sched: &SchedulerConfig,
+        route: RoutePolicy,
+        cached: bool,
+        tc: Option<&TraceConfig>,
+    ) -> Self {
+        // Generated traces arrive sorted: borrow them; clone-and-sort
+        // only genuinely unordered input.
+        let order = if is_arrival_sorted(trace) {
+            Cow::Borrowed(trace)
+        } else {
+            let mut v = trace.to_vec();
+            v.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+            Cow::Owned(v)
+        };
+        Self::with_arrivals(
+            cfg,
+            model,
+            Arrivals::Order { order, next: 0 },
+            cluster,
+            sched,
+            route,
+            cached,
+            tc,
+        )
+    }
+
+    /// [`Campaign::new`] over a lazy arrival stream: the trace is never
+    /// materialized — arrivals are pulled one at a time and the stream
+    /// cursor (RNG state, clock, next id) travels with snapshots, so a
+    /// restored campaign resumes mid-stream bit-identically.
+    #[allow(clippy::too_many_arguments)] // run_cluster's knobs, unbundled
+    pub fn new_streamed(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        stream: TraceStream,
+        cluster: &ClusterConfig,
+        sched: &SchedulerConfig,
+        route: RoutePolicy,
+        cached: bool,
+        tc: Option<&TraceConfig>,
+    ) -> Self {
+        Self::with_arrivals(
+            cfg,
+            model,
+            Arrivals::Stream { stream },
+            cluster,
+            sched,
+            route,
+            cached,
+            tc,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)] // run_cluster's knobs, unbundled
+    fn with_arrivals(
+        cfg: &'a ArtemisConfig,
+        model: &'a TransformerModel,
+        arrivals: Arrivals<'a>,
         cluster: &ClusterConfig,
         sched: &SchedulerConfig,
         route: RoutePolicy,
@@ -85,12 +202,9 @@ impl<'a> Campaign<'a> {
                 r.enable_telemetry(tc);
             }
         }
-        let mut order: Vec<SessionSpec> = trace.to_vec();
-        order.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
         Self {
             replicas,
-            order,
-            next_arrival: 0,
+            arrivals,
             drain_cursor: 0,
             router: Router::new(route),
             cluster: *cluster,
@@ -108,8 +222,7 @@ impl<'a> Campaign<'a> {
     /// Returns `false` once the campaign is complete (and stays
     /// `false`; stepping a finished campaign is a no-op).
     pub fn step(&mut self, max_ticks: u64) -> bool {
-        if self.next_arrival < self.order.len() {
-            let spec = self.order[self.next_arrival];
+        if let Some(spec) = self.arrivals.next() {
             for r in self.replicas.iter_mut() {
                 r.advance_to(spec.arrival_ns);
             }
@@ -119,7 +232,6 @@ impl<'a> Campaign<'a> {
             let pick = self.router.route(&loads);
             timer.stop(&mut self.routing_profile, Phase::Routing);
             self.replicas[pick].push(spec);
-            self.next_arrival += 1;
             return true;
         }
         while self.drain_cursor < self.replicas.len() {
@@ -133,7 +245,7 @@ impl<'a> Campaign<'a> {
 
     /// Whether every arrival is routed and every replica fully drained.
     pub fn is_done(&self) -> bool {
-        self.next_arrival >= self.order.len()
+        self.arrivals.routed() >= self.arrivals.total()
             && self
                 .replicas
                 .iter()
@@ -143,7 +255,7 @@ impl<'a> Campaign<'a> {
 
     /// `(arrivals routed, total arrivals)` — the daemon's progress line.
     pub fn progress(&self) -> (usize, usize) {
-        (self.next_arrival, self.order.len())
+        (self.arrivals.routed(), self.arrivals.total())
     }
 
     /// The replicas, for live introspection (`trace-window`).
@@ -179,14 +291,20 @@ impl<'a> Campaign<'a> {
     }
 
     /// Serialize the in-flight campaign state: phase cursors, router
-    /// round-robin pointer, every replica's serving state.  The trace
-    /// itself is not carried — it regenerates from the spec's seed —
-    /// and neither is the wall-clock phase profile.
+    /// round-robin pointer, the stream cursor (RNG state, clock, next
+    /// id) for streamed campaigns, every replica's serving state.  A
+    /// materialized trace is not carried — it regenerates from the
+    /// spec's seed — and neither is the wall-clock phase profile.
     pub fn snapshot_json(&self) -> Json {
+        let stream = match &self.arrivals {
+            Arrivals::Order { .. } => Json::Null,
+            Arrivals::Stream { stream } => cursor_to_json(&stream.cursor()),
+        };
         Json::obj(vec![
-            ("next_arrival", u64_str(self.next_arrival as u64)),
+            ("next_arrival", u64_str(self.arrivals.routed() as u64)),
             ("drain_cursor", u64_str(self.drain_cursor as u64)),
             ("rr_next", u64_str(self.router.rr_next() as u64)),
+            ("stream", stream),
             (
                 "replicas",
                 Json::Arr(self.replicas.iter().map(|r| r.snapshot_json()).collect()),
@@ -195,9 +313,9 @@ impl<'a> Campaign<'a> {
     }
 
     /// Overlay a snapshot onto a freshly built campaign.  The campaign
-    /// must have been constructed from the same spec (same trace,
-    /// cluster shape, and telemetry choice); shape mismatches error
-    /// without mutating cursor state.
+    /// must have been constructed from the same spec (same trace or
+    /// stream, cluster shape, and telemetry choice); shape mismatches
+    /// error without mutating cursor state.
     pub fn restore_json(&mut self, j: &Json) -> Result<(), String> {
         let want = |name: &str| {
             j.get(name).ok_or_else(|| format!("campaign snapshot missing '{name}'"))
@@ -207,10 +325,10 @@ impl<'a> Campaign<'a> {
         let drain_cursor =
             parse_u64_str(want("drain_cursor")?).ok_or("bad campaign drain_cursor")? as usize;
         let rr_next = parse_u64_str(want("rr_next")?).ok_or("bad campaign rr_next")? as usize;
-        if next_arrival > self.order.len() {
+        if next_arrival > self.arrivals.total() {
             return Err(format!(
                 "snapshot routed {next_arrival} arrivals, trace has {}",
-                self.order.len()
+                self.arrivals.total()
             ));
         }
         if drain_cursor > self.replicas.len() {
@@ -219,6 +337,31 @@ impl<'a> Campaign<'a> {
                 self.replicas.len()
             ));
         }
+        // Validate the stream cursor before touching any state.
+        let stream_j = j.get("stream");
+        let cursor = match (&self.arrivals, stream_j) {
+            (Arrivals::Stream { .. }, Some(sj)) if !matches!(sj, Json::Null) => {
+                let cur = cursor_from_json(sj).ok_or("bad campaign stream cursor")?;
+                if cur.next_id != next_arrival as u64 {
+                    return Err(format!(
+                        "stream cursor at id {} but snapshot routed {next_arrival} arrivals",
+                        cur.next_id
+                    ));
+                }
+                Some(cur)
+            }
+            (Arrivals::Stream { .. }, _) => {
+                return Err("campaign snapshot missing 'stream' cursor".into());
+            }
+            (Arrivals::Order { .. }, Some(sj)) if !matches!(sj, Json::Null) => {
+                return Err(
+                    "campaign snapshot carries a stream cursor but the campaign was built \
+                     from a materialized trace"
+                        .into(),
+                );
+            }
+            (Arrivals::Order { .. }, _) => None,
+        };
         let reps = want("replicas")?
             .as_arr()
             .ok_or("campaign snapshot 'replicas' must be an array")?;
@@ -233,7 +376,11 @@ impl<'a> Campaign<'a> {
             r.restore_json(rj).map_err(|e| format!("replica {i}: {e}"))?;
         }
         self.router.set_rr_next(rr_next);
-        self.next_arrival = next_arrival;
+        match (&mut self.arrivals, cursor) {
+            (Arrivals::Order { next, .. }, None) => *next = next_arrival,
+            (Arrivals::Stream { stream }, Some(cur)) => stream.seek(cur),
+            _ => unreachable!("cursor validated against the arrivals variant above"),
+        }
         self.drain_cursor = drain_cursor;
         Ok(())
     }
@@ -334,6 +481,63 @@ mod tests {
             let (orig, _) = first.finish(None);
             assert_eq!(orig.state_hash(), reference, "{placement} original");
         }
+    }
+
+    #[test]
+    fn streamed_campaign_snapshots_mid_stream_and_resumes() {
+        let cfg = ArtemisConfig::default();
+        let model = ModelZoo::transformer_base();
+        let sc = Scenario::chat().with_sessions(10);
+        let sched = SchedulerConfig { max_batch: 4, policy: Policy::Fifo };
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let route = RoutePolicy::RoundRobin;
+        let trace = sc.generate(1);
+        let reference = run_cluster(&cfg, &model, &trace, &cl, &sched, route, true).state_hash();
+
+        // Streamed campaign, paused mid-arrivals (routed < total).
+        let mut first =
+            Campaign::new_streamed(&cfg, &model, sc.stream(1), &cl, &sched, route, true, None);
+        for _ in 0..5 {
+            assert!(first.step(2));
+        }
+        let (routed, total) = first.progress();
+        assert!(0 < routed && routed < total, "pause must land mid-stream: {routed}/{total}");
+        let snap = Json::parse(&first.snapshot_json().compact()).expect("snapshot parses");
+
+        // The resumed campaign starts from a *wrong-seed* stream: the
+        // snapshot's cursor carries the full RNG state, so restore
+        // must land on the uninterrupted sequence regardless.
+        let mut resumed =
+            Campaign::new_streamed(&cfg, &model, sc.stream(99), &cl, &sched, route, true, None);
+        resumed.restore_json(&snap).expect("restore");
+        assert_eq!(resumed.progress().0, routed);
+        let (r, _) = resumed.finish(None);
+        assert_eq!(r.state_hash(), reference);
+
+        // The interrupted original also finishes to the same hash.
+        let (orig, _) = first.finish(None);
+        assert_eq!(orig.state_hash(), reference);
+    }
+
+    #[test]
+    fn stream_cursor_and_materialized_trace_do_not_mix() {
+        let (cfg, model, trace, sched) = setup(4);
+        let sc = Scenario::chat().with_sessions(4);
+        let cl = ClusterConfig::new(2, Placement::DataParallel);
+        let route = RoutePolicy::RoundRobin;
+        let streamed =
+            Campaign::new_streamed(&cfg, &model, sc.stream(1), &cl, &sched, route, true, None);
+        let snap = streamed.snapshot_json();
+        let mut ordered =
+            Campaign::new(&cfg, &model, &trace, &cl, &sched, route, true, None);
+        let err = ordered.restore_json(&snap).unwrap_err();
+        assert!(err.contains("stream"), "{err}");
+
+        let ordered_snap = ordered.snapshot_json();
+        let mut streamed =
+            Campaign::new_streamed(&cfg, &model, sc.stream(1), &cl, &sched, route, true, None);
+        let err = streamed.restore_json(&ordered_snap).unwrap_err();
+        assert!(err.contains("stream"), "{err}");
     }
 
     #[test]

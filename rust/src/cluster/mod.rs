@@ -39,8 +39,9 @@ pub use campaign::Campaign;
 use crate::config::{ArtemisConfig, ClusterConfig, Placement, TransformerModel};
 use crate::dataflow::{stack_groups, StackLink};
 use crate::serve::{
-    aggregate_report, Coster, KvTracker, Phase, PhaseProfile, PhaseTimer, Policy, ReplicaSim,
-    RoutePolicy, Router, Scenario, SchedulerConfig, ServeGenReport, SessionSpec,
+    aggregate_report, is_arrival_sorted, Coster, KvTracker, Phase, PhaseProfile, PhaseTimer,
+    Policy, ReplicaSim, RoutePolicy, Router, Scenario, SchedulerConfig, ServeGenReport,
+    SessionSpec,
 };
 use crate::sim::{CacheStats, CostCache, SimOptions, StackCoster, StateHash};
 use crate::telemetry::{build_trace, Trace, TraceConfig, TraceMeta};
@@ -255,33 +256,23 @@ fn run_cluster_inner(
         }
     }
 
-    // Interleave the replicas on the shared timeline: advance everyone
-    // to each arrival, route it against live load, hand it over.  The
-    // serial loop and the worker pool execute the same per-replica
-    // call sequence, so both are bit-identical (tests/perf_properties).
-    let mut order: Vec<SessionSpec> = trace.to_vec();
-    order.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
-    let mut router = Router::new(route);
+    // Generated traces are already `(arrival, id)`-sorted: borrow them
+    // as-is and only clone-and-sort genuinely unordered input.
+    let sorted;
+    let order: &[SessionSpec] = if is_arrival_sorted(trace) {
+        trace
+    } else {
+        sorted = {
+            let mut v = trace.to_vec();
+            v.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+            v
+        };
+        &sorted
+    };
     let mut routing_profile = PhaseProfile::default();
     let threads = resolve_threads(cluster.threads, replicas.len());
-    if threads <= 1 {
-        for spec in &order {
-            for r in replicas.iter_mut() {
-                r.advance_to(spec.arrival_ns);
-            }
-            let timer = PhaseTimer::start();
-            let loads: Vec<_> = replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
-            let pick = router.route(&loads);
-            timer.stop(&mut routing_profile, Phase::Routing);
-            replicas[pick].push(*spec);
-        }
-        for r in replicas.iter_mut() {
-            r.run_to_completion();
-        }
-    } else {
-        replicas =
-            parallel::drive_parallel(replicas, &order, &mut router, threads, &mut routing_profile);
-    }
+    let replicas =
+        drive_cluster(replicas, order.iter().copied(), route, threads, &mut routing_profile);
     assemble_report(
         replicas,
         model,
@@ -293,6 +284,64 @@ fn run_cluster_inner(
         routing_profile,
         tracing,
     )
+}
+
+/// Interleave the replicas on the shared timeline: advance everyone to
+/// each arrival, route it against live load, hand it over.  The serial
+/// loop and the worker pool execute the same per-replica call sequence,
+/// so both are bit-identical (tests/perf_properties).  Arrivals are
+/// consumed one at a time — a lazy stream keeps cluster memory at
+/// O(active sessions), independent of trace length.
+fn drive_cluster<'a, I: Iterator<Item = SessionSpec>>(
+    mut replicas: Vec<ReplicaSim<'a>>,
+    arrivals: I,
+    route: RoutePolicy,
+    threads: usize,
+    routing_profile: &mut PhaseProfile,
+) -> Vec<ReplicaSim<'a>> {
+    let mut router = Router::new(route);
+    if threads <= 1 {
+        for spec in arrivals {
+            for r in replicas.iter_mut() {
+                r.advance_to(spec.arrival_ns);
+            }
+            let timer = PhaseTimer::start();
+            let loads: Vec<_> = replicas.iter().enumerate().map(|(i, r)| r.load(i)).collect();
+            let pick = router.route(&loads);
+            timer.stop(routing_profile, Phase::Routing);
+            replicas[pick].push(spec);
+        }
+        for r in replicas.iter_mut() {
+            r.run_to_completion();
+        }
+        replicas
+    } else {
+        parallel::drive_parallel(replicas, arrivals, &mut router, threads, routing_profile)
+    }
+}
+
+/// [`run_cluster`] over a lazy arrival stream (nondecreasing
+/// `(arrival_ns, id)` order required — [`Scenario::stream`] satisfies
+/// it by construction).  Arrivals are pulled one at a time, so cluster
+/// memory stays O(active sessions + bounded accumulators) regardless of
+/// trace length.  Bit-identical to materializing the same sequence and
+/// calling [`run_cluster`].
+pub fn run_cluster_stream<I: Iterator<Item = SessionSpec>>(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    arrivals: I,
+    cluster: &ClusterConfig,
+    sched: &SchedulerConfig,
+    route: RoutePolicy,
+    cached: bool,
+) -> ClusterReport {
+    assert!(cluster.stacks > 0, "cluster needs at least one stack");
+    let replicas = build_replicas(cfg, model, cluster, sched, cached);
+    let mut routing_profile = PhaseProfile::default();
+    let threads = resolve_threads(cluster.threads, replicas.len());
+    let replicas = drive_cluster(replicas, arrivals, route, threads, &mut routing_profile);
+    assemble_report(replicas, model, cluster, sched, route, cached, threads, routing_profile, None)
+        .0
 }
 
 /// Assemble the finished replicas into the [`ClusterReport`] (labels,
@@ -389,10 +438,17 @@ pub fn run_scenario_cluster(
     cached: bool,
     threads: usize,
 ) -> ClusterReport {
-    let trace = scenario.generate(seed);
     let sched = SchedulerConfig::for_scenario(scenario, Policy::Fifo);
     let cluster = ClusterConfig::new(stacks, placement).with_threads(threads);
-    run_cluster(cfg, &scenario.model, &trace, &cluster, &sched, RoutePolicy::LeastLoaded, cached)
+    run_cluster_stream(
+        cfg,
+        &scenario.model,
+        scenario.stream(seed),
+        &cluster,
+        &sched,
+        RoutePolicy::LeastLoaded,
+        cached,
+    )
 }
 
 /// Convenience: run the chat-trace scaling point used by the
@@ -617,6 +673,44 @@ mod tests {
                 event.aggregate.makespan_ns.to_bits()
             );
             assert_eq!(tick.aggregate.ticks, event.aggregate.ticks);
+        }
+    }
+
+    #[test]
+    fn streamed_cluster_matches_materialized_bit_for_bit() {
+        // The lazy TraceStream path must reproduce the materialized
+        // path's hash on both placements and both driver modes.
+        let cfg = ArtemisConfig::default();
+        let model = ModelZoo::transformer_base();
+        let sc = Scenario::chat().with_sessions(12);
+        let trace = sc.generate(1);
+        for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+            for threads in [1, 2] {
+                let cl = ClusterConfig::new(2, placement).with_threads(threads);
+                let eager = run_cluster(
+                    &cfg,
+                    &model,
+                    &trace,
+                    &cl,
+                    &sched(4),
+                    RoutePolicy::LeastLoaded,
+                    true,
+                );
+                let lazy = run_cluster_stream(
+                    &cfg,
+                    &model,
+                    sc.stream(1),
+                    &cl,
+                    &sched(4),
+                    RoutePolicy::LeastLoaded,
+                    true,
+                );
+                assert_eq!(
+                    eager.state_hash(),
+                    lazy.state_hash(),
+                    "{placement} threads={threads}"
+                );
+            }
         }
     }
 

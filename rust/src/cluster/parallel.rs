@@ -50,15 +50,19 @@ use crate::serve::{Phase, PhaseProfile, PhaseTimer, ReplicaSim, Router, SessionS
 /// simulated timestamp.
 const SHUTDOWN: u64 = u64::MAX;
 
-/// Drive `replicas` through `order` with `threads` workers; returns the
+/// Drive `replicas` through the `arrivals` sequence (nondecreasing
+/// `(arrival_ns, id)` order) with `threads` workers; returns the
 /// replicas (in their original index order) after every session has
 /// been served.  `threads` must be >= 2 — the caller keeps the plain
-/// serial loop for the single-threaded path.  The main-thread routing
-/// sections (load gather + route decision) are charged to
+/// serial loop for the single-threaded path.  Arrivals are consumed one
+/// at a time on the main thread, so a lazy
+/// [`TraceStream`](crate::serve::TraceStream) never materializes — the
+/// pool only ever sees the current spec's timestamp.  The main-thread
+/// routing sections (load gather + route decision) are charged to
 /// `routing_profile` under `--features profiling`.
-pub(crate) fn drive_parallel<'a>(
+pub(crate) fn drive_parallel<'a, I: Iterator<Item = SessionSpec>>(
     replicas: Vec<ReplicaSim<'a>>,
-    order: &[SessionSpec],
+    arrivals: I,
     router: &mut Router,
     threads: usize,
     routing_profile: &mut PhaseProfile,
@@ -121,7 +125,7 @@ pub(crate) fn drive_parallel<'a>(
                 resume_unwind(payload);
             }
         };
-        for spec in order {
+        for spec in arrivals {
             epoch(spec.arrival_ns.to_bits());
             // Route against live load, gathered in index order.
             let timer = PhaseTimer::start();
@@ -132,7 +136,7 @@ pub(crate) fn drive_parallel<'a>(
                 .collect();
             let pick = router.route(&loads);
             timer.stop(routing_profile, Phase::Routing);
-            cells[pick].lock().expect("replica lock").push(*spec);
+            cells[pick].lock().expect("replica lock").push(spec);
         }
         // Drain epoch: everyone serves out their tail concurrently.
         epoch(f64::INFINITY.to_bits());

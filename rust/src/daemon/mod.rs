@@ -70,8 +70,12 @@ use crate::util::json::{parse_u64_str, u64_str, Json};
 
 /// `kind` tag of the snapshot document.
 pub const SNAPSHOT_KIND: &str = "artemis-serve-snapshot";
-/// Snapshot schema version; bump on incompatible change.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// Snapshot schema version; bump on incompatible change.  v2: the
+/// campaign carries a lazy trace-stream cursor instead of assuming a
+/// materialized trace, replicas serialize a slab free list, and the
+/// metrics accumulator folds sessions at retirement (grouped accuracy
+/// samples + retirement digest).
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 /// Scheduler ticks per drain-phase step: small enough that control
 /// commands get serviced promptly, large enough that stepping overhead
@@ -409,18 +413,20 @@ fn run_job(
         Json::parse(&cfg.to_json()).map_err(|_| "config did not round-trip".to_string())?;
     let resolved = spec.resolve().map_err(|e| e.to_string())?;
     let sc = resolved.scenario;
-    let trace = sc.generate(spec.seed);
     // The daemon always drives through the cluster campaign; a spec
     // without a cluster section runs the default 1-stack dp shape.
+    // Arrivals come from the lazy seeded stream — the trace is never
+    // materialized, so job memory is O(active sessions) whatever the
+    // session count (the stream cursor travels in snapshots).
     let cl_spec = spec.cluster.unwrap_or_default();
     let cl = cl_spec.to_cluster_config(spec.engine);
     let sched = spec.sched(resolved.batch);
     let traced = spec.trace.path.is_some();
     let tc = resolved.tc;
-    let mut campaign = Campaign::new(
+    let mut campaign = Campaign::new_streamed(
         &cfg,
         &sc.model,
-        &trace,
+        sc.stream(spec.seed),
         &cl,
         &sched,
         cl_spec.route,
@@ -501,7 +507,7 @@ fn run_job(
             update_status(jobs, job, |s| s.state = JobState::Paused);
         }
     }
-    let meta = meta_for(&sc, spec.seed, trace.len() as u64);
+    let meta = meta_for(&sc, spec.seed, sc.sessions as u64);
     let (report, doc) = campaign.finish(traced.then_some(&meta));
     let hash = report.state_hash();
     println!("job {job}: state-hash {hash:#018x}");

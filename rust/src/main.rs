@@ -5,7 +5,7 @@
 //! (the offline build has no clap); `artemis help` lists everything.
 
 use anyhow::{anyhow, Result};
-use artemis::cluster::{run_cluster, run_cluster_traced, run_scenario_cluster};
+use artemis::cluster::{run_cluster, run_cluster_stream, run_cluster_traced, run_scenario_cluster};
 use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, Placement};
 use artemis::coordinator::{evaluate_variants, Coordinator, InferenceRequest};
 use artemis::daemon::run_daemon;
@@ -14,8 +14,8 @@ use artemis::report;
 use artemis::runtime::ArtifactRegistry;
 use artemis::search::{run_search, RunOptions, SearchSpec};
 use artemis::serve::{
-    meta_for, run_continuous_engine, run_continuous_traced, run_static, PhaseProfile, Policy,
-    RoutePolicy, Scenario, SchedulerConfig, ServeSpec,
+    meta_for, run_continuous_stream, run_continuous_traced, run_static_stream, PhaseProfile,
+    Policy, RoutePolicy, Scenario, SchedulerConfig, ServeSpec,
 };
 use artemis::sim::SimOptions;
 use artemis::telemetry::{
@@ -122,7 +122,20 @@ Other commands:
            the per-phase ns/tick profile of the long_itl event run.
            Also re-times the long_itl event point with telemetry
            enabled into a null sink and records the overhead ratio
-           under a top-level \"telemetry\" field
+           under a top-level \"telemetry\" field, and stamps the
+           process-lifetime peak RSS as a top-level \"peak_rss_bytes\"
+  bench-scale [--sessions CSV] [--scenario NAME] [--seed N]
+           [--out FILE] [--max-rss-mb N]
+           streaming-core scale lane: serve --scenario (default chat)
+           at each ascending session count in CSV (default
+           10000,100000) through both engines via the lazy arrival
+           stream and the O(active) slab store, asserting tick/event
+           state-hash equality at every point.  Records wall-clock,
+           sessions per wall-second, and peak RSS (VmHWM) per point
+           into FILE (default BENCH_scale.json).  Fails if adjacent
+           points >= 10x apart in sessions grow peak RSS by >= 3x
+           (the sub-linear-memory gate CI runs at 1e5, advisory at
+           1e6), or if --max-rss-mb is given and exceeded
   design-search [--stream-lens CSV] [--sigmas CSV] [--stacks CSV]
            [--placements CSV] [--hops CSV] [--qos CSV]
            [--sampler grid|random|halving] [--samples N] [--rungs R]
@@ -250,9 +263,8 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
     let seed = spec.seed;
     let trace_path = spec.trace.path.as_deref();
 
-    let trace = sc.generate(seed);
-    let meta = meta_for(&sc, seed, trace.len() as u64);
-    if trace.is_empty() {
+    let meta = meta_for(&sc, seed, sc.sessions as u64);
+    if sc.sessions == 0 {
         println!(
             "## serve-gen — scenario '{}' seed {}: empty trace (0 sessions), nothing to serve",
             sc.name, seed
@@ -279,7 +291,10 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
         let route = cl_spec.route;
         let cached = cl_spec.cost_cache;
         let cl = cl_spec.to_cluster_config(spec.engine);
+        // Tracing needs the materialized trace (span builders index into
+        // it); the untraced path streams arrivals and stays O(active).
         let (r, doc) = if trace_path.is_some() {
+            let trace = sc.generate(seed);
             let (r, doc) = run_cluster_traced(
                 &stack_cfg,
                 &sc.model,
@@ -293,7 +308,16 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
             );
             (r, Some(doc))
         } else {
-            (run_cluster(&stack_cfg, &sc.model, &trace, &cl, &sched, route, cached), None)
+            let r = run_cluster_stream(
+                &stack_cfg,
+                &sc.model,
+                sc.stream(seed),
+                &cl,
+                &sched,
+                route,
+                cached,
+            );
+            (r, None)
         };
 
         println!(
@@ -302,7 +326,7 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
             sc.name,
             seed,
             sc.model.name,
-            trace.len(),
+            sc.sessions,
             d,
             placement,
             route,
@@ -340,13 +364,14 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
 
     let cfg = spec.load_stack_config()?;
     let (cont, doc) = if trace_path.is_some() {
+        let trace = sc.generate(seed);
         let (r, doc) =
             run_continuous_traced(&cfg, &sc.model, &trace, &sched, spec.engine, &tc, &meta);
         (r, Some(doc))
     } else {
-        (run_continuous_engine(&cfg, &sc.model, &trace, &sched, spec.engine), None)
+        (run_continuous_stream(&cfg, &sc.model, sc.stream(seed), &sched, spec.engine), None)
     };
-    let stat = run_static(&cfg, &sc.model, &trace, batch);
+    let stat = run_static_stream(&cfg, &sc.model, sc.stream(seed), batch);
 
     println!(
         "## serve-gen — scenario '{}' seed {} ({}, {} sessions, batch {}, policy {}, qos {}, \
@@ -354,7 +379,7 @@ fn run_serve_gen_spec(spec: &ServeSpec) -> Result<()> {
         sc.name,
         seed,
         sc.model.name,
-        trace.len(),
+        sc.sessions,
         batch,
         spec.policy,
         sc.qos,
@@ -611,6 +636,12 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
         ("benches", Json::Arr(benches)),
         ("telemetry", telemetry),
     ];
+    // Process-lifetime peak RSS (VmHWM) as a top-level artifact field —
+    // a memory trend line next to the wall-clock one.  Not a `benches`
+    // entry: the perf gate pins the bench-name set to the baseline.
+    if let Some(rss) = artemis::util::bench::peak_rss_bytes() {
+        fields.push(("peak_rss_bytes", Json::Num(rss as f64)));
+    }
     // Per-phase wall-time profile of the long_itl event run, against
     // the stated scheduler-overhead budget.  All-zero (and omitted)
     // unless built with `--features profiling`.
@@ -651,6 +682,138 @@ fn run_bench_serve(args: &[String]) -> Result<()> {
     let doc = Json::obj(fields);
     std::fs::write(&out, doc.pretty() + "\n")?;
     println!("wrote {out} ({n_benches} benches, requested threads {threads} [0=auto])");
+    Ok(())
+}
+
+/// `bench-scale`: the streaming-core scale lane.  Serves one scenario
+/// at each requested session count through *both* clock-advance
+/// engines using the lazy arrival stream ([`Scenario::stream`]) and
+/// the slab-backed session store, so memory stays O(active sessions +
+/// bounded accumulators) no matter how long the trace is.  Per point
+/// it records wall-clock, sessions per wall-second, and the process
+/// peak RSS (VmHWM), and asserts tick/event state-hash equality.
+///
+/// VmHWM is a process-*lifetime* high-water mark, so the points must
+/// be ascending: each point's reading then reflects the largest run
+/// so far, and the adjacent-point ratio gate (>= 10x the sessions
+/// must cost < 3x the peak RSS) is meaningful.  The gate failing —
+/// or `--max-rss-mb` being exceeded — is a hard error, which is how
+/// CI turns this lane into the sub-linear-memory regression check.
+fn run_bench_scale(args: &[String]) -> Result<()> {
+    let out = flag_value(args, "--out").unwrap_or_else(|| "BENCH_scale.json".into());
+    let scenario = flag_value(args, "--scenario").unwrap_or_else(|| "chat".into());
+    let seed: u64 = flag_value(args, "--seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let csv = flag_value(args, "--sessions").unwrap_or_else(|| "10000,100000".into());
+    let max_rss_mb: Option<u64> =
+        flag_value(args, "--max-rss-mb").map(|v| v.parse()).transpose()?;
+    let points: Vec<usize> = csv
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("--sessions '{s}': {e}")))
+        .collect::<Result<_>>()?;
+    if points.is_empty() {
+        return Err(anyhow!("--sessions needs at least one count"));
+    }
+    if points.windows(2).any(|w| w[1] <= w[0]) {
+        return Err(anyhow!(
+            "--sessions counts must be strictly ascending (peak RSS is a \
+             process-lifetime high-water mark, so later points must be the bigger runs)"
+        ));
+    }
+    let base = Scenario::by_name(&scenario)
+        .ok_or_else(|| anyhow!("unknown scenario '{scenario}'"))?;
+    let cfg = ArtemisConfig::default();
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rss_points: Vec<(usize, u64)> = Vec::new();
+    for &n in &points {
+        let sc = base.clone().with_sessions(n);
+        let sched = SchedulerConfig { max_batch: sc.max_batch, policy: Policy::Fifo };
+        let mut walls = [0.0f64; 2];
+        let mut hashes = [0u64; 2];
+        for (i, engine) in [EngineStrategy::Tick, EngineStrategy::Event].into_iter().enumerate() {
+            // One stack through the memoized cost cache — the
+            // bench-serve long_itl idiom; per-tick work is a cache
+            // lookup, so wall-clock tracks the scheduler, not the
+            // transformer cost model.
+            let cl = ClusterConfig::new(1, Placement::DataParallel)
+                .with_threads(1)
+                .with_engine(engine);
+            let t0 = std::time::Instant::now();
+            let r = run_cluster_stream(
+                &cfg,
+                &sc.model,
+                sc.stream(seed),
+                &cl,
+                &sched,
+                RoutePolicy::LeastLoaded,
+                true,
+            );
+            walls[i] = t0.elapsed().as_secs_f64() * 1e3;
+            hashes[i] = r.state_hash();
+        }
+        if hashes[0] != hashes[1] {
+            return Err(anyhow!(
+                "engine divergence at {n} sessions: tick state-hash {:#018x} != event {:#018x}",
+                hashes[0],
+                hashes[1]
+            ));
+        }
+        let best_ms = walls[0].min(walls[1]);
+        let sessions_per_s = n as f64 / (best_ms.max(1e-9) * 1e-3);
+        let rss = artemis::util::bench::peak_rss_bytes();
+        let rss_str = match rss {
+            Some(b) => format!("{:.1} MB", b as f64 / (1u64 << 20) as f64),
+            None => "n/a".to_string(),
+        };
+        println!(
+            "bench-scale {scenario} {n} sessions: tick {:.1} ms, event {:.1} ms, \
+             {sessions_per_s:.0} sessions per wall-second, peak RSS {rss_str}, \
+             state-hash {:#018x}",
+            walls[0], walls[1], hashes[0]
+        );
+        let mut row = vec![
+            ("sessions", Json::Num(n as f64)),
+            ("wall_ms_tick", Json::Num((walls[0] * 1e3).round() / 1e3)),
+            ("wall_ms_event", Json::Num((walls[1] * 1e3).round() / 1e3)),
+            ("sessions_per_s", Json::Num((sessions_per_s * 10.0).round() / 10.0)),
+        ];
+        if let Some(b) = rss {
+            row.push(("peak_rss_bytes", Json::Num(b as f64)));
+            rss_points.push((n, b));
+        }
+        rows.push(Json::obj(row));
+    }
+
+    // Sub-linear-memory gate: a 10x (or more) jump in sessions must
+    // not cost 3x the peak RSS — O(active)-memory serving keeps the
+    // resident set pinned to active sessions + bounded accumulators,
+    // so RSS should barely move while the trace grows by decades.
+    for w in rss_points.windows(2) {
+        let ((n0, r0), (n1, r1)) = (w[0], w[1]);
+        if n1 >= n0.saturating_mul(10) && r1 >= r0.saturating_mul(3) {
+            return Err(anyhow!(
+                "super-linear memory growth: {n0} -> {n1} sessions grew peak RSS \
+                 {r0} -> {r1} bytes (>= 3x); the streaming core should hold RSS \
+                 near-flat across session decades"
+            ));
+        }
+    }
+    if let (Some(cap_mb), Some(&(_, peak))) = (max_rss_mb, rss_points.last()) {
+        if peak > cap_mb.saturating_mul(1 << 20) {
+            return Err(anyhow!(
+                "peak RSS {peak} bytes exceeds the --max-rss-mb {cap_mb} MiB ceiling"
+            ));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("suite", Json::Str("serve_scale_stream".into())),
+        ("scenario", Json::Str(scenario.clone())),
+        ("seed", Json::Num(seed as f64)),
+        ("points", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out, doc.pretty() + "\n")?;
+    println!("wrote {out} ({} points, scenario {scenario}, seed {seed})", points.len());
     Ok(())
 }
 
@@ -863,6 +1026,7 @@ fn main() -> Result<()> {
         "trace-report" => run_trace_report(&args)?,
         "cluster-scale" => report::cluster_scale_study(&cfg).print(),
         "bench-serve" => run_bench_serve(&args)?,
+        "bench-scale" => run_bench_scale(&args)?,
         "design-search" => run_design_search(&args)?,
         "config" => println!("{}", cfg.to_json()),
         "help" | "--help" | "-h" => print!("{HELP}"),

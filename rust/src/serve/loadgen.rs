@@ -205,34 +205,130 @@ impl Scenario {
         self
     }
 
-    /// Generate the deterministic trace for `seed`, sorted by arrival.
-    pub fn generate(&self, seed: u64) -> Vec<SessionSpec> {
-        let mut rng = XorShift64::new(seed);
-        let mut t = 0.0f64;
-        let mut trace = Vec::with_capacity(self.sessions);
-        for id in 0..self.sessions as u64 {
-            match self.arrivals {
-                ArrivalProcess::Poisson { rate_per_s } => {
-                    let u = rng.unit();
-                    t += -(1.0 - u).ln() / rate_per_s.max(1e-12) * 1e9;
-                }
-                ArrivalProcess::Burst { size, gap_ns } => {
-                    if id > 0 && id % size.max(1) == 0 {
-                        t += gap_ns;
-                    }
-                }
-            }
-            trace.push(SessionSpec {
-                id,
-                arrival_ns: t,
-                prompt: self.prompt.sample(&mut rng),
-                gen: self.gen.sample(&mut rng),
-                tier: self.qos.tier_for(id),
-            });
+    /// Lazy arrival iterator for `seed`: yields the exact sequence
+    /// [`generate`](Self::generate) materializes, one [`SessionSpec`]
+    /// at a time, in arrival order.  O(1) memory regardless of
+    /// `sessions` — the backbone of the streaming serving paths.
+    pub fn stream(&self, seed: u64) -> TraceStream {
+        TraceStream {
+            arrivals: self.arrivals,
+            prompt: self.prompt,
+            gen: self.gen,
+            qos: self.qos,
+            rng: XorShift64::new(seed),
+            t: 0.0,
+            next_id: 0,
+            total: self.sessions as u64,
         }
-        trace
+    }
+
+    /// Generate the deterministic trace for `seed`, sorted by arrival.
+    /// Thin `collect()` over [`stream`](Self::stream) — kept for the
+    /// small-N callers (tests, trace export) that want the whole trace.
+    pub fn generate(&self, seed: u64) -> Vec<SessionSpec> {
+        self.stream(seed).collect()
     }
 }
+
+/// Resumable position of a [`TraceStream`] — everything needed to
+/// continue the exact arrival sequence after a suspend (the daemon
+/// serializes this into campaign snapshots).  `t_ns` rides along as
+/// raw bits in snapshots so the resumed clock is bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceCursor {
+    /// Raw [`XorShift64`] state (not a seed).
+    pub rng_state: u64,
+    /// Arrival clock after the last emitted session.
+    pub t_ns: f64,
+    /// Id the next `next()` call will emit.
+    pub next_id: u64,
+}
+
+/// Lazy, seeded arrival iterator — the streaming twin of
+/// [`Scenario::generate`].
+///
+/// `next()` replays the generator loop verbatim (same RNG draw order:
+/// inter-arrival, then prompt, then gen per session), so
+/// `stream(seed).collect::<Vec<_>>()` is bit-for-bit equal to
+/// `generate(seed)`; the unit tests pin that equivalence per preset.
+/// Output is nondecreasing in `arrival_ns` with ids ascending — already
+/// in the `(arrival, id)` order every driver needs, so the streaming
+/// paths skip the sort (and its full-trace clone) entirely.
+#[derive(Debug, Clone)]
+pub struct TraceStream {
+    arrivals: ArrivalProcess,
+    prompt: LengthDist,
+    gen: LengthDist,
+    qos: QosAssignment,
+    rng: XorShift64,
+    t: f64,
+    next_id: u64,
+    total: u64,
+}
+
+impl TraceStream {
+    /// Total sessions this stream will ever emit (consumed + pending).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Sessions emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Capture the resumable position (see [`TraceCursor`]).
+    pub fn cursor(&self) -> TraceCursor {
+        TraceCursor { rng_state: self.rng.state(), t_ns: self.t, next_id: self.next_id }
+    }
+
+    /// Jump to a previously captured position.  The cursor must come
+    /// from a stream of the same scenario + seed for the sequence to
+    /// mean anything; this is a mechanical restore, not a validation.
+    pub fn seek(&mut self, cur: TraceCursor) {
+        self.rng = XorShift64::from_state(cur.rng_state);
+        self.t = cur.t_ns;
+        self.next_id = cur.next_id;
+    }
+}
+
+impl Iterator for TraceStream {
+    type Item = SessionSpec;
+
+    fn next(&mut self) -> Option<SessionSpec> {
+        if self.next_id >= self.total {
+            return None;
+        }
+        let id = self.next_id;
+        match self.arrivals {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                let u = self.rng.unit();
+                self.t += -(1.0 - u).ln() / rate_per_s.max(1e-12) * 1e9;
+            }
+            ArrivalProcess::Burst { size, gap_ns } => {
+                if id > 0 && id % size.max(1) == 0 {
+                    self.t += gap_ns;
+                }
+            }
+        }
+        let spec = SessionSpec {
+            id,
+            arrival_ns: self.t,
+            prompt: self.prompt.sample(&mut self.rng),
+            gen: self.gen.sample(&mut self.rng),
+            tier: self.qos.tier_for(id),
+        };
+        self.next_id += 1;
+        Some(spec)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.total.saturating_sub(self.next_id) as usize;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for TraceStream {}
 
 #[cfg(test)]
 mod tests {
@@ -329,6 +425,71 @@ mod tests {
         assert_eq!(QosAssignment::parse("platinum"), None);
         assert_eq!(QosAssignment::Mixed.to_string(), "mix");
         assert_eq!(QosAssignment::Uniform(QosTier::Silver).to_string(), "silver");
+    }
+
+    #[test]
+    fn stream_is_bit_identical_to_generate_per_preset() {
+        for name in Scenario::names() {
+            let sc = Scenario::by_name(name).unwrap();
+            for seed in [1u64, 7, 42] {
+                let lazy: Vec<SessionSpec> = sc.stream(seed).collect();
+                let eager = sc.generate(seed);
+                assert_eq!(lazy.len(), eager.len(), "{name} seed {seed}");
+                for (a, b) in lazy.iter().zip(&eager) {
+                    assert_eq!(a.id, b.id, "{name} seed {seed}");
+                    assert_eq!(
+                        a.arrival_ns.to_bits(),
+                        b.arrival_ns.to_bits(),
+                        "{name} seed {seed} id {}",
+                        a.id
+                    );
+                    assert_eq!(a.prompt, b.prompt, "{name} seed {seed}");
+                    assert_eq!(a.gen, b.gen, "{name} seed {seed}");
+                    assert_eq!(a.tier, b.tier, "{name} seed {seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_len_tracks_consumption() {
+        let sc = Scenario::chat().with_sessions(10);
+        let mut st = sc.stream(5);
+        assert_eq!(st.len(), 10);
+        assert_eq!(st.total(), 10);
+        st.next().unwrap();
+        st.next().unwrap();
+        assert_eq!(st.len(), 8);
+        assert_eq!(st.emitted(), 2);
+        assert_eq!(st.by_ref().count(), 8);
+        assert_eq!(st.len(), 0);
+        assert!(st.next().is_none());
+    }
+
+    #[test]
+    fn cursor_seek_resumes_the_uninterrupted_sequence() {
+        for name in Scenario::names() {
+            let sc = Scenario::by_name(name).unwrap();
+            let whole: Vec<SessionSpec> = sc.stream(9).collect();
+            let mut st = sc.stream(9);
+            let cut = sc.sessions / 3;
+            for _ in 0..cut {
+                st.next().unwrap();
+            }
+            let cur = st.cursor();
+            assert_eq!(cur.next_id, cut as u64);
+            // A fresh stream seeked to the cursor continues exactly.
+            let mut resumed = sc.stream(0xdead); // wrong seed on purpose
+            resumed.seek(cur);
+            let tail: Vec<SessionSpec> = resumed.collect();
+            assert_eq!(tail.len(), sc.sessions - cut, "{name}");
+            for (a, b) in tail.iter().zip(&whole[cut..]) {
+                assert_eq!(a.id, b.id, "{name}");
+                assert_eq!(a.arrival_ns.to_bits(), b.arrival_ns.to_bits(), "{name}");
+                assert_eq!(a.prompt, b.prompt, "{name}");
+                assert_eq!(a.gen, b.gen, "{name}");
+            }
+        }
     }
 
     #[test]

@@ -243,6 +243,51 @@ pub fn accuracy_summary(samples: &[f64]) -> AccuracySummary {
     }
 }
 
+/// [`accuracy_summary`] over value-grouped samples: `groups` is a list
+/// of `(value, count)` pairs sorted ascending by `total_cmp`, standing
+/// in for `count` repetitions of `value` each.
+///
+/// This is the streaming scheduler's O(distinct-values) replacement
+/// for the per-session `Vec<f64>` — accuracy estimates are drawn from
+/// a tiny closed set (fidelity tier × model), so grouping bounds the
+/// accumulator while replaying the *exact* float arithmetic of the
+/// flat path: sorted ascending, the grouped sequential sum adds the
+/// same values in the same order as `accuracy_summary`'s post-sort
+/// sum, so the mean is bit-identical, and nearest-rank percentiles
+/// index the same virtual sorted array through cumulative counts.
+pub fn accuracy_summary_grouped(groups: &[(f64, u64)]) -> AccuracySummary {
+    let n: u64 = groups.iter().map(|&(_, c)| c).sum();
+    if n == 0 {
+        return AccuracySummary::default();
+    }
+    let mut sum = 0.0f64;
+    for &(v, c) in groups {
+        // One add per sample, not `v * c` — float addition is not
+        // distributive, and the bar is bit-identity with the flat sum.
+        for _ in 0..c {
+            sum += v;
+        }
+    }
+    let rank = |q: f64| -> f64 {
+        let idx = ((q * (n as f64 - 1.0)).round() as u64).min(n - 1);
+        let mut cum = 0u64;
+        for &(v, c) in groups {
+            cum += c;
+            if idx < cum {
+                return v;
+            }
+        }
+        groups[groups.len() - 1].0
+    };
+    AccuracySummary {
+        mean: sum / n as f64,
+        p50: rank(0.50),
+        p10: rank(0.10),
+        min: groups[0].0,
+        count: n,
+    }
+}
+
 /// One occupancy observation at the end of a scheduler tick.
 #[derive(Debug, Clone, Copy)]
 pub struct OccupancySample {
@@ -451,6 +496,38 @@ mod tests {
         // Single sample pins every field.
         let one = accuracy_summary(&[0.93]);
         assert_eq!((one.p50, one.p10, one.min, one.count), (0.93, 0.93, 0.93, 1));
+    }
+
+    #[test]
+    fn grouped_accuracy_summary_matches_flat_bit_for_bit() {
+        // Grouped summaries must replay the flat path's arithmetic
+        // exactly: same sorted-order sequential sum, same nearest-rank
+        // indices — every field equal at the bit level.
+        let cases: &[&[f64]] = &[
+            &[0.9, 0.7, 1.0, 0.8, 0.6],
+            &[0.93],
+            &[0.5, 0.5, 0.5, 0.5],
+            &[0.61, 0.61, 0.7, 0.7, 0.7, 0.7, 0.94, 0.94, 0.94],
+            &[],
+        ];
+        for samples in cases {
+            let mut sorted = samples.to_vec();
+            sorted.sort_by(f64::total_cmp);
+            let mut groups: Vec<(f64, u64)> = Vec::new();
+            for &v in &sorted {
+                match groups.last_mut() {
+                    Some((gv, c)) if gv.total_cmp(&v).is_eq() => *c += 1,
+                    _ => groups.push((v, 1)),
+                }
+            }
+            let flat = accuracy_summary(samples);
+            let grouped = accuracy_summary_grouped(&groups);
+            assert_eq!(flat.count, grouped.count);
+            assert_eq!(flat.mean.to_bits(), grouped.mean.to_bits());
+            assert_eq!(flat.p50.to_bits(), grouped.p50.to_bits());
+            assert_eq!(flat.p10.to_bits(), grouped.p10.to_bits());
+            assert_eq!(flat.min.to_bits(), grouped.min.to_bits());
+        }
     }
 
     #[test]

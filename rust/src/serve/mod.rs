@@ -57,18 +57,19 @@ mod scheduler;
 mod session;
 mod spec;
 
-pub(crate) use scheduler::aggregate_report;
+pub(crate) use scheduler::{aggregate_report, is_arrival_sorted};
 
-pub use loadgen::{ArrivalProcess, LengthDist, QosAssignment, Scenario};
+pub use loadgen::{ArrivalProcess, LengthDist, QosAssignment, Scenario, TraceCursor, TraceStream};
 pub use metrics::{
-    accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
-    StreamingHistogram,
+    accuracy_summary, accuracy_summary_grouped, AccuracySummary, LatencySummary, OccupancySample,
+    OccupancyTimeline, StreamingHistogram,
 };
 pub use profile::{Phase, PhaseProfile, PhaseTimer};
 pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{
-    run_continuous, run_continuous_engine, run_continuous_traced, run_static, Coster, Policy,
-    ReplicaSim, SchedulerConfig, ServeGenReport, SessionReport,
+    run_continuous, run_continuous_engine, run_continuous_stream, run_continuous_traced,
+    run_static, run_static_stream, Coster, Policy, ReplicaSim, SchedulerConfig, ServeGenReport,
+    SessionReport,
 };
 pub use session::{kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState};
 pub use spec::{

@@ -42,15 +42,15 @@
 
 use super::loadgen::Scenario;
 use super::metrics::{
-    accuracy_summary, AccuracySummary, LatencySummary, OccupancySample, OccupancyTimeline,
-    StreamingHistogram,
+    accuracy_summary_grouped, AccuracySummary, LatencySummary, OccupancySample,
+    OccupancyTimeline, StreamingHistogram,
 };
 use super::profile::{Phase, PhaseProfile, PhaseTimer};
 use super::router::ReplicaLoad;
 use super::session::{
     kv_bytes, kv_bytes_for_layers, KvTracker, Session, SessionSpec, SessionState,
 };
-use crate::config::{ArtemisConfig, EngineStrategy, FidelityParams, TransformerModel};
+use crate::config::{ArtemisConfig, EngineStrategy, TransformerModel};
 use crate::fidelity::{QosTier, ServeFidelity};
 use crate::sim::{
     simulate, CacheStats, DecodeBaseCache, Event, EventKind, EventQueue, SimOptions, StackCoster,
@@ -165,6 +165,15 @@ pub struct ServeGenReport {
     pub peak_kv_per_bank: u64,
     pub kv_budget_per_bank: u64,
     pub timeline: OccupancyTimeline,
+    /// Running FNV fold over *every* session's terminal record in
+    /// retirement order — the O(1) stand-in for hashing the full
+    /// per-session table, which the streaming scheduler no longer
+    /// keeps (DESIGN.md §Scale-out memory accounting).
+    pub sessions_digest: u64,
+    /// Terminal per-session rows, sorted by id.  Bounded: at most the
+    /// first `RETAINED_CAP` (4096) retired sessions are kept (every
+    /// preset fits; million-session scale runs summarize through the
+    /// accumulators and `sessions_digest` instead).
     pub session_reports: Vec<SessionReport>,
 }
 
@@ -209,20 +218,36 @@ impl ServeGenReport {
         h.write_u64(self.peak_kv_per_bank);
         h.write_u64(self.kv_budget_per_bank);
         self.timeline.fold_into(&mut h);
-        h.write_usize(self.session_reports.len());
-        for s in &self.session_reports {
-            h.write_u64(s.id);
-            h.write_u64(s.prompt);
-            h.write_u64(s.gen);
-            h.write_u64(s.generated);
-            h.write_bool(s.rejected);
-            h.write_f64(s.arrival_ns);
-            h.write_f64(s.ttft_ns);
-            h.write_f64(s.finished_ns);
-            h.write_u64(s.tier as u64);
-            h.write_f64(s.est_accuracy);
-        }
+        // Every session's terminal record is already folded into the
+        // retirement-order digest — O(1) here, covers sessions the
+        // bounded `session_reports` table dropped.
+        h.write_u64(self.sessions_digest);
         h.finish()
+    }
+}
+
+/// How many terminal [`SessionReport`] rows a run keeps for display
+/// and small-N assertions.  Beyond this, per-session outcomes live
+/// only in the streaming accumulators + `sessions_digest` — that is
+/// the O(active) memory contract.
+const RETAINED_CAP: usize = 4096;
+
+/// Build the terminal record of a session (any terminal state).
+fn session_report_of(s: &Session, fid: &ServeFidelity) -> SessionReport {
+    let rejected = s.state == SessionState::Rejected;
+    SessionReport {
+        id: s.spec.id,
+        prompt: s.spec.prompt,
+        gen: s.spec.gen,
+        generated: s.generated,
+        rejected,
+        arrival_ns: s.spec.arrival_ns,
+        // Only meaningful once a token was emitted (0.0 for rejected
+        // or zero-length sessions).
+        ttft_ns: if s.generated > 0 { s.first_token_ns - s.spec.arrival_ns } else { 0.0 },
+        finished_ns: s.finished_ns,
+        tier: s.spec.tier,
+        est_accuracy: if rejected { 0.0 } else { fid.accuracy(s.spec.tier) },
     }
 }
 
@@ -232,12 +257,28 @@ struct MetricsAcc {
     per_token: StreamingHistogram,
     itl: StreamingHistogram,
     timeline: OccupancyTimeline,
-    /// One estimated-accuracy sample per finished session.
-    accuracy: Vec<f64>,
+    /// Value-grouped estimated-accuracy samples `(value, count)`,
+    /// ascending by `total_cmp`.  Accuracy estimates come from a tiny
+    /// closed set (fidelity tier × model), so this is O(distinct
+    /// values) where the per-session `Vec<f64>` it replaced was
+    /// O(sessions) — and [`accuracy_summary_grouped`] replays the flat
+    /// summary's float arithmetic exactly.
+    accuracy: Vec<(f64, u64)>,
     total_tokens: u64,
     energy_pj: f64,
     ticks: u64,
     decode_rows: u64,
+    /// Running FNV state over retired session records in retirement
+    /// order ([`retire`](Self::retire)); composed across replicas in
+    /// merge order by [`merge`](Self::merge).
+    records_digest: u64,
+    /// Sessions retired into this accumulator (any terminal state).
+    sessions_total: u64,
+    /// Of those, sessions that ended rejected.
+    rejected: u64,
+    /// First [`RETAINED_CAP`] retired records (display / small-N
+    /// assertions; the digest covers the rest).
+    retained: Vec<SessionReport>,
 }
 
 impl MetricsAcc {
@@ -252,20 +293,81 @@ impl MetricsAcc {
             energy_pj: 0.0,
             ticks: 0,
             decode_rows: 0,
+            records_digest: StateHash::new().state(),
+            sessions_total: 0,
+            rejected: 0,
+            retained: Vec::new(),
         }
     }
 
-    /// Fold another replica's metrics in (cluster aggregation).
+    /// Add `count` accuracy samples of value `v`, keeping the group
+    /// list sorted ascending by `total_cmp`.
+    fn add_accuracy(&mut self, v: f64, count: u64) {
+        match self.accuracy.binary_search_by(|&(g, _)| g.total_cmp(&v)) {
+            Ok(i) => self.accuracy[i].1 += count,
+            Err(i) => self.accuracy.insert(i, (v, count)),
+        }
+    }
+
+    /// Fold a session's terminal record in: counts, accuracy sample
+    /// (served sessions only), the retirement-order digest, and the
+    /// bounded retained table.  Called exactly once per session, at
+    /// the moment it reaches a terminal state — after this the
+    /// session's slot may be recycled.
+    fn retire(&mut self, r: SessionReport) {
+        self.sessions_total += 1;
+        if r.rejected {
+            self.rejected += 1;
+        } else {
+            self.add_accuracy(r.est_accuracy, 1);
+        }
+        let mut h = StateHash::resume(self.records_digest);
+        h.write_u64(r.id);
+        h.write_u64(r.prompt);
+        h.write_u64(r.gen);
+        h.write_u64(r.generated);
+        h.write_bool(r.rejected);
+        h.write_f64(r.arrival_ns);
+        h.write_f64(r.ttft_ns);
+        h.write_f64(r.finished_ns);
+        h.write_u64(r.tier as u64);
+        h.write_f64(r.est_accuracy);
+        self.records_digest = h.state();
+        if self.retained.len() < RETAINED_CAP {
+            self.retained.push(r);
+        }
+    }
+
+    /// Fold another replica's metrics in (cluster aggregation).  The
+    /// digests compose in call order: the aggregate digest is a fold
+    /// over `(replica digest, replica session count)` pairs, so any
+    /// code path aggregating the same replicas in the same (replica
+    /// index) order lands on the same value — thread counts, engine
+    /// strategy, and cost caches never reorder replicas.
     fn merge(&mut self, o: &MetricsAcc) {
         self.ttft.merge(&o.ttft);
         self.per_token.merge(&o.per_token);
         self.itl.merge(&o.itl);
         self.timeline.absorb(&o.timeline);
-        self.accuracy.extend_from_slice(&o.accuracy);
+        for &(v, c) in &o.accuracy {
+            self.add_accuracy(v, c);
+        }
         self.total_tokens += o.total_tokens;
         self.energy_pj += o.energy_pj;
         self.ticks += o.ticks;
         self.decode_rows += o.decode_rows;
+        let mut h = StateHash::resume(self.records_digest);
+        h.write_u64(o.records_digest);
+        h.write_u64(o.sessions_total);
+        self.records_digest = h.state();
+        self.sessions_total += o.sessions_total;
+        self.rejected += o.rejected;
+        for r in &o.retained {
+            if self.retained.len() >= RETAINED_CAP {
+                break;
+            }
+            self.retained.push(*r);
+        }
     }
 
     fn to_json(&self) -> Json {
@@ -274,18 +376,40 @@ impl MetricsAcc {
             ("per_token", hist_to_json(&self.per_token)),
             ("itl", hist_to_json(&self.itl)),
             ("timeline", timeline_to_json(&self.timeline)),
-            ("accuracy", Json::Arr(self.accuracy.iter().map(|&v| f64_bits(v)).collect())),
+            (
+                "accuracy",
+                Json::Arr(
+                    self.accuracy
+                        .iter()
+                        .map(|&(v, c)| Json::Arr(vec![f64_bits(v), u64_str(c)]))
+                        .collect(),
+                ),
+            ),
             ("total_tokens", u64_str(self.total_tokens)),
             ("energy_pj", f64_bits(self.energy_pj)),
             ("ticks", u64_str(self.ticks)),
             ("decode_rows", u64_str(self.decode_rows)),
+            ("records_digest", u64_str(self.records_digest)),
+            ("sessions_total", u64_str(self.sessions_total)),
+            ("rejected", u64_str(self.rejected)),
+            ("retained", Json::Arr(self.retained.iter().map(report_to_json).collect())),
         ])
     }
 
     fn from_json(j: &Json) -> Option<Self> {
-        let mut accuracy = Vec::new();
+        let mut accuracy: Vec<(f64, u64)> = Vec::new();
         for v in j.get("accuracy")?.as_arr()? {
-            accuracy.push(parse_f64_bits(v)?);
+            let pair = v.as_arr()?;
+            accuracy.push((parse_f64_bits(pair.first()?)?, parse_u64_str(pair.get(1)?)?));
+        }
+        // Groups travel sorted; reject a corrupted (unsorted) list
+        // rather than silently mis-summarizing.
+        if accuracy.windows(2).any(|w| w[0].0.total_cmp(&w[1].0).is_ge()) {
+            return None;
+        }
+        let mut retained = Vec::new();
+        for r in j.get("retained")?.as_arr()? {
+            retained.push(report_from_json(r)?);
         }
         Some(Self {
             ttft: hist_from_json(j.get("ttft")?)?,
@@ -297,6 +421,10 @@ impl MetricsAcc {
             energy_pj: parse_f64_bits(j.get("energy_pj")?)?,
             ticks: parse_u64_str(j.get("ticks")?)?,
             decode_rows: parse_u64_str(j.get("decode_rows")?)?,
+            records_digest: parse_u64_str(j.get("records_digest")?)?,
+            sessions_total: parse_u64_str(j.get("sessions_total")?)?,
+            rejected: parse_u64_str(j.get("rejected")?)?,
+            retained,
         })
     }
 }
@@ -425,6 +553,40 @@ fn spec_from_json(j: &Json) -> Option<SessionSpec> {
     })
 }
 
+/// Compact array form of a retired [`SessionReport`] (snapshot
+/// carrier for [`MetricsAcc::retained`]): field order matches the
+/// retirement digest's fold order.
+fn report_to_json(r: &SessionReport) -> Json {
+    Json::Arr(vec![
+        u64_str(r.id),
+        u64_str(r.prompt),
+        u64_str(r.gen),
+        u64_str(r.generated),
+        Json::Bool(r.rejected),
+        f64_bits(r.arrival_ns),
+        f64_bits(r.ttft_ns),
+        f64_bits(r.finished_ns),
+        Json::Num(r.tier.idx() as f64),
+        f64_bits(r.est_accuracy),
+    ])
+}
+
+fn report_from_json(j: &Json) -> Option<SessionReport> {
+    let a = j.as_arr().filter(|a| a.len() == 10)?;
+    Some(SessionReport {
+        id: parse_u64_str(&a[0])?,
+        prompt: parse_u64_str(&a[1])?,
+        gen: parse_u64_str(&a[2])?,
+        generated: parse_u64_str(&a[3])?,
+        rejected: a[4].as_bool()?,
+        arrival_ns: parse_f64_bits(&a[5])?,
+        ttft_ns: parse_f64_bits(&a[6])?,
+        finished_ns: parse_f64_bits(&a[7])?,
+        tier: *QosTier::ALL.get(a[8].as_u64()? as usize)?,
+        est_accuracy: parse_f64_bits(&a[9])?,
+    })
+}
+
 fn session_to_json(s: &Session) -> Json {
     Json::obj(vec![
         ("spec", spec_to_json(&s.spec)),
@@ -499,48 +661,26 @@ fn want<'j>(j: &'j Json, name: &str) -> Result<&'j Json, String> {
     j.get(name).ok_or_else(|| format!("snapshot replica: missing field '{name}'"))
 }
 
-fn session_reports(sessions: &[Session], fid: &ServeFidelity) -> Vec<SessionReport> {
-    sessions
-        .iter()
-        .map(|s| {
-            let rejected = s.state == SessionState::Rejected;
-            SessionReport {
-                id: s.spec.id,
-                prompt: s.spec.prompt,
-                gen: s.spec.gen,
-                generated: s.generated,
-                rejected,
-                arrival_ns: s.spec.arrival_ns,
-                // Only meaningful once a token was emitted (0.0 for
-                // rejected or zero-length sessions).
-                ttft_ns: if s.generated > 0 { s.first_token_ns - s.spec.arrival_ns } else { 0.0 },
-                finished_ns: s.finished_ns,
-                tier: s.spec.tier,
-                est_accuracy: if rejected { 0.0 } else { fid.accuracy(s.spec.tier) },
-            }
-        })
-        .collect()
-}
-
-#[allow(clippy::too_many_arguments)] // internal roll-up of one run's outputs
+/// Assemble a run's report entirely from its streaming accumulators —
+/// no end-of-run pass over (or copy of) a per-session table exists
+/// anymore; session outcomes were folded in at retirement time.
 fn finish_report(
     scheme: String,
     model: &TransformerModel,
-    mut sessions: Vec<Session>,
-    acc: MetricsAcc,
+    acc: &MetricsAcc,
     makespan_ns: f64,
     peak_kv_per_bank: u64,
     kv_budget_per_bank: u64,
-    fid: &ServeFidelity,
 ) -> ServeGenReport {
-    // Stable id order regardless of which replica served whom.
-    sessions.sort_by_key(|s| s.spec.id);
-    let rejected = sessions.iter().filter(|s| s.state == SessionState::Rejected).count() as u64;
+    // Stable id order regardless of which replica served whom or in
+    // what order sessions retired.
+    let mut session_reports = acc.retained.clone();
+    session_reports.sort_by_key(|s| s.id);
     ServeGenReport {
         scheme,
         model: model.name.clone(),
-        sessions: sessions.len(),
-        rejected,
+        sessions: acc.sessions_total as usize,
+        rejected: acc.rejected,
         total_tokens: acc.total_tokens,
         makespan_ns,
         sim_energy_pj: acc.energy_pj,
@@ -549,17 +689,26 @@ fn finish_report(
         ttft: acc.ttft.summary(),
         per_token: acc.per_token.summary(),
         itl: acc.itl.summary(),
-        accuracy: accuracy_summary(&acc.accuracy),
+        accuracy: accuracy_summary_grouped(&acc.accuracy),
         peak_kv_per_bank,
         kv_budget_per_bank,
-        timeline: acc.timeline,
-        session_reports: session_reports(&sessions, fid),
+        timeline: acc.timeline.clone(),
+        sessions_digest: acc.records_digest,
+        session_reports,
     }
 }
 
 /// Arrival order, id-tiebroken — the FIFO discipline.
 fn cmp_arrival(a: &SessionSpec, b: &SessionSpec) -> std::cmp::Ordering {
     a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id))
+}
+
+/// Whether `trace` is already in the `(arrival, id)` order every
+/// driver serves in — true for anything a
+/// [`TraceStream`](super::TraceStream) produced,
+/// letting the run paths borrow the slice instead of clone-sorting it.
+pub(crate) fn is_arrival_sorted(trace: &[SessionSpec]) -> bool {
+    trace.windows(2).all(|w| cmp_arrival(&w[0], &w[1]) != std::cmp::Ordering::Greater)
 }
 
 /// Record one emitted token for session `s` at simulated time `clock`.
@@ -575,13 +724,13 @@ fn emit_token(s: &mut Session, clock: f64, acc: &mut MetricsAcc) {
     acc.total_tokens += 1;
 }
 
-/// Mark a session finished and fold its normalized latency and
-/// tier-estimated accuracy in.
-fn finish_session(s: &mut Session, clock: f64, acc: &mut MetricsAcc, est_accuracy: f64) {
+/// Mark a session finished and fold its normalized latency in.  The
+/// accuracy sample and terminal record follow via
+/// [`MetricsAcc::retire`] at the same site.
+fn finish_session(s: &mut Session, clock: f64, acc: &mut MetricsAcc) {
     s.state = SessionState::Done;
     s.finished_ns = clock;
     acc.per_token.record((clock - s.spec.arrival_ns) / s.spec.gen.max(1) as f64);
-    acc.accuracy.push(est_accuracy);
 }
 
 /// How a replica costs its ticks.
@@ -658,9 +807,17 @@ pub struct ReplicaSim<'a> {
     /// exactly 1.0, so gold-only traces are bit-identical to the
     /// pre-QoS scheduler.
     fidelity: ServeFidelity,
+    /// Slab of live sessions.  Untraced runs recycle slots through
+    /// `free` the moment a session retires, so the slab is O(peak
+    /// concurrent sessions), not O(total); traced runs keep every
+    /// slot because telemetry's span table is indexed by slot.
     sessions: Vec<Session>,
     waiting: Vec<usize>,
     active: Vec<usize>,
+    /// Retired slots available for reuse (untraced runs only).  A slot
+    /// enters `free` only after its terminal record was folded into
+    /// `acc`, so recycling never aliases a live or unreported session.
+    free: Vec<usize>,
     acc: MetricsAcc,
     clock: f64,
     /// Clock-advance strategy (pure wall-clock knob — see the module
@@ -718,6 +875,7 @@ impl<'a> ReplicaSim<'a> {
             sessions: Vec::new(),
             waiting: Vec::new(),
             active: Vec::new(),
+            free: Vec::new(),
             acc: MetricsAcc::new(),
             clock: 0.0,
             engine,
@@ -760,16 +918,42 @@ impl<'a> ReplicaSim<'a> {
 
     /// Hand the replica a session (driver guarantees
     /// `clock >= spec.arrival_ns`); it joins the wait queue.
+    ///
+    /// Untraced runs reuse a retired slot when one is free — slot
+    /// indices are internal bookkeeping (admission order and the SPF
+    /// sort go by `spec` fields), so recycling never moves a reported
+    /// number.  Traced runs always append: the telemetry span table is
+    /// parallel to the slab and needs stable, unique slots.
     pub fn push(&mut self, spec: SessionSpec) {
-        let idx = self.sessions.len();
-        self.sessions.push(Session::new(spec));
+        let arrival_ns = spec.arrival_ns;
+        let recycled = if self.telemetry.is_none() { self.free.pop() } else { None };
+        let idx = match recycled {
+            Some(slot) => {
+                self.sessions[slot] = Session::new(spec);
+                slot
+            }
+            None => {
+                self.sessions.push(Session::new(spec));
+                self.sessions.len() - 1
+            }
+        };
         self.waiting.push(idx);
         self.admission_dirty = true;
         if let Some(tel) = &mut self.telemetry {
             // Window the arrival under its *true* arrival time — the
             // replica clock may have jumped past it, and the spec time
             // is what both engines agree on.
-            tel.on_push(spec.arrival_ns);
+            tel.on_push(arrival_ns);
+        }
+    }
+
+    /// Fold slot `idx`'s terminal record into the accumulators and —
+    /// on untraced runs — hand the slot back for reuse.  Must be
+    /// called exactly once, at the session's terminal transition.
+    fn retire_slot(&mut self, idx: usize) {
+        self.acc.retire(session_report_of(&self.sessions[idx], &self.fidelity));
+        if self.telemetry.is_none() {
+            self.free.push(idx);
         }
     }
 
@@ -872,12 +1056,44 @@ impl<'a> ReplicaSim<'a> {
     /// by session id) reproduces the tick driver's push-before-tick
     /// order, so the wait queue contents at every scan are identical.
     pub fn run_scheduled(&mut self) {
+        self.run_scheduled_stream(std::iter::empty());
+    }
+
+    /// [`run_scheduled`](Self::run_scheduled) merging a lazy arrival
+    /// iterator into the event heap on the fly.
+    ///
+    /// `arrivals` must be in nondecreasing `(arrival_ns, id)` order —
+    /// exactly what a [`TraceStream`](super::TraceStream) yields — so
+    /// holding its single next element as a probe and popping the heap
+    /// only while the top orders strictly before it
+    /// ([`EventQueue::pop_if_before`]) reproduces the pop sequence
+    /// pre-[`schedule`](Self::schedule)-ing every arrival would have,
+    /// with O(active) heap occupancy instead of O(total sessions).
+    pub fn run_scheduled_stream<I: Iterator<Item = SessionSpec>>(&mut self, mut arrivals: I) {
         // A boundary may be owed to work push()ed before this call
         // (mixed driving), never to an empty replica.
         if self.has_work() {
             self.schedule_boundary();
         }
-        while let Some(ev) = self.events.pop() {
+        let mut pending = arrivals.next();
+        loop {
+            let ev = match &pending {
+                Some(s) => self.events.pop_if_before(s.arrival_ns, EventKind::Arrival, s.id),
+                None => self.events.pop(),
+            };
+            let Some(ev) = ev else {
+                // Nothing queued before the pending arrival: it is next.
+                match pending.take() {
+                    Some(spec) => {
+                        self.clock = self.clock.max(spec.arrival_ns);
+                        self.push(spec);
+                        self.schedule_boundary();
+                        pending = arrivals.next();
+                        continue;
+                    }
+                    None => break,
+                }
+            };
             match ev.kind {
                 EventKind::Arrival => {
                     self.clock = self.clock.max(ev.t_ns);
@@ -975,6 +1191,7 @@ impl<'a> ReplicaSim<'a> {
                     if let Some(tel) = &mut self.telemetry {
                         tel.on_reject(self.clock);
                     }
+                    self.retire_slot(idx);
                     continue;
                 }
                 if self.active.len() + admitted.len() < self.sched.max_batch
@@ -1037,15 +1254,20 @@ impl<'a> ReplicaSim<'a> {
             }
             let mut active = std::mem::take(&mut self.active);
             let mut any_finished = false;
+            let recycle = self.telemetry.is_none();
             let (sessions, kv, acc) = (&mut self.sessions, &mut self.kv, &mut self.acc);
             let (model, kv_layers, clock) = (self.model, self.kv_layers, self.clock);
             let fid = &self.fidelity;
+            let free = &mut self.free;
             let tel = &mut self.telemetry;
             active.retain(|&i| {
                 if sessions[i].generated >= sessions[i].spec.gen {
-                    let est = fid.accuracy(sessions[i].spec.tier);
-                    finish_session(&mut sessions[i], clock, acc, est);
+                    finish_session(&mut sessions[i], clock, acc);
                     kv.release(kv_bytes_for_layers(model, sessions[i].max_context(), kv_layers));
+                    acc.retire(session_report_of(&sessions[i], fid));
+                    if recycle {
+                        free.push(i);
+                    }
                     if let Some(t) = tel.as_mut() {
                         t.on_finish(clock);
                     }
@@ -1083,13 +1305,13 @@ impl<'a> ReplicaSim<'a> {
                 self.sessions[idx].state = SessionState::Decoding;
                 // Degenerate zero-length generations finish at prefill.
                 if self.sessions[idx].spec.gen == 0 {
-                    let est = self.fidelity.accuracy(self.sessions[idx].spec.tier);
-                    finish_session(&mut self.sessions[idx], self.clock, &mut self.acc, est);
+                    finish_session(&mut self.sessions[idx], self.clock, &mut self.acc);
                     self.kv.release(kv_bytes_for_layers(
                         self.model,
                         self.sessions[idx].max_context(),
                         self.kv_layers,
                     ));
+                    self.retire_slot(idx);
                     if let Some(tel) = &mut self.telemetry {
                         tel.on_finish(self.clock);
                     }
@@ -1113,6 +1335,13 @@ impl<'a> ReplicaSim<'a> {
         }
     }
 
+    /// Test hook: `(slab length, waiting, active, free)` for slab
+    /// invariant checks.
+    #[cfg(test)]
+    fn slab_state(&self) -> (usize, Vec<usize>, Vec<usize>, Vec<usize>) {
+        (self.sessions.len(), self.waiting.clone(), self.active.clone(), self.free.clone())
+    }
+
     /// Stats of the attached cost cache (zeros for the legacy coster).
     pub fn cache_stats(&self) -> CacheStats {
         self.coster.cache_stats()
@@ -1129,12 +1358,10 @@ impl<'a> ReplicaSim<'a> {
         finish_report(
             scheme,
             self.model,
-            self.sessions.clone(),
-            self.acc.clone(),
+            &self.acc,
             self.clock,
             self.kv.peak_per_bank(),
             self.kv.budget_per_bank(),
-            &self.fidelity,
         )
     }
 
@@ -1182,6 +1409,7 @@ impl<'a> ReplicaSim<'a> {
             ("sessions", Json::Arr(self.sessions.iter().map(session_to_json).collect())),
             ("waiting", idx_list_to_json(&self.waiting)),
             ("active", idx_list_to_json(&self.active)),
+            ("free", idx_list_to_json(&self.free)),
             ("acc", self.acc.to_json()),
             (
                 "kv",
@@ -1218,6 +1446,11 @@ impl<'a> ReplicaSim<'a> {
             idx_list_from_json(want(j, "waiting")?, sessions.len()).ok_or_else(|| bad("waiting"))?;
         let active =
             idx_list_from_json(want(j, "active")?, sessions.len()).ok_or_else(|| bad("active"))?;
+        let free =
+            idx_list_from_json(want(j, "free")?, sessions.len()).ok_or_else(|| bad("free"))?;
+        if free.iter().any(|i| waiting.contains(i) || active.contains(i)) {
+            return Err("snapshot replica: free slot aliases a live session".into());
+        }
         let acc = MetricsAcc::from_json(want(j, "acc")?).ok_or_else(|| bad("acc"))?;
         let kv = want(j, "kv")?;
         let kv_reserved = parse_u64_str(want(kv, "reserved_per_bank")?)
@@ -1267,6 +1500,7 @@ impl<'a> ReplicaSim<'a> {
         self.sessions = sessions;
         self.waiting = waiting;
         self.active = active;
+        self.free = free;
         self.acc = acc;
         self.kv.restore_occupancy(kv_reserved, kv_peak);
         for ev in events {
@@ -1276,43 +1510,45 @@ impl<'a> ReplicaSim<'a> {
     }
 }
 
-/// Drive one replica through a trace: push each arrival once the
-/// replica clock reaches it, then serve out the tail.
-pub(crate) fn drive_replica(sim: &mut ReplicaSim<'_>, order: &[SessionSpec]) {
-    for spec in order {
+/// Drive one replica through an arrival-ordered stream: push each
+/// arrival once the replica clock reaches it, then serve out the tail.
+pub(crate) fn drive_replica_stream<I: Iterator<Item = SessionSpec>>(
+    sim: &mut ReplicaSim<'_>,
+    arrivals: I,
+) {
+    for spec in arrivals {
         sim.advance_to(spec.arrival_ns);
-        sim.push(*spec);
+        sim.push(spec);
     }
     sim.run_to_completion();
+}
+
+/// [`drive_replica_stream`] over a materialized slice.
+pub(crate) fn drive_replica(sim: &mut ReplicaSim<'_>, order: &[SessionSpec]) {
+    drive_replica_stream(sim, order.iter().copied());
 }
 
 /// Aggregate a cluster's replicas into one cluster-wide report:
 /// histograms merge exactly, tokens/energy/ticks sum, the makespan is
 /// the latest replica clock, and KV peaks/budgets are per-stack maxima.
+/// Replicas fold in index order, so the aggregate session digest is
+/// deterministic across engines, thread counts, and cache modes.
 pub(crate) fn aggregate_report(
     replicas: &[ReplicaSim<'_>],
     scheme: String,
     model: &TransformerModel,
 ) -> ServeGenReport {
     let mut acc = MetricsAcc::new();
-    let mut sessions: Vec<Session> = Vec::new();
     let mut makespan = 0.0f64;
     let mut peak = 0u64;
     let mut budget = 0u64;
     for r in replicas {
         acc.merge(&r.acc);
-        sessions.extend(r.sessions.iter().cloned());
         makespan = makespan.max(r.clock);
         peak = peak.max(r.kv.peak_per_bank());
         budget = budget.max(r.kv.budget_per_bank());
     }
-    // Tier accuracies do not depend on the replica shape, so any
-    // replica's table works for the aggregate's per-session rows.
-    let fid = replicas
-        .first()
-        .map(|r| r.fidelity.clone())
-        .unwrap_or_else(|| ServeFidelity::for_model(&FidelityParams::default(), model));
-    finish_report(scheme, model, sessions, acc, makespan, peak, budget, &fid)
+    finish_report(scheme, model, &acc, makespan, peak, budget)
 }
 
 /// Serve `trace` with iteration-level continuous batching on a single
@@ -1368,8 +1604,19 @@ fn run_continuous_inner(
     engine: EngineStrategy,
     tracing: Option<(&TraceConfig, &crate::telemetry::TraceMeta)>,
 ) -> (ServeGenReport, Option<crate::telemetry::Trace>) {
-    let mut order: Vec<SessionSpec> = trace.to_vec();
-    order.sort_by(cmp_arrival);
+    // Generated traces are already in arrival order — borrow them
+    // as-is; only an unsorted caller pays the clone + sort.
+    let sorted;
+    let order: &[SessionSpec] = if is_arrival_sorted(trace) {
+        trace
+    } else {
+        sorted = {
+            let mut v = trace.to_vec();
+            v.sort_by(cmp_arrival);
+            v
+        };
+        &sorted
+    };
     let coster = Coster::Batched { cfg, model, opts: SimOptions::artemis() };
     let mut sim = ReplicaSim::new(
         model,
@@ -1384,13 +1631,8 @@ fn run_continuous_inner(
         sim.enable_telemetry(tc);
     }
     match engine {
-        EngineStrategy::Tick => drive_replica(&mut sim, &order),
-        EngineStrategy::Event => {
-            for spec in &order {
-                sim.schedule(*spec);
-            }
-            sim.run_scheduled();
-        }
+        EngineStrategy::Tick => drive_replica(&mut sim, order),
+        EngineStrategy::Event => sim.run_scheduled_stream(order.iter().copied()),
     }
     let report = sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch));
     let doc = tracing.map(|(tc, meta)| {
@@ -1400,6 +1642,40 @@ fn run_continuous_inner(
         t
     });
     (report, doc)
+}
+
+/// [`run_continuous_engine`] over a lazy arrival stream: the trace is
+/// never materialized, sessions retire into streaming accumulators,
+/// and finished slots recycle — memory is O(active sessions + bounded
+/// accumulators) regardless of how many sessions `arrivals` yields.
+///
+/// `arrivals` must be in nondecreasing `(arrival_ns, id)` order (a
+/// [`TraceStream`](super::TraceStream) is).  The report — and its
+/// state hash — is bit-identical to the materialized
+/// [`run_continuous_engine`] on the collected trace, for either
+/// engine (`tests/scale_streaming.rs`).
+pub fn run_continuous_stream<I: Iterator<Item = SessionSpec>>(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    arrivals: I,
+    sched: &SchedulerConfig,
+    engine: EngineStrategy,
+) -> ServeGenReport {
+    let coster = Coster::Batched { cfg, model, opts: SimOptions::artemis() };
+    let mut sim = ReplicaSim::new(
+        model,
+        sched.clone(),
+        coster,
+        KvTracker::new(cfg, model),
+        model.layers as u64,
+        ServeFidelity::for_model(&cfg.fidelity, model),
+        engine,
+    );
+    match engine {
+        EngineStrategy::Tick => drive_replica_stream(&mut sim, arrivals),
+        EngineStrategy::Event => sim.run_scheduled_stream(arrivals),
+    }
+    sim.report(format!("continuous({} b{})", sched.policy, sched.max_batch))
 }
 
 /// Serve `trace` with the static pad-and-drop batcher the repo's
@@ -1414,11 +1690,31 @@ pub fn run_static(
     trace: &[SessionSpec],
     batch: usize,
 ) -> ServeGenReport {
+    if is_arrival_sorted(trace) {
+        run_static_stream(cfg, model, trace.iter().copied(), batch)
+    } else {
+        let mut order = trace.to_vec();
+        order.sort_by(cmp_arrival);
+        run_static_stream(cfg, model, order.iter().copied(), batch)
+    }
+}
+
+/// [`run_static`] over a lazy arrival stream (nondecreasing
+/// `(arrival_ns, id)` order required): groups of `batch` sessions are
+/// pulled, served, retired, and dropped — memory is O(batch), not
+/// O(trace).  The `Clone` bound exists because a second cursor of the
+/// stream walks ahead to count arrived-but-unserved sessions for the
+/// occupancy timeline; the clock is nondecreasing, so that lookahead
+/// advances monotonically and never re-scans.
+pub fn run_static_stream<I: Iterator<Item = SessionSpec> + Clone>(
+    cfg: &ArtemisConfig,
+    model: &TransformerModel,
+    arrivals: I,
+    batch: usize,
+) -> ServeGenReport {
     assert!(batch > 0, "batch must be positive");
     let opts = SimOptions::artemis();
     let fid = ServeFidelity::for_model(&cfg.fidelity, model);
-    let mut sessions: Vec<Session> = trace.iter().map(|&spec| Session::new(spec)).collect();
-    sessions.sort_by(|a, b| cmp_arrival(&a.spec, &b.spec));
 
     let kv = KvTracker::new(cfg, model);
     let kv_budget = kv.budget_per_bank();
@@ -1426,21 +1722,33 @@ pub fn run_static(
     let mut acc = MetricsAcc::new();
     let mut clock = 0.0f64;
 
-    let n = sessions.len();
-    let mut start = 0usize;
-    while start < n {
-        let end = (start + batch).min(n);
-        let group = start..end;
+    // Queue-depth lookahead: counts stream arrivals at or before the
+    // clock, monotonically.
+    let mut lookahead = arrivals.clone().peekable();
+    let mut arrived = 0u64; // arrivals the lookahead has counted
+    let mut grouped = 0u64; // sessions pulled into formed groups
+
+    let mut arrivals = arrivals;
+    let mut group: Vec<Session> = Vec::with_capacity(batch);
+    loop {
+        group.clear();
+        while group.len() < batch {
+            match arrivals.next() {
+                Some(spec) => group.push(Session::new(spec)),
+                None => break,
+            }
+        }
+        if group.is_empty() {
+            break;
+        }
+        grouped += group.len() as u64;
         // The batch forms when its last member arrives; the tail batch
         // forms at the last arrival of the whole trace.
-        let formed = sessions[group.clone()]
-            .iter()
-            .map(|s| s.spec.arrival_ns)
-            .fold(0.0f64, f64::max);
+        let formed = group.iter().map(|s| s.spec.arrival_ns).fold(0.0f64, f64::max);
         clock = clock.max(formed);
 
-        let max_prompt = sessions[group.clone()].iter().map(|s| s.spec.prompt).max().unwrap_or(1);
-        let max_gen = sessions[group.clone()].iter().map(|s| s.spec.gen).max().unwrap_or(0);
+        let max_prompt = group.iter().map(|s| s.spec.prompt).max().unwrap_or(1);
+        let max_gen = group.iter().map(|s| s.spec.gen).max().unwrap_or(0);
 
         // Fidelity factors of the group: the static batcher runs the
         // whole padded batch at its slowest member's pace (gold-only
@@ -1448,16 +1756,16 @@ pub fn run_static(
         let (tf, ef) = {
             let mut tf = 0.0f64;
             let mut ef_sum = 0.0f64;
-            for s in &sessions[group.clone()] {
+            for s in &group {
                 tf = tf.max(fid.time(s.spec.tier));
                 ef_sum += fid.energy(s.spec.tier);
             }
-            (tf, ef_sum / (end - start) as f64)
+            (tf, ef_sum / group.len() as f64)
         };
 
         // Pad-and-drop prefill: every row padded to the batch's maximum
         // prompt, short tail batches padded to the full batch size.
-        for s in &mut sessions[group.clone()] {
+        for s in &mut group {
             s.state = SessionState::Prefill;
             s.admitted_ns = clock;
         }
@@ -1471,16 +1779,16 @@ pub fn run_static(
         // shards, matching KvTracker's accounting).
         let banks = cfg.hbm.banks_total().max(1);
         let group_kv_per_bank =
-            (end - start) as u64 * kv_bytes(model, max_prompt + max_gen).div_ceil(banks);
+            group.len() as u64 * kv_bytes(model, max_prompt + max_gen).div_ceil(banks);
         peak_kv = peak_kv.max(group_kv_per_bank);
 
-        for s in &mut sessions[group.clone()] {
+        for s in &mut group {
             s.state = SessionState::Decoding;
             // Degenerate zero-length generations finish at prefill,
             // matching the continuous scheduler's semantics.
             if s.spec.gen == 0 {
-                let est = fid.accuracy(s.spec.tier);
-                finish_session(s, clock, &mut acc, est);
+                finish_session(s, clock, &mut acc);
+                acc.retire(session_report_of(s, &fid));
             }
         }
         for t in 0..max_gen {
@@ -1490,22 +1798,30 @@ pub fn run_static(
             acc.energy_pj += r.total_energy_pj() * ef;
             acc.ticks += 1;
             acc.decode_rows += batch as u64;
-            for s in &mut sessions[group.clone()] {
+            for s in &mut group {
                 if s.generated < s.spec.gen {
                     emit_token(s, clock, &mut acc);
                     if s.generated == s.spec.gen {
-                        let est = fid.accuracy(s.spec.tier);
-                        finish_session(s, clock, &mut acc, est);
+                        finish_session(s, clock, &mut acc);
+                        acc.retire(session_report_of(s, &fid));
                     }
                 }
             }
-            let live = sessions[group.clone()]
-                .iter()
-                .filter(|s| s.state == SessionState::Decoding)
-                .count();
+            let live = group.iter().filter(|s| s.state == SessionState::Decoding).count();
             // Arrived-but-unserved sessions, matching the continuous
-            // scheduler's queue-depth semantics.
-            let queued = sessions[end..].iter().filter(|s| s.spec.arrival_ns <= clock).count();
+            // scheduler's queue-depth semantics.  Every session already
+            // pulled into a group arrived at or before `clock` (the
+            // stream is arrival-sorted and `clock >= formed`), so the
+            // arrived-but-ungrouped count is lookahead minus grouped.
+            while let Some(s) = lookahead.peek() {
+                if s.arrival_ns <= clock {
+                    arrived += 1;
+                    lookahead.next();
+                } else {
+                    break;
+                }
+            }
+            let queued = arrived.saturating_sub(grouped) as usize;
             acc.timeline.record(OccupancySample {
                 t_ns: clock,
                 active: live,
@@ -1513,11 +1829,10 @@ pub fn run_static(
                 kv_per_bank_bytes: group_kv_per_bank,
             });
         }
-        start = end;
     }
 
     let scheme = format!("static(b{batch})");
-    finish_report(scheme, model, sessions, acc, clock, peak_kv, kv_budget, &fid)
+    finish_report(scheme, model, &acc, clock, peak_kv, kv_budget)
 }
 
 #[cfg(test)]
@@ -1761,6 +2076,143 @@ mod tests {
                 assert_eq!(spans.len(), 8);
             }
         }
+    }
+
+    #[test]
+    fn streaming_paths_match_materialized_bit_for_bit() {
+        // The tentpole invariant: the lazy TraceStream path and the
+        // legacy materialized-Vec path fold to the same state hash on
+        // both engines and the static batcher.
+        let cfg = ArtemisConfig::default();
+        let sc = Scenario::chat().with_sessions(16);
+        let trace = sc.generate(2);
+        let sched = SchedulerConfig::for_scenario(&sc, Policy::Fifo);
+        for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
+            let eager = run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine);
+            let lazy = run_continuous_stream(&cfg, &sc.model, sc.stream(2), &sched, engine);
+            assert_eq!(eager.state_hash(), lazy.state_hash(), "{engine:?}");
+            assert_eq!(eager.sessions_digest, lazy.sessions_digest, "{engine:?}");
+            assert_eq!(eager.sessions, lazy.sessions);
+        }
+        let eager = run_static(&cfg, &sc.model, &trace, 4);
+        let lazy = run_static_stream(&cfg, &sc.model, sc.stream(2), 4);
+        assert_eq!(eager.state_hash(), lazy.state_hash(), "static");
+        assert_eq!(eager.sessions_digest, lazy.sessions_digest, "static");
+    }
+
+    /// Arrivals so sparse that each session drains before the next one
+    /// lands: the slab must stay O(active), not O(trace length).
+    fn trickle_scenario(n: usize) -> Scenario {
+        use crate::serve::{ArrivalProcess, LengthDist, QosAssignment};
+        Scenario {
+            name: "trickle",
+            model: crate::config::ModelZoo::opt_350(),
+            sessions: n,
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 0.001 },
+            prompt: LengthDist::Uniform { lo: 16, hi: 64 },
+            gen: LengthDist::Uniform { lo: 8, hi: 24 },
+            max_batch: 2,
+            qos: QosAssignment::Uniform(QosTier::Gold),
+        }
+    }
+
+    #[test]
+    fn slab_recycles_slots_without_aliasing_live_sessions() {
+        let cfg = ArtemisConfig::default();
+        let sc = trickle_scenario(24);
+        let coster = Coster::Batched { cfg: &cfg, model: &sc.model, opts: SimOptions::artemis() };
+        let mut sim = ReplicaSim::new(
+            &sc.model,
+            SchedulerConfig::for_scenario(&sc, Policy::Fifo),
+            coster,
+            KvTracker::new(&cfg, &sc.model),
+            sc.model.layers as u64,
+            ServeFidelity::for_model(&cfg.fidelity, &sc.model),
+            EngineStrategy::Tick,
+        );
+        for spec in sc.stream(3) {
+            sim.advance_to(spec.arrival_ns);
+            sim.push(spec);
+            // After every tick: live slots (waiting + active) are
+            // distinct, and no free slot aliases a live one.
+            loop {
+                let (len, waiting, active, free) = sim.slab_state();
+                let mut seen = vec![false; len];
+                for &i in waiting.iter().chain(&active) {
+                    assert!(!seen[i], "live slot {i} aliased");
+                    seen[i] = true;
+                }
+                for &i in &free {
+                    assert!(!seen[i], "free slot {i} aliases a live session");
+                    seen[i] = true;
+                }
+                if !sim.step_ticks(1) {
+                    break;
+                }
+            }
+        }
+        sim.run_to_completion();
+        let (len, _, _, free) = sim.slab_state();
+        assert!(len <= 4, "slab should stay O(active) under trickle arrivals, got {len}");
+        assert_eq!(free.len(), len, "all slots recycled after drain");
+        let r = sim.report("trickle".into());
+        assert_eq!(r.sessions, 24);
+        assert_eq!(r.accuracy.count, 24);
+    }
+
+    #[test]
+    fn traced_runs_keep_every_slot_and_recycling_is_hash_neutral() {
+        let cfg = ArtemisConfig::default();
+        let sc = trickle_scenario(10);
+        let run = |traced: bool| {
+            let coster =
+                Coster::Batched { cfg: &cfg, model: &sc.model, opts: SimOptions::artemis() };
+            let mut sim = ReplicaSim::new(
+                &sc.model,
+                SchedulerConfig::for_scenario(&sc, Policy::Fifo),
+                coster,
+                KvTracker::new(&cfg, &sc.model),
+                sc.model.layers as u64,
+                ServeFidelity::for_model(&cfg.fidelity, &sc.model),
+                EngineStrategy::Tick,
+            );
+            let tc = TraceConfig::default();
+            if traced {
+                sim.enable_telemetry(&tc);
+            }
+            for spec in sc.stream(5) {
+                sim.advance_to(spec.arrival_ns);
+                sim.push(spec);
+            }
+            sim.run_to_completion();
+            let slab = sim.slab_state();
+            (slab, sim.report("t".into()))
+        };
+        // Telemetry pins spans to slot indices, so traced runs must not
+        // recycle: the slab holds every session and the free list stays
+        // empty.
+        let ((len_t, _, _, free_t), traced) = run(true);
+        assert_eq!(len_t, 10);
+        assert!(free_t.is_empty());
+        // Untraced runs recycle — and the report hash must not notice.
+        let ((len_u, _, _, _), untraced) = run(false);
+        assert!(len_u < 10, "trickle arrivals must recycle, slab = {len_u}");
+        assert_eq!(traced.state_hash(), untraced.state_hash());
+    }
+
+    #[test]
+    fn retained_reports_are_capped_but_digest_covers_everything() {
+        // Two runs that differ only past the retained window must still
+        // hash differently through the retirement digest, and identical
+        // runs agree on it.
+        let (cfg, sc, trace) = chat_small(6);
+        let sched = SchedulerConfig::default();
+        let a = run_continuous(&cfg, &sc.model, &trace, &sched);
+        let b = run_continuous(&cfg, &sc.model, &trace, &sched);
+        assert_eq!(a.sessions_digest, b.sessions_digest);
+        assert_eq!(a.session_reports.len(), 6, "under the cap everything is retained");
+        let other = run_continuous(&cfg, &sc.model, &sc.generate(9), &sched);
+        assert_ne!(a.sessions_digest, other.sessions_digest);
     }
 
     #[test]

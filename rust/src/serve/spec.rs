@@ -67,6 +67,12 @@ pub const VALUE_FLAGS: &[&str] = &[
 /// Boolean flags (no value token follows).
 pub const BOOL_FLAGS: &[&str] = &["--no-cost-cache"];
 
+/// Upper bound on `--sessions`: the streaming core keeps memory at
+/// O(active sessions), but beyond 2^32 a run stops being a simulation
+/// request and starts being a typo — rejected up front with the
+/// estimated materialized-trace footprint for scale.
+pub const MAX_SESSIONS: u64 = 1 << 32;
+
 /// Cluster scale-out shape: present iff the run uses the cluster
 /// driver (any scale-out flag, or a `cluster` section in a spec file).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -271,6 +277,21 @@ impl ServeSpec {
         }
         if let Some(v) = flag_value(args, "--sessions") {
             spec.sessions = Some(v.parse()?);
+        }
+        // Ids are folded as u64 but the session-count budget is capped
+        // at 2^32 up front: beyond that even the O(active) core is a
+        // mistake to launch silently, and a materialized trace would be
+        // unservable.  Applies to spec-file values too (checked after
+        // the flag merge).
+        if let Some(n) = spec.sessions {
+            if n as u64 > MAX_SESSIONS {
+                let gib = n as f64 * std::mem::size_of::<crate::serve::SessionSpec>() as f64
+                    / f64::from(1u32 << 30);
+                return Err(anyhow!(
+                    "--sessions {n} exceeds the 2^32 session cap \
+                     (a materialized trace alone would be ~{gib:.0} GiB)"
+                ));
+            }
         }
         if let Some(name) = flag_value(args, "--model") {
             spec.model = Some(name);
@@ -662,6 +683,26 @@ mod tests {
         assert_eq!(s.engine, EngineStrategy::Tick);
         assert!(s.cluster.is_none());
         assert_eq!(s.trace.window_ms, 100.0);
+    }
+
+    #[test]
+    fn session_counts_beyond_the_cap_are_rejected_with_an_estimate() {
+        // At the cap: fine (streaming keeps memory O(active)).
+        let ok = ServeSpec::from_args(&sv(&["serve-gen", "--sessions", "4294967296"]));
+        assert_eq!(ok.unwrap().sessions, Some(1 << 32));
+        // One past it: rejected up front, with a memory estimate.
+        let err = ServeSpec::from_args(&sv(&["serve-gen", "--sessions", "4294967297"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds the 2^32 session cap"), "{err}");
+        assert!(err.contains("GiB"), "{err}");
+        // Spec-file values are held to the same cap after the merge.
+        let base =
+            ServeSpec { sessions: Some((1usize << 32) + 1), ..ServeSpec::default() };
+        let err = ServeSpec::from_args_over(base, &sv(&["serve-gen"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds the 2^32 session cap"), "{err}");
     }
 
     #[test]

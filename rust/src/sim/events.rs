@@ -114,6 +114,32 @@ impl<P> EventQueue<P> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Pop the earliest queued event only if it orders strictly before
+    /// the probe key `(t_ns, kind, id)` under the `(time, kind, id)`
+    /// total order; otherwise leave the queue untouched and return
+    /// `None`.
+    ///
+    /// This is the streaming merge primitive: a lazy arrival iterator
+    /// holds one pending arrival as the probe, and the drive loop takes
+    /// whichever of {heap top, pending arrival} is earliest — exactly
+    /// the pop sequence pre-pushing every arrival into the heap would
+    /// have produced, with O(active) heap occupancy instead of
+    /// O(total sessions).
+    pub fn pop_if_before(&mut self, t_ns: f64, kind: EventKind, id: u64) -> Option<Event<P>> {
+        let top = self.heap.peek()?;
+        let before = top
+            .t_ns
+            .total_cmp(&t_ns)
+            .then(top.kind.cmp(&kind))
+            .then(top.id.cmp(&id))
+            == Ordering::Less;
+        if before {
+            self.heap.pop()
+        } else {
+            None
+        }
+    }
 }
 
 impl<P: Clone> EventQueue<P> {
@@ -197,6 +223,21 @@ mod tests {
         assert_eq!(q.len(), 3, "snapshot must not drain");
         let popped: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.id).collect();
         assert_eq!(popped, snap);
+    }
+
+    #[test]
+    fn pop_if_before_takes_only_strictly_earlier_events() {
+        let mut q = EventQueue::new();
+        q.push(ev(10.0, EventKind::TickBoundary, u64::MAX));
+        // A pending arrival at t=10 ties on time but Arrival < TickBoundary,
+        // so the boundary is NOT strictly before it: the arrival goes first.
+        assert!(q.pop_if_before(10.0, EventKind::Arrival, 3).is_none());
+        // A pending arrival at t=11 is after the boundary: pop it.
+        let popped = q.pop_if_before(11.0, EventKind::Arrival, 3).unwrap();
+        assert_eq!(popped.kind, EventKind::TickBoundary);
+        assert!(q.is_empty());
+        // Empty queue: always None.
+        assert!(q.pop_if_before(0.0, EventKind::Arrival, 0).is_none());
     }
 
     #[test]

@@ -52,6 +52,23 @@ impl StateHash {
         Self { h: FNV_OFFSET }
     }
 
+    /// Continue a fold from a previously captured [`state`](Self::state).
+    ///
+    /// FNV-1a's whole state *is* its running digest, so a fold can be
+    /// suspended (e.g. across a daemon snapshot, or between session
+    /// retirements in the streaming scheduler) and resumed later:
+    /// `resume(a.state())` followed by the remaining writes produces
+    /// exactly the hash the uninterrupted fold would have.
+    pub fn resume(state: u64) -> Self {
+        Self { h: state }
+    }
+
+    /// The raw running state (equal to [`finish`](Self::finish); named
+    /// separately to signal "this will be resumed", not "this is done").
+    pub fn state(&self) -> u64 {
+        self.h
+    }
+
     pub fn write_u8(&mut self, b: u8) {
         self.h ^= b as u64;
         self.h = self.h.wrapping_mul(FNV_PRIME);
@@ -137,6 +154,21 @@ mod tests {
             h.write_str("bc");
         });
         assert_ne!(split_ab, split_a);
+    }
+
+    #[test]
+    fn resume_continues_an_interrupted_fold_exactly() {
+        let whole = hash_of(|h| {
+            h.write_u64(1);
+            h.write_str("ab");
+            h.write_f64(2.5);
+        });
+        let mut first = StateHash::new();
+        first.write_u64(1);
+        let mut second = StateHash::resume(first.state());
+        second.write_str("ab");
+        second.write_f64(2.5);
+        assert_eq!(second.finish(), whole);
     }
 
     #[test]

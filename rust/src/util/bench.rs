@@ -79,6 +79,19 @@ pub fn keep<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where procfs is unavailable.
+///
+/// `VmHWM` is a process-lifetime high-water mark: it never decreases,
+/// so a scale suite must run its points in ascending size order for
+/// per-point readings to be meaningful (the `bench-scale` lane does).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +108,14 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.mean_ns * 1.5);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn peak_rss_is_positive_where_procfs_exists() {
+        if let Some(bytes) = peak_rss_bytes() {
+            // Any live process has touched at least a page.
+            assert!(bytes >= 4096, "implausible VmHWM: {bytes}");
+        }
     }
 
     #[test]

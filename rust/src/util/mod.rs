@@ -54,6 +54,23 @@ impl XorShift64 {
         let u2 = self.unit();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
+
+    /// Raw generator state — the resumable cursor a lazy trace stream
+    /// serializes into snapshots.  Feed it back through
+    /// [`XorShift64::from_state`] to continue the exact sequence.
+    #[inline]
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator at a captured raw state (NOT a seed — seeds
+    /// go through [`XorShift64::new`]'s scrambling).  A valid captured
+    /// state is never 0; the `max(1)` guards the all-zero fixed point
+    /// against corrupted input.
+    #[inline]
+    pub fn from_state(state: u64) -> Self {
+        Self { state: state.max(1) }
+    }
 }
 
 /// Mean absolute error between two slices (panics on length mismatch).
@@ -103,6 +120,18 @@ mod tests {
         let mut a = XorShift64::new(1);
         let mut b = XorShift64::new(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_the_sequence() {
+        let mut a = XorShift64::new(42);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = XorShift64::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

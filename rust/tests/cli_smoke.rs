@@ -36,6 +36,7 @@ fn help_exits_zero_and_lists_commands() {
         "csv",
         "cluster-scale",
         "bench-serve",
+        "bench-scale",
         "fidelity-sweep",
         "trace-report",
         "serve-daemon",
@@ -568,6 +569,41 @@ fn serve_gen_rejects_misspelled_flags_with_did_you_mean() {
     assert!(!ok);
     assert!(stderr.contains("unknown flag '--frobnicate'"), "{stderr}");
     assert!(stderr.contains("artemis help"), "{stderr}");
+}
+
+#[test]
+fn serve_gen_rejects_session_counts_beyond_the_cap() {
+    // Counts past 2^32 are refused up front with a canonical error
+    // that estimates the materialized-trace memory, instead of letting
+    // the run drift into an unserviceable allocation.
+    let (ok, _, stderr) = run(&["serve-gen", "--sessions", "4294967297"]);
+    assert!(!ok, "a 2^32+1 session request must be rejected");
+    assert!(stderr.contains("exceeds the 2^32 session cap"), "{stderr}");
+    assert!(stderr.contains("GiB"), "error should estimate memory: {stderr}");
+}
+
+#[test]
+fn bench_scale_writes_artifact_and_gates_on_engine_equality() {
+    // Tiny ascending points (>= 10x apart, so the sub-linear-memory
+    // ratio gate is exercised) through both engines; the JSON artifact
+    // must land with one row per point.
+    let path = std::env::temp_dir().join(format!("artemis-scale-{}.json", std::process::id()));
+    let p = path.to_str().unwrap();
+    let (ok, out, stderr) =
+        run(&["bench-scale", "--sessions", "4,40", "--seed", "1", "--out", p]);
+    assert!(ok, "bench-scale failed: {stderr}");
+    for needle in ["bench-scale chat 4 sessions", "bench-scale chat 40 sessions", "state-hash"] {
+        assert!(out.contains(needle), "missing '{needle}':\n{out}");
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"suite\": \"serve_scale_stream\""), "{text}");
+    assert!(text.contains("\"sessions\": 4") && text.contains("\"sessions\": 40"), "{text}");
+    std::fs::remove_file(&path).ok();
+    // Non-ascending points are rejected (peak RSS is a process-wide
+    // high-water mark; descending points would read as flat).
+    let (ok, _, stderr) = run(&["bench-scale", "--sessions", "40,4"]);
+    assert!(!ok);
+    assert!(stderr.contains("strictly ascending"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,134 @@
+//! Differential suite for the streaming serving core (DESIGN.md
+//! §Scale-out memory accounting).
+//!
+//! The lazy arrival stream ([`Scenario::stream`]) plus the slab-backed
+//! session store must be *observably indistinguishable* from the
+//! legacy materialize-everything path: same one-u64 state hash, same
+//! retirement-order sessions digest — across scenarios, clock-advance
+//! engines, static vs continuous batching, cluster placements, thread
+//! counts, and a mid-stream snapshot/restore of a streamed campaign.
+
+use artemis::cluster::{run_cluster, run_cluster_stream, Campaign};
+use artemis::config::{ArtemisConfig, ClusterConfig, EngineStrategy, ModelZoo, Placement};
+use artemis::serve::{
+    run_continuous_engine, run_continuous_stream, run_static, run_static_stream, Policy,
+    QosAssignment, RoutePolicy, Scenario, SchedulerConfig,
+};
+
+/// Small fast scenario on the 2-layer Transformer-base with mixed QoS
+/// tiers in flight (the engine_equivalence idiom).
+fn fast_scenario(name: &str, sessions: usize) -> Scenario {
+    let mut sc = Scenario::by_name(name).expect("built-in scenario").with_sessions(sessions);
+    sc.model = ModelZoo::transformer_base();
+    sc.with_qos(QosAssignment::Mixed)
+}
+
+#[test]
+fn streaming_arrivals_match_materialized_reports_bit_for_bit() {
+    let cfg = ArtemisConfig::default();
+    let seed = 7u64;
+    for name in ["chat", "summarize", "burst"] {
+        let sc = fast_scenario(name, 12);
+        let trace = sc.generate(seed);
+        for policy in [Policy::Fifo, Policy::ShortestPromptFirst] {
+            let sched = SchedulerConfig { max_batch: 4, policy };
+            for engine in [EngineStrategy::Tick, EngineStrategy::Event] {
+                let mat = run_continuous_engine(&cfg, &sc.model, &trace, &sched, engine);
+                let st =
+                    run_continuous_stream(&cfg, &sc.model, sc.stream(seed), &sched, engine);
+                assert_eq!(
+                    mat.state_hash(),
+                    st.state_hash(),
+                    "{name}/{policy:?}/{engine}: streamed continuous hash drifted"
+                );
+                assert_eq!(
+                    mat.sessions_digest, st.sessions_digest,
+                    "{name}/{policy:?}/{engine}: sessions digest drifted"
+                );
+            }
+        }
+        let mat = run_static(&cfg, &sc.model, &trace, 4);
+        let st = run_static_stream(&cfg, &sc.model, sc.stream(seed), 4);
+        assert_eq!(mat.state_hash(), st.state_hash(), "{name}: streamed static hash drifted");
+    }
+}
+
+#[test]
+fn streaming_cluster_matches_materialized_across_placements_and_threads() {
+    let cfg = ArtemisConfig::default();
+    let seed = 1u64;
+    let sc = fast_scenario("chat", 12);
+    let trace = sc.generate(seed);
+    let sched = SchedulerConfig { max_batch: 4, policy: Policy::Fifo };
+    for placement in [Placement::DataParallel, Placement::PipelineParallel] {
+        for threads in [1usize, 2] {
+            let cl = ClusterConfig::new(2, placement).with_threads(threads);
+            let mat =
+                run_cluster(&cfg, &sc.model, &trace, &cl, &sched, RoutePolicy::LeastLoaded, true);
+            let st = run_cluster_stream(
+                &cfg,
+                &sc.model,
+                sc.stream(seed),
+                &cl,
+                &sched,
+                RoutePolicy::LeastLoaded,
+                true,
+            );
+            assert_eq!(
+                mat.state_hash(),
+                st.state_hash(),
+                "{placement}/threads {threads}: streamed cluster hash drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_campaign_snapshot_restore_lands_on_the_uninterrupted_hash() {
+    let cfg = ArtemisConfig::default();
+    let seed = 5u64;
+    let sc = fast_scenario("burst", 10);
+    let sched = SchedulerConfig { max_batch: 3, policy: Policy::Fifo };
+    let cl = ClusterConfig::new(2, Placement::DataParallel).with_threads(1);
+    let build = |stream| {
+        Campaign::new_streamed(
+            &cfg,
+            &sc.model,
+            stream,
+            &cl,
+            &sched,
+            RoutePolicy::RoundRobin,
+            true,
+            None,
+        )
+    };
+
+    // Reference: the uninterrupted streamed run.
+    let mut reference = build(sc.stream(seed));
+    while reference.step(16) {}
+    let (ref_report, _) = reference.finish(None);
+
+    // Interrupted: step partway (some arrivals routed, none drained),
+    // snapshot, restore into a *fresh* campaign, finish both.
+    let mut interrupted = build(sc.stream(seed));
+    for _ in 0..4 {
+        assert!(interrupted.step(16), "campaign finished before the snapshot point");
+    }
+    let snap = interrupted.snapshot_json();
+    let mut restored = build(sc.stream(seed));
+    restored.restore_json(&snap).expect("restore streamed snapshot");
+    while interrupted.step(16) {}
+    while restored.step(16) {}
+    let (a, _) = interrupted.finish(None);
+    let (b, _) = restored.finish(None);
+    assert_eq!(
+        a.state_hash(),
+        ref_report.state_hash(),
+        "interrupted streamed campaign diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        b.state_hash(),
+        ref_report.state_hash(),
+        "restored streamed campaign diverged from the uninterrupted run"
+    );
+}
